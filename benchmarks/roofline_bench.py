@@ -1,0 +1,34 @@
+"""Roofline benchmark: renders the §Roofline table from dry-run artifacts."""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.roofline import format_table, roofline_table
+
+from .common import csv_row
+
+RESULTS_DIR = Path(__file__).parent.parent / "dryrun_results"
+
+
+def roofline() -> Tuple[list, List[str]]:
+    rows, lines = [], []
+    if not RESULTS_DIR.exists():
+        return [dict(note="dryrun_results/ missing — run repro.launch.dryrun --all")], [
+            csv_row("roofline/missing", 0.0, "run_dryrun_first")
+        ]
+    cells = roofline_table(RESULTS_DIR, mesh="pod")
+    for c in cells:
+        rows.append(dict(arch=c.arch, shape=c.shape, dominant=c.dominant,
+                         compute_ms=round(c.compute_corrected_s * 1e3, 3),
+                         memory_ms=round(c.memory_s * 1e3, 3),
+                         collective_ms=round(c.collective_s * 1e3, 3),
+                         roofline_frac=round(c.roofline_fraction(), 4),
+                         useful_ratio=round(c.useful_ratio, 3)))
+        lines.append(csv_row(
+            f"roofline/{c.arch}/{c.shape}", c.bound_time() * 1e6,
+            f"dominant={c.dominant};frac={c.roofline_fraction():.3f};useful={c.useful_ratio:.2f};"
+            f"compute={c.compute_corrected_s*1e3:.2f}ms;mem={c.memory_s*1e3:.2f}ms;coll={c.collective_s*1e3:.2f}ms",
+        ))
+    return rows, lines

@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: reproduces every paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run              # all benchmarks
+    PYTHONPATH=src python -m benchmarks.run table1_tpt   # one benchmark
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from .roofline_bench import roofline
+    from .tables import ALL_TABLES
+
+    wanted = sys.argv[1:] or list(ALL_TABLES) + ["roofline"]
+    print("name,us_per_call,derived")
+    t_start = time.time()
+    for name in wanted:
+        fn = ALL_TABLES.get(name, roofline if name == "roofline" else None)
+        if fn is None:
+            print(f"# unknown benchmark {name!r}", file=sys.stderr)
+            continue
+        t0 = time.time()
+        try:
+            rows, lines = fn()
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            continue
+        for line in lines:
+            print(line, flush=True)
+        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s", file=sys.stderr)
+    print(f"# total {time.time()-t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

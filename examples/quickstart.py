@@ -1,0 +1,46 @@
+"""Quickstart: speculative decoding with a tiny trained draft/target pair.
+
+Trains a tiny target and a half-depth draft on the same synthetic corpus
+(minutes on CPU), then runs PipeSD-style speculative decoding and reports the
+acceptance statistics vs plain autoregressive decoding.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import time
+
+import jax
+
+from repro.launch.serve import build_pair, serve
+from repro.launch.train import train
+
+
+def main() -> None:
+    print("=== 1. train a tiny target model (synthetic code corpus) ===")
+    tstate, tloss = train("granite-3-2b", steps=40, batch=4, seq=64, lr=2e-3, log_every=20, seed=0)
+    print(f"target loss: {tloss[0]:.3f} -> {tloss[-1]:.3f}")
+
+    print("=== 2. speculative decoding: draft == target (acceptance upper bound) ===")
+    (tcfg, _), (dcfg, _) = build_pair("granite-3-2b", seed=0)
+    pair = ((tcfg, tstate.params), (tcfg, tstate.params))
+    t0 = time.time()
+    _, trace, stats = serve("granite-3-2b", n_tokens=48, batch=2, window=6, params=pair)
+    print(f"  rounds={stats['rounds']} mean_draft_len={stats['mean_draft_len']:.2f} "
+          f"acceptance={stats['acceptance_rate']:.2%} wall={time.time()-t0:.1f}s")
+
+    print("=== 3. random (untrained) draft: near-zero acceptance, still lossless ===")
+    _, _, stats2 = serve("granite-3-2b", n_tokens=24, batch=2, window=4, seed=1)
+    print(f"  acceptance={stats2['acceptance_rate']:.2%} (greedy NAV corrects every miss)")
+
+    speedup_proxy = (1 + stats["mean_draft_len"] * stats["acceptance_rate"]) / 1.0
+    print(f"\nPipeSD per-round output ≈ {speedup_proxy:.2f} tokens per target forward "
+          f"(vs 1.0 autoregressive) — the paper's core speedup mechanism.")
+
+
+if __name__ == "__main__":
+    main()

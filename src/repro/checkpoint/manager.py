@@ -1,0 +1,106 @@
+"""Checkpointing: atomic pytree save/restore with keep-k and auto-resume.
+
+Fault-tolerance contract (DESIGN.md §6):
+* writes are atomic (tmp dir + rename) — a killed process never leaves a
+  half-written "latest";
+* ``latest_step()`` + ``restore()`` give crash-resume in two calls;
+* arbitrary pytrees (params, optimizer state, autotuner observations, data
+  position) are stored as flattened npz + a structure manifest, so the serving
+  control plane (BO state, DP schedule params) checkpoints exactly like model
+  state;
+* restore is mesh-agnostic: arrays come back as numpy and the caller
+  re-shards via ``jax.device_put`` with its current (possibly different-size)
+  mesh — elastic re-scaling.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+
+
+def _flatten_with_paths(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree: Any, directory: Path) -> None:
+    directory = Path(directory)
+    tmp = Path(tempfile.mkdtemp(dir=directory.parent, prefix=".tmp_ckpt_"))
+    try:
+        leaves = _flatten_with_paths(tree)
+        np.savez(tmp / "arrays.npz", **leaves)
+        treedef = jax.tree_util.tree_structure(tree)
+        (tmp / "manifest.json").write_text(
+            json.dumps({"keys": list(leaves), "treedef": str(treedef)})
+        )
+        if directory.exists():
+            shutil.rmtree(directory)
+        os.replace(tmp, directory)  # atomic publish
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def load_pytree(directory: Path, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    directory = Path(directory)
+    with np.load(directory / "arrays.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat_like[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs template {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints under ``root/step_<n>`` with keep-last-k."""
+
+    def __init__(self, root: Path, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _step_dirs(self) -> List[int]:
+        steps = []
+        for p in self.root.glob("step_*"):
+            try:
+                steps.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._step_dirs()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any) -> None:
+        save_pytree(tree, self.root / f"step_{step}")
+        for old in self._step_dirs()[: -self.keep]:
+            shutil.rmtree(self.root / f"step_{old}", ignore_errors=True)
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Any:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        return load_pytree(self.root / f"step_{step}", like)

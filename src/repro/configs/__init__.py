@@ -1,0 +1,4 @@
+from .registry import ARCH_IDS, all_configs, get_config
+from .shapes import SHAPES, VERIFY_K, ShapeSpec, applicable, input_specs
+
+__all__ = ["ARCH_IDS", "SHAPES", "VERIFY_K", "ShapeSpec", "all_configs", "applicable", "get_config", "input_specs"]

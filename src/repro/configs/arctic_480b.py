@@ -1,0 +1,29 @@
+"""arctic-480b [moe] — 128 experts top-2 with a parallel dense-FFN residual.
+
+35L, d_model=7168, 56 heads (GQA kv=8), expert d_ff=4864, vocab 32000.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+Scale note (DESIGN.md §5): bf16 params + Adafactor are the default training
+numerics for this config so optimizer state fits 16 GB/chip on the 256-chip
+pod (AdamW fp32 states would need ~30 GB/chip).
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32_000,
+    head_dim=128,
+    moe=MoEConfig(n_experts=128, top_k=2, d_ff_expert=4864, dense_residual=True, d_ff_dense=4864),
+    tie_embeddings=False,
+    dtype="bfloat16",
+    param_dtype="bfloat16",
+)
+
+REDUCED = CONFIG.reduced(dtype="float32", param_dtype="float32")

@@ -1,0 +1,31 @@
+"""gemma2-27b [dense] — alternating local/global attention + logit softcaps.
+
+46L, d_model=4608, 32 heads (GQA kv=16), d_ff=36864, vocab 256000; window
+4096 on local layers; attn softcap 50, final-logit softcap 30.
+[arXiv:2408.00118; hf]
+"""
+
+from repro.models.config import GLOBAL_WINDOW, ModelConfig
+
+_KINDS = tuple("local" if i % 2 == 0 else "attn" for i in range(46))
+_WINDOWS = tuple(4096 if k == "local" else GLOBAL_WINDOW for k in _KINDS)
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    d_ff=36_864,
+    vocab_size=256_000,
+    head_dim=128,
+    layer_kinds=_KINDS,
+    window_sizes=_WINDOWS,
+    logit_softcap=30.0,
+    attn_softcap=50.0,
+    tie_embeddings=True,
+)
+
+_RK = ("local", "attn", "local", "attn")
+REDUCED = CONFIG.reduced(layer_kinds=_RK, window_sizes=tuple(16 if k == "local" else GLOBAL_WINDOW for k in _RK))

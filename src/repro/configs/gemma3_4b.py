@@ -1,0 +1,31 @@
+"""gemma3-4b [dense] — 5:1 local:global attention, 128k context.
+
+34L, d_model=2560, 8 heads (GQA kv=4), d_ff=10240, vocab 262144; sliding
+window 1024 on local layers; rope theta 10k local / 1M global.
+[hf:google/gemma-3-1b-pt; unverified]
+"""
+
+from repro.models.config import GLOBAL_WINDOW, ModelConfig
+
+_KINDS = tuple(("local local local local local attn".split() * 6)[:34])
+_WINDOWS = tuple(1024 if k == "local" else GLOBAL_WINDOW for k in _KINDS)
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=10240,
+    vocab_size=262_144,
+    head_dim=256,
+    layer_kinds=_KINDS,
+    window_sizes=_WINDOWS,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    tie_embeddings=True,
+)
+
+_RK = ("local", "local", "local", "attn")
+REDUCED = CONFIG.reduced(layer_kinds=_RK, window_sizes=tuple(16 if k == "local" else GLOBAL_WINDOW for k in _RK))

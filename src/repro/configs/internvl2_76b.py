@@ -1,0 +1,26 @@
+"""internvl2-76b [vlm] — InternLM2-76B backbone; InternViT frontend stubbed.
+
+80L, d_model=8192, 64 heads (GQA kv=8), d_ff=28672, vocab 128256.  The vision
+tower is a STUB: ``input_specs`` provides 256 precomputed patch embeddings
+prepended to the text sequence.  [arXiv:2404.16821; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28_672,
+    vocab_size=128_256,
+    head_dim=128,
+    n_vision_tokens=256,
+    tie_embeddings=False,
+    dtype="bfloat16",
+    param_dtype="bfloat16",
+)
+
+REDUCED = CONFIG.reduced(dtype="float32", param_dtype="float32")

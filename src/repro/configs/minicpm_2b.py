@@ -1,0 +1,22 @@
+"""minicpm-2b [dense] — llama-like MHA; trained with the WSD schedule.
+
+40L, d_model=2304, 36 heads (kv=36), d_ff=5760, vocab 122753.
+[arXiv:2404.06395; hf]  WSD schedule supported in repro.optim.schedules.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122_753,
+    head_dim=64,
+    tie_embeddings=True,
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,23 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts, top-8, fine-grained (d_ff=768).
+
+48L, d_model=2048, 32 heads (GQA kv=4), expert d_ff=768, vocab 151936.
+[hf:Qwen/Qwen3-30B-A3B; hf]
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    vocab_size=151_936,
+    head_dim=128,
+    moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=768),
+    tie_embeddings=False,
+)
+
+REDUCED = CONFIG.reduced()

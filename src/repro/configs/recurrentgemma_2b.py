@@ -1,0 +1,33 @@
+"""recurrentgemma-2b [hybrid] — Griffin: RG-LRU + local attention, 1 attn : 2 rec.
+
+26L, d_model=2560, 10 heads (MQA kv=1), d_ff=7680, vocab 256000, head_dim 256,
+local window 2048, d_rnn=2560.  Sub-quadratic (O(1) state + bounded window) →
+runs the long_500k decode shape.  [arXiv:2402.19427; hf]
+"""
+
+from repro.models.config import GLOBAL_WINDOW, ModelConfig
+
+# (R, R, A) × 8 groups + 2 tail recurrent layers = 26.
+_KINDS = tuple((["rglru", "rglru", "local"] * 8) + ["rglru", "rglru"])
+_WINDOWS = tuple(2048 if k == "local" else 0 for k in _KINDS)
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256_000,
+    head_dim=256,
+    layer_kinds=_KINDS,
+    window_sizes=_WINDOWS,
+    d_rnn=2560,
+    conv_width=4,
+    sub_quadratic=True,
+    tie_embeddings=True,
+)
+
+_RK = ("rglru", "rglru", "local")
+REDUCED = CONFIG.reduced(n_layers=3, layer_kinds=_RK, window_sizes=(0, 0, 16), n_kv_heads=1)

@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/benchmarks."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+from . import (
+    arctic_480b,
+    gemma2_27b,
+    gemma3_4b,
+    granite_3_2b,
+    internvl2_76b,
+    minicpm_2b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_2b,
+    whisper_large_v3,
+    xlstm_350m,
+)
+
+_MODULES = {
+    "whisper-large-v3": whisper_large_v3,
+    "minicpm-2b": minicpm_2b,
+    "gemma3-4b": gemma3_4b,
+    "granite-3-2b": granite_3_2b,
+    "gemma2-27b": gemma2_27b,
+    "arctic-480b": arctic_480b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "internvl2-76b": internvl2_76b,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "xlstm-350m": xlstm_350m,
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    try:
+        mod = _MODULES[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}") from None
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

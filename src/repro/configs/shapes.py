@@ -1,0 +1,72 @@
+"""Assigned input-shape grid + ShapeDtypeStruct input specs per (arch, shape).
+
+LM transformer shapes are seq_len × global_batch.  ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``.  ``long_500k`` requires sub-quadratic attention and only runs
+for archs with ``cfg.sub_quadratic`` (recurrentgemma, xlstm) — the full-
+attention skips are recorded by the dry-run, per DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "input_specs", "applicable", "VERIFY_K"]
+
+VERIFY_K = 8  # draft tokens per NAV verify step (paper-representative serve op)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason string."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "skip(full-attention: unbounded 500k KV; see DESIGN.md §4)"
+    return None
+
+
+def _i32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, n_tokens: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input stand-ins (weak-type-correct, shardable, no allocation).
+
+    train  : {tokens, labels} (+ modality stubs)
+    prefill: {tokens} (+ modality stubs)
+    decode : {tokens [B, n_tokens]} — cache specs are built separately
+             (n_tokens=1 plain decode; VERIFY_K+1 for the NAV verify step).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    act_dtype = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {"tokens": _i32((B, S)), "labels": _i32((B, S))}
+    elif shape.kind == "prefill":
+        specs = {"tokens": _i32((B, S))}
+    else:  # decode
+        specs = {"tokens": _i32((B, n_tokens or 1))}
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder.n_ctx, cfg.d_model), act_dtype)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), act_dtype)
+    return specs

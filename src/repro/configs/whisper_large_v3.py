@@ -1,0 +1,23 @@
+"""whisper-large-v3 [audio] — enc-dec, conv frontend stubbed.
+
+32 encoder + 32 decoder layers, d_model=1280, 20 heads (kv=20), d_ff=5120,
+vocab 51866.  [arXiv:2212.04356; unverified]
+"""
+
+from repro.models.config import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51_866,
+    head_dim=64,
+    encoder=EncoderConfig(n_layers=32, n_ctx=1500),
+    tie_embeddings=True,
+)
+
+REDUCED = CONFIG.reduced(n_heads=4, n_kv_heads=4, head_dim=16)

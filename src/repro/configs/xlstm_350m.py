@@ -1,0 +1,30 @@
+"""xlstm-350m [ssm] — mLSTM + sLSTM blocks, 7:1 ratio.
+
+24L, d_model=1024, 4 heads, vocab 50304, head_dim 256, no separate FFN
+(d_ff=0; the cells carry their own projections).  O(1) state → runs the
+long_500k decode shape.  [arXiv:2405.04517; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+# (mLSTM × 7, sLSTM × 1) × 3 groups = 24 layers.
+_KINDS = tuple((["mlstm"] * 7 + ["slstm"]) * 3)
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    head_dim=256,
+    layer_kinds=_KINDS,
+    mlstm_chunk=64,
+    sub_quadratic=True,
+    tie_embeddings=True,
+)
+
+_RK = tuple((["mlstm"] * 3 + ["slstm"]) * 1)
+REDUCED = CONFIG.reduced(n_layers=4, layer_kinds=_RK, d_ff=0, mlstm_chunk=8)

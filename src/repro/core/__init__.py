@@ -1,0 +1,57 @@
+"""PipeSD core: the paper's primary contribution as composable modules.
+
+* ``scheduler``  — token-batch pipeline scheduling DP (Alg. 1) + baselines
+* ``trigger``    — dual-threshold NAV triggering + baseline policies
+* ``autotuner``  — lightweight Bayesian-optimization autotuner for (R1, R2)
+* ``spec_decode``— JAX speculative decoding (draft while_loop + NAV verify)
+* ``pipeline``   — event-driven cloud-edge pipeline engine
+* ``monitor``    — environment monitor / parameter updater
+"""
+
+from .autotuner import BOAutotuner, grid_search, random_search
+from .monitor import EnvironmentMonitor, linear_fit_alpha_beta
+from .pipeline import (
+    FRAMEWORKS,
+    ChannelModel,
+    CloudModel,
+    EdgeModel,
+    FrameworkSpec,
+    PipelineEngine,
+    ReplaySource,
+    RunStats,
+    SyntheticSource,
+    make_framework,
+    periodic_bandwidth_trace,
+)
+from .scheduler import (
+    CommParams,
+    Schedule,
+    batch_sizes,
+    brute_force_schedule,
+    dp_schedule,
+    greedy_schedule,
+    immediate_schedule,
+    no_early_upload_schedule,
+    simulate_schedule,
+)
+from .spec_decode import (
+    DraftConfig,
+    DraftResult,
+    SpecDecoder,
+    VerifyResult,
+    draft_round,
+    sample_from_logits,
+    verify_greedy,
+    verify_stochastic,
+)
+from .trigger import (
+    DualThresholdTrigger,
+    FixedLengthTrigger,
+    SequenceThresholdTrigger,
+    TokenThresholdTrigger,
+    TriggerPolicy,
+    WindowCapTrigger,
+    make_trigger,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,176 @@
+"""Lightweight Bayesian-optimization autotuner for (R1, R2) (PipeSD §3.3, App. C).
+
+Minimizes an unknown objective  F(R1, R2)  (average TPT) over the box (0,1)²
+using Gaussian-process regression with a Matérn-5/2 kernel and the Expected
+Improvement acquisition function (ξ = 0.1 favouring exploration, App. C.1).
+The paper reports near-optimal thresholds within ~16 samples; the benchmarks
+reproduce Table 3 (BO vs 4×4 grid search vs 16-point random search).
+
+Implementation is pure numpy (the autotuner is host-side control plane; Table 5
+bounds its overhead at ≤1.1 % of wall time).  No scipy dependency in the hot
+path — Φ and φ use ``math.erf``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["BOAutotuner", "grid_search", "random_search", "Observation"]
+
+_SQRT5 = math.sqrt(5.0)
+
+
+def _matern52(x1: np.ndarray, x2: np.ndarray, length_scale: float) -> np.ndarray:
+    """Matérn-5/2 kernel matrix between row-stacks x1 (n,d) and x2 (m,d)."""
+    d = np.sqrt(np.maximum(((x1[:, None, :] - x2[None, :, :]) ** 2).sum(-1), 0.0))
+    r = d / length_scale
+    return (1.0 + _SQRT5 * r + 5.0 / 3.0 * r * r) * np.exp(-_SQRT5 * r)
+
+
+def _norm_pdf(z: np.ndarray) -> np.ndarray:
+    return np.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+
+
+def _norm_cdf(z: np.ndarray) -> np.ndarray:
+    return 0.5 * (1.0 + np.vectorize(math.erf)(z / math.sqrt(2.0)))
+
+
+@dataclass(frozen=True)
+class Observation:
+    x: Tuple[float, ...]  # (R1, R2)
+    y: float  # measured objective (TPT, lower is better)
+
+
+@dataclass
+class BOAutotuner:
+    """GP(Matérn-5/2) + EI Bayesian optimizer over a box domain.
+
+    Usage (ask/tell — matches the Parameter Updater in §4.2):
+
+        bo = BOAutotuner(bounds=[(0,1),(0,1)], seed=0)
+        for _ in range(16):
+            x = bo.suggest()
+            y = measure_tpt(*x)
+            bo.observe(x, y)
+        r1, r2 = bo.best().x
+    """
+
+    bounds: Sequence[Tuple[float, float]] = ((0.0, 1.0), (0.0, 1.0))
+    seed: int = 0
+    xi: float = 0.1  # EI exploration parameter (App. C.1: EI = 0.1)
+    length_scale: float = 0.25
+    noise: float = 1e-6
+    n_candidates: int = 512  # quasi-random acquisition candidates per suggest()
+    observations: List[Observation] = field(default_factory=list)
+    _rng: np.random.Generator = field(init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+        self._lo = np.array([b[0] for b in self.bounds])
+        self._hi = np.array([b[1] for b in self.bounds])
+
+    # ------------------------------------------------------------------ GP --
+    def _fit(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, float, float]:
+        X = np.array([o.x for o in self.observations], dtype=np.float64)
+        y = np.array([o.y for o in self.observations], dtype=np.float64)
+        mu, sd = float(y.mean()), float(y.std() + 1e-12)
+        yn = (y - mu) / sd
+        K = _matern52(X, X, self.length_scale) + self.noise * np.eye(len(X))
+        L = np.linalg.cholesky(K + 1e-10 * np.eye(len(X)))
+        alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+        return X, L, alpha, mu, sd
+
+    def _posterior(self, Xq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """GP posterior mean/std at query points (normalized-y space)."""
+        X, L, alpha, _, _ = self._gp
+        Ks = _matern52(Xq, X, self.length_scale)
+        mean = Ks @ alpha
+        v = np.linalg.solve(L, Ks.T)
+        var = np.maximum(1.0 - (v * v).sum(0), 1e-12)
+        return mean, np.sqrt(var)
+
+    # ----------------------------------------------------------- ask / tell --
+    def suggest(self) -> Tuple[float, ...]:
+        """Next (R1,R2) to evaluate: random until 1 obs exists, then argmax EI."""
+        if not self.observations:
+            # App. C.1: a single random initial sample.
+            x = self._rng.uniform(self._lo, self._hi)
+            return tuple(float(v) for v in x)
+        self._gp = self._fit()
+        cand = self._rng.uniform(self._lo, self._hi, size=(self.n_candidates, len(self.bounds)))
+        # Always include local perturbations of the incumbent (exploitation).
+        inc = np.array(self.best().x)
+        local = np.clip(inc + self._rng.normal(0, 0.05, size=(32, len(self.bounds))), self._lo, self._hi)
+        cand = np.vstack([cand, local])
+        mean, std = self._posterior(cand)
+        _, _, _, mu, sd = self._gp
+        y_best = (min(o.y for o in self.observations) - mu) / sd
+        # EI for MINIMIZATION with exploration margin ξ.
+        imp = y_best - mean - self.xi
+        z = imp / std
+        ei = imp * _norm_cdf(z) + std * _norm_pdf(z)
+        return tuple(float(v) for v in cand[int(np.argmax(ei))])
+
+    def observe(self, x: Sequence[float], y: float) -> None:
+        if not np.isfinite(y):
+            raise ValueError(f"objective must be finite, got {y}")
+        self.observations.append(Observation(tuple(float(v) for v in x), float(y)))
+
+    def best(self) -> Observation:
+        if not self.observations:
+            raise RuntimeError("no observations yet")
+        return min(self.observations, key=lambda o: o.y)
+
+    # -------------------------------------------------------------- driver --
+    def minimize(self, fn: Callable[..., float], n_trials: int = 16) -> Observation:
+        """Run the full ask/measure/tell loop (the paper's 16-sample budget)."""
+        for _ in range(n_trials):
+            x = self.suggest()
+            self.observe(x, fn(*x))
+        return self.best()
+
+    # Persistence for serving restarts (fault tolerance): the GP is exactly
+    # its observation list, so checkpointing observations checkpoints the tuner.
+    def state_dict(self) -> dict:
+        return {"observations": [(list(o.x), o.y) for o in self.observations], "seed": self.seed}
+
+    @classmethod
+    def from_state_dict(cls, state: dict, **kw) -> "BOAutotuner":
+        bo = cls(seed=state.get("seed", 0), **kw)
+        for x, y in state["observations"]:
+            bo.observe(x, y)
+        return bo
+
+
+def grid_search(fn: Callable[..., float], bounds=((0.0, 1.0), (0.0, 1.0)), n_per_dim: int = 4) -> Observation:
+    """App. C.2 baseline: 4×4 uniform grid (16 deterministic samples).
+
+    Grid points are cell centers so endpoints 0/1 (degenerate thresholds) are
+    avoided, matching the open search space (0,1)².
+    """
+    axes = [np.linspace(lo, hi, n_per_dim + 1)[:-1] + (hi - lo) / (2 * n_per_dim) for lo, hi in bounds]
+    best: Optional[Observation] = None
+    for x0 in axes[0]:
+        for x1 in axes[1]:
+            y = fn(float(x0), float(x1))
+            if best is None or y < best.y:
+                best = Observation((float(x0), float(x1)), y)
+    assert best is not None
+    return best
+
+
+def random_search(fn: Callable[..., float], bounds=((0.0, 1.0), (0.0, 1.0)), n_trials: int = 16, seed: int = 0) -> Observation:
+    """App. C.2 baseline: 16 uniform random samples."""
+    rng = np.random.default_rng(seed)
+    best: Optional[Observation] = None
+    for _ in range(n_trials):
+        x = tuple(float(rng.uniform(lo, hi)) for lo, hi in bounds)
+        y = fn(*x)
+        if best is None or y < best.y:
+            best = Observation(x, y)
+    assert best is not None
+    return best

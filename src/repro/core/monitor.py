@@ -1,0 +1,138 @@
+"""Environment monitor + parameter updater (PipeSD §4.2, App. D).
+
+Continuously estimates the pipeline-model parameters from observations:
+
+* γ  — mean per-token generation time over the last 100 batches (App. D.2);
+* α,β — intercept/slope of a linear fit of batch communication time vs batch
+  size over the last 100 transmitted batches, bootstrapped by probing batch
+  sizes 1..8 (App. D.2 / Fig. 6a);
+* TPT — sliding window over the last 100 accepted tokens (App. D.1).
+
+Update triggers (all relative-change tests, thresholds δ₁=δ₂=δ₃=0.2):
+
+* |ΔTPT|/TPT_old > δ₁  → re-run the BO autotuner (new R1,R2);
+* |Δγ|/γ_old   > δ₂  or |Δα|/α, |Δβ|/β > δ₃ → re-run the DP scheduler.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["EnvironmentMonitor", "linear_fit_alpha_beta"]
+
+
+def linear_fit_alpha_beta(sizes: List[int], times: List[float]) -> Tuple[float, float]:
+    """Least-squares fit time = α + β·size (Fig. 6a).  Returns (α, β).
+
+    Groups by batch size and averages first (App. D.2), which de-noises
+    repeated sizes before the fit.
+    """
+    if len(sizes) < 2:
+        raise ValueError("need at least two observations for the α/β fit")
+    by_size: dict = {}
+    for s, t in zip(sizes, times):
+        by_size.setdefault(int(s), []).append(float(t))
+    xs = np.array(sorted(by_size), dtype=np.float64)
+    ys = np.array([np.mean(by_size[int(s)]) for s in xs])
+    if len(xs) < 2:
+        # Single distinct size: attribute everything above zero to β.
+        return 0.0, float(ys[0] / max(xs[0], 1.0))
+    beta, alpha = np.polyfit(xs, ys, 1)
+    return float(max(alpha, 0.0)), float(max(beta, 0.0))
+
+
+@dataclass
+class EnvironmentMonitor:
+    """Sliding-window estimator with δ-triggered update signals."""
+
+    window: int = 100  # App. D: most recent 100 observations
+    delta1: float = 0.2  # TPT relative-change threshold (BO re-run)
+    delta2: float = 0.2  # γ relative-change threshold (DP re-run)
+    delta3: float = 0.2  # α/β relative-change threshold (DP re-run)
+    bootstrap_sizes: Tuple[int, ...] = (1, 2, 3, 4, 5, 6, 7, 8)
+
+    _batch_sizes: Deque[int] = field(default_factory=deque, init=False)
+    _batch_times: Deque[float] = field(default_factory=deque, init=False)
+    _gammas: Deque[float] = field(default_factory=deque, init=False)
+    _tpts: Deque[float] = field(default_factory=deque, init=False)
+    # Last parameters the consumers (DP/BO) were given.
+    _committed: Optional[Tuple[float, float, float]] = field(default=None, init=False)
+    _committed_tpt: Optional[float] = field(default=None, init=False)
+
+    # ------------------------------------------------------------- intake --
+    def observe_batch(self, size: int, comm_time: float) -> None:
+        self._batch_sizes.append(int(size))
+        self._batch_times.append(float(comm_time))
+        while len(self._batch_sizes) > self.window:
+            self._batch_sizes.popleft()
+            self._batch_times.popleft()
+
+    def observe_gamma(self, gamma: float) -> None:
+        self._gammas.append(float(gamma))
+        while len(self._gammas) > self.window:
+            self._gammas.popleft()
+
+    def observe_tpt(self, tpt: float) -> None:
+        self._tpts.append(float(tpt))
+        while len(self._tpts) > self.window:
+            self._tpts.popleft()
+
+    # ----------------------------------------------------------- estimates --
+    def missing_probe_sizes(self) -> List[int]:
+        """Batch sizes to proactively probe so the fit has ≥8 points (App. D.2)."""
+        seen = set(self._batch_sizes)
+        return [s for s in self.bootstrap_sizes if s not in seen]
+
+    def estimate(self) -> Optional[Tuple[float, float, float]]:
+        """Current (α, β, γ) estimate, or None if insufficient data."""
+        if len(set(self._batch_sizes)) < 2 or not self._gammas:
+            return None
+        alpha, beta = linear_fit_alpha_beta(list(self._batch_sizes), list(self._batch_times))
+        gamma = float(np.mean(self._gammas))
+        return alpha, beta, gamma
+
+    def estimate_tpt(self) -> Optional[float]:
+        if len(self._tpts) < self.window:
+            return None  # App. D.1: trigger only once the window is full
+        return float(np.mean(self._tpts))
+
+    # ------------------------------------------------------------ triggers --
+    @staticmethod
+    def _rel_change(new: float, old: float) -> float:
+        return abs(new - old) / max(abs(old), 1e-12)
+
+    def should_rerun_dp(self) -> Optional[Tuple[float, float, float]]:
+        """Returns new (α,β,γ) if the DP scheduler should be re-run (App. D.2)."""
+        est = self.estimate()
+        if est is None:
+            return None
+        if self._committed is None:
+            self._committed = est
+            return est
+        a0, b0, g0 = self._committed
+        a1, b1, g1 = est
+        if (
+            self._rel_change(g1, g0) > self.delta2
+            or self._rel_change(a1, a0) > self.delta3
+            or self._rel_change(b1, b0) > self.delta3
+        ):
+            self._committed = est
+            return est
+        return None
+
+    def should_rerun_bo(self) -> Optional[float]:
+        """Returns the new TPT estimate if the BO autotuner should re-run (App. D.1)."""
+        tpt = self.estimate_tpt()
+        if tpt is None:
+            return None
+        if self._committed_tpt is None:
+            self._committed_tpt = tpt
+            return None  # first full window establishes the baseline
+        if self._rel_change(tpt, self._committed_tpt) > self.delta1:
+            self._committed_tpt = tpt
+            return tpt
+        return None

@@ -1,0 +1,556 @@
+"""Event-driven cloud-edge pipeline engine (PipeSD §3, Fig. 3, App. B).
+
+Simulates one (or many — see ``runtime/server.py``) edge device collaborating
+with a cloud verifier under the paper's timing model:
+
+* draft generation: γ seconds/token on the edge (scenario-scaled);
+* uplink transmission: α + β·n per batch, serialized on the channel, with β
+  optionally driven by a time-varying bandwidth trace (Scenario 4);
+* cloud NAV: t_verify seconds per verification call (+ queueing when shared);
+* downlink result: α_dn + β_dn seconds.
+
+The engine composes four orthogonal policy axes exactly as the paper's
+ablations do (Table 6):
+
+    pipeline   : overlap generation & transmission (token-batch schedule from
+                 ``core.scheduler`` — 'dp' | 'greedy' | 'immediate' |
+                 'no_early_upload')
+    trigger    : NAV triggering policy from ``core.trigger``
+                 (dual | fixed | token | sequence)
+    proactive  : keep drafting/transmitting while NAV is in flight (App. B)
+    autotune   : BO autotuner adjusting (R1, R2) online (§3.3)
+
+Confidence/acceptance streams come from a ``TokenSource``: either the
+calibrated synthetic model (``SyntheticSource``) or a replay of real traces
+produced by ``core.spec_decode.SpecDecoder`` (``ReplaySource``).
+
+Every simulated quantity needed by the paper's tables is accumulated in
+``RunStats`` (TPT, ECS, verification frequency, mean draft length, acceptance
+rate, control-plane overheads).
+"""
+
+from __future__ import annotations
+
+import math
+import time as _time
+from dataclasses import dataclass, field, replace
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .monitor import EnvironmentMonitor
+from .scheduler import CommParams, Schedule, batch_sizes, schedule as make_schedule
+from .trigger import TriggerPolicy, WindowCapTrigger, make_trigger
+
+__all__ = [
+    "ChannelModel",
+    "CloudModel",
+    "EdgeModel",
+    "FrameworkSpec",
+    "SyntheticSource",
+    "ReplaySource",
+    "RunStats",
+    "PipelineEngine",
+    "FRAMEWORKS",
+    "make_framework",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Environment models
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ChannelModel:
+    """Hockney-model channel with optional dynamic bandwidth (Scenario 4).
+
+    ``beta_up`` is the per-token uplink time at the *reference* bandwidth
+    ``ref_up_mbps``; at time t the effective per-token time is
+    ``beta_up * ref_up_mbps / up_mbps(t)`` (payload size is constant).
+    """
+
+    alpha_up: float = 0.020  # startup overhead [s] (handshake etc., App. A)
+    beta_up: float = 0.050  # per-token uplink time at reference bandwidth [s]
+    # (the paper's own measured slope is 48–72 ms/token, Table A.2 / Fig. 6a)
+    alpha_dn: float = 0.010
+    beta_dn: float = 0.0005  # result payload per accepted token [s]
+    ref_up_mbps: float = 20.0
+    ref_dn_mbps: float = 200.0
+    bandwidth_trace: Optional[Callable[[float], Tuple[float, float]]] = None
+    # bandwidth_trace(t) -> (uplink_mbps, downlink_mbps)
+
+    def up_cost(self, n_tokens: int, t: float) -> float:
+        beta = self.beta_up
+        if self.bandwidth_trace is not None:
+            up, _ = self.bandwidth_trace(t)
+            beta = self.beta_up * self.ref_up_mbps / max(up, 1e-6)
+        return self.alpha_up + beta * n_tokens
+
+    def dn_cost(self, n_tokens: int, t: float) -> float:
+        beta = self.beta_dn
+        if self.bandwidth_trace is not None:
+            _, dn = self.bandwidth_trace(t)
+            beta = self.beta_dn * self.ref_dn_mbps / max(dn, 1e-6)
+        return self.alpha_dn + beta * n_tokens
+
+    def effective_beta_up(self, t: float) -> float:
+        if self.bandwidth_trace is None:
+            return self.beta_up
+        up, _ = self.bandwidth_trace(t)
+        return self.beta_up * self.ref_up_mbps / max(up, 1e-6)
+
+
+def periodic_bandwidth_trace(
+    seed: int = 0,
+    period: float = 20.0,
+    up_range: Tuple[float, float] = (10.0, 80.0),
+    dn_range: Tuple[float, float] = (150.0, 280.0),
+) -> Callable[[float], Tuple[float, float]]:
+    """Scenario-4 trace: bandwidths resampled every ``period`` seconds."""
+    rng = np.random.default_rng(seed)
+    # Pre-draw enough epochs for any realistic simulation horizon.
+    ups = rng.uniform(*up_range, size=4096)
+    dns = rng.uniform(*dn_range, size=4096)
+
+    def trace(t: float) -> Tuple[float, float]:
+        i = min(int(t / period), 4095)
+        return float(ups[i]), float(dns[i])
+
+    return trace
+
+
+@dataclass
+class CloudModel:
+    """Cloud verifier timing + power (for ECS, Table 2)."""
+
+    t_verify: float = 0.080  # seconds per NAV call (7B target fwd on A800)
+    t_verify_per_token: float = 0.004  # marginal per draft token verified
+    p_idle: float = 60.0  # GPU idle power [W]
+    p_active: float = 86.0  # GPU power while verifying [W] (A800, small batch)
+
+    def verify_time(self, n_tokens: int) -> float:
+        return self.t_verify + self.t_verify_per_token * n_tokens
+
+    def verify_energy(self, n_tokens: int) -> float:
+        """Energy *above idle* attributable to one NAV call [J] (§5.2.1 ECS)."""
+        return (self.p_active - self.p_idle) * self.verify_time(n_tokens)
+
+
+@dataclass
+class EdgeModel:
+    """Edge compute model; Scenarios 2/3 emulate slower devices (App. G.2)."""
+
+    gamma: float = 0.100  # base per-token draft time [s] (1–3B GGUF on laptop CPU)
+    cpu_ghz: float = 5.1  # physical device frequency
+    simulated_ghz: Optional[float] = None  # e.g. 2.5 (phone) / 1.2 (IoT)
+
+    def effective_gamma(self) -> float:
+        if self.simulated_ghz is None:
+            return self.gamma
+        # Artificial delay of App. G.2: gamma · (real/sim − 1) extra per token.
+        return self.gamma * (self.cpu_ghz / self.simulated_ghz)
+
+
+# --------------------------------------------------------------------------- #
+# Token sources (confidence + acceptance streams)
+# --------------------------------------------------------------------------- #
+
+
+class TokenSource:
+    """Yields (confidence, would_be_accepted) pairs for successive drafts."""
+
+    def next_token(self) -> Tuple[float, bool]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def reset_round(self) -> None:
+        """Called when drafting restarts after a rejection (new context)."""
+
+
+@dataclass
+class SyntheticSource(TokenSource):
+    """Calibrated synthetic confidence/acceptance stream.
+
+    Tokens are 'easy' w.p. (1−p_hard) with confidence ~ Beta(a_hi, b_hi), or
+    'hard' with confidence ~ Beta(a_lo, b_lo).  Acceptance is drawn with
+    P(accept | conf) = conf ** kappa — monotone in confidence, so threshold
+    policies behave qualitatively as in the paper.  Defaults reproduce the
+    Table-7 regime (mean draft length ≈ 5, acceptance ≈ 0.9–0.96) under the
+    dual-threshold trigger.
+    """
+
+    p_hard: float = 0.15
+    a_hi: float = 150.0
+    b_hi: float = 1.0
+    a_lo: float = 2.5
+    b_lo: float = 2.5
+    kappa: float = 0.8
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def next_token(self) -> Tuple[float, bool]:
+        if self._rng.random() < self.p_hard:
+            conf = float(self._rng.beta(self.a_lo, self.b_lo))
+        else:
+            conf = float(self._rng.beta(self.a_hi, self.b_hi))
+        accept = bool(self._rng.random() < conf**self.kappa)
+        return conf, accept
+
+
+@dataclass
+class ReplaySource(TokenSource):
+    """Replays (conf, accept) streams captured from real model runs.
+
+    Built from ``SpecDecoder`` traces via ``from_decoder_trace``; loops when
+    exhausted so long simulations stay well-defined.
+    """
+
+    stream: Sequence[Tuple[float, bool]]
+    _i: int = field(default=0, init=False)
+
+    def next_token(self) -> Tuple[float, bool]:
+        conf, acc = self.stream[self._i % len(self.stream)]
+        self._i += 1
+        return float(conf), bool(acc)
+
+    @classmethod
+    def from_decoder_trace(cls, trace: List[dict], lane: int = 0) -> "ReplaySource":
+        stream: List[Tuple[float, bool]] = []
+        for round_rec in trace:
+            n_d = round_rec["n_drafted"][lane]
+            n_a = round_rec["n_accepted"][lane]
+            confs = round_rec["confs"][lane]
+            for i in range(n_d):
+                stream.append((confs[i], i < n_a))
+        if not stream:
+            raise ValueError("empty trace")
+        return cls(stream)
+
+
+# --------------------------------------------------------------------------- #
+# Framework specifications (method × mechanism matrix, Tables 1/6)
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class FrameworkSpec:
+    name: str
+    trigger_kind: str  # 'dual' | 'fixed' | 'token' | 'sequence'
+    trigger_kw: dict
+    schedule_policy: str  # 'dp' | 'greedy' | 'immediate' | 'no_early_upload'
+    pipeline: bool  # False => compute-first-transmit-later (Fig. 2a)
+    proactive: bool  # App. B proactive drafting during NAV
+    autotune: bool = False  # BO autotuner on (R1, R2)
+
+
+FRAMEWORKS = {
+    # §5.1 baselines.
+    "vanilla": FrameworkSpec("vanilla", "fixed", dict(n=6), "no_early_upload", False, False),
+    "hsl": FrameworkSpec("hsl", "token", dict(r=0.99), "no_early_upload", False, False),
+    "edgellm": FrameworkSpec("edgellm", "sequence", dict(r1=0.3), "no_early_upload", False, True),
+    # PipeSD full.
+    "pipesd": FrameworkSpec("pipesd", "dual", dict(r1=0.9, r2=0.6), "dp", True, True, autotune=True),
+    # Table 6 ablations.
+    "pipesd_no_pipeline": FrameworkSpec("pipesd_no_pipeline", "dual", dict(r1=0.9, r2=0.6), "no_early_upload", False, True),
+    "pipesd_fixed": FrameworkSpec("pipesd_fixed", "fixed", dict(n=6), "dp", True, True),
+    "pipesd_token": FrameworkSpec("pipesd_token", "token", dict(r=0.99), "dp", True, True),
+    "pipesd_sequence": FrameworkSpec("pipesd_sequence", "sequence", dict(r1=0.3), "dp", True, True),
+}
+
+
+def make_framework(name: str, **overrides) -> FrameworkSpec:
+    spec = FRAMEWORKS[name]
+    return replace(spec, **overrides) if overrides else spec
+
+
+# --------------------------------------------------------------------------- #
+# Statistics
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class RunStats:
+    accepted_tokens: int = 0  # accepted drafts + corrections (output tokens)
+    drafted_tokens: int = 0
+    accepted_drafts: int = 0
+    nav_calls: int = 0
+    rounds: int = 0
+    wall_time: float = 0.0  # simulated seconds
+    cloud_energy: float = 0.0  # joules above idle (ECS basis)
+    edge_busy_time: float = 0.0
+    channel_busy_time: float = 0.0
+    draft_lengths: List[int] = field(default_factory=list)
+    # Control-plane overheads (Table 5): real host seconds spent.
+    t_dp: float = 0.0
+    t_bo: float = 0.0
+    t_measure: float = 0.0
+    dp_runs: int = 0
+    bo_runs: int = 0
+
+    @property
+    def tpt(self) -> float:
+        """Average generation time per accepted token [s] (§5.1 Metrics)."""
+        return self.wall_time / max(self.accepted_tokens, 1)
+
+    @property
+    def ecs(self) -> float:
+        """Cloud energy per 100 accepted tokens [J] (§5.1 Metrics)."""
+        return self.cloud_energy / max(self.accepted_tokens, 1) * 100.0
+
+    @property
+    def verification_frequency(self) -> float:
+        return self.nav_calls / max(self.accepted_tokens, 1)
+
+    @property
+    def mean_draft_length(self) -> float:
+        return float(np.mean(self.draft_lengths)) if self.draft_lengths else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted_drafts / max(self.drafted_tokens, 1)
+
+    def summary(self) -> dict:
+        return dict(
+            tpt_ms=self.tpt * 1e3,
+            ecs_j=self.ecs,
+            verification_frequency=self.verification_frequency,
+            mean_draft_length=self.mean_draft_length,
+            acceptance_rate=self.acceptance_rate,
+            rounds=self.rounds,
+            nav_calls=self.nav_calls,
+            accepted_tokens=self.accepted_tokens,
+            wall_time_s=self.wall_time,
+            overhead_dp=self.t_dp / max(self.wall_time, 1e-9),
+            overhead_bo=self.t_bo / max(self.wall_time, 1e-9),
+            overhead_measure=self.t_measure / max(self.wall_time, 1e-9),
+        )
+
+
+# --------------------------------------------------------------------------- #
+# The engine
+# --------------------------------------------------------------------------- #
+
+
+class PipelineEngine:
+    """Simulates one edge↔cloud session under a FrameworkSpec.
+
+    The per-round timeline follows §3.2 exactly: token i of the round is ready
+    at ``t0 + i·γ``; batch k may start uplink at
+    ``max(channel_free, ready(last token of k))`` and costs ``α + β·size``;
+    NAV starts when the final batch + request arrive; the result lands after
+    the verify time + downlink cost.  With ``proactive`` (App. B) the edge
+    keeps drafting during NAV and the work is kept iff the round was fully
+    accepted and the bonus token matches the first proactive draft.
+    """
+
+    def __init__(
+        self,
+        spec: FrameworkSpec,
+        channel: ChannelModel,
+        cloud: CloudModel,
+        edge: EdgeModel,
+        source: TokenSource,
+        window_init: int = 20,
+        seed: int = 0,
+        monitor: Optional[EnvironmentMonitor] = None,
+        autotune_samples: int = 16,
+        autotune_tokens_per_sample: int = 20,
+    ):
+        self.spec = spec
+        self.channel = channel
+        self.cloud = cloud
+        self.edge = edge
+        self.source = source
+        self.rng = np.random.default_rng(seed)
+        self.window = window_init
+        self.recent_draft_lens: List[int] = []
+        self.monitor = monitor or EnvironmentMonitor()
+        self.autotune_samples = autotune_samples
+        self.autotune_tokens_per_sample = autotune_tokens_per_sample
+        self.trigger = self._make_trigger(spec.trigger_kind, dict(spec.trigger_kw))
+        self.stats = RunStats()
+        self.tuned_thresholds: Optional[Tuple[float, float]] = None
+        self._t = 0.0  # simulation clock
+        self._pending_head_start = 0  # proactive tokens carried into next round
+        self._schedule_cache: dict = {}
+
+    # ------------------------------------------------------------ helpers --
+    def _make_trigger(self, kind: str, kw: dict) -> TriggerPolicy:
+        return make_trigger(kind, window=self.window, **kw)
+
+    def _comm_params(self, t: float) -> CommParams:
+        return CommParams(
+            alpha=self.channel.alpha_up,
+            beta=self.channel.effective_beta_up(t),
+            gamma=self.edge.effective_gamma(),
+        )
+
+    def _plan_schedule(self, n_tokens: int, p: CommParams) -> Schedule:
+        key = (self.spec.schedule_policy, n_tokens, round(p.alpha, 6), round(p.beta, 6), round(p.gamma, 6))
+        if key not in self._schedule_cache:
+            t0 = _time.perf_counter()
+            self._schedule_cache[key] = make_schedule(self.spec.schedule_policy, n_tokens, p)
+            self.stats.t_dp += _time.perf_counter() - t0
+            self.stats.dp_runs += 1
+        return self._schedule_cache[key]
+
+    # -------------------------------------------------------------- a round --
+    def _run_round(self) -> Tuple[int, int, bool]:
+        """Simulate one speculative round.
+
+        Returns (n_drafted, n_accepted, full_accept).  Advances the clock to
+        the moment the edge receives the NAV result and has rolled back.
+        """
+        gamma = self.edge.effective_gamma()
+        t0 = self._t
+        # Proactive head start (App. B): tokens already drafted *and uploaded*
+        # during the previous round's NAV — they cost no generation or uplink
+        # time this round, but are ordinary drafts for trigger/acceptance.
+        head = self._pending_head_start
+        self._pending_head_start = 0
+
+        # ---- draft until trigger/cap; record per-token readiness ------------
+        confs: List[float] = []
+        accepts: List[bool] = []
+        n = 0
+        fired = False
+        while n < self.window:
+            conf, acc = self.source.next_token()
+            confs.append(conf)
+            accepts.append(acc)
+            n += 1
+            if self.trigger.observe(conf):
+                fired = True
+                break
+        n_new = max(0, n - head)  # tokens actually generated this round
+        gen_end = t0 + gamma * n_new
+        self.stats.edge_busy_time += gamma * n_new
+        self.stats.drafted_tokens += n
+
+        # ---- transmission ----------------------------------------------------
+        p = self._comm_params(t0)
+        self.monitor.observe_gamma(gamma)
+        if n_new == 0:
+            comm_end = t0  # everything was drafted+uploaded proactively
+        elif not self.spec.pipeline:
+            # Fig. 2(a): generate everything, then one upload.
+            up = self.channel.up_cost(n_new, gen_end)
+            self.monitor.observe_batch(n_new, up)
+            comm_end = gen_end + up
+            self.stats.channel_busy_time += up
+        else:
+            # Token-batch pipeline (§3.2): schedule over the *planned* window;
+            # on trigger, unsent tokens flush as one batch (§3.3 rule 1).
+            plan = self._plan_schedule(max(self.window, 1), p)
+            sizes = batch_sizes(plan.boundaries, max(self.window, 1))
+            chan_free = t0
+            sent = 0
+            for sz in sizes:
+                if sent >= n_new:
+                    break
+                take = min(sz, n_new - sent)
+                if sent + take >= n_new and fired:
+                    take = n_new - sent  # flush remainder on trigger
+                ready = t0 + gamma * (sent + take)
+                start = max(chan_free, ready)
+                cost = self.channel.up_cost(take, start)
+                self.monitor.observe_batch(take, cost)
+                chan_free = start + cost
+                self.stats.channel_busy_time += cost
+                sent += take
+            comm_end = chan_free
+
+        # ---- cloud NAV -------------------------------------------------------
+        nav_time = self.cloud.verify_time(n)
+        nav_end = comm_end + nav_time
+        self.stats.cloud_energy += self.cloud.verify_energy(n)
+        self.stats.nav_calls += 1
+
+        # ---- acceptance ------------------------------------------------------
+        n_accepted = 0
+        for a in accepts:
+            if a:
+                n_accepted += 1
+            else:
+                break
+        full = n_accepted >= n
+        result_at_edge = nav_end + self.channel.dn_cost(max(n_accepted, 1), nav_end)
+
+        # ---- proactive drafting during NAV (App. B) --------------------------
+        kept_proactive = False
+        if self.spec.proactive:
+            overlap = max(result_at_edge - gen_end, 0.0)
+            drafted_ahead = int(overlap / gamma)
+            # Keep iff the round fully accepted AND the bonus token matches the
+            # first proactive draft — approximated by the acceptance draw of
+            # that token (the draft re-predicting the target's bonus token).
+            if full and drafted_ahead > 0:
+                _, acc = self.source.next_token()
+                if acc:
+                    self._pending_head_start = min(drafted_ahead, self.window - 1)
+                    kept_proactive = True
+            # Rejected rounds discard proactive work (overlapped, no latency).
+
+        self._t = result_at_edge
+        if not kept_proactive:
+            # The draft model must ingest the correction token (one forward
+            # pass) before drafting resumes; with kept proactive work this
+            # already happened during the NAV overlap.
+            self._t += gamma
+            self.stats.edge_busy_time += gamma
+        self.stats.wall_time = self._t
+        self.stats.rounds += 1
+        self.stats.draft_lengths.append(n)
+        self.stats.accepted_drafts += n_accepted
+        self.stats.accepted_tokens += n_accepted + 1  # + corrected/bonus token
+        self.trigger.on_verify(n_accepted, n)
+        if isinstance(self.trigger, WindowCapTrigger):
+            # Dynamic N̂: moving average of the last 100 draft lengths (§3.3).
+            self.recent_draft_lens.append(n)
+            if len(self.recent_draft_lens) > 100:
+                self.recent_draft_lens.pop(0)
+            new_window = max(2, int(round(float(np.mean(self.recent_draft_lens)) * 1.5)))
+            if new_window != self.window:
+                self.window = new_window
+                self.trigger.set_window(new_window)
+        return n, n_accepted, full
+
+    # ---------------------------------------------------------------- runs --
+    def run(self, n_accepted_tokens: int = 1000) -> RunStats:
+        """Simulate until ≥ n_accepted_tokens are produced (paper: 1000)."""
+        if self.spec.autotune:
+            self._autotune()
+        while self.stats.accepted_tokens < n_accepted_tokens:
+            self._run_round()
+        return self.stats
+
+    # ------------------------------------------------------------ autotune --
+    def _autotune(self) -> None:
+        """BO over (R1, R2): each sample measures TPT over a few rounds (§3.3)."""
+        from .autotuner import BOAutotuner
+
+        t0 = _time.perf_counter()
+        bo = BOAutotuner(seed=int(self.rng.integers(2**31)))
+
+        def measure(r1: float, r2: float) -> float:
+            probe = PipelineEngine(
+                replace(self.spec, trigger_kind="dual", trigger_kw=dict(r1=r1, r2=r2), autotune=False),
+                self.channel,
+                self.cloud,
+                self.edge,
+                self.source,
+                window_init=self.window,
+                seed=int(self.rng.integers(2**31)),
+            )
+            probe.run(self.autotune_tokens_per_sample)
+            return probe.stats.tpt
+
+        best = bo.minimize(measure, n_trials=self.autotune_samples)
+        self.stats.t_bo += _time.perf_counter() - t0
+        self.stats.bo_runs += 1
+        r1, r2 = best.x
+        self.trigger = self._make_trigger("dual", dict(r1=r1, r2=r2))
+        self.tuned_thresholds = (r1, r2)

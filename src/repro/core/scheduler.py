@@ -1,0 +1,214 @@
+"""Token-batch pipeline scheduling (PipeSD §3.2, §4.1, Algorithm 1).
+
+The edge generates draft tokens autoregressively (γ seconds per token) and must
+ship them to the cloud over a channel whose per-batch cost is the Hockney model
+``α + β·n`` (App. A).  A *batching strategy* is a strictly increasing boundary
+sequence  𝔹 = (b_1, …, b_K), b_1 = 1, giving K batches where batch k covers
+tokens [b_k, b_{k+1}).  Communication of batch k may start only once (i) batch
+k's last token has been generated and (ii) batch k−1's communication finished
+(Eqs. 4–5).  The makespan of a speculative round (Eq. 6) is
+
+    T(𝔹) = τ_c^(K) + t_c^(K)
+
+Algorithm 1 computes the optimal 𝔹 by dynamic programming over the recurrence
+(App. E, Eq. 7):
+
+    OPT(j) = min_{0 ≤ i < j}  max(OPT(i), γ·j) + α + β·(j − i),     OPT(0) = 0
+
+which is exact because generation of token j finishes at γ·j regardless of the
+batching (generation is never blocked by communication).
+
+This module also provides the pipelined baselines of App. F (greedy,
+immediate-send, no-early-upload) and a brute-force optimum used by the property
+tests to validate Theorem 4.1.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+__all__ = [
+    "CommParams",
+    "Schedule",
+    "dp_schedule",
+    "greedy_schedule",
+    "immediate_schedule",
+    "no_early_upload_schedule",
+    "brute_force_schedule",
+    "simulate_schedule",
+    "batch_sizes",
+]
+
+
+@dataclass(frozen=True)
+class CommParams:
+    """Channel / compute parameters of the pipeline model (Table A.1).
+
+    alpha: startup overhead per transmission [s]
+    beta:  per-token transmission time [s]
+    gamma: per-token autoregressive generation time on the edge [s]
+    """
+
+    alpha: float
+    beta: float
+    gamma: float
+
+    def __post_init__(self) -> None:
+        if self.alpha < 0 or self.beta < 0 or self.gamma < 0:
+            raise ValueError(f"CommParams must be non-negative, got {self}")
+
+    def comm_time(self, n_tokens: int) -> float:
+        """t_c for a batch of n_tokens (Eq. 2)."""
+        return self.alpha + self.beta * n_tokens
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """A batching strategy 𝔹 plus its analytic makespan under the model."""
+
+    boundaries: Tuple[int, ...]  # 1-based first-token index of each batch; b_1 == 1
+    n_tokens: int
+    makespan: float
+    policy: str = "dp"
+
+    def __post_init__(self) -> None:
+        b = self.boundaries
+        if not b or b[0] != 1:
+            raise ValueError(f"boundaries must start at 1, got {b}")
+        if any(x >= y for x, y in zip(b, b[1:])):
+            raise ValueError(f"boundaries must be strictly increasing, got {b}")
+        if b[-1] > self.n_tokens:
+            raise ValueError(f"last boundary {b[-1]} > n_tokens {self.n_tokens}")
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.boundaries)
+
+
+def batch_sizes(boundaries: Sequence[int], n_tokens: int) -> List[int]:
+    """Token count of each batch for boundary sequence 𝔹 (Eq. 2's (b_{k+1}−b_k))."""
+    ext = list(boundaries) + [n_tokens + 1]
+    return [ext[k + 1] - ext[k] for k in range(len(boundaries))]
+
+
+def simulate_schedule(boundaries: Sequence[int], n_tokens: int, p: CommParams) -> float:
+    """Evaluate the makespan T(𝔹) by directly applying Eqs. (2)–(6).
+
+    Used both as the DP's objective oracle in tests and by the pipeline engine
+    to timestamp batch events.
+    """
+    sizes = batch_sizes(boundaries, n_tokens)
+    tau_ag_end = 0.0  # generation completion time of current batch
+    tau_c_free = 0.0  # time the channel becomes free
+    for sz in sizes:
+        tau_ag_end += p.gamma * sz  # Eq. (3)–(4): generation is back-to-back
+        start = max(tau_c_free, tau_ag_end)  # Eq. (5)
+        tau_c_free = start + p.comm_time(sz)  # Eq. (2)
+    return tau_c_free  # Eq. (6): completion of last batch's communication
+
+
+def dp_schedule(n_tokens: int, p: CommParams) -> Schedule:
+    """Algorithm 1: O(N̂²) dynamic program returning the optimal 𝔹.
+
+    dp[j] = minimal completion time (generation + communication) of the first
+    j tokens; prev[j] = the batch boundary realizing it.
+    """
+    if n_tokens <= 0:
+        raise ValueError(f"n_tokens must be positive, got {n_tokens}")
+    INF = float("inf")
+    dp = [INF] * (n_tokens + 1)
+    prev = [-1] * (n_tokens + 1)
+    dp[0] = 0.0
+    for j in range(1, n_tokens + 1):
+        gen_done = p.gamma * j  # token j's generation completes at γ·j
+        best, best_i = INF, -1
+        for i in range(j - 1, -1, -1):
+            t_c = p.alpha + p.beta * (j - i)  # Eq. (2)
+            cand = max(dp[i], gen_done) + t_c  # Eqs. (3)–(5) collapsed (App. E)
+            if cand < best:
+                best, best_i = cand, i
+        dp[j] = best
+        prev[j] = best_i
+    # Backtrack (Algorithm 1, lines 10-13).
+    bounds: List[int] = []
+    j = n_tokens
+    while j > 0:
+        i = prev[j]
+        bounds.append(i + 1)
+        j = i
+    bounds.reverse()
+    return Schedule(tuple(bounds), n_tokens, dp[n_tokens], policy="dp")
+
+
+def brute_force_schedule(n_tokens: int, p: CommParams) -> Schedule:
+    """Exhaustive search over all 2^(N−1) batchings. Test oracle for Thm 4.1."""
+    if n_tokens > 16:
+        raise ValueError("brute force limited to N<=16")
+    best: Tuple[float, Tuple[int, ...]] = (float("inf"), (1,))
+    interior = list(range(2, n_tokens + 1))
+    for r in range(len(interior) + 1):
+        for cut in itertools.combinations(interior, r):
+            b = (1,) + cut
+            t = simulate_schedule(b, n_tokens, p)
+            if t < best[0] - 1e-15:
+                best = (t, b)
+    return Schedule(best[1], n_tokens, best[0], policy="brute")
+
+
+def immediate_schedule(n_tokens: int, p: CommParams) -> Schedule:
+    """App. F *immediate-send*: every token is its own batch."""
+    b = tuple(range(1, n_tokens + 1))
+    return Schedule(b, n_tokens, simulate_schedule(b, n_tokens, p), policy="immediate")
+
+
+def no_early_upload_schedule(n_tokens: int, p: CommParams) -> Schedule:
+    """App. F *no-early-upload*: generate everything, then one batch."""
+    b = (1,)
+    return Schedule(b, n_tokens, simulate_schedule(b, n_tokens, p), policy="no_early_upload")
+
+
+def greedy_schedule(n_tokens: int, p: CommParams) -> Schedule:
+    """App. F *greedy*: when the channel goes idle, ship everything accumulated.
+
+    Simulated forward in time: the first token forms the first batch (channel
+    idle from t=0, nothing earlier to wait for); afterwards each time the
+    channel frees up, all tokens generated since the previous send form the
+    next batch (waiting for at least one token if none is pending).
+    """
+    bounds = [1]
+    sent = 0  # tokens shipped so far
+    tau_c_free = 0.0
+    while sent < n_tokens:
+        first_unsent = sent + 1
+        gen_done_first = p.gamma * first_unsent
+        start_floor = max(tau_c_free, gen_done_first)
+        # Everything generated by the time the channel is usable goes in.
+        n_ready = min(n_tokens, int(math.floor(start_floor / p.gamma + 1e-9))) if p.gamma > 0 else n_tokens
+        n_ready = max(n_ready, first_unsent)
+        sz = n_ready - sent
+        if sent + sz < n_tokens:
+            bounds.append(n_ready + 1)
+        start = max(tau_c_free, p.gamma * n_ready)
+        tau_c_free = start + p.comm_time(sz)
+        sent = n_ready
+    return Schedule(tuple(bounds), n_tokens, simulate_schedule(tuple(bounds), n_tokens, p), policy="greedy")
+
+
+POLICIES = {
+    "dp": dp_schedule,
+    "greedy": greedy_schedule,
+    "immediate": immediate_schedule,
+    "no_early_upload": no_early_upload_schedule,
+}
+
+
+def schedule(policy: str, n_tokens: int, p: CommParams) -> Schedule:
+    """Dispatch by policy name (used by the pipeline engine and benchmarks)."""
+    try:
+        fn = POLICIES[policy]
+    except KeyError:
+        raise KeyError(f"unknown scheduling policy {policy!r}; have {sorted(POLICIES)}") from None
+    return fn(n_tokens, p)

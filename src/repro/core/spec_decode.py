@@ -1,0 +1,342 @@
+"""JAX speculative decoding with dual-threshold triggering (PipeSD §2.2, §3.3).
+
+This module is model-agnostic: it consumes two callables
+
+    draft_step(params, token[B], cache)  -> (logits[B,V], cache)
+    (the target side runs its own forward; see ``verify_greedy`` /
+     ``verify_stochastic`` which operate on the target's logits)
+
+and provides:
+
+* ``draft_round``      — on-device ``lax.while_loop`` that autoregressively
+  drafts up to ``window`` tokens and *stops early* when the dual-threshold NAV
+  trigger fires (C1 ≤ R1 or P(D_n) ≤ R2).  This is the TPU-native adaptation of
+  PipeSD's edge loop: the trigger is evaluated in the carry, with no host sync.
+* ``verify_greedy``    — the paper's NAV rule: accept the longest prefix that
+  matches the target's greedy tokens; the first mismatch is corrected.
+* ``verify_stochastic``— Leviathan/Chen exact rejection sampling, preserving
+  the target distribution (accept w.p. min(1, p/q); on first reject, resample
+  from norm(max(p−q, 0)); on full accept, sample the bonus token).
+* ``SpecDecoder``      — host-side orchestration of full generations out of
+  jitted rounds, used by tests/examples (the real deployment splits the two
+  halves across the edge/cloud runtime in ``repro/runtime``).
+
+All functions are jit-compatible and batched.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DraftConfig",
+    "DraftResult",
+    "VerifyResult",
+    "draft_round",
+    "verify_greedy",
+    "verify_stochastic",
+    "SpecDecoder",
+    "sample_from_logits",
+]
+
+
+@dataclass(frozen=True)
+class DraftConfig:
+    """Dual-threshold trigger + window parameters (§3.3)."""
+
+    window: int  # scheduling window N̂ (hard cap on draft length per round)
+    r1: float = 0.0  # cumulative sequence confidence threshold (0 disables)
+    r2: float = 0.0  # single-token confidence threshold (0 disables)
+    temperature: float = 0.0  # 0 => greedy drafting
+    store_dists: bool = False  # keep full draft distributions (stochastic NAV)
+
+
+class DraftResult(NamedTuple):
+    tokens: jax.Array  # [B, window] int32, valid up to n_drafted (right-padded)
+    confs: jax.Array  # [B, window] f32 draft probability of each chosen token
+    n_drafted: jax.Array  # [B] int32 — tokens drafted before/at the trigger
+    triggered: jax.Array  # [B] bool — True if the dual threshold fired (vs cap)
+    seq_conf: jax.Array  # [B] f32 — C1 at loop exit (pre-reset)
+    cache: Any  # draft cache advanced by n_drafted tokens
+    dists: Optional[jax.Array]  # [B, window, V] draft distributions (optional)
+
+
+class VerifyResult(NamedTuple):
+    n_accepted: jax.Array  # [B] int32 — accepted draft tokens (0..K)
+    correction: jax.Array  # [B] int32 — corrected/bonus token from the target
+    all_accepted: jax.Array  # [B] bool
+
+
+def sample_from_logits(logits: jax.Array, key: jax.Array, temperature: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample (or argmax) a token; return (token[B], prob[B], probs[B,V]).
+
+    ``prob`` is the draft model's confidence P(D_n) of the chosen token —
+    computed from the *pre-temperature* softmax so confidence semantics match
+    the paper regardless of sampling temperature.
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if temperature and temperature > 0.0:
+        tok = jax.random.categorical(key, logits.astype(jnp.float32) / temperature, axis=-1)
+    else:
+        tok = jnp.argmax(logits, axis=-1)
+    tok = tok.astype(jnp.int32)
+    conf = jnp.take_along_axis(probs, tok[:, None], axis=-1)[:, 0]
+    return tok, conf, probs
+
+
+def draft_round(
+    draft_step: Callable[[Any, jax.Array, Any], Tuple[jax.Array, Any]],
+    params: Any,
+    cache: Any,
+    last_token: jax.Array,  # [B] int32 — last accepted token (round prefix end)
+    cfg: DraftConfig,
+    key: jax.Array,
+    vocab_size: Optional[int] = None,
+) -> DraftResult:
+    """One speculative round's drafting as a single on-device while_loop.
+
+    The loop carries (cache, token, k, C1, done-mask, buffers).  A batch lane
+    stops contributing once its trigger fires; the loop exits when every lane
+    is done or the window cap is hit.  Buffers are fixed-size [B, window] so
+    the function compiles once per (B, window).
+    """
+    B = last_token.shape[0]
+    W = cfg.window
+    if cfg.store_dists and vocab_size is None:
+        raise ValueError("store_dists=True requires vocab_size")
+
+    tokens0 = jnp.zeros((B, W), jnp.int32)
+    confs0 = jnp.zeros((B, W), jnp.float32)
+    dists0 = jnp.zeros((B, W, vocab_size), jnp.float32) if cfg.store_dists else None
+
+    def cond(state):
+        k, done = state[2], state[5]
+        return jnp.logical_and(k < W, ~jnp.all(done))
+
+    def body(state):
+        cache, tok, k, n, c1, done, trig, tokens, confs, dists, key = state
+        key, sub = jax.random.split(key)
+        logits, new_cache = draft_step(params, tok, cache)
+        new_tok, conf, probs = sample_from_logits(logits, sub, cfg.temperature)
+        # Dual-threshold evaluation (§3.3): C1* = C1 · P(D_n).
+        c1_star = c1 * conf
+        fire = jnp.logical_or(c1_star <= cfg.r1, conf <= cfg.r2)
+        # Lanes already done are drained: they re-feed their final token, which
+        # (on the first drained step) writes that token's KV entry — exactly
+        # the entry needed when NAV accepts the full draft.  Extra entries
+        # beyond that are truncated by the caller via cache lengths.
+        write = ~done
+        tokens = tokens.at[:, k].set(jnp.where(write, new_tok, tokens[:, k]))
+        confs = confs.at[:, k].set(jnp.where(write, conf, confs[:, k]))
+        if dists is not None:
+            dists = dists.at[:, k, :].set(jnp.where(write[:, None], probs, dists[:, k, :]))
+        n = n + write.astype(jnp.int32)
+        new_c1 = jnp.where(write, jnp.where(fire, 1.0, c1_star), c1)
+        new_trig = jnp.where(write, jnp.logical_or(trig, fire), trig)
+        new_done = jnp.logical_or(done, fire)
+        tok = jnp.where(write, new_tok, tok)
+        return (new_cache, tok, k + 1, n, new_c1, new_done, new_trig, tokens, confs, dists, key)
+
+    init = (
+        cache,
+        last_token.astype(jnp.int32),
+        jnp.int32(0),
+        jnp.zeros((B,), jnp.int32),
+        jnp.ones((B,), jnp.float32),
+        jnp.zeros((B,), bool),
+        jnp.zeros((B,), bool),
+        tokens0,
+        confs0,
+        dists0,
+        key,
+    )
+    cache, tok, k, n, c1, done, trig, tokens, confs, dists, _ = jax.lax.while_loop(cond, body, init)
+    # One post-loop feed of each lane's final drafted token: ensures the KV
+    # entry for the last draft exists even when NAV later accepts all of it.
+    # (Lanes that fired before the last iteration already got this entry from
+    # their first drain step; the extra entries written beyond it land past
+    # the valid prefix and are dropped when the caller resets cache lengths.)
+    _, cache = draft_step(params, tok, cache)
+    return DraftResult(tokens, confs, n, trig, c1, cache, dists)
+
+
+def verify_greedy(target_logits: jax.Array, draft_tokens: jax.Array, n_drafted: jax.Array) -> VerifyResult:
+    """Paper-mode NAV: longest prefix matching the target's greedy choice.
+
+    target_logits: [B, K+1, V] — target logits at each draft position plus one
+        extra position (the standard "bonus" slot: logits after the last draft
+        token, used for the correction when everything is accepted).
+        Position i predicts draft token i, i.e. logits at prefix+i.
+    draft_tokens:  [B, K]
+    n_drafted:     [B] — valid draft lengths (≤ K); positions ≥ n_drafted are
+        treated as automatic mismatches so padded lanes never over-accept.
+    """
+    B, K1, _ = target_logits.shape
+    K = K1 - 1
+    greedy = jnp.argmax(target_logits[:, :K, :], axis=-1).astype(jnp.int32)  # [B, K]
+    pos = jnp.arange(K)[None, :]
+    match = jnp.logical_and(greedy == draft_tokens, pos < n_drafted[:, None])
+    # n_accepted = length of the all-True prefix.
+    n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1).astype(jnp.int32)
+    all_acc = n_acc >= n_drafted
+    # Correction: target's greedy token at the first mismatch; bonus otherwise.
+    idx = jnp.minimum(n_acc, K)
+    corr_all = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # [B, K+1]
+    correction = jnp.take_along_axis(corr_all, idx[:, None], axis=-1)[:, 0]
+    return VerifyResult(n_acc, correction, all_acc)
+
+
+def verify_stochastic(
+    target_probs: jax.Array,  # [B, K+1, V] — target distributions per position
+    draft_probs: jax.Array,  # [B, K, V]   — draft distributions per position
+    draft_tokens: jax.Array,  # [B, K]
+    n_drafted: jax.Array,  # [B]
+    key: jax.Array,
+) -> VerifyResult:
+    """Exact speculative sampling (Leviathan et al. 2023; Chen et al. 2023).
+
+    Accept draft token x_i with probability min(1, p_i(x_i)/q_i(x_i)).  At the
+    first rejection resample from norm(max(p_i − q_i, 0)); if all K drafts are
+    accepted, sample the bonus token from p_K.  The output marginal equals the
+    target distribution exactly (validated by property test).
+    """
+    B, K1, V = target_probs.shape
+    K = K1 - 1
+    k_acc, k_res = jax.random.split(key)
+    p_tok = jnp.take_along_axis(target_probs[:, :K, :], draft_tokens[..., None], axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(draft_probs, draft_tokens[..., None], axis=-1)[..., 0]
+    u = jax.random.uniform(k_acc, (B, K))
+    ratio = p_tok / jnp.maximum(q_tok, 1e-30)
+    pos = jnp.arange(K)[None, :]
+    accept = jnp.logical_and(u < ratio, pos < n_drafted[:, None])
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1), axis=-1).astype(jnp.int32)
+    all_acc = n_acc >= n_drafted
+    # Residual distribution at the rejection position (per lane).
+    idx = jnp.minimum(n_acc, K)
+    p_at = jnp.take_along_axis(target_probs, idx[:, None, None], axis=1)[:, 0, :]  # [B, V]
+    q_at = jnp.take_along_axis(
+        jnp.concatenate([draft_probs, jnp.zeros((B, 1, V), draft_probs.dtype)], axis=1),
+        idx[:, None, None],
+        axis=1,
+    )[:, 0, :]
+    residual = jnp.maximum(p_at - q_at, 0.0)
+    res_norm = residual / jnp.maximum(residual.sum(-1, keepdims=True), 1e-30)
+    # On full accept the "residual" is just p_K (bonus sample from the target).
+    dist = jnp.where(all_acc[:, None], p_at, res_norm)
+    correction = jax.random.categorical(k_res, jnp.log(jnp.maximum(dist, 1e-30)), axis=-1).astype(jnp.int32)
+    return VerifyResult(n_acc, correction, all_acc)
+
+
+class SpecDecoder:
+    """Host-side speculative-decoding orchestration from jitted rounds.
+
+    Drives full generations for tests/examples and produces *round traces*
+    (per-round draft length, confidences, acceptance) consumed by the pipeline
+    engine and the benchmark suite.  The cloud/edge split of the same logic
+    lives in ``repro/runtime`` — this class is the single-process reference.
+    """
+
+    def __init__(
+        self,
+        draft_step: Callable,
+        target_forward: Callable,
+        draft_params: Any,
+        target_params: Any,
+        cfg: DraftConfig,
+        cache_truncate: Callable[[Any, jax.Array], Any],
+        greedy_verify: bool = True,
+        vocab_size: Optional[int] = None,
+    ):
+        self._raw_draft_step = draft_step
+        self._vocab_size = vocab_size
+        self.cfg = cfg
+        self.greedy_verify = greedy_verify
+        self.draft_params = draft_params
+        self.target_params = target_params
+        self.cache_truncate = jax.jit(cache_truncate)
+        self.target_forward = jax.jit(target_forward)
+        self._rebind()
+
+    def _rebind(self) -> None:
+        self._draft_round = jax.jit(
+            functools.partial(draft_round, self._raw_draft_step, cfg=self.cfg, vocab_size=self._vocab_size)
+        )
+
+    def set_thresholds(self, r1: float, r2: float) -> None:
+        """BO-autotuner hook (Parameter Updater, §4.2).
+
+        Thresholds are static under jit, so updates recompile the draft round;
+        this only happens on δ₁-triggered autotuner runs (App. D.1), whose cost
+        the paper bounds at ≤1.1 % of wall time.
+        """
+        import dataclasses
+
+        self.cfg = dataclasses.replace(self.cfg, r1=float(r1), r2=float(r2))
+        self._rebind()
+
+    def generate(
+        self,
+        prompt_tokens: jax.Array,  # [B, P]
+        draft_cache: Any,
+        target_cache: Any,
+        prefill_draft: Callable,
+        prefill_target: Callable,
+        max_new_tokens: int,
+        key: jax.Array,
+    ):
+        """Run full generations; returns (tokens list[B] of python lists, trace).
+
+        The trace records, per speculative round: draft length, acceptance
+        count, per-token confidences, and whether the dual threshold (vs the
+        window cap) fired — exactly the statistics of Table 7 and the inputs
+        the pipeline engine replays for timing.
+        """
+        import numpy as np
+
+        B, P = prompt_tokens.shape
+        _, draft_cache = prefill_draft(self.draft_params, prompt_tokens, draft_cache)
+        t_logits, target_cache = prefill_target(self.target_params, prompt_tokens, target_cache)
+        last = jnp.argmax(t_logits[:, -1, :], axis=-1).astype(jnp.int32)
+        outputs = [[int(t)] for t in jax.device_get(last)]
+        # Valid prefix length per lane (tokens whose KV both caches must hold).
+        lens = jnp.full((B,), P, jnp.int32)
+        trace = []
+        while min(len(o) for o in outputs) < max_new_tokens:
+            key, k1, k2 = jax.random.split(key, 3)
+            dr = self._draft_round(self.draft_params, draft_cache, last, key=k1)
+            # NAV: target forward over [last, drafts] → logits for K drafts + bonus.
+            seq = jnp.concatenate([last[:, None], dr.tokens], axis=-1)  # [B, K+1]
+            t_logits, target_cache = self.target_forward(self.target_params, seq, target_cache)
+            if self.greedy_verify:
+                vr = verify_greedy(t_logits, dr.tokens, dr.n_drafted)
+            else:
+                t_probs = jax.nn.softmax(t_logits.astype(jnp.float32), axis=-1)
+                vr = verify_stochastic(t_probs, dr.dists, dr.tokens, dr.n_drafted, k2)
+            toks, naccs, corrs, ndr, confs, trig = (
+                np.asarray(jax.device_get(x))
+                for x in (dr.tokens, vr.n_accepted, vr.correction, dr.n_drafted, dr.confs, dr.triggered)
+            )
+            for b in range(B):
+                outputs[b].extend(toks[b, : naccs[b]].tolist())
+                outputs[b].append(int(corrs[b]))
+            # Roll both caches back to the accepted prefix: the round consumed
+            # `last` (1 token) + accepted drafts.  Entries beyond are garbage
+            # (rejected drafts / drain steps) and get overwritten.
+            lens = lens + 1 + vr.n_accepted
+            draft_cache = self.cache_truncate(dr.cache, lens)
+            target_cache = self.cache_truncate(target_cache, lens)
+            last = vr.correction
+            trace.append(
+                dict(
+                    n_drafted=ndr.tolist(),
+                    n_accepted=naccs.tolist(),
+                    confs=confs.tolist(),
+                    triggered=trig.tolist(),
+                )
+            )
+        return outputs, trace

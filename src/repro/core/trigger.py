@@ -1,0 +1,203 @@
+"""NAV-triggering policies (PipeSD §3.3 + baselines §5.1 / App. G.3).
+
+A trigger policy watches the stream of draft-token confidences ``P(D_n)`` and
+decides *when* the edge should request cloud non-autoregressive verification
+(NAV).  All policies share the interface:
+
+    trig = DualThresholdTrigger(r1=..., r2=...)
+    for conf in stream:
+        if trig.observe(conf):   # True => request NAV now
+            ...
+    trig.on_verify(n_accepted, window)   # feedback after NAV completes
+
+Policies implemented:
+
+* ``DualThresholdTrigger`` — PipeSD: fire when the cumulative sequence
+  confidence C1 = ∏ P(D_n) ≤ R1  **or**  P(D_n) ≤ R2.  C1 resets to 1 on fire.
+* ``FixedLengthTrigger``   — Vanilla: fire every N tokens.
+* ``TokenThresholdTrigger``— HSL: fire when P(D_n) ≤ R (single signal).
+* ``SequenceThresholdTrigger`` — EdgeLLM: fire when C1 ≤ R1 where R1 is
+  *dynamically* updated after each NAV per App. G.3 Eq. (7):
+      R1 ← 0.5·R1                      if all N̂ tokens accepted
+      R1 ← R1 ^ ((N̂−N_correct)/N̂)      otherwise   (raises R1 toward 1)
+* ``WindowCapTrigger`` — safety wrapper: force-fire at a max window N̂ (PipeSD
+  always carries this bound so a confident stream cannot draft forever).
+
+All policies are pure-python host objects (the control plane); the on-device
+mirror of the dual-threshold rule lives in ``core/spec_decode.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+__all__ = [
+    "TriggerPolicy",
+    "DualThresholdTrigger",
+    "FixedLengthTrigger",
+    "TokenThresholdTrigger",
+    "SequenceThresholdTrigger",
+    "WindowCapTrigger",
+    "make_trigger",
+]
+
+
+class TriggerPolicy:
+    """Base interface; subclasses override ``observe`` and optionally ``on_verify``."""
+
+    name = "base"
+
+    def observe(self, conf: float) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def on_verify(self, n_accepted: int, window: int) -> None:
+        """Feedback hook called after each NAV round."""
+
+    def reset(self) -> None:
+        """Reset per-round state (called when a new speculative round starts)."""
+
+
+@dataclass
+class DualThresholdTrigger(TriggerPolicy):
+    """PipeSD §3.3: joint sequence- and token-confidence triggering."""
+
+    r1: float  # cumulative sequence confidence threshold R1
+    r2: float  # single-token confidence threshold R2
+    c1: float = field(default=1.0, init=False)  # running ∏ P(D_n)
+    name = "dual"
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.r1 <= 1.0 and 0.0 <= self.r2 <= 1.0):
+            raise ValueError(f"thresholds must lie in [0,1], got R1={self.r1}, R2={self.r2}")
+
+    def observe(self, conf: float) -> bool:
+        c1_star = self.c1 * conf  # tentative cumulative confidence C1*
+        if c1_star <= self.r1 or conf <= self.r2:
+            self.c1 = 1.0  # reset on trigger (§3.3)
+            return True
+        self.c1 = c1_star
+        return False
+
+    def reset(self) -> None:
+        self.c1 = 1.0
+
+    def set_thresholds(self, r1: float, r2: float) -> None:
+        """Hot-update from the BO autotuner (Parameter Updater, §4.2)."""
+        self.r1, self.r2 = float(r1), float(r2)
+
+
+@dataclass
+class FixedLengthTrigger(TriggerPolicy):
+    """Vanilla speculative decoding: fixed draft length N per round."""
+
+    n: int
+    count: int = field(default=0, init=False)
+    name = "fixed"
+
+    def observe(self, conf: float) -> bool:
+        self.count += 1
+        if self.count >= self.n:
+            self.count = 0
+            return True
+        return False
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+@dataclass
+class TokenThresholdTrigger(TriggerPolicy):
+    """HSL: fire as soon as a single token's confidence ≤ threshold."""
+
+    r: float
+    name = "token"
+
+    def observe(self, conf: float) -> bool:
+        return conf <= self.r
+
+
+@dataclass
+class SequenceThresholdTrigger(TriggerPolicy):
+    """EdgeLLM (adapted, App. G.3): cumulative confidence with dynamic R1."""
+
+    r1: float
+    c1: float = field(default=1.0, init=False)
+    name = "sequence"
+
+    def observe(self, conf: float) -> bool:
+        self.c1 *= conf
+        if self.c1 <= self.r1:
+            self.c1 = 1.0
+            return True
+        return False
+
+    def on_verify(self, n_accepted: int, window: int) -> None:
+        # App. G.3 Eq. (7): R1 ← 0.5·R1 on full acceptance (longer drafts);
+        # R1 ← R1 / ((N̂−N_correct)/N̂) on rejection (raise → earlier NAV).
+        if window <= 0:
+            return
+        if n_accepted >= window:
+            self.r1 = max(0.02, 0.5 * self.r1)  # floor avoids runaway windows
+        else:
+            frac = (window - n_accepted) / window
+            self.r1 = min(0.999999, self.r1 / frac)
+
+    def reset(self) -> None:
+        self.c1 = 1.0
+
+
+@dataclass
+class WindowCapTrigger(TriggerPolicy):
+    """Wraps any policy with a hard window cap N̂ (scheduling window, §3.3)."""
+
+    inner: TriggerPolicy
+    window: int
+    count: int = field(default=0, init=False)
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"{self.inner.name}+cap{self.window}"
+
+    def observe(self, conf: float) -> bool:
+        self.count += 1
+        fired = self.inner.observe(conf)
+        if self.count >= self.window:
+            fired = True
+        if fired:
+            self.count = 0
+            self.inner.reset()
+        return fired
+
+    def on_verify(self, n_accepted: int, window: int) -> None:
+        self.inner.on_verify(n_accepted, window)
+
+    def reset(self) -> None:
+        self.count = 0
+        self.inner.reset()
+
+    def set_window(self, window: int) -> None:
+        """Dynamic N̂ adjustment (moving average of recent draft lengths, §3.3)."""
+        self.window = max(1, int(window))
+
+
+def make_trigger(kind: str, **kw) -> TriggerPolicy:
+    """Factory used by the pipeline engine / benchmarks.
+
+    kinds: 'dual' (r1, r2), 'fixed' (n), 'token' (r), 'sequence' (r1);
+    pass window=N to wrap with a cap.
+    """
+    window = kw.pop("window", None)
+    if kind == "dual":
+        t: TriggerPolicy = DualThresholdTrigger(r1=kw["r1"], r2=kw["r2"])
+    elif kind == "fixed":
+        t = FixedLengthTrigger(n=kw["n"])
+    elif kind == "token":
+        t = TokenThresholdTrigger(r=kw["r"])
+    elif kind == "sequence":
+        t = SequenceThresholdTrigger(r1=kw["r1"])
+    else:
+        raise KeyError(f"unknown trigger kind {kind!r}")
+    if window is not None:
+        return WindowCapTrigger(t, window=window)
+    return t

@@ -1,0 +1,3 @@
+from .pipeline import ByteTokenizer, DataPipeline, SyntheticCorpus
+
+__all__ = ["ByteTokenizer", "DataPipeline", "SyntheticCorpus"]

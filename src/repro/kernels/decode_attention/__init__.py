@@ -1,0 +1,6 @@
+from . import ops, ref
+from .kernel import decode_attention_pallas
+from .ops import decode_attention
+from .ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_pallas", "decode_attention_ref", "ops", "ref"]

@@ -1,0 +1,110 @@
+"""Pallas TPU decode attention (flash-decode): one query vs a long KV cache.
+
+The serving hot path for ``decode_32k`` / ``long_500k``: a single new token's
+query attends over S cached keys.  Grid: (batch, num_kv_blocks) with the kv
+dimension "arbitrary" so online-softmax state (m, l, acc — per head) lives in
+VMEM scratch across kv blocks.  KV blocks of [BK, hd] per head stream through
+VMEM; per-lane valid lengths mask dead slots, and a sliding window bounds the
+live region for local-attention layers.
+
+Working set per step: H·hd (q) + 2·BK·H·hd (k,v) + H·BK (scores) floats —
+BK=512, H≤64, hd≤256 stays well under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,  # [1, 1] i32 — valid KV length for this lane
+    q_ref,  # [1, H, hd]
+    k_ref,  # [1, BK, H, hd]
+    v_ref,  # [1, BK, H, hd]
+    o_ref,  # [1, H, hd]
+    m_scr,  # [H] f32
+    l_scr,  # [H] f32
+    acc_scr,  # [H, hd] f32
+    *,
+    sm_scale: float,
+    window: int,
+    bk: int,
+    nk: int,
+):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, hd]
+    k = k_ref[0].astype(jnp.float32)  # [BK, H, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.einsum("hd,khd->hk", q, k) * sm_scale  # [H, BK]
+    length = len_ref[0, 0]
+    k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)  # [1, BK]
+    valid = k_pos < length
+    valid = jnp.logical_and(valid, k_pos >= length - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.einsum("hk,khd->hd", p, v)
+    m_scr[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,  # [B, H, hd] — single-position queries
+    k_cache: jax.Array,  # [B, S, H, hd]  (GQA-expanded by the wrapper)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B] i32 valid prefix per lane
+    *,
+    window: int = 1 << 30,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, hd = k_cache.shape
+    bk = min(block_k, S)
+    if S % bk:
+        raise ValueError(f"S={S} must be divisible by block_k={bk}")
+    nk = S // bk
+    sm_scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale, window=int(window), bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, H, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, bk, H, hd), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.reshape(B, 1).astype(jnp.int32), q, k_cache, v_cache)

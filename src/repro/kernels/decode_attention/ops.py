@@ -1,0 +1,34 @@
+"""Jit'd wrapper for decode attention (GQA expansion + impl dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "block_k"))
+def decode_attention(
+    q: jax.Array,  # [B, H, hd]
+    k_cache: jax.Array,  # [B, S, Hkv, hd]
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B]
+    *,
+    window: int = 1 << 30,
+    impl: str = "interpret",
+    block_k: int = 512,
+) -> jax.Array:
+    H = q.shape[1]
+    n_kv = k_cache.shape[2]
+    if n_kv != H:
+        k_cache = jnp.repeat(k_cache, H // n_kv, axis=2)
+        v_cache = jnp.repeat(v_cache, H // n_kv, axis=2)
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, lengths, window=window)
+    return decode_attention_pallas(
+        q, k_cache, v_cache, lengths, window=window, block_k=block_k, interpret=(impl == "interpret")
+    )

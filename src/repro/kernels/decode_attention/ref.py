@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-position decode attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, H, hd]
+    k_cache: jax.Array,  # [B, S, H, hd]
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B]
+    *,
+    window: int = 1 << 30,
+) -> jax.Array:
+    B, S, H, hd = k_cache.shape
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    k_pos = jnp.arange(S)[None, :]
+    valid = jnp.logical_and(k_pos < lengths[:, None], k_pos >= lengths[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (causal + window + softcap + GQA)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, T, H, hd]
+    k: jax.Array,  # [B, T, H, hd]
+    v: jax.Array,
+    *,
+    window: int = 1 << 30,
+    softcap: float = 0.0,
+    causal: bool = True,
+) -> jax.Array:
+    B, T, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(T)[:, None]
+    kp = jnp.arange(T)[None, :]
+    dist = qp - kp
+    mask = dist < window
+    if causal:
+        mask = jnp.logical_and(mask, dist >= 0)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,6 @@
+from . import ops, ref
+from .kernel import rglru_scan_pallas
+from .ops import rglru_scan
+from .ref import rglru_scan_ref
+
+__all__ = ["rglru_scan", "rglru_scan_pallas", "rglru_scan_ref", "ops", "ref"]

@@ -1,0 +1,6 @@
+from . import ops, ref
+from .kernel import spec_verify_pallas
+from .ops import spec_verify
+from .ref import spec_verify_ref
+
+__all__ = ["spec_verify", "spec_verify_pallas", "spec_verify_ref", "ops", "ref"]

@@ -1,0 +1,128 @@
+"""Pallas TPU fused speculative-verification (greedy NAV) kernel.
+
+The NAV step's post-processing is memory-bound on the target logits
+[B, K+1, V] (V up to 262k padded): XLA's naive lowering reads the logits
+once for argmax, once for log-softmax, and once for the draft-token gather.
+This kernel fuses all three into ONE pass over the vocabulary:
+
+    per (lane, vocab-block): running (max, argmax, logsumexp) per position
+    + gather of each draft token's logit when its id falls in the block;
+    final block → n_accepted, correction token, draft-token log-probs.
+
+Grid: (B, num_vocab_blocks), vocab dimension "arbitrary" (sequential) with
+running state in VMEM scratch.  K+1 ≤ 16 positions; vocab blocks of 2048
+keep the [K+1, BV] score tile ≤ 128 KB in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BV = 2048
+NEG_INF = -1e30
+
+
+def _verify_kernel(
+    logits_ref,  # [1, K1, BV] f32/bf16 target logits block
+    tokens_ref,  # [1, K] i32 draft tokens (SMEM)
+    nd_ref,  # [1, 1] i32 n_drafted (SMEM)
+    nacc_ref,  # [1, 1] i32 out
+    corr_ref,  # [1, 1] i32 out
+    logp_ref,  # [1, K] f32 out — log P_target(draft token)
+    m_scr,  # [K1] f32 running max
+    arg_scr,  # [K1] i32 running argmax
+    lse_scr,  # [K1] f32 running sum exp (shifted by m)
+    tok_scr,  # [K1] f32 draft-token logits (position i holds logit of draft i)
+    *,
+    bv: int,
+    nv: int,
+    k1: int,
+):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        arg_scr[...] = jnp.zeros_like(arg_scr)
+        lse_scr[...] = jnp.zeros_like(lse_scr)
+        tok_scr[...] = jnp.full_like(tok_scr, NEG_INF)
+
+    s = logits_ref[0].astype(jnp.float32)  # [K1, BV]
+    ids = vb * bv + jax.lax.broadcasted_iota(jnp.int32, (k1, bv), 1)
+    blk_max = jnp.max(s, axis=-1)  # [K1]
+    blk_arg = jnp.min(jnp.where(s == blk_max[:, None], ids, jnp.int32(2**30)), axis=-1)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, blk_max)
+    lse_scr[...] = lse_scr[...] * jnp.exp(m_prev - m_new) + jnp.sum(jnp.exp(s - m_new[:, None]), axis=-1)
+    arg_scr[...] = jnp.where(blk_max > m_prev, blk_arg, arg_scr[...])
+    m_scr[...] = m_new
+    # Gather draft-token logits owned by this block: position i's draft token
+    # is tokens[i] and is verified against logits row i (row K is the bonus).
+    K = k1 - 1
+    tok_row = jnp.concatenate(
+        [tokens_ref[0, :].reshape(K), jnp.full((1,), -1, jnp.int32)]
+    )  # [K1]
+    hit = ids == tok_row[:, None]  # [K1, BV]
+    gathered = jnp.sum(jnp.where(hit, s, 0.0), axis=-1)
+    tok_scr[...] = jnp.where(jnp.any(hit, axis=-1), gathered, tok_scr[...])
+
+    @pl.when(vb == nv - 1)
+    def _finalize():
+        greedy = arg_scr[...]  # [K1]
+        lse = m_scr[...] + jnp.log(jnp.maximum(lse_scr[...], 1e-30))
+        n_d = nd_ref[0, 0]
+        pos = jax.lax.broadcasted_iota(jnp.int32, (k1,), 0)
+        match = jnp.logical_and(greedy == tok_row, pos < n_d)[:K]
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32)))
+        nacc_ref[0, 0] = n_acc
+        corr_ref[0, 0] = jnp.sum(jnp.where(pos == jnp.minimum(n_acc, K), greedy, 0))
+        logp_ref[0, :] = (tok_scr[...] - lse)[:K]
+
+
+def spec_verify_pallas(
+    target_logits: jax.Array,  # [B, K+1, V]
+    draft_tokens: jax.Array,  # [B, K] i32
+    n_drafted: jax.Array,  # [B] i32
+    *,
+    block_v: int = DEFAULT_BV,
+    interpret: bool = False,
+):
+    B, K1, V = target_logits.shape
+    K = K1 - 1
+    bv = min(block_v, V)
+    if V % bv:
+        raise ValueError(f"V={V} must be divisible by block_v={bv}")
+    nv = V // bv
+    kernel = functools.partial(_verify_kernel, bv=bv, nv=nv, k1=K1)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nv),
+        in_specs=[
+            pl.BlockSpec((1, K1, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, K), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, K), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((K1,), jnp.float32),
+            pltpu.VMEM((K1,), jnp.int32),
+            pltpu.VMEM((K1,), jnp.float32),
+            pltpu.VMEM((K1,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(target_logits, draft_tokens.astype(jnp.int32), n_drafted.reshape(B, 1).astype(jnp.int32))

@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the fused NAV verify kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import spec_verify_pallas
+from .ref import spec_verify_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_v"))
+def spec_verify(
+    target_logits: jax.Array,  # [B, K+1, V]
+    draft_tokens: jax.Array,  # [B, K]
+    n_drafted: jax.Array,  # [B]
+    *,
+    impl: str = "interpret",
+    block_v: int = 2048,
+):
+    if impl == "ref":
+        return spec_verify_ref(target_logits, draft_tokens, n_drafted)
+    return spec_verify_pallas(target_logits, draft_tokens, n_drafted, block_v=block_v, interpret=(impl == "interpret"))

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for fused greedy NAV verification."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spec_verify_ref(target_logits: jax.Array, draft_tokens: jax.Array, n_drafted: jax.Array):
+    """Returns (n_accepted [B,1], correction [B,1], draft_logp [B,K])."""
+    B, K1, V = target_logits.shape
+    K = K1 - 1
+    s = target_logits.astype(jnp.float32)
+    greedy = jnp.argmax(s, axis=-1).astype(jnp.int32)  # [B, K1]
+    pos = jnp.arange(K)[None, :]
+    match = jnp.logical_and(greedy[:, :K] == draft_tokens, pos < n_drafted[:, None])
+    n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1).astype(jnp.int32)
+    corr = jnp.take_along_axis(greedy, jnp.minimum(n_acc, K)[:, None], axis=-1)
+    logp_all = jax.nn.log_softmax(s, axis=-1)
+    logp = jnp.take_along_axis(logp_all[:, :K, :], draft_tokens[..., None], axis=-1)[..., 0]
+    return n_acc[:, None], corr, logp

@@ -1,0 +1,58 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration helper: re-run one dry-run cell into an iteration directory
+and print the roofline-term delta vs the baseline artifact.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch arctic-480b --shape train_4k --mesh pod --tag it1_attn_reshard
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+
+def main() -> None:
+    from repro.launch.dryrun import run_cell
+    from repro.roofline import analyze_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--baseline", default="dryrun_results")
+    args = ap.parse_args()
+
+    out_dir = Path(f"perf_iters/{args.tag}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    rec = run_cell(args.arch, args.shape, args.mesh, out_dir, force=True)
+    base_path = Path(args.baseline) / f"{args.arch}__{args.shape}__{args.mesh}.json"
+    base = json.loads(base_path.read_text()) if base_path.exists() else None
+
+    def fmt(r):
+        c = analyze_cell(r)
+        if c is None:
+            return f"FAILED/SKIP: {r.get('error', r.get('skipped'))}"
+        return (
+            f"compute={c.compute_corrected_s*1e3:8.2f}ms memory={c.memory_s*1e3:8.2f}ms "
+            f"collective={c.collective_s*1e3:8.2f}ms dominant={c.dominant:10s} "
+            f"RLfrac={c.roofline_fraction():6.1%} GiB/dev={c.per_device_gib:6.2f} fits={c.fits}"
+        )
+
+    print(f"cell: {args.arch} × {args.shape} × {args.mesh}")
+    if base:
+        print(f"  before: {fmt(base)}")
+    print(f"  after : {fmt(rec)}")
+    if base and rec.get("ok") and base.get("ok") and not rec.get("skipped"):
+        cb, ca = analyze_cell(base), analyze_cell(rec)
+        if cb and ca:
+            for term in ("compute_corrected_s", "memory_s", "collective_s"):
+                b, a = getattr(cb, term), getattr(ca, term)
+                print(f"  Δ{term:22s}: {b*1e3:8.2f} → {a*1e3:8.2f} ms ({(a-b)/max(b,1e-12):+.1%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Step-function builders shared by train.py / serve.py / dryrun.py.
+
+``build_train_step(cfg, optimizer)``  → train_step(state, batch) -> (state, metrics)
+``build_prefill_step(cfg)``           → prefill(params, batch, cache) -> (logits, cache)
+``build_decode_step(cfg)``            → decode(params, tokens, cache) -> (logits, cache)
+``build_verify_step(cfg)``            → NAV verify: decode K+1 tokens + fused
+                                        greedy acceptance (the paper's cloud op)
+
+All are pure functions of pytrees — pjit-ready; sharding is attached by the
+callers via in_shardings/out_shardings from ``repro.sharding.partition``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec_decode import verify_greedy
+from repro.models import zoo
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def build_train_step(cfg: ModelConfig, optimizer: Optimizer, clip_norm: float = 1.0):
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        def loss(p):
+            l, metrics = zoo.loss_fn(p, batch, cfg)
+            return l, metrics
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(state.params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, new_opt = optimizer.update(grads, state.opt_state, state.params, state.step)
+        from repro.optim import apply_updates
+
+        new_params = apply_updates(state.params, updates)
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        metrics = dict(metrics, loss=l, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch: Dict[str, jax.Array], cache):
+        return zoo.prefill(params, batch, cache, cfg)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens: jax.Array, cache):
+        return zoo.decode(params, tokens, cache, cfg)
+
+    return decode_step
+
+
+def build_verify_step(cfg: ModelConfig):
+    """Cloud NAV (the paper's serve op): forward K+1 tokens against the cache,
+    greedy-verify the K drafts, return (n_accepted, correction, new_cache)."""
+
+    def verify_step(params, seq: jax.Array, n_drafted: jax.Array, cache):
+        # seq = [last_accepted, d_1..d_K]  → logits verify d_1..d_K + bonus.
+        logits, new_cache = zoo.decode(params, seq, cache, cfg)
+        vr = verify_greedy(logits, seq[:, 1:], n_drafted)
+        return vr.n_accepted, vr.correction, new_cache
+
+    return verify_step

@@ -1,0 +1,145 @@
+"""Training driver: pjit train loop + checkpoint/restart + WSD schedule.
+
+Works at any scale: ``--arch <id> --reduced`` trains a smoke-size model on
+CPU; on a real mesh the same code path shards via the Partitioner.  Features
+exercised by tests/examples:
+
+* auto-resume from the latest checkpoint (fault tolerance);
+* elastic restart: checkpoints are mesh-agnostic (numpy), re-sharded on load;
+* optional int8 gradient compression with error feedback;
+* AdamW or Adafactor (+ WSD/cosine schedules).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCH_IDS, get_config
+from repro.data import ByteTokenizer, DataPipeline, SyntheticCorpus
+from repro.launch.steps import TrainState, build_train_step
+from repro.models import zoo
+from repro.optim import adafactor, adamw, wsd_schedule
+
+
+def make_state(cfg, seed: int, optimizer):
+    params = zoo.init(jax.random.PRNGKey(seed), cfg)
+    opt_state = optimizer.init(params)
+    return TrainState(params, opt_state, jnp.int32(0))
+
+
+def train(
+    arch: str,
+    reduced: bool = True,
+    steps: int = 50,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    optimizer_name: str = "adamw",
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 25,
+    grad_compression: str = "none",
+    seed: int = 0,
+    log_every: int = 10,
+    mesh=None,
+):
+    cfg = get_config(arch, reduced=reduced)
+    sched = wsd_schedule(lr, warmup_steps=max(steps // 10, 1), stable_steps=steps // 2, decay_steps=max(steps // 3, 1))
+    opt = adamw(sched) if optimizer_name == "adamw" else adafactor(sched)
+    step_fn = build_train_step(cfg, opt)
+
+    if grad_compression == "int8":
+        from repro.optim import compressed_gradient_transform, init_error_feedback
+        from repro.optim.optimizers import apply_updates, clip_by_global_norm
+        from repro.models import zoo as _zoo
+
+        def step_fn(state, batch_):  # noqa: F811 — compressed variant
+            def loss(p):
+                return _zoo.loss_fn(p, batch_, cfg)
+
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(state.params)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            grads, new_ef = compressed_gradient_transform(grads, state.opt_state["ef"])
+            updates, new_opt = opt.update(grads, state.opt_state["opt"], state.params, state.step)
+            new_params = apply_updates(state.params, updates)
+            return TrainState(new_params, {"opt": new_opt, "ef": new_ef}, state.step + 1), dict(
+                metrics, loss=l, grad_norm=gnorm
+            )
+
+    jit_step = jax.jit(step_fn, donate_argnums=0)
+
+    corpus = SyntheticCorpus(dialect="code", seed=seed)
+    tok = ByteTokenizer()
+    if cfg.vocab_size < tok.vocab_size:
+        raise ValueError(f"{arch} reduced vocab {cfg.vocab_size} < tokenizer {tok.vocab_size}")
+    pipe = DataPipeline(corpus, tok, batch_size=batch, seq_len=seq, seed=seed)
+
+    mgr = CheckpointManager(Path(ckpt_dir), keep=2) if ckpt_dir else None
+    state = make_state(cfg, seed, opt)
+    if grad_compression == "int8":
+        from repro.optim import init_error_feedback
+
+        state = TrainState(state.params, {"opt": state.opt_state, "ef": init_error_feedback(state.params)}, state.step)
+    start_step = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        state = mgr.restore(jax.eval_shape(lambda: state))
+        start_step = int(state.step)
+        print(f"[train] resumed from step {start_step}")
+
+    losses = []
+    t0 = time.time()
+    for i in range(start_step, steps):
+        b = pipe.batch_at(i)
+        batch_dev = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.family == "audio":
+            batch_dev["frames"] = jax.random.normal(jax.random.PRNGKey(i), (batch, cfg.encoder.n_ctx, cfg.d_model))
+        if cfg.family == "vlm":
+            batch_dev["vision_embeds"] = jax.random.normal(jax.random.PRNGKey(i), (batch, cfg.n_vision_tokens, cfg.d_model))
+        state, metrics = jit_step(state, batch_dev)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % log_every == 0:
+            print(f"[train] step {i+1}/{steps} loss={losses[-1]:.4f} ({(time.time()-t0)/max(i+1-start_step,1):.2f}s/step)")
+        if mgr is not None and (i + 1) % ckpt_every == 0:
+            mgr.save(i + 1, state)
+    pipe.close()
+    return state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", choices=["adamw", "adafactor"], default="adamw")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-compression", choices=["none", "int8"], default="none")
+    args = ap.parse_args()
+    _, losses = train(
+        args.arch,
+        reduced=args.reduced,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        optimizer_name=args.optimizer,
+        ckpt_dir=args.ckpt_dir,
+        grad_compression=args.grad_compression,
+    )
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

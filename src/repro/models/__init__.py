@@ -1,0 +1,23 @@
+"""Model zoo: configs, layers and the four architecture families."""
+
+from .config import EncoderConfig, GLOBAL_WINDOW, ModelConfig, MoEConfig, padded_vocab
+from .kvcache import KVCache, init_kv_cache, set_lengths, snapshot
+from . import encdec, layers, rglru, transformer, xlstm, zoo
+
+__all__ = [
+    "EncoderConfig",
+    "GLOBAL_WINDOW",
+    "KVCache",
+    "ModelConfig",
+    "MoEConfig",
+    "encdec",
+    "init_kv_cache",
+    "layers",
+    "padded_vocab",
+    "rglru",
+    "set_lengths",
+    "snapshot",
+    "transformer",
+    "xlstm",
+    "zoo",
+]

@@ -1,0 +1,207 @@
+"""Model configuration for the PipeSD model zoo.
+
+One ``ModelConfig`` describes any of the assigned architectures: dense
+decoder-only LMs (llama-like, gemma-like with local/global attention and
+softcaps), MoE LMs, encoder-decoder (whisper), hybrid recurrent (griffin /
+recurrentgemma) and xLSTM stacks.  The config is a frozen dataclass so it can
+key jit caches.
+
+Conventions:
+* ``layer_kinds`` assigns each layer a mixer kind: 'attn' (full/global),
+  'local' (sliding window), 'rglru', 'mlstm', 'slstm'.  Attention-kind layers
+  share one stacked parameter group (window/theta become per-layer scalars),
+  so dense models always scan a single stacked block.
+* vocab sizes are padded to a multiple of ``vocab_pad_to`` for TP sharding
+  (standard Megatron/MaxText practice); the tokenizer-visible size stays in
+  ``vocab_size`` and padded logits are masked to −inf by the models.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "MoEConfig", "EncoderConfig", "padded_vocab", "GLOBAL_WINDOW"]
+
+# Sentinel window meaning "attend to everything" (global attention).
+GLOBAL_WINDOW = 1 << 30
+
+
+def padded_vocab(vocab_size: int, multiple: int = 256) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    dense_residual: bool = False  # arctic: parallel dense FFN + MoE
+    d_ff_dense: int = 0  # width of the dense residual FFN (arctic: 4864)
+    router_noise: float = 0.0
+    load_balance_weight: float = 0.01  # aux loss coefficient (training)
+    group_size: int = 256  # tokens per dispatch group (GShard grouping)
+    capacity_factor: float = 1.25  # C = ceil(g·k·cf/E); cf = E/k ⇒ dropless
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec models (whisper): bidirectional attention."""
+
+    n_layers: int
+    n_ctx: int  # encoder positions (whisper-large-v3: 1500 frames)
+    d_frontend: int = 0  # raw frontend feature dim (0 => stub provides d_model)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # 'dense' | 'moe' | 'encdec' | 'hybrid' | 'ssm' | 'vlm' | 'audio'
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    layer_kinds: Tuple[str, ...] = ()  # defaults to all-'attn' if empty
+    window_sizes: Tuple[int, ...] = ()  # per-layer; defaults to GLOBAL_WINDOW
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None  # gemma3: 1e6 on global layers
+    norm_eps: float = 1e-6
+    logit_softcap: float = 0.0  # gemma2: 30.0 (final logits)
+    attn_softcap: float = 0.0  # gemma2: 50.0 (attention logits)
+    tie_embeddings: bool = True
+    moe: Optional[MoEConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    n_vision_tokens: int = 0  # vlm: stub patch-embedding tokens prepended
+    # xLSTM / RG-LRU specifics.
+    conv_width: int = 4  # temporal conv in recurrent blocks (griffin)
+    d_rnn: Optional[int] = None  # RG-LRU width (griffin: ~d_model)
+    mlstm_chunk: int = 64  # chunkwise-parallel mLSTM chunk length
+    # Numerics.
+    dtype: str = "float32"  # activation dtype
+    param_dtype: str = "float32"
+    vocab_pad_to: int = 256
+    # Serving metadata.
+    sub_quadratic: bool = False  # eligible for long_500k decode
+    remat: bool = True  # activation checkpointing in train_step
+    # Fully unroll lax.scans (dry-run probe compiles only): XLA cost_analysis
+    # counts a while-loop body once, so the probe pass unrolls to measure true
+    # per-layer FLOPs/bytes/collectives.  Never used for real execution.
+    scan_unroll: bool = False
+
+    # ------------------------------------------------------------ derived --
+    def __post_init__(self):
+        if self.layer_kinds and len(self.layer_kinds) != self.n_layers:
+            raise ValueError(
+                f"{self.name}: layer_kinds has {len(self.layer_kinds)} entries "
+                f"for {self.n_layers} layers"
+            )
+        if self.window_sizes and len(self.window_sizes) != self.n_layers:
+            raise ValueError(f"{self.name}: window_sizes length mismatch")
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return self.layer_kinds or tuple(["attn"] * self.n_layers)
+
+    @property
+    def windows(self) -> Tuple[int, ...]:
+        if self.window_sizes:
+            return self.window_sizes
+        return tuple([GLOBAL_WINDOW] * self.n_layers)
+
+    @property
+    def padded_vocab_size(self) -> int:
+        return padded_vocab(self.vocab_size, self.vocab_pad_to)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for roofline MODEL_FLOPS = 6·N·D)."""
+        d, V = self.d_model, self.padded_vocab_size
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += V * d
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        ffn_dense = 3 * d * self.d_ff  # gated (SwiGLU-style)
+        per_kind = {}
+        for kind in set(self.kinds):
+            if kind in ("attn", "local"):
+                per_kind[kind] = attn + (ffn_dense if self.moe is None else 0)
+            elif kind == "rglru":
+                dr = self.d_rnn or self.d_model
+                per_kind[kind] = 2 * d * dr + dr * d + self.conv_width * dr + 2 * dr + ffn_dense
+            elif kind == "mlstm":
+                per_kind[kind] = 3 * d * self.q_dim + self.q_dim * d + 3 * self.q_dim + ffn_dense
+            elif kind == "slstm":
+                per_kind[kind] = 4 * d * d + 4 * d + ffn_dense
+        for kind in self.kinds:
+            n += per_kind[kind]
+            if self.moe is not None and kind in ("attn", "local"):
+                n += 3 * d * self.moe.d_ff_expert * self.moe.n_experts
+                n += d * self.moe.n_experts  # router
+                if self.moe.dense_residual:
+                    n += 3 * d * self.moe.d_ff_dense
+        if self.encoder is not None:
+            enc_ffn = 2 * d * (4 * d)  # whisper uses GELU MLP (non-gated, 4x)
+            n += self.encoder.n_layers * (attn + enc_ffn)
+            n += self.n_layers * (d * self.kv_dim * 2 + d * self.q_dim + self.q_dim * d)  # cross-attn
+        return n
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        moe_layers = sum(1 for k in self.kinds if k in ("attn", "local"))
+        all_experts = 3 * self.d_model * self.moe.d_ff_expert * self.moe.n_experts * moe_layers
+        active = 3 * self.d_model * self.moe.d_ff_expert * self.moe.top_k * moe_layers
+        return full - all_experts + active
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        kinds = self.kinds
+        n_layers = min(self.n_layers, 4)
+        # Preserve the kind pattern structure on a prefix basis.
+        new_kinds = tuple(kinds[: n_layers]) if len(set(kinds)) > 1 else ()
+        if new_kinds and len(set(new_kinds)) == 1:
+            new_kinds = ()
+        new_windows = tuple(min(w, 64) if w != GLOBAL_WINDOW else w for w in self.windows[:n_layers]) if self.window_sizes else ()
+        kw = dict(
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128,
+            head_dim=16,
+            vocab_size=512,
+            layer_kinds=new_kinds,
+            window_sizes=new_windows,
+            d_rnn=64 if self.d_rnn else None,
+            mlstm_chunk=16,
+            # Reduced MoE is DROPLESS (cf = E/k) so forward/prefill/decode agree
+            # exactly — required by the spec-decoding consistency tests.
+            moe=replace(
+                self.moe,
+                n_experts=4,
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=64,
+                d_ff_dense=64 if self.moe.dense_residual else 0,
+                capacity_factor=4.0 / min(self.moe.top_k, 2),
+                group_size=64,
+            ) if self.moe else None,
+            encoder=replace(self.encoder, n_layers=2, n_ctx=32) if self.encoder else None,
+            n_vision_tokens=8 if self.n_vision_tokens else 0,
+            vocab_pad_to=64,
+        )
+        kw.update(overrides)
+        return replace(self, **kw)

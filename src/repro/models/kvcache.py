@@ -1,0 +1,56 @@
+"""KV-cache and recurrent-state containers for serving.
+
+Caches carry *per-lane* lengths so speculative-decoding rollback (truncating
+rejected drafts) is a pure metadata update: entries past ``lengths[b]`` are
+garbage and get overwritten by subsequent writes.  Layer-stacked leaves make
+the caches scan-compatible (the layer dim is the scan axis).
+
+Recurrent architectures (RG-LRU, xLSTM) cannot truncate state by index; they
+roll back via round-granular *snapshots* (``snapshot``/``restore``) — the
+stateful-draft extension described in DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["KVCache", "RecurrentState", "init_kv_cache", "set_lengths", "snapshot", "restore"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [L, B, S_max, H_kv, head_dim]
+    v: jax.Array  # [L, B, S_max, H_kv, head_dim]
+    lengths: jax.Array  # [B] int32 — valid prefix length per lane
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(n_layers: int, batch: int, max_len: int, n_kv_heads: int, head_dim: int, dtype=jnp.float32) -> KVCache:
+    shape = (n_layers, batch, max_len, n_kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), jnp.zeros((batch,), jnp.int32))
+
+
+def set_lengths(cache: KVCache, lengths: jax.Array) -> KVCache:
+    """Speculative-decoding rollback: O(1) metadata truncation."""
+    return cache._replace(lengths=lengths.astype(jnp.int32))
+
+
+class RecurrentState(NamedTuple):
+    """Stacked recurrent state for RG-LRU / xLSTM layers (pytree of arrays)."""
+
+    tensors: Any  # nested dict of [L_kind, B, ...] arrays keyed by kind
+    steps: jax.Array  # [B] int32 — tokens absorbed (for position tracking)
+
+
+def snapshot(state: Any) -> Any:
+    """Copy a state pytree (rollback point for stateful drafts)."""
+    return jax.tree_util.tree_map(lambda a: a + 0, state)
+
+
+def restore(snapshot_state: Any) -> Any:
+    return snapshot_state

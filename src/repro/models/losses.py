@@ -1,0 +1,62 @@
+"""Chunked cross-entropy: never materializes the full [B, S, V] logits.
+
+At train_4k scales the full logits are O(100 TB) (1M tokens × 262k vocab ×
+f32); production frameworks compute the loss in sequence chunks inside a
+scan so the live buffer is [B, Sc, V].  The chunk body is rematerialized on
+the backward pass (jax.checkpoint), so the backward also never holds more
+than one chunk of logits.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CE_CHUNK = 256
+
+
+def chunked_ce(
+    hidden: jax.Array,  # [B, S, d] final hidden states (already normed)
+    labels: jax.Array,  # [B, S] (-1 = ignore)
+    unembed_fn: Callable[[jax.Array], jax.Array],  # [B, Sc, d] -> [B, Sc, V] f32
+    chunk: int = CE_CHUNK,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sum_nll, n_valid)."""
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    if S % c:
+        pad = c - S % c
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S = S + pad
+    n = S // c
+    hs = hidden.reshape(B, n, c, d).transpose(1, 0, 2, 3)  # [n, B, c, d]
+    ls = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        from repro.sharding.shardctx import constrain
+
+        h, lab = xs
+        logits = unembed_fn(h)  # [B, c, V] f32
+        # Pin the chunk logits to (batch, ·, vocab-over-model): at 256k vocab
+        # an unsharded f32 chunk is ~4 GiB/device and dominates train memory.
+        logits = constrain(logits, [("pod", "data"), None, "model"])
+        valid = lab >= 0
+        lab_c = jnp.maximum(lab, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab_c[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, nll, 0.0)
+        s, nv = carry
+        return (s + jnp.sum(nll), nv + jnp.sum(valid)), None
+
+    (total, n_valid), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (hs, ls), unroll=unroll or 1)
+    return total, n_valid
+
+
+def ce_metrics(total: jax.Array, n_valid: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    ce = total / jnp.maximum(n_valid, 1)
+    return ce, {"ce": ce, "n_tokens": n_valid}

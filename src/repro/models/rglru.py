@@ -1,0 +1,361 @@
+"""Griffin-style hybrid model: RG-LRU recurrent blocks + local attention.
+
+Implements recurrentgemma-2b (arXiv:2402.19427): residual blocks in a
+(recurrent, recurrent, local-attention) repeating pattern, each followed by a
+gated MLP.  The RG-LRU recurrence
+
+    r_t = σ(W_a x_t + b_a)                    (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                    (input gate)
+    a_t = a^(c·r_t),  a = σ(Λ)  (per-channel), c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+is evaluated with ``jax.lax.associative_scan`` for train/prefill (O(log T)
+depth — the TPU-native substitute for the paper's sequential CUDA scan) and a
+single-step update for decode.  This is the *sub-quadratic* family: state is
+O(1) in sequence length, so the ``long_500k`` decode shape runs here.
+
+Caches: ``HybridCache`` = KV cache for the attention layers + recurrent
+(h, conv) state for the RG-LRU layers.  Speculative rollback restores a
+round-start snapshot (see kvcache.snapshot) because recurrent state cannot be
+index-truncated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kvcache import KVCache, init_kv_cache
+from . import layers as L
+
+Params = Dict[str, Any]
+RGLRU_C = 8.0
+
+
+class HybridCache(NamedTuple):
+    kv: KVCache  # [L_attn, B, S, Hkv, hd] self-attention cache
+    rnn_h: jax.Array  # [L_rec, B, d_rnn] RG-LRU hidden state
+    conv: jax.Array  # [L_rec, B, W-1, d_rnn] rolling conv inputs
+    lengths: jax.Array  # [B] tokens absorbed
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[int, int]:
+    """Returns (n_groups, n_tail_rec) for the (R,R,A) repeating pattern."""
+    kinds = cfg.kinds
+    n_groups = 0
+    i = 0
+    while i + 3 <= len(kinds) and kinds[i] == "rglru" and kinds[i + 1] == "rglru" and kinds[i + 2] in ("attn", "local"):
+        n_groups += 1
+        i += 3
+    tail = len(kinds) - i
+    if any(k != "rglru" for k in kinds[i:]):
+        raise ValueError(f"{cfg.name}: layer_kinds must be (R,R,A)* + R*; got {kinds}")
+    return n_groups, tail
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU block
+# --------------------------------------------------------------------------- #
+
+
+def init_rec_block(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, dr, W = cfg.d_model, cfg.d_rnn or cfg.d_model, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "w_in": L.dense_init(ks[0], (d, dr), dtype=dtype),  # rnn branch
+        "w_gate": L.dense_init(ks[1], (d, dr), dtype=dtype),  # gelu gate branch
+        "w_out": L.dense_init(ks[2], (dr, d), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (W, dr)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "wa": L.dense_init(ks[4], (dr, dr), dtype=dtype),
+        "ba": jnp.zeros((dr,), dtype),
+        "wx": L.dense_init(ks[5], (dr, dr), dtype=dtype),
+        "bx": jnp.zeros((dr,), dtype),
+        # Λ init so a = σ(Λ) ∈ [0.9, 0.999) roughly (long memory).
+        "lam": jnp.asarray(np.linspace(2.2, 6.9, dr), dtype),
+        "mlp": L.init_mlp(ks[6], d, cfg.d_ff, gated=True, dtype=dtype),
+    }
+
+
+def _assoc_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t·h_{t-1} + b_t via associative_scan (forward value only)."""
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+@jax.custom_vjp
+def _rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t·h_{t-1} + b_t over axis 1 (time), given h_0. Returns all h_t.
+
+    Custom VJP: associative_scan's autodiff saves every log₂T combine stage
+    (≈12 × [B,T,dr] f32 at train_4k — tens of GiB/device); the linear-scan
+    adjoint is itself a *reverse* linear scan, so backward needs only (a, h):
+
+        λ_t = g_t + a_{t+1}·λ_{t+1};   ∂b_t = λ_t;   ∂a_t = λ_t·h_{t-1};
+        ∂h₀ = a_1·λ_1.
+    """
+    return _assoc_linear_scan(a, b, h0)
+
+
+def _rglru_scan_fwd(a, b, h0):
+    h = _assoc_linear_scan(a, b, h0)
+    return h, (a, h, h0)
+
+
+def _rglru_scan_bwd(res, g):
+    a, h, h0 = res
+    a_next = jnp.concatenate([a[:, 1:, :], jnp.zeros_like(a[:, :1, :])], axis=1)
+    lam = jnp.flip(
+        _assoc_linear_scan(jnp.flip(a_next, 1), jnp.flip(g, 1), jnp.zeros_like(h0)), 1
+    )
+    h_prev = jnp.concatenate([h0[:, None, :], h[:, :-1, :]], axis=1)
+    da = lam * h_prev
+    db = lam
+    dh0 = a[:, 0, :] * lam[:, 0, :]
+    return da, db, dh0
+
+
+_rglru_scan.defvjp(_rglru_scan_fwd, _rglru_scan_bwd)
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. x: [B,T,dr]; w: [W,dr]. Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # [B, T+W-1, dr]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)) + b
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_state
+
+
+def rec_block(
+    p: Params, x: jax.Array, cfg: ModelConfig, rnn_h: jax.Array, conv_state: Optional[jax.Array]
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One griffin recurrent residual block. Returns (out, new_h, new_conv)."""
+    from repro.sharding.shardctx import constrain
+
+    dp = ("pod", "data")
+    cdr = lambda t: constrain(t, [dp, None, "model"])  # [B,T,dr]: batch + dr-TP
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = cdr(jax.nn.gelu(h @ p["w_gate"]))
+    u = cdr(h @ p["w_in"])
+    u, new_conv = _conv1d_causal(u, p["conv_w"], p["conv_b"], conv_state)
+    # RG-LRU in fp32 for stability; every [B,T,dr] f32 tensor is pinned to
+    # (batch, ·, model) — unpinned, XLA un-shards the batch dim instead of
+    # gathering the 2-D-sharded weights (≈2.7 GiB/device per live tensor).
+    uf = cdr(u.astype(jnp.float32))
+    r = cdr(jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32) + p["ba"].astype(jnp.float32)))
+    i = cdr(jax.nn.sigmoid(uf @ p["wx"].astype(jnp.float32) + p["bx"].astype(jnp.float32)))
+    log_a_base = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))  # log a
+    a = jnp.exp(RGLRU_C * r * log_a_base[None, None, :])  # a^(c·r)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * uf)
+    hs = cdr(_rglru_scan(cdr(a), cdr(b), rnn_h.astype(jnp.float32)))  # [B,T,dr]
+    new_h = hs[:, -1, :]
+    y = constrain((hs.astype(x.dtype) * gate) @ p["w_out"], [dp, None, None])
+    x = x + y
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp_block(p["mlp"], h2), new_h, new_conv
+
+
+# --------------------------------------------------------------------------- #
+# attention block (reuses layers.attention_block) + model assembly
+# --------------------------------------------------------------------------- #
+
+
+def init_attn_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "attn": L.init_attention(k1, cfg),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=True, dtype=jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    G, tail = _pattern(cfg)
+    ks = jax.random.split(key, 4)
+    rec_keys = jax.random.split(ks[0], max(G * 2 + tail, 1))
+    attn_keys = jax.random.split(ks[1], max(G, 1))
+    recs = [init_rec_block(k, cfg) for k in rec_keys[: G * 2 + tail]]
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    params: Params = {
+        "embed": L.embed_init(ks[2], (cfg.padded_vocab_size, cfg.d_model), jnp.dtype(cfg.param_dtype)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+    }
+    if G:
+        params["rec_groups"] = stack([stack([recs[2 * g], recs[2 * g + 1]]) for g in range(G)])
+        params["attn_groups"] = stack([init_attn_block(k, cfg) for k in attn_keys])
+    if tail:
+        params["rec_tail"] = stack(recs[G * 2 : G * 2 + tail])
+    return params
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> HybridCache:
+    G, tail = _pattern(cfg)
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    dr = cfg.d_rnn or cfg.d_model
+    n_rec = G * 2 + tail
+    # Local attention: cache only needs the window, but we keep max_len for
+    # simplicity at test scales; the serving path may pass window-sized S.
+    kv = init_kv_cache(max(G, 1), batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+    return HybridCache(
+        kv=kv,
+        rnn_h=jnp.zeros((n_rec, batch, dr), jnp.float32),
+        conv=jnp.zeros((n_rec, batch, cfg.conv_width - 1, dr), dtype),
+        lengths=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _run_stack(
+    params: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[HybridCache],
+) -> Tuple[jax.Array, Optional[HybridCache]]:
+    G, tail = _pattern(cfg)
+    attn_window = min([w for k, w in zip(cfg.kinds, cfg.windows) if k in ("attn", "local")] or [1 << 30])
+    theta = cfg.rope_theta
+    n_rec = G * 2 + tail
+    lengths = cache.lengths if cache is not None else None
+
+    def group_body(carry, xs):
+        from repro.sharding.shardctx import constrain
+
+        # Sequence-parallel group carry: the outer scan's VJP saves one
+        # [B,T,d] residual per group — S-sharding it over 'model' shrinks the
+        # stacked [G,B,T,d] saves 16x (perf iteration rgemma/it5, §Perf).
+        x = carry
+        if x.shape[1] >= 2048:
+            x = constrain(x, [("pod", "data"), "model", None])
+        if cache is None:
+            # Per-block remat inside the (checkpointed) group body: without
+            # it a whole (R,R,A) group's f32 norm/RG-LRU residuals stay live
+            # during the group backward (~20 GiB/device at train_4k).
+            rec_p, attn_p = xs
+            for j in range(2):
+                pj = jax.tree_util.tree_map(lambda a: a[j], rec_p)
+
+                def rec_fn(xx, p=pj):
+                    return rec_block(p, xx, cfg, jnp.zeros((xx.shape[0], p["w_in"].shape[1]), jnp.float32), None)[0]
+
+                x = jax.checkpoint(rec_fn)(x) if cfg.remat else rec_fn(x)
+
+            def attn_fn(xx):
+                hh = L.rms_norm(xx, attn_p["ln1"], cfg.norm_eps)
+                a_out, _ = L.attention_block(attn_p["attn"], hh, positions, cfg, theta, attn_window)
+                xx = xx + a_out
+                h2 = L.rms_norm(xx, attn_p["ln2"], cfg.norm_eps)
+                return xx + L.mlp_block(attn_p["mlp"], h2)
+
+            x = jax.checkpoint(attn_fn)(x) if cfg.remat else attn_fn(x)
+            return x, None
+        rec_p, attn_p, rnn_h2, conv2, k_l, v_l = xs
+        new_hs, new_convs = [], []
+        for j in range(2):
+            pj = jax.tree_util.tree_map(lambda a: a[j], rec_p)
+            x, nh, nc = rec_block(pj, x, cfg, rnn_h2[j], conv2[j])
+            new_hs.append(nh)
+            new_convs.append(nc)
+        hh = L.rms_norm(x, attn_p["ln1"], cfg.norm_eps)
+        a_out, new_kv = L.attention_block(attn_p["attn"], hh, positions, cfg, theta, attn_window, kv_cache=(k_l, v_l, lengths))
+        x = x + a_out
+        h2 = L.rms_norm(x, attn_p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_block(attn_p["mlp"], h2)
+        return x, (jnp.stack(new_hs), jnp.stack(new_convs), new_kv[0], new_kv[1])
+
+    new_cache = None
+    if G:
+        if cache is None:
+            body = jax.checkpoint(group_body) if cfg.remat else group_body
+            x, _ = jax.lax.scan(body, x, (params["rec_groups"], params["attn_groups"]), unroll=cfg.scan_unroll or 1)
+        else:
+            rnn_h_g = cache.rnn_h[: 2 * G].reshape(G, 2, *cache.rnn_h.shape[1:])
+            conv_g = cache.conv[: 2 * G].reshape(G, 2, *cache.conv.shape[1:])
+            x, (nh, nc, nk, nv) = jax.lax.scan(
+                group_body, x, (params["rec_groups"], params["attn_groups"], rnn_h_g, conv_g, cache.kv.k, cache.kv.v),
+                unroll=cfg.scan_unroll or 1,
+            )
+            new_rnn_h = nh.reshape(2 * G, *cache.rnn_h.shape[1:])
+            new_conv = nc.reshape(2 * G, *cache.conv.shape[1:])
+    if tail:
+
+        def tail_body(carry, xs):
+            x = carry
+            if cache is None:
+                rec_p = xs
+                x, _, _ = rec_block(rec_p, x, cfg, jnp.zeros((x.shape[0], rec_p["w_in"].shape[1]), jnp.float32), None)
+                return x, None
+            rec_p, h_l, c_l = xs
+            x, nh, nc = rec_block(rec_p, x, cfg, h_l, c_l)
+            return x, (nh, nc)
+
+        if cache is None:
+            x, _ = jax.lax.scan(tail_body, x, params["rec_tail"], unroll=cfg.scan_unroll or 1)
+        else:
+            x, (th, tc) = jax.lax.scan(tail_body, x, (params["rec_tail"], cache.rnn_h[2 * G :], cache.conv[2 * G :]), unroll=cfg.scan_unroll or 1)
+            new_rnn_h = jnp.concatenate([new_rnn_h, th], axis=0) if G else th
+            new_conv = jnp.concatenate([new_conv, tc], axis=0) if G else tc
+    if cache is not None:
+        T = positions.shape[1]
+        kv_new = KVCache(nk, nv, cache.kv.lengths + T) if G else cache.kv
+        new_cache = HybridCache(kv_new, new_rnn_h, new_conv, cache.lengths + T)
+    return x, new_cache
+
+
+def final_hidden(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :], (B, T))
+    x, _ = _run_stack(params, x, positions, cfg, None)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.float32(0.0)
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    from .transformer import unembed
+
+    x, aux = final_hidden(params, batch, cfg)
+    return unembed(params, x, cfg), aux
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cache: HybridCache, cfg: ModelConfig) -> Tuple[jax.Array, HybridCache]:
+    from .transformer import unembed
+
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    B, T = tokens.shape
+    positions = cache.lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    x, new_cache = _run_stack(params, x, positions, cfg, cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), new_cache
+
+
+def decode(params: Params, tokens: jax.Array, cache: HybridCache, cfg: ModelConfig) -> Tuple[jax.Array, HybridCache]:
+    return prefill(params, {"tokens": tokens}, cache, cfg)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    from .losses import ce_metrics, chunked_ce
+    from .transformer import unembed
+
+    hidden, aux = final_hidden(params, batch, cfg)
+    total, n_valid = chunked_ce(hidden, batch["labels"], lambda h: unembed(params, h, cfg), unroll=cfg.scan_unroll)
+    ce, metrics = ce_metrics(total, n_valid)
+    return ce, dict(metrics, aux=aux)

@@ -1,0 +1,267 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM families.
+
+One scanned layer stack handles every attention-kind pattern (full/global +
+sliding-window layers) because window size and rope theta are per-layer
+*scalars* threaded through the scan — so gemma-2's alternating local:global,
+gemma-3's 5:1 pattern and plain llama-likes are all the same code path.
+
+Public surface (all pure functions, jit/pjit-ready):
+
+    init(key, cfg)                          -> params
+    forward(params, batch, cfg)             -> (logits, aux)     # train/no-cache
+    prefill(params, batch, cache, cfg)      -> (logits, cache)
+    decode(params, tokens, cache, cfg)      -> (logits, cache)   # T small
+    loss_fn(params, batch, cfg)             -> (loss, metrics)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import GLOBAL_WINDOW, ModelConfig
+from .kvcache import KVCache, init_kv_cache
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n = cfg.n_layers
+    keys = jax.random.split(key, 4)
+    lkeys = jax.random.split(keys[0], n)
+
+    def one_block(k):
+        k1, k2 = jax.random.split(k)
+        blk = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": L.init_attention(k1, cfg),
+        }
+        if cfg.moe is not None:
+            blk["moe"] = L.init_moe(k2, cfg, dtype=dtype)
+        else:
+            blk["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=True, dtype=dtype)
+        return blk
+
+    blocks = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[one_block(k) for k in lkeys])
+    params: Params = {
+        "embed": L.embed_init(keys[1], (cfg.padded_vocab_size, cfg.d_model), dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[2], (cfg.d_model, cfg.padded_vocab_size), dtype=dtype)
+    if cfg.n_vision_tokens:
+        # VLM stub frontend: learned projection applied to provided patch embeds.
+        params["vision_proj"] = L.dense_init(keys[3], (cfg.d_model, cfg.d_model), dtype=dtype)
+    return params
+
+
+def layer_scalars(cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """(windows[L], thetas[L]) arrays threaded through the layer scan."""
+    windows = np.array(cfg.windows, dtype=np.int32)
+    thetas = np.full((cfg.n_layers,), cfg.rope_theta, dtype=np.float32)
+    if cfg.rope_theta_global is not None:
+        thetas[windows >= GLOBAL_WINDOW] = cfg.rope_theta_global
+    return jnp.asarray(windows), jnp.asarray(thetas)
+
+
+# --------------------------------------------------------------------------- #
+# embedding / unembedding
+# --------------------------------------------------------------------------- #
+
+
+def embed_inputs(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Token (+ stub modality) embedding. Returns (x [B,T,d], positions [B,T])."""
+    from repro.sharding.shardctx import constrain
+
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([vis, x], axis=1)
+    B, T, _ = x.shape
+    x = constrain(x, [("pod", "data"), None, None])
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :], (B, T))
+    return x, positions
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab_size) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# layer stack
+# --------------------------------------------------------------------------- #
+
+
+def _block(
+    blk: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    window: jax.Array,
+    theta: jax.Array,
+    cfg: ModelConfig,
+    kv: Optional[Tuple[jax.Array, jax.Array, jax.Array]],
+    attn_impl: str,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]], jax.Array]:
+    """Pre-norm residual block with sequence-parallel residual stream.
+
+    The residual (the scan carry, saved by remat for backward) is constrained
+    to sequence-sharding over 'model' — Megatron-SP style.  XLA materializes
+    the all-gather at the norm→projection boundary and a reduce-scatter after
+    the row-parallel out-projection, same volume as the TP all-reduce it
+    replaces, while the saved activation shrinks by the TP width.
+    """
+    from repro.sharding.shardctx import constrain
+
+    dp = ("pod", "data")
+    # Sequence-parallel residual stream (Megatron-SP): the scan carry — the
+    # tensor remat saves per layer for backward — is S-sharded over 'model',
+    # shrinking saved activations by the TP width; XLA inserts the
+    # all-gather/reduce-scatter pair at the norm/projection boundaries.
+    seq_parallel = x.shape[1] >= 2048
+    sp = [dp, "model", None] if seq_parallel else [dp, None, None]
+    x = constrain(x, sp)
+    h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    h = constrain(h, [dp, None, None])  # gather S for attention
+    attn_out, new_kv = L.attention_block(
+        blk["attn"], h, positions, cfg, theta, window, kv_cache=kv, attn_impl=attn_impl
+    )
+    x = x + constrain(attn_out, sp)
+    h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    h = constrain(h, [dp, None, None])
+    if cfg.moe is not None:
+        ffn_out, aux = L.moe_block(blk["moe"], h, cfg)
+    else:
+        ffn_out, aux = L.mlp_block(blk["mlp"], h), jnp.float32(0.0)
+    x = x + constrain(ffn_out, sp)
+    new_kv_out = None if new_kv is None else (new_kv[0], new_kv[1])
+    return x, new_kv_out, aux
+
+
+def _stack(
+    params: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[KVCache],
+    attn_impl: str = "xla",
+) -> Tuple[jax.Array, Optional[KVCache], jax.Array]:
+    windows, thetas = layer_scalars(cfg)
+
+    if cache is None:
+
+        def body(carry, xs):
+            blk, window, theta = xs
+            h, _, aux = _block(blk, carry, positions, window, theta, cfg, None, attn_impl)
+            return h, aux
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(body_fn, x, (params["blocks"], windows, thetas), unroll=cfg.scan_unroll or 1)
+        return x, None, jnp.sum(auxs)
+
+    lengths = cache.lengths
+
+    # The KV cache rides in the scan CARRY (updated in-place per layer via
+    # dynamic_update_index) rather than as xs→ys streams: while-loop carries
+    # alias their buffers, so the multi-GiB cache exists ONCE instead of
+    # being double-buffered (input xs + stacked ys) — perf iteration
+    # gemma2-decode/it2, see EXPERIMENTS.md §Perf.
+    def body_c(carry, xs):
+        x, k_all, v_all, i = carry
+        blk, window, theta = xs
+        k_l = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        h, new_kv, aux = _block(blk, x, positions, window, theta, cfg, (k_l, v_l, lengths), attn_impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, new_kv[0], i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, new_kv[1], i, 0)
+        return (h, k_all, v_all, i + 1), aux
+
+    (x, new_k, new_v, _), auxs = jax.lax.scan(
+        body_c, (x, cache.k, cache.v, jnp.int32(0)), (params["blocks"], windows, thetas),
+        unroll=cfg.scan_unroll or 1,
+    )
+    T = positions.shape[1]
+    new_cache = KVCache(new_k, new_v, lengths + T)
+    return x, new_cache, jnp.sum(auxs)
+
+
+# --------------------------------------------------------------------------- #
+# public entry points
+# --------------------------------------------------------------------------- #
+
+
+def final_hidden(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig, attn_impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    """No-cache forward up to the final norm. Returns (hidden [B,T,d], aux)."""
+    from repro.sharding.shardctx import constrain
+
+    x, positions = embed_inputs(params, batch, cfg)
+    x, _, aux = _stack(params, x, positions, cfg, None, attn_impl)
+    x = constrain(x, [("pod", "data"), None, None])  # gather S for chunked CE
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig, attn_impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    """No-cache forward (training / scoring).  Returns (logits, aux_loss)."""
+    x, aux = final_hidden(params, batch, cfg, attn_impl)
+    return unembed(params, x, cfg), aux
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> KVCache:
+    return init_kv_cache(cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype or jnp.dtype(cfg.dtype))
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cache: KVCache, cfg: ModelConfig, attn_impl: str = "xla") -> Tuple[jax.Array, KVCache]:
+    """Prompt ingestion through the cache path (cache assumed empty)."""
+    x, positions = embed_inputs(params, batch, cfg)
+    x, new_cache, _ = _stack(params, x, positions, cfg, cache, attn_impl)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), new_cache
+
+
+def decode(params: Params, tokens: jax.Array, cache: KVCache, cfg: ModelConfig, attn_impl: str = "xla") -> Tuple[jax.Array, KVCache]:
+    """Cached decode of T new tokens (T=1 plain decode; T=K+1 NAV verify)."""
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = cache.lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    x, new_cache, _ = _stack(params, x, positions, cfg, cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), new_cache
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (labels = batch['labels'], -1 = ignore).
+
+    Uses chunked CE so the full [B,S,V] logits are never live (losses.py).
+    """
+    from .losses import ce_metrics, chunked_ce
+
+    hidden, aux = final_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        hidden = hidden[:, -labels.shape[1] :, :]  # score text positions only
+    total, n_valid = chunked_ce(hidden, labels, lambda h: unembed(params, h, cfg), unroll=cfg.scan_unroll)
+    ce, metrics = ce_metrics(total, n_valid)
+    return ce + aux, dict(metrics, aux=aux)

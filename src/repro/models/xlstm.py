@@ -1,0 +1,355 @@
+"""xLSTM stack (arXiv:2405.04517): mLSTM + sLSTM blocks, 7:1 pattern.
+
+* **mLSTM** — matrix-memory LSTM with exponential gating.  Implemented in the
+  *chunkwise-parallel* form (the sub-quadratic TPU-native formulation): the
+  sequence is split into chunks of ``cfg.mlstm_chunk``; within a chunk the
+  contribution is a masked decay-weighted attention; across chunks a recurrent
+  state (C [hd,hd], n [hd], m stabilizer) is carried by ``lax.scan``.  Decode
+  uses the same code with chunk = T (T=1), i.e. the pure recurrence.
+* **sLSTM** — scalar-memory LSTM with recurrent gate connections (block-
+  diagonal per head), necessarily sequential: ``lax.scan`` over time.
+
+State is O(1) in sequence length → this family runs the ``long_500k`` decode
+shape.  Stabilizers follow the standard max-trick bookkeeping: stored (C, n)
+are *unscaled*; true values are (C·eᵐ, n·eᵐ).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+class XLSTMCache(NamedTuple):
+    m_C: jax.Array  # [L_m, B, H, hd, hd]
+    m_n: jax.Array  # [L_m, B, H, hd]
+    m_m: jax.Array  # [L_m, B, H]
+    s_c: jax.Array  # [L_s, B, d]
+    s_n: jax.Array  # [L_s, B, d]
+    s_h: jax.Array  # [L_s, B, d]
+    s_m: jax.Array  # [L_s, B, d]
+    lengths: jax.Array  # [B]
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, m_per_group, s_per_group) for the (m×a, s×b)* pattern."""
+    kinds = cfg.kinds
+    # Find the group: leading run of 'mlstm' then run of 'slstm'.
+    a = 0
+    while a < len(kinds) and kinds[a] == "mlstm":
+        a += 1
+    b = a
+    while b < len(kinds) and kinds[b] == "slstm":
+        b += 1
+    glen = b
+    if glen == 0 or len(kinds) % glen != 0:
+        raise ValueError(f"{cfg.name}: kinds not a repeating (mlstm*, slstm*) pattern: {kinds}")
+    G = len(kinds) // glen
+    if tuple(kinds) != tuple(list(kinds[:glen]) * G):
+        raise ValueError(f"{cfg.name}: kinds not periodic: {kinds}")
+    return G, a, glen - a
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, qd, H = cfg.d_model, cfg.q_dim, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "wq": L.dense_init(ks[0], (d, qd), dtype=dtype),
+        "wk": L.dense_init(ks[1], (d, qd), dtype=dtype),
+        "wv": L.dense_init(ks[2], (d, qd), dtype=dtype),
+        "wi": L.dense_init(ks[3], (d, H), dtype=dtype),
+        "wf": L.dense_init(ks[4], (d, H), dtype=dtype),
+        "bf": jnp.full((H,), 3.0, dtype),  # forget-gate bias → long memory at init
+        "bi": jnp.zeros((H,), dtype),
+        "wo": L.dense_init(ks[5], (d, qd), dtype=dtype),
+        "w_out": L.dense_init(ks[6], (qd, d), dtype=dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, logi, logf, state):
+    """One chunk of the chunkwise-parallel mLSTM (per head, batched).
+
+    q,k,v: [B,H,c,hd]; logi,logf: [B,H,c]; state (C [B,H,hd,hd], n, m).
+    Returns (h [B,H,c,hd], new_state).
+    """
+    B, H, c, hd = q.shape
+    C_prev, n_prev, m_prev = state
+    b = jnp.cumsum(logf, axis=-1)  # [B,H,c] inclusive log-decay
+    # Pairwise log decay: D[t,s] = b_t − b_s + logi_s for s ≤ t.
+    Dlog = b[..., :, None] - b[..., None, :] + logi[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    Dlog = jnp.where(mask, Dlog, -jnp.inf)
+    m_intra = jnp.max(Dlog, axis=-1)  # [B,H,c]
+    m_inter = b + m_prev[..., None]
+    m_t = jnp.maximum(m_intra, m_inter)  # per-position stabilizer
+    D = jnp.exp(Dlog - m_t[..., None])  # [B,H,c,c]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale * D
+    intra = jnp.einsum("bhts,bhsd->bhtd", scores, v)
+    inter_w = jnp.exp(m_inter - m_t)  # [B,H,c]
+    inter = jnp.einsum("bhtd,bhde->bhte", q * scale, C_prev) * inter_w[..., None]
+    num = intra + inter
+    # n accumulates decay-weighted k (no q term, unlike `scores`).
+    n_t = jnp.einsum("bhts,bhsd->bhtd", D, k) + n_prev[..., None, :] * inter_w[..., None]
+    denom = jnp.abs(jnp.einsum("bhtd,bhtd->bht", q * scale, n_t))
+    denom = jnp.maximum(denom, jnp.exp(-m_t))
+    h = num / denom[..., None]
+    # State update to chunk end.
+    m_new = jnp.maximum(b[..., -1] + m_prev, jnp.max(b[..., -1:] - b + logi, axis=-1))
+    w_end = jnp.exp(b[..., -1:] - b + logi - m_new[..., None])  # [B,H,c]
+    C_new = C_prev * jnp.exp(b[..., -1] + m_prev - m_new)[..., None, None] + jnp.einsum(
+        "bhs,bhsd,bhse->bhde", w_end, k, v
+    )
+    n_new = n_prev * jnp.exp(b[..., -1] + m_prev - m_new)[..., None] + jnp.einsum("bhs,bhsd->bhd", w_end, k)
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_block(p: Params, x: jax.Array, cfg: ModelConfig, state=None):
+    """Full mLSTM residual block. x: [B,T,d]. Returns (out, new_state)."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    from repro.sharding.shardctx import constrain
+
+    dp = ("pod", "data")
+    c3 = lambda t: constrain(t, [dp, None, None])
+    c4 = lambda t: constrain(t, [dp, None, None, None])
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    hf = c3(h.astype(jnp.float32))
+    # Pin every mixer activation to batch-sharding: the 2-D (data, model)
+    # weight sharding would otherwise tempt XLA into un-sharding [B,T,*]
+    # f32 activations instead of gathering the (much smaller) weights.
+    q = c4((hf @ p["wq"]).reshape(B, T, H, hd)).transpose(0, 2, 1, 3)
+    k = c4((hf @ p["wk"]).reshape(B, T, H, hd)).transpose(0, 2, 1, 3)
+    v = c4((hf @ p["wv"]).reshape(B, T, H, hd)).transpose(0, 2, 1, 3)
+    logi = c3(hf @ p["wi"] + p["bi"]).transpose(0, 2, 1)  # [B,H,T] (ĩ, pre-exp)
+    logf = c3(jax.nn.log_sigmoid(hf @ p["wf"] + p["bf"])).transpose(0, 2, 1)
+    o = c4(jax.nn.sigmoid(hf @ p["wo"]).reshape(B, T, H, hd)).transpose(0, 2, 1, 3)
+    if state is None:
+        state = (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -jnp.inf, jnp.float32),
+        )
+    c = min(cfg.mlstm_chunk, T)
+    if T % c != 0:  # pad time to a chunk multiple (masked by logi = -inf)
+        pad = c - T % c
+        q, k, v, o = (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0))) for a in (q, k, v, o))
+        logi = jnp.pad(logi, ((0, 0), (0, 0), (0, pad)), constant_values=-jnp.inf)
+        logf = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+    nchunk = q.shape[2] // c
+    qs = q.reshape(B, H, nchunk, c, hd).transpose(2, 0, 1, 3, 4)
+    ks_ = k.reshape(B, H, nchunk, c, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, H, nchunk, c, hd).transpose(2, 0, 1, 3, 4)
+    lis = logi.reshape(B, H, nchunk, c).transpose(2, 0, 1, 3)
+    lfs = logf.reshape(B, H, nchunk, c).transpose(2, 0, 1, 3)
+
+    def chunk_body(st, xs):
+        qc, kc, vc, lic, lfc = xs
+        hc, st = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+        return st, hc
+
+    new_state, hs = jax.lax.scan(chunk_body, state, (qs, ks_, vs, lis, lfs))  # rolled even in probes: 64 unrolled chunk bodies explode compile; xlstm roofline uses analytic MODEL_FLOPS (see dryrun docs)
+    hseq = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, nchunk * c, hd)[:, :, :T, :]
+    hseq = (hseq * o[:, :, :T, :]).transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+    out = constrain(hseq.astype(x.dtype) @ p["w_out"], [dp, None, None])
+    return x + out, new_state
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 10)
+    p: Params = {"ln": jnp.zeros((d,), dtype)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = L.dense_init(ks[i], (d, d), dtype=dtype)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (H, dh, dh)) / jnp.sqrt(dh)).astype(dtype)
+        p[f"b{g}"] = (jnp.full((d,), 3.0, dtype) if g == "f" else jnp.zeros((d,), dtype))
+    p["w_out"] = L.dense_init(ks[8], (d, d), dtype=dtype)
+    return p
+
+
+def slstm_block(p: Params, x: jax.Array, cfg: ModelConfig, state=None):
+    """sLSTM residual block; strictly sequential scan over time."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    from repro.sharding.shardctx import constrain
+
+    dp = ("pod", "data")
+    xin = constrain(L.rms_norm(x, p["ln"], cfg.norm_eps).astype(jnp.float32), [dp, None, None])
+    # Precompute input contributions for all gates: [B,T,d] each (batch-pinned).
+    pre = {g: constrain(xin @ p[f"w{g}"] + p[f"b{g}"], [dp, None, None]) for g in ("i", "f", "z", "o")}
+    if state is None:
+        z0 = jnp.zeros((B, d), jnp.float32)
+        state = (z0, z0 + 1e-6, z0, jnp.full((B, d), -jnp.inf, jnp.float32))
+    R = {g: p[f"r{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    def step(st, xs):
+        c, n, h, m = st
+        hi = h.reshape(B, H, dh)
+
+        def rec(g):
+            return jnp.einsum("bhe,hef->bhf", hi, R[g]).reshape(B, d)
+
+        it = xs["i"] + rec("i")
+        ft = jax.nn.log_sigmoid(xs["f"] + rec("f"))
+        zt = jnp.tanh(xs["z"] + rec("z"))
+        ot = jax.nn.sigmoid(xs["o"] + rec("o"))
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs_t = {g: pre[g].transpose(1, 0, 2) for g in pre}  # [T,B,d]
+    new_state, hs = jax.lax.scan(step, state, xs_t)
+    out = hs.transpose(1, 0, 2).astype(x.dtype) @ p["w_out"]
+    return x + out, new_state
+
+
+# --------------------------------------------------------------------------- #
+# model assembly
+# --------------------------------------------------------------------------- #
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    G, a, b = _pattern(cfg)
+    ks = jax.random.split(key, 3)
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    mkeys = jax.random.split(ks[0], max(G * a, 1))
+    skeys = jax.random.split(ks[1], max(G * b, 1))
+    params: Params = {
+        "embed": L.embed_init(ks[2], (cfg.padded_vocab_size, cfg.d_model), jnp.dtype(cfg.param_dtype)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+    }
+    if a:
+        groups = [stack([init_mlstm(mkeys[g * a + j], cfg) for j in range(a)]) for g in range(G)]
+        params["mlstm"] = stack(groups)  # [G, a, ...]
+    if b:
+        groups = [stack([init_slstm(skeys[g * b + j], cfg) for j in range(b)]) for g in range(G)]
+        params["slstm"] = stack(groups)  # [G, b, ...]
+    return params
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None) -> XLSTMCache:
+    G, a, b = _pattern(cfg)
+    H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return XLSTMCache(
+        m_C=jnp.zeros((G * a, batch, H, hd, hd), jnp.float32),
+        m_n=jnp.zeros((G * a, batch, H, hd), jnp.float32),
+        m_m=jnp.full((G * a, batch, H), -jnp.inf, jnp.float32),
+        s_c=jnp.zeros((G * b, batch, d), jnp.float32),
+        s_n=jnp.zeros((G * b, batch, d), jnp.float32) + 1e-6,
+        s_h=jnp.zeros((G * b, batch, d), jnp.float32),
+        s_m=jnp.full((G * b, batch, d), -jnp.inf, jnp.float32),
+        lengths=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _run(params: Params, x: jax.Array, cfg: ModelConfig, cache: Optional[XLSTMCache]):
+    G, a, b = _pattern(cfg)
+
+    def group(carry, xs):
+        x = carry
+        if cache is None:
+            # Per-layer remat inside the (checkpointed) group body: a group
+            # holds 8 mixer layers whose f32 residuals would otherwise all be
+            # live during the group's backward (~50 GiB/device at train_4k).
+            m_p, s_p = xs
+            for j in range(a):
+                pj = jax.tree_util.tree_map(lambda t: t[j], m_p)
+                blk = lambda xx, p=pj: mlstm_block(p, xx, cfg, None)[0]
+                x = jax.checkpoint(blk)(x) if cfg.remat else blk(x)
+            for j in range(b):
+                pj = jax.tree_util.tree_map(lambda t: t[j], s_p)
+                blk = lambda xx, p=pj: slstm_block(p, xx, cfg, None)[0]
+                x = jax.checkpoint(blk)(x) if cfg.remat else blk(x)
+            return x, None
+        m_p, s_p, mC, mn, mm, sc, sn, sh, sm = xs
+        mCo, mno, mmo = [], [], []
+        for j in range(a):
+            pj = jax.tree_util.tree_map(lambda t: t[j], m_p)
+            x, (C2, n2, m2) = mlstm_block(pj, x, cfg, (mC[j], mn[j], mm[j]))
+            mCo.append(C2), mno.append(n2), mmo.append(m2)
+        sco, sno, sho, smo = [], [], [], []
+        for j in range(b):
+            pj = jax.tree_util.tree_map(lambda t: t[j], s_p)
+            x, (c2, n2, h2, m2) = slstm_block(pj, x, cfg, (sc[j], sn[j], sh[j], sm[j]))
+            sco.append(c2), sno.append(n2), sho.append(h2), smo.append(m2)
+        ys = (jnp.stack(mCo), jnp.stack(mno), jnp.stack(mmo), jnp.stack(sco), jnp.stack(sno), jnp.stack(sho), jnp.stack(smo))
+        return x, ys
+
+    if cache is None:
+        body = jax.checkpoint(group) if cfg.remat else group
+        x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]), unroll=cfg.scan_unroll or 1)
+        return x, None
+    rs = lambda t: t.reshape(G, -1, *t.shape[1:])
+    x, ys = jax.lax.scan(
+        group,
+        x,
+        (params["mlstm"], params["slstm"], rs(cache.m_C), rs(cache.m_n), rs(cache.m_m), rs(cache.s_c), rs(cache.s_n), rs(cache.s_h), rs(cache.s_m)),
+    )
+    fl = lambda t: t.reshape(-1, *t.shape[2:])
+    T = x.shape[1]
+    new_cache = XLSTMCache(fl(ys[0]), fl(ys[1]), fl(ys[2]), fl(ys[3]), fl(ys[4]), fl(ys[5]), fl(ys[6]), cache.lengths + T)
+    return x, new_cache
+
+
+def final_hidden(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x, _ = _run(params, x, cfg, None)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.float32(0.0)
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    from .transformer import unembed
+
+    x, aux = final_hidden(params, batch, cfg)
+    return unembed(params, x, cfg), aux
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cache: XLSTMCache, cfg: ModelConfig):
+    from .transformer import unembed
+
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x, new_cache = _run(params, x, cfg, cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), new_cache
+
+
+def decode(params: Params, tokens: jax.Array, cache: XLSTMCache, cfg: ModelConfig):
+    return prefill(params, {"tokens": tokens}, cache, cfg)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    from .losses import ce_metrics, chunked_ce
+    from .transformer import unembed
+
+    hidden, _ = final_hidden(params, batch, cfg)
+    total, n_valid = chunked_ce(hidden, batch["labels"], lambda h: unembed(params, h, cfg), unroll=cfg.scan_unroll)
+    ce, metrics = ce_metrics(total, n_valid)
+    return ce, metrics

@@ -1,0 +1,67 @@
+"""Uniform facade over the model families.
+
+Dispatches init/forward/loss/prefill/decode/cache-construction by
+``cfg.family`` so launchers, tests and the dry-run treat every assigned
+architecture identically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import encdec, rglru, transformer, xlstm
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": encdec,
+    "hybrid": rglru,
+    "ssm": xlstm,
+}
+
+
+def module_for(cfg: ModelConfig):
+    try:
+        return _FAMILY[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown family {cfg.family!r} for {cfg.name}") from None
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    return module_for(cfg).init(key, cfg)
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    return module_for(cfg).forward(params, batch, cfg)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    return module_for(cfg).loss_fn(params, batch, cfg)
+
+
+def prefill(params, batch: Dict[str, jax.Array], cache, cfg: ModelConfig):
+    return module_for(cfg).prefill(params, batch, cache, cfg)
+
+
+def decode(params, tokens: jax.Array, cache, cfg: ModelConfig):
+    return module_for(cfg).decode(params, tokens, cache, cfg)
+
+
+def make_cache(params, batch: Dict[str, jax.Array], cfg: ModelConfig, max_len: int):
+    """Family-uniform cache constructor (encdec needs params+frames)."""
+    m = module_for(cfg)
+    if cfg.family == "audio":
+        return m.make_cache(params, batch["frames"], cfg, max_len)
+    if cfg.family == "ssm":
+        return m.make_cache(cfg, batch["tokens"].shape[0], max_len)
+    return m.make_cache(cfg, batch["tokens"].shape[0], max_len)
+
+
+def cache_spec(params_spec, batch_spec: Dict[str, Any], cfg: ModelConfig, max_len: int):
+    """ShapeDtypeStruct pytree for the cache (dry-run input stand-in)."""
+    return jax.eval_shape(lambda p, b: make_cache(p, b, cfg, max_len), params_spec, batch_spec)

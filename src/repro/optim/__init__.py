@@ -1,0 +1,25 @@
+from .optimizers import Optimizer, adafactor, adamw, apply_updates, clip_by_global_norm
+from .schedules import constant, cosine_schedule, wsd_schedule
+from .compression import (
+    ErrorFeedbackState,
+    compress_int8,
+    compressed_gradient_transform,
+    decompress_int8,
+    init_error_feedback,
+)
+
+__all__ = [
+    "Optimizer",
+    "adafactor",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "constant",
+    "cosine_schedule",
+    "wsd_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "ErrorFeedbackState",
+    "compressed_gradient_transform",
+    "init_error_feedback",
+]

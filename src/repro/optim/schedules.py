@@ -1,0 +1,34 @@
+"""LR schedules: constant, cosine, and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return fn
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int, decay_steps: int, final_frac: float = 0.01):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup → flat → exp-style decay."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        d_t = jnp.clip((step - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+        decay = peak_lr * (final_frac ** d_t)
+        out = jnp.where(step < warmup_steps, warm, jnp.where(step < warmup_steps + stable_steps, peak_lr, decay))
+        return out
+
+    return fn

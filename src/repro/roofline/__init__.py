@@ -1,0 +1,4 @@
+from .analyze import CellRoofline, analyze_cell, format_table, load_results, roofline_table
+from . import hw
+
+__all__ = ["CellRoofline", "analyze_cell", "format_table", "hw", "load_results", "roofline_table"]

@@ -1,0 +1,171 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, derives the three roofline terms from the
+compiled dry-run artifact (all quantities are **per device**, matching
+cost_analysis on the partitioned module):
+
+    compute    = HLO_FLOPs_per_dev / peak_FLOP/s
+    memory     = HLO_bytes_per_dev / HBM_bw
+    collective = collective_bytes_per_dev / link_bw
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per device and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Corrections applied (both reported):
+* scan scaling — the dry-run already reports probe-scaled metrics
+  (``flops_scaled`` etc.), see launch/dryrun.py;
+* attention cond over-count — `lax.cond`-skipped attention blocks are counted
+  by XLA's static cost analysis; the analyzer computes the statically-known
+  executed-block fraction per layer pattern and reports a corrected compute
+  term alongside the raw one.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.models.config import GLOBAL_WINDOW
+
+from .hw import HBM_BW, ICI_LINK_BW, PEAK_BF16_FLOPS
+
+Q_CHUNK, K_CHUNK = 512, 1024  # must match models.layers
+
+
+def attention_block_fraction(cfg, seq_len: int) -> float:
+    """Statically-known fraction of (qi,ki) attention blocks that execute
+    (causal + sliding-window skipping), averaged over the layer pattern."""
+    bq, bk = min(Q_CHUNK, seq_len), min(K_CHUNK, seq_len)
+    nq, nk = max(seq_len // bq, 1), max(seq_len // bk, 1)
+    fracs = []
+    for kind, window in zip(cfg.kinds, cfg.windows):
+        if kind not in ("attn", "local"):
+            continue
+        needed = 0
+        for qi in range(nq):
+            for ki in range(nk):
+                first_q, last_q = qi * bq, qi * bq + bq - 1
+                first_k, last_k = ki * bk, ki * bk + bk - 1
+                ok = (first_q - last_k) < (window if window else GLOBAL_WINDOW)
+                ok = ok and (last_q - first_k >= 0)
+                needed += ok
+        fracs.append(needed / (nq * nk))
+    return sum(fracs) / len(fracs) if fracs else 1.0
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    """6·N·D (train) / 2·N·D (forward-only serve ops), active params for MoE."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_devices
+    # decode: one token per lane (the KV read is the memory term, not FLOPs).
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens / n_devices
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    compute_corrected_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    per_device_gib: float
+    fits: bool
+    note: str = ""
+
+    def bound_time(self) -> float:
+        return max(self.compute_corrected_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Useful-compute roofline fraction: time the chip *should* spend on
+        MODEL_FLOPS at peak vs the bound term."""
+        ideal = self.model_flops / PEAK_BF16_FLOPS
+        return ideal / max(self.bound_time(), 1e-30)
+
+
+def analyze_cell(rec: dict) -> Optional[CellRoofline]:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    arch, shape_name, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    n_dev = rec["devices"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    flops = rec.get("flops_scaled", rec["flops"])
+    bytes_acc = rec.get("bytes_scaled", rec["bytes_accessed"])
+    coll = rec.get("collective_bytes_scaled", rec["collective_bytes"])
+    compute = flops / PEAK_BF16_FLOPS
+    memory = bytes_acc / HBM_BW
+    collective = coll / ICI_LINK_BW
+    # Attention cond correction: scale the attention share of FLOPs by the
+    # executed-block fraction.  Approximation: attention FLOPs fraction from
+    # the analytic ratio attn/(attn+matmul) per token.
+    frac_exec = attention_block_fraction(cfg, shape.seq_len if shape.kind != "decode" else 1)
+    # attention share ≈ 2·S_eff·d_attn / (params/L per-layer matmul flops)
+    attn_flops_tok = 4.0 * shape.seq_len * cfg.q_dim if shape.kind != "decode" else 0.0
+    layer_params = max(cfg.active_param_count() - cfg.padded_vocab_size * cfg.d_model, 1) / max(cfg.n_layers, 1)
+    mat_flops_tok = 2.0 * layer_params
+    attn_share = attn_flops_tok / (attn_flops_tok + mat_flops_tok)
+    corrected = compute * (1.0 - attn_share * (1.0 - frac_exec))
+    model_fl = model_flops_per_device(arch, shape_name, n_dev)
+    terms = {"compute": corrected, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    note = ""
+    if cfg.family == "ssm":
+        note = "sLSTM time-scan flops under-counted (rolled scan; see dryrun docs)"
+    return CellRoofline(
+        arch=arch, shape=shape_name, mesh=mesh,
+        compute_s=compute, compute_corrected_s=corrected,
+        memory_s=memory, collective_s=collective, dominant=dominant,
+        model_flops=model_fl, hlo_flops=flops,
+        useful_ratio=model_fl / max(flops, 1e-30),
+        per_device_gib=rec["per_device_bytes"] / 2**30,
+        fits=rec["fits_v5e_16g"],
+        note=note,
+    )
+
+
+def load_results(results_dir: Path) -> List[dict]:
+    return [json.loads(p.read_text()) for p in sorted(Path(results_dir).glob("*.json"))]
+
+
+def roofline_table(results_dir: Path, mesh: str = "pod") -> List[CellRoofline]:
+    cells = []
+    for rec in load_results(results_dir):
+        if rec.get("mesh") != mesh:
+            continue
+        c = analyze_cell(rec)
+        if c is not None:
+            cells.append(c)
+    return cells
+
+
+def format_table(cells: List[CellRoofline]) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'compute*':>10s} {'memory':>10s} {'collect.':>10s} "
+        f"{'bound':>10s} {'RL-frac':>8s} {'useful':>7s} {'GiB/dev':>8s} fits"
+    )
+    out = [hdr, "-" * len(hdr)]
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape)):
+        out.append(
+            f"{c.arch:22s} {c.shape:12s} {c.compute_corrected_s*1e3:9.2f}ms {c.memory_s*1e3:9.2f}ms "
+            f"{c.collective_s*1e3:9.2f}ms {c.dominant:>10s} {c.roofline_fraction():7.1%} "
+            f"{c.useful_ratio:6.2f} {c.per_device_gib:8.2f} {'Y' if c.fits else 'N'}"
+        )
+    return "\n".join(out)

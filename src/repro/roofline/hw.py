@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (per chip) for the roofline model."""
+
+PEAK_BF16_FLOPS = 197e12  # 197 TFLOP/s bf16
+HBM_BW = 819e9  # 819 GB/s
+ICI_LINK_BW = 50e9  # ~50 GB/s per link
+HBM_BYTES = 16 * 1024**3  # 16 GiB

@@ -1,0 +1,15 @@
+from .transport import Channel, ChannelConfig, Message
+from .server import CloudVerifier, VerifyBackend, SyntheticBackend
+from .client import EdgeClient, EdgeConfig, SyntheticDraft
+
+__all__ = [
+    "Channel",
+    "ChannelConfig",
+    "CloudVerifier",
+    "EdgeClient",
+    "EdgeConfig",
+    "Message",
+    "SyntheticBackend",
+    "SyntheticDraft",
+    "VerifyBackend",
+]

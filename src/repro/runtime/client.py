@@ -1,0 +1,161 @@
+"""Edge client: drafting + transmission control + failover (§4.2, DESIGN §6).
+
+Runs the full PipeSD edge stack against a live ``CloudVerifier``:
+* drafts tokens (pluggable: ``SyntheticDraft`` or a real tiny JAX model);
+* dual-threshold NAV triggering (core.trigger) with window cap;
+* token-batch pipeline transmission from the DP schedule (core.scheduler);
+* environment monitor feeding the parameter updater (δ-rules, App. D);
+* **failover**: if a NAV result misses its deadline the client falls back to
+  local autoregressive decoding (the paper's offline-robustness mode), keeps
+  generating, and re-probes the cloud with exponential backoff.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.monitor import EnvironmentMonitor
+from repro.core.scheduler import CommParams, batch_sizes, dp_schedule
+from repro.core.trigger import make_trigger
+from .transport import Channel, Message
+
+__all__ = ["EdgeConfig", "SyntheticDraft", "EdgeClient"]
+
+
+@dataclass
+class EdgeConfig:
+    window: int = 16
+    r1: float = 0.9
+    r2: float = 0.6
+    gamma: float = 0.020  # per-token draft time [s] (scaled)
+    time_scale: float = 1.0
+    nav_timeout: float = 2.0  # seconds before failover
+    backoff_init: float = 0.5
+    backoff_max: float = 8.0
+
+
+@dataclass
+class SyntheticDraft:
+    """Synthetic draft model: emits (token, confidence) with dialect stats."""
+
+    seed: int = 0
+    p_hard: float = 0.15
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def next(self) -> Tuple[int, float]:
+        hard = self._rng.random() < self.p_hard
+        conf = float(self._rng.beta(2.5, 2.5) if hard else self._rng.beta(150, 1))
+        return int(self._rng.integers(0, 1 << 16)), conf
+
+
+class EdgeClient:
+    def __init__(
+        self,
+        session: int,
+        uplink: Channel,
+        downlink: Channel,
+        cfg: EdgeConfig,
+        draft=None,
+    ):
+        self.session = session
+        self.up = uplink
+        self.dn = downlink
+        self.cfg = cfg
+        self.draft = draft or SyntheticDraft(seed=session)
+        self.trigger = make_trigger("dual", r1=cfg.r1, r2=cfg.r2, window=cfg.window)
+        self.monitor = EnvironmentMonitor()
+        self.seq = 0
+        self.stats = {
+            "accepted_tokens": 0,
+            "drafted_tokens": 0,
+            "nav_calls": 0,
+            "rounds": 0,
+            "fallback_tokens": 0,
+            "failovers": 0,
+            "wall_time": 0.0,
+        }
+
+    # ------------------------------------------------------------- drafting --
+    def _draft_round(self) -> Tuple[List[int], List[float]]:
+        tokens, confs = [], []
+        plan = dp_schedule(
+            self.cfg.window,
+            CommParams(self.up.cfg.alpha, self.up.cfg.beta, self.cfg.gamma),
+        )
+        sizes = batch_sizes(plan.boundaries, self.cfg.window)
+        sent = 0
+        bi = 0
+        pending: List[Tuple[int, float]] = []
+        for _ in range(self.cfg.window):
+            time.sleep(self.cfg.gamma * self.cfg.time_scale)  # generation cost
+            tok, conf = self.draft.next()
+            tokens.append(tok)
+            confs.append(conf)
+            pending.append((tok, conf))
+            fired = self.trigger.observe(conf)
+            # Transmit per the DP plan; on trigger flush everything (§3.3 r.1).
+            flush = fired or (bi < len(sizes) and len(pending) >= sizes[bi])
+            if flush and pending:
+                self._send_batch(pending)
+                pending = []
+                bi += 1
+            if fired:
+                break
+        if pending:
+            self._send_batch(pending)
+        self.stats["drafted_tokens"] += len(tokens)
+        return tokens, confs
+
+    def _send_batch(self, pending: List[Tuple[int, float]]) -> None:
+        toks = [t for t, _ in pending]
+        cfs = [c for _, c in pending]
+        self.seq += 1
+        self.up.send(Message("draft_batch", self.session, self.seq, len(toks), (toks, cfs)))
+        self.monitor.observe_batch(len(toks), self.up.cfg.alpha + self.up.cfg.beta * len(toks))
+
+    # ---------------------------------------------------------------- runs --
+    def run(self, n_tokens: int) -> dict:
+        """Generate until n_tokens accepted; returns stats (incl. failovers)."""
+        t0 = time.monotonic()
+        backoff = self.cfg.backoff_init
+        cloud_ok = True
+        while self.stats["accepted_tokens"] < n_tokens:
+            if not cloud_ok:
+                # Offline mode: local autoregressive decoding (no NAV).
+                n_local = 0
+                deadline = time.monotonic() + backoff * self.cfg.time_scale * 10
+                while time.monotonic() < deadline and self.stats["accepted_tokens"] < n_tokens:
+                    time.sleep(self.cfg.gamma * self.cfg.time_scale)
+                    self.draft.next()
+                    self.stats["accepted_tokens"] += 1
+                    self.stats["fallback_tokens"] += 1
+                    n_local += 1
+                # Re-probe the cloud.
+                self.seq += 1
+                self.up.send(Message("reset", self.session, self.seq, 1, None))
+                cloud_ok = True  # optimistic; next round will confirm
+                backoff = min(backoff * 2, self.cfg.backoff_max)
+                continue
+            tokens, confs = self._draft_round()
+            self.seq += 1
+            self.up.send(Message("nav_request", self.session, self.seq, 1, {"n_tokens": len(tokens)}))
+            self.stats["nav_calls"] += 1
+            result = self.dn.recv(timeout=self.cfg.nav_timeout * max(self.cfg.time_scale, 0.05))
+            if result is None:  # NAV lost/late → failover to local decode
+                self.stats["failovers"] += 1
+                cloud_ok = False
+                self.trigger.reset()
+                continue
+            backoff = self.cfg.backoff_init
+            n_acc = result.payload["n_accepted"]
+            self.stats["accepted_tokens"] += n_acc + 1  # + correction token
+            self.stats["rounds"] += 1
+            self.trigger.on_verify(n_acc, len(tokens))
+        self.stats["wall_time"] = time.monotonic() - t0
+        return dict(self.stats)

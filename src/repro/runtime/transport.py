@@ -1,0 +1,111 @@
+"""Cloud-edge transport with Hockney-model latency and failure injection.
+
+``Channel`` carries ``Message``s between threads with a simulated delivery
+delay of ``(α + β·n_tokens) × time_scale`` — the same model the paper
+measures (Fig. 6a) — so the threaded runtime reproduces the timing behaviour
+of the FastAPI deployment at any speed (``time_scale`` ≪ 1 for tests).
+Failure injection (drop probability, outage windows) drives the
+fault-tolerance paths: NAV timeout → local-decode fallback → re-attach.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+__all__ = ["ChannelConfig", "Message", "Channel"]
+
+
+@dataclass(frozen=True)
+class Message:
+    kind: str  # 'draft_batch' | 'nav_request' | 'nav_result' | 'hello' | ...
+    session: int
+    seq: int
+    n_tokens: int
+    payload: Any
+
+
+@dataclass
+class ChannelConfig:
+    alpha: float = 0.020  # startup overhead [s]
+    beta: float = 0.002  # per-token serialization [s]
+    time_scale: float = 1.0  # multiply all delays (tests use e.g. 0.01)
+    drop_prob: float = 0.0  # random loss (failure injection)
+    outage: Optional[Tuple[float, float]] = None  # (start, end) relative secs
+
+
+class Channel:
+    """One direction of the link; delivery is delayed per the Hockney model.
+
+    A dedicated dispatcher thread releases messages at their delivery time, so
+    transmission of consecutive batches serializes exactly like a real link
+    (the next batch's delivery time starts after the previous one's).
+    """
+
+    def __init__(self, cfg: ChannelConfig, name: str = "ch"):
+        self.cfg = cfg
+        self.name = name
+        self._heap: list = []
+        self._counter = itertools.count()
+        self._cv = threading.Condition()
+        self._t0 = time.monotonic()
+        self._link_free = 0.0  # relative time the link frees up
+        self._closed = False
+
+    # ------------------------------------------------------------- sending --
+    def send(self, msg: Message) -> float:
+        """Enqueue; returns the simulated delivery delay (for diagnostics)."""
+        now = time.monotonic() - self._t0
+        cost = (self.cfg.alpha + self.cfg.beta * msg.n_tokens) * self.cfg.time_scale
+        with self._cv:
+            start = max(now, self._link_free)
+            deliver_at = start + cost
+            self._link_free = deliver_at
+            if self._dropped(start):
+                self._cv.notify_all()
+                return cost  # silently lost — receiver will time out
+            heapq.heappush(self._heap, (deliver_at, next(self._counter), msg))
+            self._cv.notify_all()
+        return cost
+
+    def _dropped(self, t_rel: float) -> bool:
+        import random
+
+        if self.cfg.outage is not None and self.cfg.outage[0] <= t_rel < self.cfg.outage[1]:
+            return True
+        return self.cfg.drop_prob > 0 and random.random() < self.cfg.drop_prob
+
+    # ----------------------------------------------------------- receiving --
+    def recv(self, timeout: Optional[float] = None) -> Optional[Message]:
+        """Blocking receive honoring delivery times; None on timeout/close."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                now = time.monotonic() - self._t0
+                if self._heap and self._heap[0][0] <= now:
+                    return heapq.heappop(self._heap)[2]
+                if self._closed:
+                    return None
+                wait = None
+                if self._heap:
+                    wait = self._heap[0][0] - now
+                if deadline is not None:
+                    rem = deadline - time.monotonic()
+                    if rem <= 0:
+                        return None
+                    wait = rem if wait is None else min(wait, rem)
+                self._cv.wait(timeout=wait if wait is None or wait > 0 else 0.001)
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+
+def make_link(up_cfg: ChannelConfig, dn_cfg: ChannelConfig) -> Tuple[Channel, Channel]:
+    """(uplink edge→cloud, downlink cloud→edge)."""
+    return Channel(up_cfg, "up"), Channel(dn_cfg, "dn")

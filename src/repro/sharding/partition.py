@@ -1,0 +1,156 @@
+"""Divisibility-aware PartitionSpec rules (DESIGN.md §5).
+
+Axis roles:
+* ``model``  — tensor/expert parallel axis (16-way per pod).
+* ``data``   — data parallel for activations; second ("FSDP") weight dim so
+  large weights shard 2-D and optimizer state is fully sharded.
+* ``pod``    — multi-pod data parallelism: batch (and optimizer state) shard
+  over pods; weights are replicated across pods.
+
+Every rule is *divisibility-aware*: a tensor dim is sharded over an axis only
+if evenly divisible, else that dim falls back to replication and the decision
+is recorded (``explain`` output) — e.g. whisper's 20 heads and minicpm's 36
+heads are not divisible by 16, so their attention weights shard over the flat
+``H·hd`` dim instead (all the assigned configs keep H·hd % 16 == 0), and
+kv-head counts below 16 shard over head_dim.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Partitioner", "data_axes", "batch_specs", "cache_specs"]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ('pod','data') on multi-pod, ('data',) single."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+class Partitioner:
+    """Builds PartitionSpec pytrees for params / batches / caches."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.dp = data_axes(mesh)
+        self.fallbacks: List[str] = []  # audit log of replicated dims
+
+    # ------------------------------------------------------------- helpers --
+    def _ok(self, size: int, axis) -> bool:
+        return size % _axis_size(self.mesh, axis) == 0
+
+    def _dim(self, path: str, size: int, axis):
+        """axis if divisible else None (logged)."""
+        if axis is None:
+            return None
+        if self._ok(size, axis):
+            return axis
+        self.fallbacks.append(f"{path}: dim {size} !% {axis} -> replicated")
+        return None
+
+    # --------------------------------------------------------------- rules --
+    def _spec_for(self, path: str, shape: Tuple[int, ...]) -> P:
+        name = path.split("/")[-1]
+        d = lambda i, ax: self._dim(path, shape[i], ax)
+        nd = len(shape)
+        # Stacked-layer leading dims (blocks are stacked [L, ...] or [G, k, ...]):
+        # rules below address the *trailing* dims; leading layer dims replicate.
+        def lead(spec_tail: Tuple) -> P:
+            return P(*([None] * (nd - len(spec_tail))), *spec_tail)
+
+        if name in ("embed",):  # [V, d]
+            return P(d(0, "model"), d(1, "data"))
+        if name == "lm_head":  # [d, V]
+            return P(d(0, "data"), d(1, "model"))
+        if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "wi", "wf", "wo_gate"):
+            if name in ("w_gate", "w_up") and nd >= 3 and shape[-3] > 1 and path.find("moe") >= 0:
+                # MoE expert weights [*, E, d, f]: experts over model, f over data.
+                return lead((self._dim(path, shape[-3], "model"), None, self._dim(path, shape[-1], "data")))
+            return lead((self._dim(path, shape[-2], "data"), self._dim(path, shape[-1], "model")))
+        if name == "wo":
+            if "mlstm" in path or "slstm" in path:  # gate projections [d, *] (col-parallel)
+                return lead((self._dim(path, shape[-2], "data"), self._dim(path, shape[-1], "model")))
+            # attention out-projection [H·hd, d] (row-parallel)
+            return lead((self._dim(path, shape[-2], "model"), self._dim(path, shape[-1], "data")))
+        if name in ("w_down",):
+            if nd >= 3 and path.find("moe") >= 0:  # [*, E, f, d]
+                return lead((self._dim(path, shape[-3], "model"), self._dim(path, shape[-2], "data"), None))
+            return lead((self._dim(path, shape[-2], "model"), self._dim(path, shape[-1], "data")))
+        if name in ("w_out",):  # [dr|qd|d, d] row-parallel
+            return lead((self._dim(path, shape[-2], "model"), self._dim(path, shape[-1], "data")))
+        if name in ("router", "frontend_proj", "vision_proj", "wa", "wx", "wz"):
+            if nd >= 2:
+                return lead((self._dim(path, shape[-2], "data"), self._dim(path, shape[-1], "model")))
+        if name in ("wi_s", "wf_s", "wz_s", "wo_s") or (name[0] == "w" and nd >= 2 and path.find("slstm") >= 0):
+            return lead((self._dim(path, shape[-2], "data"), self._dim(path, shape[-1], "model")))
+        if name.startswith("conv_w"):  # [W, dr]
+            return lead((None, self._dim(path, shape[-1], "model")))
+        # 1-D vectors (norms, biases, lam) and small tensors: replicate.
+        return P(*([None] * nd))
+
+    # --------------------------------------------------------------- public --
+    def param_specs(self, params: Any) -> Any:
+        def per_leaf(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            return self._spec_for(pstr, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+    def param_shardings(self, params: Any) -> Any:
+        return jax.tree_util.tree_map(lambda s: NamedSharding(self.mesh, s), self.param_specs(params))
+
+    def batch_specs(self, batch: Any) -> Any:
+        dp = self.dp
+
+        def per_leaf(path, leaf):
+            nd = len(leaf.shape)
+            if leaf.shape and self._ok(leaf.shape[0], dp):
+                return P(dp, *([None] * (nd - 1)))
+            return P(*([None] * nd))
+
+        return jax.tree_util.tree_map_with_path(per_leaf, batch)
+
+    def batch_shardings(self, batch: Any) -> Any:
+        return jax.tree_util.tree_map(lambda s: NamedSharding(self.mesh, s), self.batch_specs(batch))
+
+    def cache_specs(self, cache: Any) -> Any:
+        """KV caches [L,B,S,Hkv,hd] / recurrent states [L,B,...]:
+        batch over data axes; kv-heads over model when divisible, else head_dim."""
+        dp = self.dp
+
+        def per_leaf(path, leaf):
+            shape = leaf.shape
+            nd = len(shape)
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            if nd == 5:  # [L, B, S, Hkv, hd] — flash-decode layout: shard S
+                b_ax = dp if self._ok(shape[1], dp) else None
+                s_ax = self._dim(pstr, shape[2], "model")
+                return P(None, b_ax, s_ax, None, None)
+            if nd >= 2 and self._ok(shape[1], dp):  # [L, B, ...] states
+                tail = [None] * (nd - 2)
+                if nd >= 3 and self._ok(shape[-1], "model"):
+                    tail[-1] = "model"
+                return P(None, dp, *tail)
+            if nd == 1:  # lengths [B]
+                return P(dp) if self._ok(shape[0], dp) else P(None)
+            return P(*([None] * nd))
+
+        return jax.tree_util.tree_map_with_path(per_leaf, cache)
+
+    def cache_shardings(self, cache: Any) -> Any:
+        return jax.tree_util.tree_map(lambda s: NamedSharding(self.mesh, s), self.cache_specs(cache))
+
+    def explain(self) -> str:
+        return "\n".join(self.fallbacks) or "(no replication fallbacks)"

@@ -1,0 +1,75 @@
+"""Ambient-mesh-aware sharding constraints.
+
+``constrain(x, spec_axes)`` applies ``with_sharding_constraint`` only when a
+mesh is ambient (inside ``with mesh:`` under jit) AND every requested axis
+exists AND the corresponding dim divides evenly — so model code can express
+its preferred layout once and still run un-meshed (CPU tests) or on meshes
+where a dim doesn't divide (falls back to unconstrained for that dim).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+__all__ = ["constrain", "ambient_mesh", "axis_size"]
+
+
+def ambient_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:  # physical mesh context (`with mesh:` style)
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from jax._src import mesh as mesh_lib
+
+            m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def axis_size(mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    names = axis if isinstance(axis, (tuple, list)) else (axis,)
+    return int(np.prod([dict(mesh.shape)[n] for n in names]))
+
+
+def constrain(x: jax.Array, axes: Sequence[Axis]) -> jax.Array:
+    """Constrain dims of x to the given mesh axes where possible."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        # Keep only axes present in the ambient mesh (e.g. 'pod' exists only
+        # on the multi-pod mesh; ('pod','data') degrades to ('data',)).
+        ax_names = tuple(a for a in (ax if isinstance(ax, (tuple, list)) else (ax,)) if a in names)
+        if not ax_names:
+            spec.append(None)
+            continue
+        if dim % axis_size(mesh, ax_names) != 0:
+            spec.append(None)
+            continue
+        spec.append(ax_names if len(ax_names) > 1 else ax_names[0])
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

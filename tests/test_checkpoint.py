@@ -1,0 +1,52 @@
+"""Checkpoint manager: roundtrip, keep-k, resume, corruption safety."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree():
+    return {"a": jnp.arange(6).reshape(2, 3), "nested": {"b": jnp.ones((4,)) * 2.5}, "t": (jnp.zeros((2,)),)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, tmp_path / "ck")
+    back = load_pytree(tmp_path / "ck", t)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(t["a"]))
+    np.testing.assert_array_equal(np.asarray(back["nested"]["b"]), np.asarray(t["nested"]["b"]))
+
+
+def test_manager_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree())
+    assert mgr.latest_step() == 30
+    assert sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*")) == [20, 30]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_pytree(_tree(), tmp_path / "ck")
+    bad = _tree()
+    bad["a"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError):
+        load_pytree(tmp_path / "ck", bad)
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_tree())
+
+
+def test_train_resume(tmp_path):
+    """launch.train resumes from the latest checkpoint and keeps improving."""
+    from repro.launch.train import train
+
+    _, losses1 = train("xlstm-350m", steps=6, batch=2, seq=32, ckpt_dir=str(tmp_path), ckpt_every=3, log_every=100)
+    # Second call resumes from step 6 (nothing to do → no new losses) after
+    # a simulated crash at step 6; extend to 9 to prove continuation.
+    _, losses2 = train("xlstm-350m", steps=9, batch=2, seq=32, ckpt_dir=str(tmp_path), ckpt_every=3, log_every=100)
+    assert len(losses2) == 3  # only steps 7..9 ran

@@ -1,0 +1,41 @@
+"""Data pipeline: determinism, packing, prefetch."""
+
+import numpy as np
+
+from repro.data import ByteTokenizer, DataPipeline, SyntheticCorpus
+
+
+def test_corpus_deterministic():
+    c1 = SyntheticCorpus("code", seed=1)
+    c2 = SyntheticCorpus("code", seed=1)
+    assert c1.text(50, seed=7) == c2.text(50, seed=7)
+    assert c1.text(50, seed=7) != c1.text(50, seed=8)
+
+
+def test_dialects_differ():
+    assert SyntheticCorpus("code", 0).text(30, 0) != SyntheticCorpus("math", 0).text(30, 0)
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    s = "def f(x): return x + 1"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_pipeline_shapes_and_shift():
+    pipe = DataPipeline(SyntheticCorpus("code", 0), ByteTokenizer(), batch_size=3, seq_len=32)
+    b = pipe.batch_at(0)
+    assert b["tokens"].shape == (3, 32) and b["labels"].shape == (3, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])  # next-token shift
+    # Deterministic random access (resume support).
+    b2 = pipe.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+    pipe.close()
+
+
+def test_prefetch_iterator():
+    pipe = DataPipeline(SyntheticCorpus("math", 0), ByteTokenizer(), batch_size=2, seq_len=16)
+    it = iter(pipe)
+    batches = [next(it) for _ in range(3)]
+    assert all(b["tokens"].shape == (2, 16) for b in batches)
+    pipe.close()

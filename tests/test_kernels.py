@@ -1,0 +1,78 @@
+"""Pallas kernels: shape/dtype sweeps, interpret-mode vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,T,H,Hkv,hd", [(2, 256, 4, 2, 64), (1, 128, 4, 4, 32), (1, 256, 8, 4, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [(1 << 30, 0.0), (64, 0.0), (1 << 30, 50.0)])
+def test_flash_attention_allclose(B, T, H, Hkv, hd, dtype, window, softcap):
+    from repro.kernels.flash_attention import flash_attention
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, hd), dtype)
+    out = flash_attention(q, k, v, window=window, softcap=softcap, impl="interpret")
+    ref = flash_attention(q, k, v, window=window, softcap=softcap, impl="ref")
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,hd,block", [(2, 1024, 4, 2, 64, 512), (3, 512, 8, 8, 32, 128), (1, 2048, 2, 1, 128, 512)])
+@pytest.mark.parametrize("window", [1 << 30, 200])
+def test_decode_attention_allclose(B, S, H, Hkv, hd, block, window):
+    from repro.kernels.decode_attention import decode_attention
+
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    lens = jax.random.randint(ks[3], (B,), 1, S)
+    out = decode_attention(q, kc, vc, lens, window=window, impl="interpret", block_k=block)
+    ref = decode_attention(q, kc, vc, lens, window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("B,K,V,bv", [(4, 8, 4096, 1024), (2, 5, 2048, 2048), (3, 8, 8192, 2048)])
+def test_spec_verify_allclose(B, K, V, bv):
+    from repro.kernels.spec_verify import spec_verify
+
+    ks = jax.random.split(KEY, 3)
+    logits = jax.random.normal(ks[0], (B, K + 1, V)) * 3
+    greedy = jnp.argmax(logits, -1)[:, :K]
+    rnd = jax.random.randint(ks[1], (B, K), 0, V)
+    mix = jax.random.bernoulli(ks[2], 0.7, (B, K))
+    draft = jnp.where(mix, greedy, rnd).astype(jnp.int32)
+    nd = jnp.full((B,), K, jnp.int32).at[0].set(max(K - 2, 1))
+    na, corr, lp = spec_verify(logits, draft, nd, impl="interpret", block_v=bv)
+    na2, corr2, lp2 = spec_verify(logits, draft, nd, impl="ref")
+    assert (na == na2).all() and (corr == corr2).all()
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp2), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,T,D,bt,bd", [(2, 512, 256, 128, 128), (1, 256, 512, 64, 256), (2, 128, 128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_rglru_scan_allclose(B, T, D, bt, bd, dtype):
+    from repro.kernels.rglru_scan import rglru_scan
+
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (B, T, D), dtype, minval=0.5, maxval=0.999)
+    b = jax.random.normal(ks[1], (B, T, D), dtype) * 0.1
+    h0 = jax.random.normal(ks[2], (B, D), dtype)
+    out = rglru_scan(a, b, h0, impl="interpret", block_t=bt, block_d=bd)
+    ref = rglru_scan(a, b, h0, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_flash_attention_rejects_bad_blocks():
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+    q = jnp.zeros((1, 100, 2, 16))
+    with pytest.raises(ValueError):
+        flash_attention_pallas(q, q, q, block_q=64, block_k=64)

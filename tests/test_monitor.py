@@ -1,0 +1,52 @@
+"""Environment monitor: α/β/γ estimation + δ-rule update triggering."""
+
+import numpy as np
+import pytest
+
+from repro.core.monitor import EnvironmentMonitor, linear_fit_alpha_beta
+
+
+def test_linear_fit_recovers_alpha_beta():
+    rng = np.random.default_rng(0)
+    a, b = 0.02, 0.005
+    sizes = list(rng.integers(1, 9, size=80))
+    times = [a + b * s + rng.normal(0, 1e-5) for s in sizes]
+    ah, bh = linear_fit_alpha_beta(sizes, times)
+    assert ah == pytest.approx(a, rel=0.05)
+    assert bh == pytest.approx(b, rel=0.05)
+
+
+def test_missing_probe_sizes():
+    m = EnvironmentMonitor()
+    m.observe_batch(3, 0.03)
+    m.observe_batch(5, 0.04)
+    missing = m.missing_probe_sizes()
+    assert 3 not in missing and 5 not in missing and 1 in missing
+
+
+def test_dp_rerun_triggers_on_big_change():
+    m = EnvironmentMonitor(window=10)
+    for _ in range(10):
+        m.observe_batch(2, 0.02 + 0.005 * 2)
+        m.observe_batch(6, 0.02 + 0.005 * 6)
+        m.observe_gamma(0.05)
+    first = m.should_rerun_dp()
+    assert first is not None  # initial commit
+    assert m.should_rerun_dp() is None  # stable → no re-run
+    # γ shifts by 50% (> δ2=0.2) → re-run.
+    for _ in range(10):
+        m.observe_gamma(0.075)
+    assert m.should_rerun_dp() is not None
+
+
+def test_bo_rerun_on_tpt_shift():
+    m = EnvironmentMonitor(window=5)
+    for _ in range(5):
+        m.observe_tpt(0.1)
+    assert m.should_rerun_bo() is None  # first window = baseline
+    for _ in range(5):
+        m.observe_tpt(0.2)  # +100% > δ1
+    assert m.should_rerun_bo() == pytest.approx(0.2)
+    for _ in range(5):
+        m.observe_tpt(0.21)  # +5% — below δ1
+    assert m.should_rerun_bo() is None

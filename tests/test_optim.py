@@ -1,0 +1,91 @@
+"""Optimizers, schedules, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    compress_int8,
+    compressed_gradient_transform,
+    cosine_schedule,
+    decompress_int8,
+    init_error_feedback,
+    wsd_schedule,
+)
+from repro.optim.compression import ErrorFeedbackState
+
+
+@pytest.mark.parametrize("make_opt", [lambda: adamw(0.1), lambda: adafactor(0.5)])
+def test_optimizer_descends_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.array([3.0, -2.0]), "m": jnp.ones((4, 4)) * 2}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["m"] ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for i in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, jnp.int32(i))
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(0.1)
+    params = {"big": jnp.zeros((64, 128))}
+    st_ = opt.init(params)
+    assert st_["big"]["vr"].shape == (64,)
+    assert st_["big"]["vc"].shape == (128,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+    cn = float(jnp.linalg.norm(clipped["a"]))
+    assert cn == pytest.approx(1.0, rel=1e-5)
+
+
+def test_wsd_schedule_phases():
+    s = wsd_schedule(1.0, warmup_steps=10, stable_steps=20, decay_steps=10, final_frac=0.01)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0)
+    assert float(s(25)) == pytest.approx(1.0)
+    assert float(s(40)) == pytest.approx(0.01, rel=1e-3)
+
+
+def test_cosine_schedule_monotone_decay():
+    s = cosine_schedule(1.0, warmup_steps=5, total_steps=50)
+    vals = [float(s(i)) for i in range(5, 51, 5)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32), min_size=1, max_size=64))
+def test_int8_roundtrip_bounded_error(xs):
+    x = jnp.array(xs, jnp.float32)
+    q, scale = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of dequantized grads + final residual == sum of true grads."""
+    rng = np.random.default_rng(0)
+    grads_seq = [{"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)} for _ in range(20)]
+    ef = init_error_feedback(grads_seq[0])
+    total_true = jnp.zeros((32,))
+    total_deq = jnp.zeros((32,))
+    for g in grads_seq:
+        deq, ef = compressed_gradient_transform(g, ef)
+        total_true += g["w"]
+        total_deq += deq["w"]
+    np.testing.assert_allclose(np.asarray(total_deq + ef.residual["w"]), np.asarray(total_true), atol=1e-4)

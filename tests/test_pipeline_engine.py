@@ -1,0 +1,96 @@
+"""Event-driven pipeline engine: paper-qualitative behaviour + invariants."""
+
+import pytest
+
+from repro.core.pipeline import (
+    ChannelModel,
+    CloudModel,
+    EdgeModel,
+    PipelineEngine,
+    SyntheticSource,
+    make_framework,
+    periodic_bandwidth_trace,
+)
+
+
+def _run(name, ghz=None, trace=None, n=600, seed=7, **overrides):
+    eng = PipelineEngine(
+        make_framework(name, autotune=False, **overrides),
+        ChannelModel(bandwidth_trace=trace),
+        CloudModel(),
+        EdgeModel(simulated_ghz=ghz),
+        SyntheticSource(seed=42),
+        seed=seed,
+    )
+    return eng.run(n)
+
+
+def test_pipesd_beats_all_baselines_scenario1():
+    tpts = {n: _run(n).tpt for n in ("vanilla", "hsl", "edgellm", "pipesd")}
+    assert tpts["pipesd"] < tpts["vanilla"]
+    assert tpts["pipesd"] < tpts["hsl"]
+    assert tpts["pipesd"] < tpts["edgellm"]
+    # Speedups in the paper's reported range (1.16–2.16×).
+    for base in ("vanilla", "hsl", "edgellm"):
+        assert 1.0 < tpts[base] / tpts["pipesd"] < 2.5
+
+
+@pytest.mark.parametrize("ghz", [2.5, 1.2])
+def test_pipesd_best_on_slow_edges(ghz):
+    tpts = {n: _run(n, ghz=ghz).tpt for n in ("vanilla", "hsl", "edgellm", "pipesd")}
+    assert min(tpts, key=tpts.get) == "pipesd"
+
+
+def test_dynamic_bandwidth_scenario():
+    tr = periodic_bandwidth_trace(seed=3)
+    tpts = {n: _run(n, trace=tr).tpt for n in ("vanilla", "pipesd")}
+    assert tpts["pipesd"] < tpts["vanilla"]
+
+
+def test_pipeline_ablation_helps():
+    """Table 6: full PipeSD beats PipeSD w/o pipeline and w/ fixed trigger."""
+    full = _run("pipesd").tpt
+    no_pipe = _run("pipesd_no_pipeline").tpt
+    fixed = _run("pipesd_fixed").tpt
+    assert full < no_pipe
+    assert full < fixed
+
+
+def test_spec_stats_in_paper_regime():
+    """Table 7: PipeSD ~5-token drafts, ~0.9+ acceptance, freq ~0.17-0.2."""
+    st = _run("pipesd", n=1500)
+    assert 3.0 <= st.mean_draft_length <= 8.0
+    assert 0.85 <= st.acceptance_rate <= 1.0
+    assert 0.10 <= st.verification_frequency <= 0.30
+    # HSL: conservative — shorter drafts, more frequent NAV (paper Table 7).
+    hsl = _run("hsl", n=1500)
+    assert hsl.mean_draft_length < st.mean_draft_length
+    assert hsl.verification_frequency > st.verification_frequency
+
+
+def test_energy_accounting():
+    st = _run("pipesd", n=800)
+    expected = st.cloud_energy / st.accepted_tokens * 100
+    assert st.ecs == pytest.approx(expected)
+    assert st.ecs > 0
+
+
+def test_accounting_invariants():
+    st = _run("pipesd", n=500)
+    assert st.accepted_tokens >= 500
+    assert st.accepted_drafts <= st.drafted_tokens
+    assert st.nav_calls == st.rounds
+    assert st.wall_time > 0
+    # Output tokens = accepted drafts + one correction per round.
+    assert st.accepted_tokens == st.accepted_drafts + st.rounds
+
+
+def test_autotuner_improves_or_matches_default():
+    default = _run("pipesd", n=800).tpt
+    eng = PipelineEngine(
+        make_framework("pipesd"),  # autotune on
+        ChannelModel(), CloudModel(), EdgeModel(), SyntheticSource(seed=42), seed=7,
+    )
+    tuned = eng.run(800).tpt
+    assert tuned <= default * 1.15  # BO shouldn't be much worse, usually better
+    assert eng.tuned_thresholds is not None

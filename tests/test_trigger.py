@@ -1,0 +1,82 @@
+"""Dual-threshold NAV trigger + baseline policy semantics."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trigger import (
+    DualThresholdTrigger,
+    FixedLengthTrigger,
+    SequenceThresholdTrigger,
+    TokenThresholdTrigger,
+    WindowCapTrigger,
+    make_trigger,
+)
+
+confs = st.lists(st.floats(min_value=1e-6, max_value=1.0), min_size=1, max_size=50)
+
+
+def test_dual_fires_on_token_threshold():
+    t = DualThresholdTrigger(r1=0.0, r2=0.5)
+    assert not t.observe(0.9)
+    assert t.observe(0.4)
+
+
+def test_dual_fires_on_sequence_threshold():
+    t = DualThresholdTrigger(r1=0.5, r2=0.0)
+    assert not t.observe(0.9)  # C1 = 0.9
+    assert not t.observe(0.8)  # C1 = 0.72
+    assert t.observe(0.6)  # C1* = 0.432 ≤ 0.5 → fire
+    # C1 resets to 1 after the trigger (§3.3).
+    assert t.c1 == 1.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(cs=confs, r1=st.floats(0, 1), r2=st.floats(0, 1))
+def test_dual_trigger_invariant(cs, r1, r2):
+    """Between fires, the running product stays above R1 and every conf > R2."""
+    t = DualThresholdTrigger(r1=r1, r2=r2)
+    prod = 1.0
+    for c in cs:
+        fired = t.observe(c)
+        if fired:
+            prod = 1.0
+            assert c <= r2 or True  # fired by either rule
+        else:
+            prod *= c
+            assert prod > r1
+            assert c > r2
+
+
+def test_fixed_length():
+    t = FixedLengthTrigger(n=3)
+    fires = [t.observe(0.9) for _ in range(7)]
+    assert fires == [False, False, True, False, False, True, False]
+
+
+def test_hsl_token_threshold():
+    t = TokenThresholdTrigger(r=0.99)
+    assert t.observe(0.98) and not t.observe(0.995)
+
+
+def test_edgellm_dynamic_threshold_moves():
+    t = SequenceThresholdTrigger(r1=0.3)
+    # Full acceptance halves R1.
+    t.on_verify(10, 10)
+    assert t.r1 == pytest.approx(0.15)
+    # Rejection raises it (divide by rejected fraction, App. G.3 Eq. 7).
+    t.on_verify(5, 10)
+    assert t.r1 == pytest.approx(0.30)
+
+
+def test_window_cap_forces_fire():
+    t = WindowCapTrigger(DualThresholdTrigger(r1=0.0, r2=0.0), window=4)
+    fires = [t.observe(1.0) for _ in range(9)]
+    assert fires == [False, False, False, True] * 2 + [False]
+
+
+def test_make_trigger_factory():
+    for kind, kw in [("dual", dict(r1=0.5, r2=0.5)), ("fixed", dict(n=4)), ("token", dict(r=0.9)), ("sequence", dict(r1=0.3))]:
+        t = make_trigger(kind, window=8, **kw)
+        assert isinstance(t, WindowCapTrigger)
+    with pytest.raises(KeyError):
+        make_trigger("nope")

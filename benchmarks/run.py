@@ -1,8 +1,10 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: reproduces every paper table/figure + the roofline.
+"""Benchmark harness: reproduces every paper table/figure + the roofline and
+the multi-edge fleet serving benchmark.
 
     PYTHONPATH=src python -m benchmarks.run              # all benchmarks
     PYTHONPATH=src python -m benchmarks.run table1_tpt   # one benchmark
+    PYTHONPATH=src python -m benchmarks.run fleet        # fleet serving only
 """
 
 from __future__ import annotations
@@ -12,14 +14,16 @@ import time
 
 
 def main() -> None:
+    from .fleet_bench import fleet
     from .roofline_bench import roofline
     from .tables import ALL_TABLES
 
-    wanted = sys.argv[1:] or list(ALL_TABLES) + ["roofline"]
+    extras = {"roofline": roofline, "fleet": fleet}
+    wanted = sys.argv[1:] or list(ALL_TABLES) + list(extras)
     print("name,us_per_call,derived")
     t_start = time.time()
     for name in wanted:
-        fn = ALL_TABLES.get(name, roofline if name == "roofline" else None)
+        fn = ALL_TABLES.get(name, extras.get(name))
         if fn is None:
             print(f"# unknown benchmark {name!r}", file=sys.stderr)
             continue

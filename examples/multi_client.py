@@ -44,7 +44,12 @@ def main() -> None:
         flag = "  <-- failover exercised" if r["failovers"] else ""
         print(f"client {sid}: tokens={r['accepted_tokens']} rounds={r['rounds']} "
               f"failovers={r['failovers']} fallback_tokens={r['fallback_tokens']}{flag}")
-    print(f"server: {server.stats}")
+    load = server.load_summary()
+    print(
+        f"server: nav_calls={load['nav_calls']} batched_calls={load['batched_calls']}"
+        f" occupancy={load['batch_occupancy']:.2f} mean_queue_depth={load['mean_queue_depth']:.2f}"
+        f" dropped_stragglers={load['dropped_stragglers']}"
+    )
 
 
 if __name__ == "__main__":

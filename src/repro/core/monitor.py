@@ -59,6 +59,10 @@ class EnvironmentMonitor:
     _batch_times: Deque[float] = field(default_factory=deque, init=False)
     _gammas: Deque[float] = field(default_factory=deque, init=False)
     _tpts: Deque[float] = field(default_factory=deque, init=False)
+    # Serving-side load (continuous-batched verifier, runtime/server.py):
+    # admitted batch size + queue depth at each dispatch.
+    _verifier_batches: Deque[int] = field(default_factory=deque, init=False)
+    _verifier_depths: Deque[int] = field(default_factory=deque, init=False)
     # Last parameters the consumers (DP/BO) were given.
     _committed: Optional[Tuple[float, float, float]] = field(default=None, init=False)
     _committed_tpt: Optional[float] = field(default=None, init=False)
@@ -81,6 +85,14 @@ class EnvironmentMonitor:
         while len(self._tpts) > self.window:
             self._tpts.popleft()
 
+    def observe_verifier_batch(self, batch_size: int, queue_depth: int) -> None:
+        """One continuous-batching dispatch: admitted size + depth at admission."""
+        self._verifier_batches.append(int(batch_size))
+        self._verifier_depths.append(int(queue_depth))
+        while len(self._verifier_batches) > self.window:
+            self._verifier_batches.popleft()
+            self._verifier_depths.popleft()
+
     # ----------------------------------------------------------- estimates --
     def missing_probe_sizes(self) -> List[int]:
         """Batch sizes to proactively probe so the fit has ≥8 points (App. D.2)."""
@@ -99,6 +111,23 @@ class EnvironmentMonitor:
         if len(self._tpts) < self.window:
             return None  # App. D.1: trigger only once the window is full
         return float(np.mean(self._tpts))
+
+    def verifier_occupancy(self) -> Optional[float]:
+        """Mean admitted NAV batch size; >1 means cross-session amortization."""
+        if not self._verifier_batches:
+            return None
+        return float(np.mean(self._verifier_batches))
+
+    def verifier_queue_depth(self) -> Optional[float]:
+        if not self._verifier_depths:
+            return None
+        return float(np.mean(self._verifier_depths))
+
+    def verifier_batches(self) -> List[int]:
+        return list(self._verifier_batches)
+
+    def verifier_depths(self) -> List[int]:
+        return list(self._verifier_depths)
 
     # ------------------------------------------------------------ triggers --
     @staticmethod

@@ -289,6 +289,12 @@ class RunStats:
     t_measure: float = 0.0
     dp_runs: int = 0
     bo_runs: int = 0
+    # Multi-session serving (runtime/server.py continuous batching): per
+    # dispatch, the admitted NAV batch size and queue depth at admission;
+    # per round, the client-observed NAV round-trip latency [s].
+    verifier_batches: List[int] = field(default_factory=list)
+    verifier_queue_depths: List[int] = field(default_factory=list)
+    nav_latencies: List[float] = field(default_factory=list)
 
     @property
     def tpt(self) -> float:
@@ -312,7 +318,24 @@ class RunStats:
     def acceptance_rate(self) -> float:
         return self.accepted_drafts / max(self.drafted_tokens, 1)
 
+    @property
+    def verifier_batch_occupancy(self) -> float:
+        """Mean admitted NAV batch size; >1 = cross-session amortization."""
+        return float(np.mean(self.verifier_batches)) if self.verifier_batches else 0.0
+
+    @property
+    def mean_queue_depth(self) -> float:
+        return float(np.mean(self.verifier_queue_depths)) if self.verifier_queue_depths else 0.0
+
+    def nav_latency_quantiles(self) -> Tuple[float, float]:
+        """(p50, p99) NAV round-trip latency [s]; (0, 0) when unrecorded."""
+        if not self.nav_latencies:
+            return 0.0, 0.0
+        p50, p99 = np.percentile(self.nav_latencies, [50.0, 99.0])
+        return float(p50), float(p99)
+
     def summary(self) -> dict:
+        p50, p99 = self.nav_latency_quantiles()
         return dict(
             tpt_ms=self.tpt * 1e3,
             ecs_j=self.ecs,
@@ -326,6 +349,10 @@ class RunStats:
             overhead_dp=self.t_dp / max(self.wall_time, 1e-9),
             overhead_bo=self.t_bo / max(self.wall_time, 1e-9),
             overhead_measure=self.t_measure / max(self.wall_time, 1e-9),
+            verifier_batch_occupancy=self.verifier_batch_occupancy,
+            mean_queue_depth=self.mean_queue_depth,
+            nav_p50_ms=p50 * 1e3,
+            nav_p99_ms=p99 * 1e3,
         )
 
 

@@ -1,0 +1,14 @@
+"""Version tolerance for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+0.4.x/0.5.x; the kernels target the new name and fall back to the old one so
+the repo runs on whichever toolchain the container bakes in.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

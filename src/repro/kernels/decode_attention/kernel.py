@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams
+
 DEFAULT_BK = 512
 NEG_INF = -1e30
 
@@ -105,6 +107,6 @@ def decode_attention_pallas(
             pltpu.VMEM((H,), jnp.float32),
             pltpu.VMEM((H, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.reshape(B, 1).astype(jnp.int32), q, k_cache, v_cache)

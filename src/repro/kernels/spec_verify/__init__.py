@@ -1,6 +1,14 @@
 from . import ops, ref
 from .kernel import spec_verify_pallas
-from .ops import spec_verify
-from .ref import spec_verify_ref
+from .ops import spec_verify, spec_verify_batched
+from .ref import spec_verify_ref, spec_verify_ragged_ref
 
-__all__ = ["spec_verify", "spec_verify_pallas", "spec_verify_ref", "ops", "ref"]
+__all__ = [
+    "spec_verify",
+    "spec_verify_batched",
+    "spec_verify_pallas",
+    "spec_verify_ref",
+    "spec_verify_ragged_ref",
+    "ops",
+    "ref",
+]

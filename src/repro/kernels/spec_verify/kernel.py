@@ -12,6 +12,18 @@ This kernel fuses all three into ONE pass over the vocabulary:
 Grid: (B, num_vocab_blocks), vocab dimension "arbitrary" (sequential) with
 running state in VMEM scratch.  K+1 ≤ 16 positions; vocab blocks of 2048
 keep the [K+1, BV] score tile ≤ 128 KB in VMEM.
+
+Padding invariants (relied on by ``ops.spec_verify_batched``, which packs
+ragged multi-session requests into one rectangular launch):
+
+* rows with ``n_drafted = 0`` produce ``n_accepted = 0`` and touch nothing
+  else — whole padding rows (zero logits, zero tokens) are inert;
+* positions ``>= n_drafted`` never accept (the match is masked by
+  ``pos < n_drafted``), and the correction index ``min(n_accepted, K)``
+  never exceeds ``n_drafted``, so per-row padding columns beyond a
+  session's real draft length cannot leak into its outputs;
+* ``logp`` lanes at padded positions carry garbage by design — callers
+  slice ``logp[:K_i]``.
 """
 
 from __future__ import annotations
@@ -22,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .._compat import CompilerParams
 
 DEFAULT_BV = 2048
 NEG_INF = -1e30
@@ -94,6 +108,8 @@ def spec_verify_pallas(
 ):
     B, K1, V = target_logits.shape
     K = K1 - 1
+    if K1 > 128:
+        raise ValueError(f"K+1={K1} exceeds the [K1] VMEM scratch budget (max 128)")
     bv = min(block_v, V)
     if V % bv:
         raise ValueError(f"V={V} must be divisible by block_v={bv}")
@@ -123,6 +139,6 @@ def spec_verify_pallas(
             pltpu.VMEM((K1,), jnp.float32),
             pltpu.VMEM((K1,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(target_logits, draft_tokens.astype(jnp.int32), n_drafted.reshape(B, 1).astype(jnp.int32))

@@ -1,11 +1,27 @@
-"""Jit'd wrapper for the fused NAV verify kernel."""
+"""Jit'd wrappers for the fused NAV verify kernel.
+
+``spec_verify`` is the rectangular entry ([B, K+1, V] with per-row
+``n_drafted``).  ``spec_verify_batched`` is the serving entry used by the
+continuous-batching cloud verifier (runtime/server.py): it takes **ragged**
+per-session requests (different draft lengths K_i), pads them into one
+[B', Kmax+1, V] launch, and unpacks per-session results.  Shapes are
+bucketed to powers of two so a serving process compiles a handful of
+variants instead of one per (B, Kmax) pair.
+
+Padded rows/positions are provably inert (see kernel.py "padding
+invariants"): acceptance is masked by ``pos < n_drafted``, the correction
+index never exceeds ``n_drafted``, and padded log-prob lanes are sliced off
+before returning.
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import spec_verify_pallas
 from .ref import spec_verify_ref
@@ -23,3 +39,57 @@ def spec_verify(
     if impl == "ref":
         return spec_verify_ref(target_logits, draft_tokens, n_drafted)
     return spec_verify_pallas(target_logits, draft_tokens, n_drafted, block_v=block_v, interpret=(impl == "interpret"))
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def spec_verify_batched(
+    logits_seq: Sequence,  # B entries of [K_i+1, V] arrays
+    tokens_seq: Sequence,  # B entries of length-K_i int sequences
+    *,
+    impl: str = "ref",
+    block_v: int = 2048,
+    bucket: bool = True,
+) -> List[Tuple[int, int, np.ndarray]]:
+    """Verify B sessions with ragged draft lengths in ONE launch.
+
+    Returns a list of ``(n_accepted, correction_token, logp[K_i])`` in input
+    order.  With ``bucket=True`` the batch and draft dimensions are padded to
+    the next power of two (padding rows carry ``n_drafted = 0`` and are
+    discarded), bounding the number of compiled shapes under serving load.
+    """
+    if len(logits_seq) != len(tokens_seq) or not logits_seq:
+        raise ValueError("need equal, non-empty logits/tokens sequences")
+    ks = [len(t) for t in tokens_seq]
+    for lg, k in zip(logits_seq, ks):
+        if lg.ndim != 2 or lg.shape[0] != k + 1:
+            raise ValueError(f"logits must be [K_i+1, V]; got {lg.shape} for K_i={k}")
+    V = logits_seq[0].shape[-1]
+    if any(lg.shape[-1] != V for lg in logits_seq):
+        raise ValueError("all sessions must share one (padded) vocab size")
+    B, kmax = len(ks), max(max(ks), 1)
+    Bp = _next_pow2(B) if bucket else B
+    Kp = _next_pow2(kmax) if bucket else kmax
+
+    # Pallas needs V % block_v == 0: pad the vocab with -inf lanes (inert —
+    # they never win the argmax, add 0 to the logsumexp, and no draft token
+    # id can address them), keeping the documented VMEM tile budget.
+    bv = min(block_v, _next_pow2(V))
+    Vp = -(-V // bv) * bv
+    logits = np.zeros((Bp, Kp + 1, Vp), np.float32)
+    if Vp > V:
+        logits[:, :, V:] = -1e30  # only the pad lanes need the -inf sweep
+    tokens = np.zeros((Bp, Kp), np.int32)
+    nd = np.zeros((Bp,), np.int32)
+    for i, (lg, tk, k) in enumerate(zip(logits_seq, tokens_seq, ks)):
+        logits[i, : k + 1, :V] = np.asarray(lg, np.float32)
+        tokens[i, :k] = np.asarray(tk, np.int32)
+        nd[i] = k
+
+    na, corr, logp = spec_verify(
+        jnp.asarray(logits), jnp.asarray(tokens), jnp.asarray(nd), impl=impl, block_v=bv
+    )
+    na, corr, logp = np.asarray(na), np.asarray(corr), np.asarray(logp)
+    return [(int(na[i, 0]), int(corr[i, 0]), logp[i, : ks[i]]) for i in range(B)]

@@ -1,9 +1,20 @@
-"""Pure-jnp oracle for fused greedy NAV verification."""
+"""Pure-jnp oracles for fused greedy NAV verification.
+
+``spec_verify_ref`` is the rectangular [B, K+1, V] oracle (also the CPU
+fallback behind ``ops.spec_verify(impl='ref')``).  ``spec_verify_ragged_ref``
+is the unbatched per-session oracle the batched serving path is tested
+against: it loops sessions one at a time with no padding, so any cross-
+session leakage or padding bug in ``ops.spec_verify_batched`` shows up as a
+mismatch.
+"""
 
 from __future__ import annotations
 
+from typing import List, Sequence, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def spec_verify_ref(target_logits: jax.Array, draft_tokens: jax.Array, n_drafted: jax.Array):
@@ -19,3 +30,19 @@ def spec_verify_ref(target_logits: jax.Array, draft_tokens: jax.Array, n_drafted
     logp_all = jax.nn.log_softmax(s, axis=-1)
     logp = jnp.take_along_axis(logp_all[:, :K, :], draft_tokens[..., None], axis=-1)[..., 0]
     return n_acc[:, None], corr, logp
+
+
+def spec_verify_ragged_ref(
+    logits_seq: Sequence,  # B entries of [K_i+1, V]
+    tokens_seq: Sequence,  # B entries of length-K_i ints
+) -> List[Tuple[int, int, np.ndarray]]:
+    """Per-session oracle: one unpadded ``spec_verify_ref`` call per session."""
+    out: List[Tuple[int, int, np.ndarray]] = []
+    for lg, tk in zip(logits_seq, tokens_seq):
+        k = len(tk)
+        toks = jnp.asarray(tk, jnp.int32).reshape(1, k) if k else jnp.zeros((1, 0), jnp.int32)
+        na, corr, lp = spec_verify_ref(
+            jnp.asarray(lg)[None], toks, jnp.asarray([k], jnp.int32)
+        )
+        out.append((int(na[0, 0]), int(corr[0, 0]), np.asarray(lp[0])))
+    return out

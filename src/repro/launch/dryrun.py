@@ -83,6 +83,13 @@ def collective_census(hlo_text: str) -> dict:
     return stats
 
 
+def _as_cost_dict(cost) -> dict:
+    """Older jax returns [dict] from compiled.cost_analysis(), newer a dict."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
 def _replicated(mesh, tree):
     return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
 
@@ -199,7 +206,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path, force: b
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = _as_cost_dict(compiled.cost_analysis())
             hlo = compiled.as_text()
         coll = collective_census(hlo)
         # --- probe compiles: scale scan-body metrics to the real depth ------
@@ -213,7 +220,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path, force: b
             pstep, pargs, pin, pout, pdon, _, _ = build_cell(arch, shape_name, mesh, cfg=pcfg)
             with mesh:
                 pcompiled = jax.jit(pstep, in_shardings=pin, out_shardings=pout, donate_argnums=pdon).lower(*pargs).compile()
-                pcost = pcompiled.cost_analysis()
+                pcost = _as_cost_dict(pcompiled.cost_analysis())
                 pcoll = collective_census(pcompiled.as_text())
             probes[lp] = {
                 "flops": float(pcost.get("flops", 0.0)),
@@ -286,7 +293,7 @@ def main() -> None:
                 if rec.get("ok") and not rec.get("skipped"):
                     extra = (
                         f" per_dev={rec['per_device_bytes']/2**30:.2f}GiB fits={rec['fits_v5e_16g']}"
-                        f" flops={rec["flops_scaled"]:.3e} coll={rec['collective_bytes']/2**20:.1f}MiB"
+                        f" flops={rec['flops_scaled']:.3e} coll={rec['collective_bytes']/2**20:.1f}MiB"
                         f" compile={rec['compile_s']}s"
                     )
                 if not rec["ok"]:

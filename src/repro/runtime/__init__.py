@@ -1,5 +1,5 @@
 from .transport import Channel, ChannelConfig, Message
-from .server import CloudVerifier, VerifyBackend, SyntheticBackend
+from .server import CloudVerifier, VerifyBackend, SyntheticBackend, SpecVerifyBackend
 from .client import EdgeClient, EdgeConfig, SyntheticDraft
 
 __all__ = [
@@ -9,6 +9,7 @@ __all__ = [
     "EdgeClient",
     "EdgeConfig",
     "Message",
+    "SpecVerifyBackend",
     "SyntheticBackend",
     "SyntheticDraft",
     "VerifyBackend",

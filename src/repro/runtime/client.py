@@ -71,6 +71,7 @@ class EdgeClient:
         self.trigger = make_trigger("dual", r1=cfg.r1, r2=cfg.r2, window=cfg.window)
         self.monitor = EnvironmentMonitor()
         self.seq = 0
+        self.round = 0  # NAV round id — keys the server's per-round buffers
         self.stats = {
             "accepted_tokens": 0,
             "drafted_tokens": 0,
@@ -79,6 +80,9 @@ class EdgeClient:
             "fallback_tokens": 0,
             "failovers": 0,
             "wall_time": 0.0,
+            # Per-round NAV round-trip latencies [s, wall clock] — the serving
+            # benchmarks reduce these to p50/p99 (core.pipeline.RunStats).
+            "nav_latencies": [],
         }
 
     # ------------------------------------------------------------- drafting --
@@ -116,7 +120,7 @@ class EdgeClient:
         toks = [t for t, _ in pending]
         cfs = [c for _, c in pending]
         self.seq += 1
-        self.up.send(Message("draft_batch", self.session, self.seq, len(toks), (toks, cfs)))
+        self.up.send(Message("draft_batch", self.session, self.seq, len(toks), (toks, cfs, self.round)))
         self.monitor.observe_batch(len(toks), self.up.cfg.alpha + self.up.cfg.beta * len(toks))
 
     # ---------------------------------------------------------------- runs --
@@ -142,16 +146,34 @@ class EdgeClient:
                 cloud_ok = True  # optimistic; next round will confirm
                 backoff = min(backoff * 2, self.cfg.backoff_max)
                 continue
+            self.round += 1
             tokens, confs = self._draft_round()
             self.seq += 1
-            self.up.send(Message("nav_request", self.session, self.seq, 1, {"n_tokens": len(tokens)}))
+            timeout = self.cfg.nav_timeout * max(self.cfg.time_scale, 0.05)
+            t_req = time.monotonic()
+            # The deadline rides with the request: once it passes, this client
+            # has failed over, so the server drops the work (straggler drop).
+            self.up.send(
+                Message(
+                    "nav_request",
+                    self.session,
+                    self.seq,
+                    1,
+                    {"n_tokens": len(tokens), "deadline": t_req + timeout, "round": self.round},
+                )
+            )
             self.stats["nav_calls"] += 1
-            result = self.dn.recv(timeout=self.cfg.nav_timeout * max(self.cfg.time_scale, 0.05))
+            result = self.dn.recv(timeout=timeout)
+            while result is not None and result.seq != self.seq:
+                # Stale reply from a round we already failed over — discard.
+                rem = t_req + timeout - time.monotonic()
+                result = self.dn.recv(timeout=rem) if rem > 0 else None
             if result is None:  # NAV lost/late → failover to local decode
                 self.stats["failovers"] += 1
                 cloud_ok = False
                 self.trigger.reset()
                 continue
+            self.stats["nav_latencies"].append(time.monotonic() - t_req)
             backoff = self.cfg.backoff_init
             n_acc = result.payload["n_accepted"]
             self.stats["accepted_tokens"] += n_acc + 1  # + correction token

@@ -1,31 +1,52 @@
 """Cloud verifier service (the paper's FastAPI server, §4.2, App. I).
 
-One dispatcher thread serves any number of edge sessions:
+A continuous-batching dispatcher serves any number of edge sessions
+(beyond-paper optimization #5 — the cross-request analogue of the paper's
+§3.2 resource-utilization argument, in the spirit of FlowSpec/DiP-SD):
+
 * buffers draft tokens per session as batches stream in (pipelined upload);
-* on a NAV request (or when a session's buffered proactive tokens satisfy a
-  pending round) runs the verification backend;
-* supports *batched NAV*: requests that arrive within ``batch_window`` are
-  verified in one backend call (beyond-paper optimization #5 — amortizes the
-  target forward across clients);
-* straggler mitigation: requests carry deadlines; the server drops work for
-  sessions that disconnected.
+* a NAV request whose tokens are not all buffered yet is parked on the
+  session and dispatched the moment the remaining proactively-uploaded
+  drafts arrive;
+* requests that arrive within ``batch_window`` of each other coalesce into
+  ONE padded backend call (``verify_batch``), amortizing the target forward
+  across clients — the batched path runs through
+  ``kernels.spec_verify.spec_verify_batched`` when a JAX backend is used;
+* admission control: at most ``max_batch`` requests per backend call, with
+  **fair reinsertion** — when oversubscribed, the least-recently-served
+  sessions go first, so long-draft sessions cannot starve short ones;
+* straggler mitigation: requests carry client deadlines; work whose deadline
+  has already passed (the client has failed over to local decoding) and work
+  for sessions that disconnected is dropped, not verified.
+
+Per-dispatch batch size and queue depth are fed to an
+``EnvironmentMonitor`` (core.monitor) so benchmarks can lift verifier
+occupancy/queue-depth into ``RunStats`` (core.pipeline).
 
 The backend is pluggable: ``SyntheticBackend`` (trace-driven acceptance, used
-by benchmarks) or a real JAX verify_step (examples/cloud_edge_serve.py).
+by benchmarks), or ``SpecVerifyBackend`` running the real fused NAV kernel
+(Pallas on TPU, pure-JAX ``ref`` on CPU).
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.monitor import EnvironmentMonitor
 from .transport import Channel, Message
 
-__all__ = ["VerifyBackend", "SyntheticBackend", "CloudVerifier"]
+__all__ = [
+    "VerifyBackend",
+    "SyntheticBackend",
+    "SpecVerifyBackend",
+    "CloudVerifier",
+]
 
 
 class VerifyBackend:
@@ -34,13 +55,19 @@ class VerifyBackend:
     def verify(self, session: int, tokens: List[int], confs: List[float]):  # pragma: no cover
         raise NotImplementedError
 
-    def verify_batch(self, requests):
+    def verify_batch(self, requests: Sequence[Tuple[int, List[int], List[float]]]):
+        """Verify many sessions in one call; default loops over ``verify``."""
         return [self.verify(s, t, c) for (s, t, c) in requests]
 
 
 @dataclass
 class SyntheticBackend(VerifyBackend):
-    """Acceptance ~ conf^kappa per token (matches core.pipeline.SyntheticSource)."""
+    """Acceptance ~ conf^kappa per token (matches core.pipeline.SyntheticSource).
+
+    ``verify_batch`` models the batched target forward: ONE padded pass whose
+    cost scales with the *longest* draft in the batch, not the sum — this is
+    the amortization the continuous-batching dispatcher exists to exploit.
+    """
 
     kappa: float = 0.8
     seed: int = 0
@@ -51,8 +78,7 @@ class SyntheticBackend(VerifyBackend):
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
 
-    def verify(self, session: int, tokens: List[int], confs: List[float]):
-        time.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
+    def _accept(self, confs: List[float]) -> Tuple[int, int]:
         n_acc = 0
         for c in confs:
             if self._rng.random() < c**self.kappa:
@@ -62,34 +88,116 @@ class SyntheticBackend(VerifyBackend):
         correction = int(self._rng.integers(0, 1 << 16))
         return n_acc, correction
 
+    def verify(self, session: int, tokens: List[int], confs: List[float]):
+        time.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
+        return self._accept(confs)
+
+    def verify_batch(self, requests):
+        if not requests:
+            return []
+        max_len = max(len(t) for (_, t, _) in requests)
+        time.sleep((self.verify_time + self.verify_time_per_token * max_len) * self.time_scale)
+        return [self._accept(c) for (_, _, c) in requests]
+
+
+class SpecVerifyBackend(VerifyBackend):
+    """Real NAV verification through the fused spec_verify kernel.
+
+    ``logits_fn(session, tokens) -> [len(tokens)+1, V]`` produces the target
+    logits for one session (a model forward in a real deployment, a seeded
+    synthetic sampler in tests).  ``verify_batch`` pads the ragged requests
+    and runs them through ``spec_verify_batched`` in ONE launch — Pallas on
+    TPU (``impl='pallas'``), interpret mode or the pure-JAX ``ref`` on CPU.
+    """
+
+    def __init__(self, logits_fn: Callable, impl: str = "ref", block_v: int = 2048):
+        self.logits_fn = logits_fn
+        self.impl = impl
+        self.block_v = block_v
+
+    def verify(self, session: int, tokens: List[int], confs: List[float]):
+        return self.verify_batch([(session, tokens, confs)])[0]
+
+    def verify_batch(self, requests):
+        if not requests:
+            return []
+        from repro.kernels.spec_verify import spec_verify_batched
+
+        logits = [self.logits_fn(s, t) for (s, t, _) in requests]
+        tokens = [t for (_, t, _) in requests]
+        out = spec_verify_batched(logits, tokens, impl=self.impl, block_v=self.block_v)
+        return [(int(n_acc), int(corr)) for (n_acc, corr, _) in out]
+
+
+@dataclass
+class _VerifyRequest:
+    session: int
+    tokens: List[int]
+    confs: List[float]
+    msg: Message
+    t_enqueue: float
+    deadline: Optional[float]  # absolute monotonic; None = never drop
+
 
 @dataclass
 class _Session:
-    tokens: List[int] = field(default_factory=list)
-    confs: List[float] = field(default_factory=list)
+    # Draft buffers keyed by the client's round id. Per-round keying makes
+    # message loss recoverable: a round whose drafts were partially dropped
+    # parks and is eventually abandoned WITHOUT consuming the next round's
+    # tokens, so one lost draft_batch cannot desync the whole session.
+    # Round-less (legacy) messages all land in round 0 and behave like a
+    # single shared buffer.
+    buffers: Dict[int, Tuple[List[int], List[float]]] = field(default_factory=dict)
+    # NAV round that arrived before its proactively-uploaded drafts did.
     pending_request: Optional[Message] = None
     last_seen: float = field(default_factory=time.monotonic)
+    served: int = 0  # rounds verified — fairness key for admission
+
+    def buf(self, rnd: int) -> Tuple[List[int], List[float]]:
+        return self.buffers.setdefault(rnd, ([], []))
 
 
 class CloudVerifier:
-    """Dispatcher thread over (uplink, downlink) channel pairs per session."""
+    """Continuous-batching dispatcher over (uplink, downlink) pairs per session."""
 
     def __init__(
         self,
         backend: VerifyBackend,
-        batch_window: float = 0.0,  # >0 → batch concurrent NAV requests
+        batch_window: float = 0.0,  # >0 → coalesce concurrent NAV requests
         session_timeout: float = 30.0,
+        max_batch: Optional[int] = None,
+        drop_expired: bool = True,
+        monitor_window: int = 1_000_000,
     ):
         self.backend = backend
         self.batch_window = batch_window
         self.session_timeout = session_timeout
+        # Default: batching only when a coalescing window was requested.
+        # batch_window == 0 keeps strict per-session serving (one request per
+        # backend call, summed costs) so baselines measure what they claim.
+        if max_batch is None:
+            max_batch = 32 if batch_window > 0 else 1
+        self.max_batch = max(int(max_batch), 1)
+        self.drop_expired = drop_expired
         self.links: Dict[int, tuple] = {}  # session -> (uplink, downlink)
         self.sessions: Dict[int, _Session] = {}
-        self.stats = {"nav_calls": 0, "tokens_verified": 0, "batched_calls": 0}
+        self.stats = {
+            "nav_calls": 0,
+            "tokens_verified": 0,
+            "batched_calls": 0,
+            "dropped_stragglers": 0,
+            "dropped_dead_sessions": 0,
+            "max_queue_depth": 0,
+        }
+        # The monitor here is an accumulator for the whole serving run, not
+        # the paper's 100-observation estimator — size the window accordingly
+        # so benchmark occupancy/queue series are not tail-truncated.
+        self.monitor = EnvironmentMonitor(window=monitor_window)
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._lock = threading.Lock()
-        self._ready: List[tuple] = []  # (session, tokens, confs, request msg)
+        self._work = threading.Condition(self._lock)
+        self._queue: Deque[_VerifyRequest] = deque()
 
     def attach(self, session: int, uplink: Channel, downlink: Channel) -> None:
         with self._lock:
@@ -106,10 +214,56 @@ class CloudVerifier:
 
     def stop(self) -> None:
         self._stop.set()
+        with self._work:
+            self._work.notify_all()
         for s, (up, dn) in self.links.items():
             up.close()
+        for t in self._threads:  # drain in-flight dispatch before reporting
+            t.join(timeout=5.0)
+
+    def load_summary(self) -> dict:
+        """Occupancy/queue-depth view for benchmarks (→ RunStats)."""
+        return dict(
+            batch_occupancy=self.monitor.verifier_occupancy() or 0.0,
+            mean_queue_depth=self.monitor.verifier_queue_depth() or 0.0,
+            verifier_batches=list(self.monitor.verifier_batches()),
+            verifier_queue_depths=list(self.monitor.verifier_depths()),
+            # Results delivered but not yet consumed by edge clients.
+            dn_backlog=sum(dn.qsize() for (_, dn) in self.links.values()),
+            **self.stats,
+        )
 
     # ------------------------------------------------------------ receive --
+    @staticmethod
+    def _round_of(payload) -> int:
+        if isinstance(payload, dict):
+            return int(payload.get("round", 0))
+        return int(payload[2]) if len(payload) > 2 else 0
+
+    def _enqueue_round(self, session: int, sess: _Session, msg: Message) -> None:
+        """Pop the round's tokens off its buffer and queue the request.
+
+        Caller holds ``self._lock``.
+        """
+        n = msg.payload["n_tokens"]
+        rnd = self._round_of(msg.payload)
+        toks, confs = sess.buf(rnd)
+        take_t, take_c = toks[:n], confs[:n]
+        sess.buffers[rnd] = (toks[n:], confs[n:])
+        if not sess.buffers[rnd][0]:
+            del sess.buffers[rnd]
+        self._queue.append(
+            _VerifyRequest(
+                session,
+                take_t,
+                take_c,
+                msg,
+                time.monotonic(),
+                msg.payload.get("deadline") if isinstance(msg.payload, dict) else None,
+            )
+        )
+        self._work.notify_all()
+
     def _rx_loop(self, session: int) -> None:
         up, dn = self.links[session]
         while not self._stop.is_set():
@@ -119,45 +273,116 @@ class CloudVerifier:
             sess = self.sessions[session]
             sess.last_seen = time.monotonic()
             if msg.kind == "draft_batch":
-                tokens, confs = msg.payload
-                sess.tokens.extend(tokens)
-                sess.confs.extend(confs)
-            elif msg.kind == "nav_request":
+                tokens, confs = msg.payload[0], msg.payload[1]
+                rnd = self._round_of(msg.payload)
                 with self._lock:
-                    n = msg.payload["n_tokens"]
-                    take_t, take_c = sess.tokens[:n], sess.confs[:n]
-                    sess.tokens, sess.confs = sess.tokens[n:], sess.confs[n:]
-                    self._ready.append((session, take_t, take_c, msg))
+                    toks, cfs = sess.buf(rnd)
+                    toks.extend(tokens)
+                    cfs.extend(confs)
+                    # A parked NAV round becomes dispatchable the moment its
+                    # proactively-uploaded drafts complete the buffer.
+                    pend = sess.pending_request
+                    if (
+                        pend is not None
+                        and self._round_of(pend.payload) == rnd
+                        and len(toks) >= pend.payload["n_tokens"]
+                    ):
+                        sess.pending_request = None
+                        self._enqueue_round(session, sess, pend)
+            elif msg.kind == "nav_request":
+                rnd = self._round_of(msg.payload)
+                with self._lock:
+                    # Abandoned earlier rounds (failover on the client) can
+                    # never be requested again — drop their buffers, and any
+                    # still-parked older request, without touching this round.
+                    for stale in [r for r in sess.buffers if r < rnd]:
+                        del sess.buffers[stale]
+                    if sess.pending_request is not None and self._round_of(sess.pending_request.payload) < rnd:
+                        sess.pending_request = None
+                    if len(sess.buf(rnd)[0]) >= msg.payload["n_tokens"]:
+                        self._enqueue_round(session, sess, msg)
+                    else:
+                        sess.pending_request = msg
             elif msg.kind == "reset":
-                sess.tokens.clear()
-                sess.confs.clear()
+                with self._lock:
+                    sess.buffers.clear()
+                    sess.pending_request = None
 
     # ----------------------------------------------------------- dispatch --
+    def _admit(self) -> Tuple[List[_VerifyRequest], int]:
+        """Admission control under ``self._lock``: drop dead work, pick fairly.
+
+        Returns (admitted batch, queue depth at admission time).  Requests
+        beyond ``max_batch`` are *reinserted* at the head in arrival order,
+        so nothing is lost — but admission order is (served-rounds, arrival),
+        which keeps chatty long-draft sessions from starving short ones.
+        """
+        now = time.monotonic()
+        live: List[_VerifyRequest] = []
+        for req in self._drain_queue():
+            if self.drop_expired and req.deadline is not None and now > req.deadline:
+                self.stats["dropped_stragglers"] += 1  # client already failed over
+                continue
+            sess = self.sessions.get(req.session)
+            if sess is None or now - sess.last_seen > self.session_timeout:
+                self.stats["dropped_dead_sessions"] += 1
+                continue
+            live.append(req)
+        depth = len(live)
+        self.stats["max_queue_depth"] = max(self.stats["max_queue_depth"], depth)
+        if depth <= self.max_batch:
+            return live, depth
+        order = sorted(
+            range(depth),
+            key=lambda i: (self.sessions[live[i].session].served, live[i].t_enqueue),
+        )
+        take = set(order[: self.max_batch])
+        admitted = [live[i] for i in sorted(take)]
+        for req in reversed([live[i] for i in range(depth) if i not in take]):
+            self._queue.appendleft(req)  # fair reinsertion, arrival order kept
+        return admitted, depth
+
+    def _drain_queue(self) -> List[_VerifyRequest]:
+        drained = list(self._queue)
+        self._queue.clear()
+        return drained
+
     def _dispatch_loop(self) -> None:
         while not self._stop.is_set():
-            with self._lock:
-                batch, self._ready = self._ready, []
-            if not batch:
-                time.sleep(0.002)
-                continue
+            with self._work:
+                while not self._queue and not self._stop.is_set():
+                    self._work.wait(timeout=0.25)
+                if self._stop.is_set():
+                    return
             if self.batch_window > 0:
-                time.sleep(self.batch_window)  # absorb concurrent arrivals
                 with self._lock:
-                    batch += self._ready
-                    self._ready = []
-            reqs = [(s, t, c) for (s, t, c, _) in batch]
+                    full = len(self._queue) >= self.max_batch
+                if not full:  # a full batch needs no coalescing delay
+                    time.sleep(self.batch_window)  # absorb concurrent arrivals
+            with self._lock:
+                batch, depth = self._admit()
+            if not batch:
+                continue
+            reqs = [(r.session, r.tokens, r.confs) for r in batch]
             results = self.backend.verify_batch(reqs)
             self.stats["nav_calls"] += len(batch)
             self.stats["batched_calls"] += 1
-            for (session, tokens, confs, msg), (n_acc, corr) in zip(batch, results):
-                self.stats["tokens_verified"] += len(tokens)
-                _, dn = self.links[session]
+            self.monitor.observe_verifier_batch(len(batch), depth)
+            for req, (n_acc, corr) in zip(batch, results):
+                self.stats["tokens_verified"] += len(req.tokens)
+                sess = self.sessions.get(req.session)
+                if sess is not None:
+                    sess.served += 1
+                link = self.links.get(req.session)
+                if link is None:
+                    continue
+                _, dn = link
                 dn.send(
                     Message(
                         "nav_result",
-                        session,
-                        msg.seq,
+                        req.session,
+                        req.msg.seq,
                         max(n_acc, 1),
-                        {"n_accepted": n_acc, "correction": corr, "n_drafted": len(tokens)},
+                        {"n_accepted": n_acc, "correction": corr, "n_drafted": len(req.tokens)},
                     )
                 )

@@ -100,6 +100,11 @@ class Channel:
                     wait = rem if wait is None else min(wait, rem)
                 self._cv.wait(timeout=wait if wait is None or wait > 0 else 0.001)
 
+    def qsize(self) -> int:
+        """Messages in flight or awaiting pickup (for load/occupancy stats)."""
+        with self._cv:
+            return len(self._heap)
+
     def close(self) -> None:
         with self._cv:
             self._closed = True

@@ -44,7 +44,10 @@ class Partitioner:
 
     def __init__(self, mesh: Mesh):
         self.mesh = mesh
-        self.dp = data_axes(mesh)
+        dp = data_axes(mesh)
+        # Unwrap singleton so specs read P('data'), not P(('data',)) — older
+        # jax PartitionSpec equality does not normalize the two forms.
+        self.dp = dp[0] if len(dp) == 1 else dp
         self.fallbacks: List[str] = []  # audit log of replicated dims
 
     # ------------------------------------------------------------- helpers --

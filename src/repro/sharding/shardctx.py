@@ -17,7 +17,22 @@ from jax.sharding import PartitionSpec as P
 
 Axis = Union[str, Tuple[str, ...], None]
 
-__all__ = ["constrain", "ambient_mesh", "axis_size"]
+__all__ = ["constrain", "ambient_mesh", "axis_size", "abstract_mesh"]
+
+
+def abstract_mesh(sizes: Sequence[int], names: Sequence[str]):
+    """Version-tolerant ``jax.sharding.AbstractMesh`` constructor.
+
+    Newer jax takes ``AbstractMesh(sizes, names)``; 0.4.x takes one
+    ``((name, size), ...)`` shape tuple.  Tests and tools build abstract
+    meshes through this helper so either toolchain works.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
 
 
 def ambient_mesh():

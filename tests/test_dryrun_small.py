@@ -23,7 +23,7 @@ SCRIPT = textwrap.dedent(
     from repro.models import zoo
     from repro.optim import adamw
     from repro.sharding.partition import Partitioner
-    from repro.launch.dryrun import collective_census
+    from repro.launch.dryrun import collective_census, _as_cost_dict
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     cfg = get_config("granite-3-2b", reduced=True)
@@ -41,7 +41,7 @@ SCRIPT = textwrap.dedent(
     step = build_train_step(cfg, opt)
     with mesh:
         compiled = jax.jit(step, in_shardings=(state_sh, batch_sh), out_shardings=(state_sh, None)).lower(state_spec, batch).compile()
-        cost = compiled.cost_analysis()
+        cost = _as_cost_dict(compiled.cost_analysis())
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()
     coll = collective_census(hlo)

@@ -1,4 +1,5 @@
-"""Threaded cloud-edge runtime: e2e sessions, multi-client, failover, hedging."""
+"""Threaded cloud-edge runtime: e2e sessions, multi-client, failover, hedging,
+continuous-batched NAV (coalescing, session isolation, straggler drop)."""
 
 import threading
 import time
@@ -12,9 +13,36 @@ from repro.runtime import (
     EdgeClient,
     EdgeConfig,
     SyntheticBackend,
+    VerifyBackend,
 )
+from repro.runtime.transport import Message
 
 TS = 0.01  # run the timing model 100× faster than real time
+
+
+class EchoBackend(VerifyBackend):
+    """Deterministic: accepts everything, correction = hash(session, tokens).
+
+    Lets tests check that a *batched* verify returns each session exactly the
+    result its own tokens imply — any cross-session mixup changes the hash.
+    """
+
+    @staticmethod
+    def fingerprint(session, tokens):
+        h = session + 1
+        for t in tokens:
+            h = (h * 1000003 + int(t)) % 65536
+        return h
+
+    def verify(self, session, tokens, confs):
+        return len(tokens), self.fingerprint(session, tokens)
+
+
+def _fast_pair(server, sid):
+    up = Channel(ChannelConfig(alpha=1e-4, beta=1e-5))
+    dn = Channel(ChannelConfig(alpha=1e-4, beta=1e-5))
+    server.attach(sid, up, dn)
+    return up, dn
 
 
 def _mk_client(server, sid, ts=TS, outage=None, nav_timeout=3.0):
@@ -60,6 +88,124 @@ def test_failover_to_local_decode_and_recovery():
     assert stats["failovers"] >= 1
     assert stats["fallback_tokens"] > 0  # offline progress was made
     assert stats["accepted_tokens"] >= 50
+
+
+def test_batched_nav_coalesces_and_isolates_sessions():
+    """Concurrent NAV rounds coalesce into one backend call within
+    batch_window, and each session gets exactly its own result back."""
+    server = CloudVerifier(EchoBackend(), batch_window=0.08)
+    links = {sid: _fast_pair(server, sid) for sid in range(3)}
+    server.start()
+    sent = {}
+    for sid, (up, dn) in links.items():
+        toks = [100 * sid + j for j in range(sid + 2)]  # ragged lengths 2,3,4
+        up.send(Message("draft_batch", sid, 1, len(toks), (toks, [0.9] * len(toks))))
+        up.send(Message("nav_request", sid, 2, 1, {"n_tokens": len(toks)}))
+        sent[sid] = toks
+    results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
+    server.stop()
+    for sid, msg in results.items():
+        assert msg is not None and msg.kind == "nav_result"
+        assert msg.payload["n_drafted"] == len(sent[sid])
+        assert msg.payload["n_accepted"] == len(sent[sid])
+        # No cross-session token leakage: correction is this session's hash.
+        assert msg.payload["correction"] == EchoBackend.fingerprint(sid, sent[sid])
+    assert server.stats["nav_calls"] == 3
+    assert server.stats["batched_calls"] < 3  # coalesced
+    assert server.monitor.verifier_occupancy() > 1.0
+
+
+def test_pending_nav_waits_for_proactive_drafts():
+    """A NAV round that outruns its pipelined uploads parks until the
+    remaining drafts arrive, then dispatches."""
+    server = CloudVerifier(EchoBackend())
+    up, dn = _fast_pair(server, 7)
+    server.start()
+    up.send(Message("draft_batch", 7, 1, 2, ([1, 2], [0.9, 0.9])))
+    up.send(Message("nav_request", 7, 2, 1, {"n_tokens": 4}))
+    assert dn.recv(timeout=0.3) is None  # only 2 of 4 tokens buffered
+    up.send(Message("draft_batch", 7, 3, 2, ([3, 4], [0.9, 0.9])))
+    msg = dn.recv(timeout=5.0)
+    server.stop()
+    assert msg is not None
+    assert msg.payload["n_drafted"] == 4
+    assert msg.payload["correction"] == EchoBackend.fingerprint(7, [1, 2, 3, 4])
+
+
+def test_lost_draft_batch_does_not_desync_next_round():
+    """A round with a dropped draft_batch parks forever, but per-round
+    buffering means the NEXT round still verifies its own tokens cleanly."""
+    server = CloudVerifier(EchoBackend())
+    up, dn = _fast_pair(server, 3)
+    server.start()
+    # Round 1: client drafted 4 tokens but one draft_batch (2 of them) was
+    # lost in transit — only [1, 2] arrive, so nav round 1 parks.
+    up.send(Message("draft_batch", 3, 1, 2, ([1, 2], [0.9, 0.9], 1)))
+    up.send(Message("nav_request", 3, 2, 1, {"n_tokens": 4, "round": 1}))
+    assert dn.recv(timeout=0.3) is None
+    # Client failed over; its reset was ALSO lost. Round 2 proceeds anyway.
+    up.send(Message("draft_batch", 3, 3, 3, ([7, 8, 9], [0.9] * 3, 2)))
+    up.send(Message("nav_request", 3, 4, 1, {"n_tokens": 3, "round": 2}))
+    msg = dn.recv(timeout=5.0)
+    server.stop()
+    assert msg is not None and msg.seq == 4
+    assert msg.payload["n_drafted"] == 3
+    # Round 2 verified exactly its own tokens — round 1's leftovers untouched.
+    assert msg.payload["correction"] == EchoBackend.fingerprint(3, [7, 8, 9])
+
+
+def test_straggler_requests_are_dropped():
+    """Work whose client deadline already passed is dropped, not verified."""
+    server = CloudVerifier(EchoBackend(), batch_window=0.02)
+    up, dn = _fast_pair(server, 0)
+    server.start()
+    up.send(Message("draft_batch", 0, 1, 2, ([5, 6], [0.9, 0.9])))
+    up.send(
+        Message(
+            "nav_request", 0, 2, 1,
+            {"n_tokens": 2, "deadline": time.monotonic() - 1.0},  # already expired
+        )
+    )
+    assert dn.recv(timeout=0.5) is None  # no reply — client has failed over
+    server.stop()
+    assert server.stats["dropped_stragglers"] == 1
+    assert server.stats["nav_calls"] == 0
+
+
+def test_admission_cap_with_fair_reinsertion():
+    """Oversubscribed dispatch admits max_batch and reinserts the rest."""
+    server = CloudVerifier(EchoBackend(), batch_window=0.08, max_batch=2)
+    links = {sid: _fast_pair(server, sid) for sid in range(4)}
+    for sid, (up, dn) in links.items():
+        up.send(Message("draft_batch", sid, 1, 1, ([sid], [0.9])))
+        up.send(Message("nav_request", sid, 2, 1, {"n_tokens": 1}))
+    time.sleep(0.3)  # let all four requests queue before dispatch starts
+    server.start()
+    results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
+    server.stop()
+    assert all(m is not None for m in results.values())  # nothing lost
+    assert all(
+        m.payload["correction"] == EchoBackend.fingerprint(sid, [sid])
+        for sid, m in results.items()
+    )
+    assert max(server.monitor.verifier_batches()) <= 2  # cap respected
+    assert server.stats["nav_calls"] == 4
+
+
+def test_fleet_bench_smoke():
+    """Fleet benchmark end-to-end: occupancy > 1 under concurrent sessions."""
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).parent.parent))
+    from benchmarks.fleet_bench import run_fleet
+
+    rep = run_fleet(n_sessions=4, mode="batched", tokens_per_session=25, ts=0.005)
+    st = rep["stats"]
+    assert len(rep["per_session_tpt"]) == 4
+    assert st.verifier_batch_occupancy > 1.0
+    p50, p99 = st.nav_latency_quantiles()
+    assert 0 < p50 <= p99
 
 
 def test_channel_serializes_batches():

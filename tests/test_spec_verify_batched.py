@@ -1,0 +1,116 @@
+"""Batched ragged NAV verification: parity with the per-session path.
+
+The continuous-batching server pads B ragged sessions into one launch
+(``spec_verify_batched``); these tests pin down that the padded batched
+results are identical to verifying each session alone — i.e. padding rows
+and padded positions are inert and nothing leaks across sessions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.spec_verify import (
+    spec_verify,
+    spec_verify_batched,
+    spec_verify_ragged_ref,
+)
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _ragged_requests(ks, V, seed=0):
+    """Per-session logits [K_i+1, V] + drafts with a mix of greedy/random."""
+    logits_seq, tokens_seq = [], []
+    for i, k in enumerate(ks):
+        keys = jax.random.split(jax.random.fold_in(KEY, seed * 101 + i), 3)
+        lg = jax.random.normal(keys[0], (k + 1, V)) * 3
+        greedy = jnp.argmax(lg, -1)[:k]
+        rnd = jax.random.randint(keys[1], (k,), 0, V)
+        mix = jax.random.bernoulli(keys[2], 0.7, (k,))
+        tokens_seq.append(np.asarray(jnp.where(mix, greedy, rnd), np.int32))
+        logits_seq.append(np.asarray(lg, np.float32))
+    return logits_seq, tokens_seq
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("ks", [[3], [5, 2], [1, 8, 4, 6, 2]])
+def test_batched_matches_per_session(impl, ks):
+    V = 2048
+    logits_seq, tokens_seq = _ragged_requests(ks, V)
+    batched = spec_verify_batched(logits_seq, tokens_seq, impl=impl, block_v=1024)
+    # Oracle 1: per-session ragged ref (no padding at all).
+    oracle = spec_verify_ragged_ref(logits_seq, tokens_seq)
+    # Oracle 2: one unbatched spec_verify call per session through `impl`.
+    for i, (lg, tk, k) in enumerate(zip(logits_seq, tokens_seq, ks)):
+        na1, corr1, lp1 = batched[i]
+        na2, corr2, lp2 = oracle[i]
+        assert (na1, corr1) == (na2, corr2), f"session {i}"
+        np.testing.assert_allclose(lp1, lp2, atol=1e-4)
+        na3, corr3, lp3 = spec_verify(
+            jnp.asarray(lg)[None],
+            jnp.asarray(tk)[None],
+            jnp.asarray([k], jnp.int32),
+            impl=impl,
+            block_v=1024,
+        )
+        assert na1 == int(na3[0, 0]) and corr1 == int(corr3[0, 0]), f"session {i}"
+        np.testing.assert_allclose(lp1, np.asarray(lp3)[0, :k], atol=1e-4)
+
+
+def test_batched_ref_is_bit_identical_across_batch_shapes():
+    """Padding rows must not perturb a session's outputs at all (ref path)."""
+    V = 1024
+    logits_seq, tokens_seq = _ragged_requests([4, 7, 2], V, seed=3)
+    alone = [
+        spec_verify_batched([lg], [tk], impl="ref")[0]
+        for lg, tk in zip(logits_seq, tokens_seq)
+    ]
+    together = spec_verify_batched(logits_seq, tokens_seq, impl="ref")
+    for (na1, c1, lp1), (na2, c2, lp2) in zip(alone, together):
+        assert (na1, c1) == (na2, c2)
+        np.testing.assert_array_equal(lp1, lp2)  # bit-identical
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_batched_pads_non_divisible_vocab(impl):
+    """V not divisible by block_v: padded -inf lanes must be inert."""
+    V = 1500  # not a multiple of any pow2 block
+    logits_seq, tokens_seq = _ragged_requests([4, 2], V, seed=5)
+    batched = spec_verify_batched(logits_seq, tokens_seq, impl=impl, block_v=1024)
+    oracle = spec_verify_ragged_ref(logits_seq, tokens_seq)
+    for i, ((na1, c1, lp1), (na2, c2, lp2)) in enumerate(zip(batched, oracle)):
+        assert (na1, c1) == (na2, c2), f"session {i}"
+        np.testing.assert_allclose(lp1, lp2, atol=1e-4)
+
+
+def test_batched_rejects_bad_inputs():
+    lg = np.zeros((4, 64), np.float32)
+    with pytest.raises(ValueError):
+        spec_verify_batched([], [])
+    with pytest.raises(ValueError):
+        spec_verify_batched([lg], [[1, 2]])  # K_i mismatch: 3+1 rows needed
+    with pytest.raises(ValueError):
+        spec_verify_batched([lg, np.zeros((4, 128), np.float32)], [[1, 2, 3], [1, 2, 3]])
+
+
+def test_spec_verify_backend_no_cross_session_leakage():
+    """The server's kernel-backed backend: batched call == per-session calls."""
+    from repro.runtime import SpecVerifyBackend
+
+    V = 512
+
+    def logits_fn(session, tokens):
+        rng = np.random.default_rng(1000 + session)
+        return rng.standard_normal((len(tokens) + 1, V)).astype(np.float32) * 2
+
+    backend = SpecVerifyBackend(logits_fn, impl="ref")
+    reqs = [
+        (0, [3, 99, 7], [0.9] * 3),
+        (1, [5], [0.9]),
+        (2, [1, 2, 3, 4, 5, 6], [0.9] * 6),
+    ]
+    batched = backend.verify_batch(reqs)
+    solo = [backend.verify(s, t, c) for (s, t, c) in reqs]
+    assert batched == solo

@@ -10,9 +10,18 @@ serving modes:
   ``batch_window`` share ONE padded verify whose cost scales with the
   longest draft, not the sum (beyond-paper optimization #5).
 
-Reported per (scenario, mode): per-session TPT (mean/worst), verifier batch
-occupancy, mean queue depth, and p50/p99 NAV round-trip latency — all
-de-scaled to simulated seconds and funneled through ``core.pipeline.RunStats``.
+and two speculation variants:
+
+* ``chain`` — linear drafts (the PipeSD default);
+* ``tree``  — top-k branching draft trees verified by batched tree-NAV; the
+  hedge across siblings raises accepted-tokens-per-NAV exactly where chains
+  stall (hard/low-confidence token streams), at the price of more verified
+  nodes per call.
+
+Reported per (scenario, mode, variant): per-session TPT (mean/worst),
+accepted-tokens-per-NAV, verifier batch occupancy, mean queue depth, and
+p50/p99 NAV round-trip latency — all de-scaled to simulated seconds and
+funneled through ``core.pipeline.RunStats``.
 
     PYTHONPATH=src python -m benchmarks.fleet_bench            # quick compare
     PYTHONPATH=src python benchmarks/fleet_bench.py            # same
@@ -43,10 +52,12 @@ from repro.runtime import (
     EdgeClient,
     EdgeConfig,
     SyntheticBackend,
+    SyntheticDraft,
 )
 
 TS = 0.01  # run the timing model 100× faster than real time
 MODES = ("per_session", "batched")
+VARIANTS = ("chain", "tree")
 
 
 def run_fleet(
@@ -57,15 +68,25 @@ def run_fleet(
     arrival_rate: float = 2.0,  # Poisson session arrivals [1/simulated-s]
     seed: int = 0,
     ts: float = TS,
+    variant: str = "chain",
+    p_hard: float = 0.15,
 ) -> dict:
     """Serve ``n_sessions`` Poisson-arriving edge clients; returns a report.
 
     The report carries a ``RunStats`` with the fleet's NAV latencies and the
     verifier's batch/queue series, plus per-session TPT (simulated seconds
-    per accepted token, §5.1 Metrics).
+    per accepted token, §5.1 Metrics).  ``variant='tree'`` switches every
+    client to tree drafting (width 2, node budget 16 vs the chain's window
+    8 — same max depth, so the tree spends extra nodes on sibling hedges).
+    ``p_hard`` sets the fleet's share of hard tokens; the default matches
+    the historical chain baseline (so batched-vs-per_session rows stay
+    comparable across commits), while ``compare_tree`` raises it into the
+    low-acceptance regime where hedging pays.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}")
     edge, channel = scenario(scen)
     # Fleet tier: faster drafts + short windows. The verifier becomes the
     # contended resource (the regime §3.2's utilization argument targets):
@@ -84,10 +105,14 @@ def run_fleet(
         up = Channel(ChannelConfig(alpha=channel.alpha_up, beta=channel.beta_up, time_scale=ts))
         dn = Channel(ChannelConfig(alpha=channel.alpha_dn, beta=channel.beta_dn, time_scale=ts))
         server.attach(sid, up, dn)
-        clients.append(
-            EdgeClient(
-                sid, up, dn, EdgeConfig(time_scale=ts, gamma=gamma, window=8, nav_timeout=8.0)
+        cfg = EdgeConfig(time_scale=ts, gamma=gamma, window=8, nav_timeout=8.0)
+        if variant == "tree":
+            cfg = EdgeConfig(
+                time_scale=ts, gamma=gamma, window=16, nav_timeout=8.0,
+                variant="tree", tree_width=2, tree_depth=8,
             )
+        clients.append(
+            EdgeClient(sid, up, dn, cfg, draft=SyntheticDraft(seed=sid, p_hard=p_hard))
         )
     server.start()
     results: Dict[int, dict] = {}
@@ -121,6 +146,7 @@ def run_fleet(
     }
     return dict(
         mode=mode,
+        variant=variant,
         scenario=scen,
         n_sessions=n_sessions,
         stats=stats,
@@ -135,43 +161,78 @@ def _report_lines(rep: dict) -> List[str]:
     p50, p99 = st.nav_latency_quantiles()
     tpts = list(rep["per_session_tpt"].values())
     return [
-        f"  mode={rep['mode']:<12} sessions={rep['n_sessions']}"
+        f"  mode={rep['mode']:<12} variant={rep['variant']:<6} sessions={rep['n_sessions']}"
         f" occupancy={st.verifier_batch_occupancy:.2f}"
         f" queue_depth={st.mean_queue_depth:.2f}",
         f"    per-session TPT mean={np.mean(tpts)*1e3:.1f}ms worst={np.max(tpts)*1e3:.1f}ms"
+        f" | tokens/NAV={st.tokens_per_nav:.2f}"
         f" | NAV latency p50={p50*1e3:.1f}ms p99={p99*1e3:.1f}ms"
         f" | backend calls={rep['server']['batched_calls']}"
         f" nav={st.nav_calls} failovers={rep['failovers']}",
     ]
 
 
+def compare_tree(
+    scenarios=(1, 2, 3, 4), n_sessions: int = 8, mode: str = "batched", p_hard: float = 0.35
+) -> dict:
+    """Chain-vs-tree accepted-tokens-per-NAV across the paper's scenarios.
+
+    Returns {scenario: {variant: report}}; both variants see the SAME hard
+    confidence stream (``p_hard``) — the regime where sibling hedges rescue
+    rounds a chain would end at the first rejection, so the tree variant
+    should win tokens/NAV.
+    """
+    out: Dict[int, dict] = {}
+    for scen in scenarios:
+        out[scen] = {
+            v: run_fleet(n_sessions=n_sessions, mode=mode, scen=scen, variant=v, p_hard=p_hard)
+            for v in VARIANTS
+        }
+    return out
+
+
+def _row(rep: dict, **extra) -> Tuple[dict, str]:
+    st: RunStats = rep["stats"]
+    p50, p99 = st.nav_latency_quantiles()
+    tpts = list(rep["per_session_tpt"].values())
+    row = dict(
+        scenario=rep["scenario"],
+        mode=rep["mode"],
+        variant=rep["variant"],
+        occupancy=st.verifier_batch_occupancy,
+        tpt_ms=float(np.mean(tpts)) * 1e3,
+        tokens_per_nav=st.tokens_per_nav,
+        nav_p50_ms=p50 * 1e3,
+        nav_p99_ms=p99 * 1e3,
+        **extra,
+    )
+    derived = (
+        f"occupancy={st.verifier_batch_occupancy:.2f};queue={st.mean_queue_depth:.2f};"
+        f"tokens_per_nav={st.tokens_per_nav:.2f};"
+        f"nav_p50={p50*1e3:.1f}ms;nav_p99={p99*1e3:.1f}ms;failovers={rep['failovers']}"
+    )
+    return row, derived
+
+
 def fleet(scenarios=(1, 2, 3, 4), n_sessions: int = 8) -> Tuple[list, List[str]]:
-    """Harness entry (benchmarks.run): CSV rows per (scenario, mode)."""
+    """Harness entry (benchmarks.run): CSV rows per scenario.
+
+    Two row families: the historical batched-vs-per_session chain rows
+    (``fleet/scenN/{mode}``, unchanged stream statistics so they stay
+    comparable across commits) and the chain-vs-tree speculation comparison
+    on a hard stream (``fleet/scenN/cmp/{variant}``).
+    """
     rows, lines = [], []
     for scen in scenarios:
         for mode in MODES:
             rep = run_fleet(n_sessions=n_sessions, mode=mode, scen=scen)
-            st: RunStats = rep["stats"]
-            p50, p99 = st.nav_latency_quantiles()
-            tpts = list(rep["per_session_tpt"].values())
-            rows.append(
-                dict(
-                    scenario=scen,
-                    mode=mode,
-                    occupancy=st.verifier_batch_occupancy,
-                    tpt_ms=float(np.mean(tpts)) * 1e3,
-                    nav_p50_ms=p50 * 1e3,
-                    nav_p99_ms=p99 * 1e3,
-                )
-            )
-            lines.append(
-                csv_row(
-                    f"fleet/scen{scen}/{mode}",
-                    float(np.mean(tpts)) * 1e6,
-                    f"occupancy={st.verifier_batch_occupancy:.2f};queue={st.mean_queue_depth:.2f};"
-                    f"nav_p50={p50*1e3:.1f}ms;nav_p99={p99*1e3:.1f}ms;failovers={rep['failovers']}",
-                )
-            )
+            row, derived = _row(rep)
+            rows.append(row)
+            lines.append(csv_row(f"fleet/scen{scen}/{mode}", row["tpt_ms"] * 1e3, derived))
+        for variant, rep in compare_tree(scenarios=(scen,), n_sessions=n_sessions)[scen].items():
+            row, derived = _row(rep, p_hard=0.35)
+            rows.append(row)
+            lines.append(csv_row(f"fleet/scen{scen}/cmp/{variant}", row["tpt_ms"] * 1e3, derived))
     return rows, lines
 
 
@@ -192,6 +253,14 @@ def main() -> None:
         f"batched verifier occupancy {occ:.2f} (>1 amortizes the target forward);"
         f" p99 NAV {p99_solo*1e3:.1f}ms -> {p99_batch*1e3:.1f}ms"
     )
+    print(f"=== chain vs tree speculation, {n} sessions, batched serving ===")
+    for scen, reps in compare_tree(n_sessions=n).items():
+        for variant in VARIANTS:
+            for line in _report_lines(reps[variant]):
+                print(f"scen{scen}{line}")
+        tc = reps["chain"]["stats"].tokens_per_nav
+        tt = reps["tree"]["stats"].tokens_per_nav
+        print(f"scen{scen}: tokens/NAV chain={tc:.2f} tree={tt:.2f} ({'tree' if tt > tc else 'chain'} wins)")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,11 @@ ablations do (Table 6):
     trigger    : NAV triggering policy from ``core.trigger``
                  (dual | fixed | token | sequence)
     proactive  : keep drafting/transmitting while NAV is in flight (App. B)
-    autotune   : BO autotuner adjusting (R1, R2) online (§3.3)
+    autotune   : BO autotuner adjusting (R1, R2) online (§3.3); tree
+                 frameworks also tune (width, depth)
+    tree       : tree-structured speculation — top-k branching drafts under
+                 the per-path dual threshold, verified by one tree-NAV call
+                 whose cost scales with the packed node count
 
 Confidence/acceptance streams come from a ``TokenSource``: either the
 calibrated synthetic model (``SyntheticSource``) or a replay of real traces
@@ -243,7 +247,13 @@ class FrameworkSpec:
     schedule_policy: str  # 'dp' | 'greedy' | 'immediate' | 'no_early_upload'
     pipeline: bool  # False => compute-first-transmit-later (Fig. 2a)
     proactive: bool  # App. B proactive drafting during NAV
-    autotune: bool = False  # BO autotuner on (R1, R2)
+    autotune: bool = False  # BO autotuner on (R1, R2) (+ width/depth for trees)
+    # Tree speculation (FlowSpec/DiP-SD-style): draft a top-`tree_width`
+    # branching token tree up to `tree_depth` levels (the window N̂ becomes a
+    # NODE budget) and verify every root→leaf path in one tree-NAV call.
+    tree: bool = False
+    tree_width: int = 2
+    tree_depth: int = 8
 
 
 FRAMEWORKS = {
@@ -253,6 +263,8 @@ FRAMEWORKS = {
     "edgellm": FrameworkSpec("edgellm", "sequence", dict(r1=0.3), "no_early_upload", False, True),
     # PipeSD full.
     "pipesd": FrameworkSpec("pipesd", "dual", dict(r1=0.9, r2=0.6), "dp", True, True, autotune=True),
+    # Tree-structured speculation on top of the full PipeSD stack.
+    "tree": FrameworkSpec("tree", "dual", dict(r1=0.9, r2=0.6), "dp", True, True, autotune=True, tree=True),
     # Table 6 ablations.
     "pipesd_no_pipeline": FrameworkSpec("pipesd_no_pipeline", "dual", dict(r1=0.9, r2=0.6), "no_early_upload", False, True),
     "pipesd_fixed": FrameworkSpec("pipesd_fixed", "fixed", dict(n=6), "dp", True, True),
@@ -295,6 +307,10 @@ class RunStats:
     verifier_batches: List[int] = field(default_factory=list)
     verifier_queue_depths: List[int] = field(default_factory=list)
     nav_latencies: List[float] = field(default_factory=list)
+    # Tree speculation: per tree round, the packed node count and the depth
+    # actually reached (levels generated before prune/budget stopped it).
+    tree_nodes: List[int] = field(default_factory=list)
+    tree_depths: List[int] = field(default_factory=list)
 
     @property
     def tpt(self) -> float:
@@ -317,6 +333,20 @@ class RunStats:
     @property
     def acceptance_rate(self) -> float:
         return self.accepted_drafts / max(self.drafted_tokens, 1)
+
+    @property
+    def tokens_per_nav(self) -> float:
+        """Mean output tokens committed per NAV call — the quantity tree
+        speculation raises (more accepted drafts amortize each verify)."""
+        return self.accepted_tokens / max(self.nav_calls, 1)
+
+    @property
+    def mean_tree_nodes(self) -> float:
+        return float(np.mean(self.tree_nodes)) if self.tree_nodes else 0.0
+
+    @property
+    def mean_tree_depth(self) -> float:
+        return float(np.mean(self.tree_depths)) if self.tree_depths else 0.0
 
     @property
     def verifier_batch_occupancy(self) -> float:
@@ -353,6 +383,9 @@ class RunStats:
             mean_queue_depth=self.mean_queue_depth,
             nav_p50_ms=p50 * 1e3,
             nav_p99_ms=p99 * 1e3,
+            tokens_per_nav=self.tokens_per_nav,
+            mean_tree_nodes=self.mean_tree_nodes,
+            mean_tree_depth=self.mean_tree_depth,
         )
 
 
@@ -545,26 +578,168 @@ class PipelineEngine:
                 self.trigger.set_window(new_window)
         return n, n_accepted, full
 
+    # --------------------------------------------------------- a tree round --
+    def _run_round_tree(self) -> Tuple[int, int, bool]:
+        """Simulate one TREE speculative round (FlowSpec/DiP-SD-style).
+
+        Each expanded node costs one draft forward (γ per *expansion*, not per
+        node — siblings come from one distribution); a child with conf ≤ R2 is
+        pruned and a path whose cumulative C1 drops to R1 stops expanding.
+        Levels upload as they complete (the level is the natural token batch),
+        the verifier's cost scales with the packed NODE count, and acceptance
+        advances a level whenever ANY sibling on the accepted path's frontier
+        accepts — the accepted-tokens-per-NAV gain over a chain.
+
+        Returns (n_nodes, n_accepted, accepted-path-reached-the-last-level).
+        """
+        gamma = self.edge.effective_gamma()
+        t0 = self._t
+        spec = self.spec
+        kw = spec.trigger_kw if spec.trigger_kind == "dual" else {}
+        r1, r2 = float(kw.get("r1", 0.0)), float(kw.get("r2", 0.0))
+        budget = max(self.window, 1)  # N̂ acts as the node budget
+        # Proactive head start (App. B): expansions already computed during
+        # the previous round's NAV overlap — they cost no generation time.
+        free_expansions = self._pending_head_start
+        self._pending_head_start = 0
+
+        # ---- draft the tree level by level --------------------------------
+        # Frontier entries: (parent-on-accepted-path AND own-draw-accepted, C1).
+        frontier: List[Tuple[bool, float]] = [(True, 1.0)]
+        n_nodes = 0
+        n_expansions = 0
+        n_accepted = 0
+        gen_end = t0
+        level_batches: List[Tuple[int, float]] = []  # (nodes in level, ready time)
+        for _level in range(max(spec.tree_depth, 1)):
+            if not frontier or n_nodes >= budget:
+                break
+            paid = max(0, len(frontier) - free_expansions)
+            free_expansions -= len(frontier) - paid
+            gen_end += gamma * paid
+            n_expansions += paid
+            nxt: List[Tuple[bool, float]] = []
+            level_nodes = 0
+            level_advanced = False
+            for acc_parent, pconf in frontier:
+                for _w in range(max(spec.tree_width, 1)):
+                    conf, acc = self.source.next_token()
+                    # R2 prune (except the round's very first node: a round
+                    # always ships ≥ 1 draft for the verifier to correct).
+                    if conf <= r2 and n_nodes > 0:
+                        continue
+                    if n_nodes >= budget:
+                        break
+                    n_nodes += 1
+                    level_nodes += 1
+                    node_acc = acc_parent and acc
+                    if node_acc and not level_advanced:
+                        level_advanced = True  # deepest accepted path grows
+                    cp = pconf * conf
+                    if cp > r1:
+                        nxt.append((node_acc, cp))
+                    # cp ≤ r1: the path fired — node kept, expansion stops.
+            if level_nodes:
+                level_batches.append((level_nodes, gen_end))
+            if level_advanced:
+                n_accepted += 1
+            else:
+                # No accepted continuation at this level: deeper levels only
+                # extend rejected branches — keep drafting (they were already
+                # paid for in the real system too) but acceptance is frozen.
+                frontier = [(False, cp) for (_a, cp) in nxt]
+                continue
+            frontier = nxt
+        depth_reached = len(level_batches)
+        self.stats.edge_busy_time += gamma * n_expansions
+        self.stats.drafted_tokens += n_nodes
+
+        # ---- transmission: levels are the token batches --------------------
+        self.monitor.observe_gamma(gamma)
+        if not spec.pipeline:
+            up = self.channel.up_cost(n_nodes, gen_end)
+            self.monitor.observe_batch(n_nodes, up)
+            comm_end = gen_end + up
+            self.stats.channel_busy_time += up
+        else:
+            chan_free = t0
+            for sz, ready in level_batches:
+                start = max(chan_free, ready)
+                cost = self.channel.up_cost(sz, start)
+                self.monitor.observe_batch(sz, cost)
+                chan_free = start + cost
+                self.stats.channel_busy_time += cost
+            comm_end = chan_free
+
+        # ---- cloud tree-NAV (cost scales with the packed node count) -------
+        nav_time = self.cloud.verify_time(n_nodes)
+        nav_end = comm_end + nav_time
+        self.stats.cloud_energy += self.cloud.verify_energy(n_nodes)
+        self.stats.nav_calls += 1
+
+        full = n_accepted >= depth_reached and depth_reached > 0
+        result_at_edge = nav_end + self.channel.dn_cost(max(n_accepted, 1), nav_end)
+
+        # ---- proactive drafting during NAV (App. B) ------------------------
+        # Kept work carries over as FREE EXPANSIONS (the tree analogue of the
+        # chain's token head start): the next round's first levels cost no
+        # generation time up to the overlap the edge already spent.
+        kept_proactive = False
+        if spec.proactive:
+            overlap = max(result_at_edge - gen_end, 0.0)
+            drafted_ahead = int(overlap / gamma)
+            if full and drafted_ahead > 0:
+                _, acc = self.source.next_token()
+                if acc:
+                    self._pending_head_start = min(drafted_ahead, budget - 1)
+                    kept_proactive = True
+        self._t = result_at_edge
+        if not kept_proactive:
+            self._t += gamma  # ingest the correction token before drafting
+            self.stats.edge_busy_time += gamma
+        self.stats.wall_time = self._t
+        self.stats.rounds += 1
+        self.stats.draft_lengths.append(n_nodes)
+        self.stats.tree_nodes.append(n_nodes)
+        self.stats.tree_depths.append(depth_reached)
+        self.stats.accepted_drafts += n_accepted
+        self.stats.accepted_tokens += n_accepted + 1  # + corrected/bonus token
+        self.trigger.on_verify(n_accepted, depth_reached)
+        return n_nodes, n_accepted, full
+
     # ---------------------------------------------------------------- runs --
     def run(self, n_accepted_tokens: int = 1000) -> RunStats:
         """Simulate until ≥ n_accepted_tokens are produced (paper: 1000)."""
         if self.spec.autotune:
             self._autotune()
+        round_fn = self._run_round_tree if self.spec.tree else self._run_round
         while self.stats.accepted_tokens < n_accepted_tokens:
-            self._run_round()
+            round_fn()
         return self.stats
 
     # ------------------------------------------------------------ autotune --
     def _autotune(self) -> None:
-        """BO over (R1, R2): each sample measures TPT over a few rounds (§3.3)."""
+        """BO over (R1, R2): each sample measures TPT over a few rounds (§3.3).
+
+        Tree frameworks widen the search space to (R1, R2, width, depth): the
+        branching knobs trade node budget (verify + upload cost) against
+        accepted-tokens-per-NAV, so they belong in the same objective.  The
+        integer knobs ride the continuous GP via rounding — standard practice
+        for small ordinal ranges.
+        """
         from .autotuner import BOAutotuner
 
         t0 = _time.perf_counter()
-        bo = BOAutotuner(seed=int(self.rng.integers(2**31)))
+        tree = self.spec.tree
+        bounds = ((0.0, 1.0), (0.0, 1.0)) + (((1.0, 4.0), (2.0, 10.0)) if tree else ())
+        bo = BOAutotuner(bounds=bounds, seed=int(self.rng.integers(2**31)))
 
-        def measure(r1: float, r2: float) -> float:
+        def measure(r1: float, r2: float, w: float = 0.0, d: float = 0.0) -> float:
+            overrides = dict(trigger_kind="dual", trigger_kw=dict(r1=r1, r2=r2), autotune=False)
+            if tree:
+                overrides.update(tree_width=int(round(w)), tree_depth=int(round(d)))
             probe = PipelineEngine(
-                replace(self.spec, trigger_kind="dual", trigger_kw=dict(r1=r1, r2=r2), autotune=False),
+                replace(self.spec, **overrides),
                 self.channel,
                 self.cloud,
                 self.edge,
@@ -578,6 +753,11 @@ class PipelineEngine:
         best = bo.minimize(measure, n_trials=self.autotune_samples)
         self.stats.t_bo += _time.perf_counter() - t0
         self.stats.bo_runs += 1
-        r1, r2 = best.x
+        r1, r2 = best.x[0], best.x[1]
+        if tree:
+            self.spec = replace(
+                self.spec, tree_width=int(round(best.x[2])), tree_depth=int(round(best.x[3]))
+            )
         self.trigger = self._make_trigger("dual", dict(r1=r1, r2=r2))
+        self.spec = replace(self.spec, trigger_kw=dict(r1=r1, r2=r2))
         self.tuned_thresholds = (r1, r2)

@@ -20,6 +20,12 @@ and provides:
 * ``SpecDecoder``      — host-side orchestration of full generations out of
   jitted rounds, used by tests/examples (the real deployment splits the two
   halves across the edge/cloud runtime in ``repro/runtime``).
+* ``tree_draft_round`` — tree-structured drafting (top-k branching under the
+  same dual-threshold trigger, applied per root→node path), verified in one
+  call by the tree-NAV kernel ``repro.kernels.spec_verify.spec_verify_tree``;
+  ``tree_target_logits`` is the per-path replay oracle for the packed tree
+  logits and ``tree_verify_stochastic`` the multi-branch exact-sampling
+  variant (SpecInfer-style).
 
 All functions are jit-compatible and batched.
 """
@@ -37,7 +43,13 @@ __all__ = [
     "DraftConfig",
     "DraftResult",
     "VerifyResult",
+    "TreeDraftConfig",
+    "TreeDraftResult",
     "draft_round",
+    "replay_path",
+    "tree_draft_round",
+    "tree_target_logits",
+    "tree_verify_stochastic",
     "verify_greedy",
     "verify_stochastic",
     "SpecDecoder",
@@ -163,6 +175,234 @@ def draft_round(
     # the valid prefix and are dropped when the caller resets cache lengths.)
     _, cache = draft_step(params, tok, cache)
     return DraftResult(tokens, confs, n, trig, c1, cache, dists)
+
+
+# --------------------------------------------------------------------------- #
+# Tree-structured drafting (FlowSpec/DiP-SD-style; verified by tree-NAV)
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class TreeDraftConfig:
+    """Top-k branching draft tree under the dual-threshold trigger.
+
+    Each expanded node contributes its top-``width`` continuations; a child
+    with token confidence P(D) ≤ ``r2`` is pruned (and so are its lower-ranked
+    siblings — top-k is confidence-sorted), and a path whose cumulative
+    confidence C1 = ∏ P(D) drops to ``r1`` keeps its node but stops expanding
+    (the per-path analogue of the chain trigger firing).  ``max_nodes`` caps
+    the packed tree size (the scheduling window N̂ generalized to node count);
+    ``beam`` optionally caps the frontier per level, keeping only the
+    highest-C1 paths.
+    """
+
+    depth: int  # max tree depth (levels of draft tokens)
+    width: int  # top-k branching factor per expanded node
+    max_nodes: int = 0  # total node budget; 0 → width · depth
+    r1: float = 0.0  # per-path cumulative confidence threshold (0 disables)
+    r2: float = 0.0  # single-token confidence threshold (0 disables)
+    beam: int = 0  # frontier cap per level (0 = unbounded)
+    store_dists: bool = False  # keep expansion distributions (stochastic NAV)
+
+    def __post_init__(self) -> None:
+        if self.depth < 1 or self.width < 1:
+            raise ValueError(f"need depth ≥ 1 and width ≥ 1, got {self}")
+
+    @property
+    def node_budget(self) -> int:
+        return self.max_nodes or self.width * self.depth
+
+
+class TreeDraftResult(NamedTuple):
+    tokens: Any  # np [N] int32 packed node tokens (level order, conf-sorted)
+    parents: Any  # np [N] int32, -1 = root level; parents[i] < i
+    confs: Any  # np [N] f32 draft probability of each node token
+    path_confs: Any  # np [N] f32 cumulative C1 along the root→node path
+    depths: Any  # np [N] int32 1-based node depth
+    n_nodes: int
+    anchor_cache: Any  # draft cache advanced by the anchor token only
+    dists: Optional[Any]  # np [N+1, V]: row 0 anchor, row 1+i = node i's
+    #   expansion distribution (zeros where a node was never expanded)
+
+
+def tree_draft_round(
+    draft_step: Callable[[Any, jax.Array, Any], Tuple[jax.Array, Any]],
+    params: Any,
+    cache: Any,
+    last_token,  # int or [1] int32 — last accepted token (round prefix end)
+    cfg: TreeDraftConfig,
+    vocab_size: Optional[int] = None,
+) -> TreeDraftResult:
+    """Draft one speculative TREE from the committed prefix.
+
+    Host-orchestrated BFS (one ``draft_step`` per expanded node — siblings
+    share their parent's output cache, which is safe because caches are
+    functional pytrees).  Nodes are appended level by level with siblings in
+    descending confidence, so the packed order is topological AND the
+    verifier's smallest-index tie-break prefers the higher-ranked sibling.
+
+    The draft cache is NOT advanced past the anchor: after NAV the caller
+    replays the accepted path from ``anchor_cache`` (cf. ``replay_path``),
+    which is the tree analogue of the chain path's cache-length rollback —
+    rejected branches never touch the committed cache.
+    """
+    import numpy as np
+
+    if cfg.store_dists and vocab_size is None:
+        raise ValueError("store_dists=True requires vocab_size")
+    tok0 = jnp.asarray(last_token, jnp.int32).reshape(-1)[:1]
+    budget = cfg.node_budget
+    tokens: list = []
+    parents: list = []
+    confs: list = []
+    pconfs: list = []
+    depths: list = []
+    dists = np.zeros((budget + 1, vocab_size), np.float32) if cfg.store_dists else None
+    anchor_cache = None
+    # Frontier entries: (node_idx (-1 = anchor), token [1], pre-cache, C1).
+    frontier = [(-1, tok0, cache, 1.0)]
+    for level in range(cfg.depth):
+        nxt = []
+        for pidx, ptok, pcache, pconf in frontier:
+            if len(tokens) >= budget:
+                break  # budget exhausted: don't pay forwards for dropped kids
+            logits, ccache = draft_step(params, ptok, pcache)
+            if pidx == -1:
+                anchor_cache = ccache
+            probs = np.asarray(jax.nn.softmax(jnp.asarray(logits, jnp.float32), axis=-1))[0]
+            if dists is not None:
+                dists[pidx + 1, :] = probs
+            k = min(cfg.width, probs.shape[-1])
+            top = np.argpartition(-probs, k - 1)[:k]
+            top = top[np.argsort(-probs[top], kind="stable")]
+            for t in top:
+                conf = float(probs[t])
+                if conf <= cfg.r2:
+                    break  # conf-sorted: lower-ranked siblings prune too (R2)
+                if len(tokens) >= budget:
+                    break
+                idx = len(tokens)
+                cp = pconf * conf
+                tokens.append(int(t))
+                parents.append(pidx)
+                confs.append(conf)
+                pconfs.append(cp)
+                depths.append(level + 1)
+                if cp > cfg.r1 and level + 1 < cfg.depth:
+                    nxt.append((idx, jnp.asarray([int(t)], jnp.int32), ccache, cp))
+                # cp ≤ r1: the path fired — keep the node, stop expanding it.
+        if cfg.beam and len(nxt) > cfg.beam:
+            nxt = sorted(nxt, key=lambda e: -e[3])[: cfg.beam]
+        frontier = nxt
+        if not frontier or len(tokens) >= budget:
+            break
+    n = len(tokens)
+    return TreeDraftResult(
+        np.asarray(tokens, np.int32),
+        np.asarray(parents, np.int32),
+        np.asarray(confs, np.float32),
+        np.asarray(pconfs, np.float32),
+        np.asarray(depths, np.int32),
+        n,
+        anchor_cache,
+        None if dists is None else dists[: n + 1],
+    )
+
+
+def tree_target_logits(
+    target_forward: Callable[[Any, jax.Array, Any], Tuple[jax.Array, Any]],
+    params: Any,
+    cache: Any,
+    last_token,
+    tokens,
+    parents,
+) -> jax.Array:
+    """Packed tree logits [N+1, V] via per-path replay (reference oracle).
+
+    Row 0 = target logits after feeding the anchor token; row 1+i = logits
+    after feeding the root→i path.  Each replay restarts from a round-start
+    ``snapshot`` of the target cache, so rejected branches never contaminate
+    it.  A production target computes the same [N+1, V] in ONE forward over
+    the packed nodes with ancestor-masked (tree) attention; this oracle is
+    the semantics that forward must match.
+    """
+    from repro.kernels.spec_verify import tree_path
+    from repro.models.kvcache import restore, snapshot
+
+    base = snapshot(cache)
+    rows = []
+    for i in range(-1, len(tokens)):
+        path = tree_path(parents, i)
+        seq = jnp.asarray([[int(last_token)] + [int(tokens[j]) for j in path]], jnp.int32)
+        lg, _ = target_forward(params, seq, restore(base))
+        rows.append(lg[0, -1, :])
+    return jnp.stack(rows)
+
+
+def tree_verify_stochastic(
+    target_probs,  # np/[N+1, V] — rows as in ``tree_target_logits``
+    draft_probs,  # np/[N+1, V] — TreeDraftResult.dists (expansion dists)
+    tokens,  # [N] packed node tokens
+    parents,  # [N] packed parents (-1 = root level)
+    rng,  # np.random.Generator
+) -> Tuple[list, int]:
+    """Multi-branch exact speculative sampling over a token tree.
+
+    SpecInfer-style verification: walking from the anchor, each accepted
+    node's children are tried in packed order, child x accepted w.p.
+    min(1, p(x)/q(x)); after each rejection the target residual updates
+    p ← norm(max(p − q, 0)).  When every child of the current node is
+    rejected (or the node is a leaf), the correction token is sampled from
+    the final residual (resp. the node's own target row — the bonus sample).
+    With children drawn i.i.d. from q, the emitted marginal equals the
+    target distribution exactly; a single-child tree reduces to
+    ``verify_stochastic``.  Returns (accepted path node indices, correction).
+    """
+    import numpy as np
+
+    target_probs = np.asarray(target_probs, np.float64)
+    draft_probs = np.asarray(draft_probs, np.float64)
+    n = len(tokens)
+    children: list = [[] for _ in range(n + 1)]
+    for i in range(n):
+        children[int(parents[i]) + 1].append(i)
+    path: list = []
+    row = 0  # anchor
+    while True:
+        p = target_probs[row].copy()
+        accepted = None
+        for c in children[row]:
+            x = int(tokens[c])
+            q = draft_probs[row]
+            if q[x] <= 0.0:
+                continue  # not a draft-reachable token under q — skip
+            if rng.random() < min(1.0, p[x] / q[x]):
+                accepted = c
+                break
+            p = np.maximum(p - q, 0.0)
+            s = p.sum()
+            if s <= 0.0:  # q covers p exactly — fall back to the target row
+                p = target_probs[row].copy()
+            else:
+                p = p / s
+        if accepted is None:
+            p = p / max(p.sum(), 1e-30)
+            correction = int(rng.choice(len(p), p=p))
+            return path, correction
+        path.append(accepted)
+        row = accepted + 1
+
+
+def replay_path(
+    draft_step: Callable[[Any, jax.Array, Any], Tuple[jax.Array, Any]],
+    params: Any,
+    cache: Any,
+    tokens,
+) -> Any:
+    """Advance a draft cache through ``tokens`` (accepted-path rollforward)."""
+    for t in tokens:
+        _, cache = draft_step(params, jnp.asarray([int(t)], jnp.int32), cache)
+    return cache
 
 
 def verify_greedy(target_logits: jax.Array, draft_tokens: jax.Array, n_drafted: jax.Array) -> VerifyResult:

@@ -1,7 +1,19 @@
 from . import ops, ref
-from .kernel import spec_verify_pallas
-from .ops import spec_verify, spec_verify_batched
-from .ref import spec_verify_ref, spec_verify_ragged_ref
+from .kernel import spec_verify_pallas, spec_verify_tree_pallas
+from .ops import (
+    spec_verify,
+    spec_verify_batched,
+    spec_verify_tree,
+    spec_verify_tree_batched,
+    tree_path,
+)
+from .ref import (
+    spec_verify_ref,
+    spec_verify_ragged_ref,
+    spec_verify_tree_ragged_ref,
+    spec_verify_tree_ref,
+    tree_topology,
+)
 
 __all__ = [
     "spec_verify",
@@ -9,6 +21,13 @@ __all__ = [
     "spec_verify_pallas",
     "spec_verify_ref",
     "spec_verify_ragged_ref",
+    "spec_verify_tree",
+    "spec_verify_tree_batched",
+    "spec_verify_tree_pallas",
+    "spec_verify_tree_ragged_ref",
+    "spec_verify_tree_ref",
+    "tree_path",
+    "tree_topology",
     "ops",
     "ref",
 ]

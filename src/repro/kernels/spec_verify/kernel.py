@@ -24,6 +24,17 @@ ragged multi-session requests into one rectangular launch):
   session's real draft length cannot leak into its outputs;
 * ``logp`` lanes at padded positions carry garbage by design — callers
   slice ``logp[:K_i]``.
+
+``_tree_verify_kernel`` is the tree-NAV generalization: N packed tree nodes
+verified against N+1 logits rows (row 0 = anchor, row 1+i = node i), where
+node i is scored by its PARENT's row (``prow = parents + 1``) and acceptance
+propagates along the packed ancestor mask ``anc[i, j]`` — accepted(i) =
+∀j on root→i path: match(j).  The finalize step reduces to the deepest
+accepted node (ties → smallest packed index), its depth, and the correction
+token from that node's own row.  The same padding invariants hold with
+``n_drafted`` replaced by ``n_nodes``: pad nodes never match, and real
+nodes' ancestor sets contain only real nodes, so pad nodes cannot veto an
+acceptance.
 """
 
 from __future__ import annotations
@@ -96,6 +107,148 @@ def _verify_kernel(
         nacc_ref[0, 0] = n_acc
         corr_ref[0, 0] = jnp.sum(jnp.where(pos == jnp.minimum(n_acc, K), greedy, 0))
         logp_ref[0, :] = (tok_scr[...] - lse)[:K]
+
+
+def _tree_verify_kernel(
+    logits_ref,  # [1, N1, BV] f32/bf16 target logits block (row 0 = anchor)
+    tokens_ref,  # [1, N] i32 packed node tokens (SMEM)
+    prow_ref,  # [1, N] i32 verify row per node = parents + 1 (SMEM)
+    depth_ref,  # [1, N] i32 1-based node depth (SMEM)
+    nn_ref,  # [1, 1] i32 n_nodes (SMEM)
+    anc_ref,  # [1, N, N] i32 packed ancestor mask (anc[i,j]=1: j on root→i path)
+    nacc_ref,  # [1, 1] i32 out — depth of deepest accepted node
+    best_ref,  # [1, 1] i32 out — packed index of that node (-1 if none)
+    corr_ref,  # [1, 1] i32 out — correction/bonus token
+    logp_ref,  # [1, N] f32 out — log P_target(node token) at its verify row
+    m_scr,  # [N1] f32 running max
+    arg_scr,  # [N1] i32 running argmax
+    lse_scr,  # [N1] f32 running sum exp (shifted by m)
+    tok_scr,  # [N] f32 node-token logits gathered at each node's verify row
+    *,
+    bv: int,
+    nv: int,
+    n1: int,
+):
+    vb = pl.program_id(1)
+    N = n1 - 1
+
+    @pl.when(vb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        arg_scr[...] = jnp.zeros_like(arg_scr)
+        lse_scr[...] = jnp.zeros_like(lse_scr)
+        tok_scr[...] = jnp.full_like(tok_scr, NEG_INF)
+
+    s = logits_ref[0].astype(jnp.float32)  # [N1, BV]
+    ids1 = vb * bv + jax.lax.broadcasted_iota(jnp.int32, (n1, bv), 1)
+    blk_max = jnp.max(s, axis=-1)  # [N1]
+    blk_arg = jnp.min(jnp.where(s == blk_max[:, None], ids1, jnp.int32(2**30)), axis=-1)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, blk_max)
+    lse_scr[...] = lse_scr[...] * jnp.exp(m_prev - m_new) + jnp.sum(jnp.exp(s - m_new[:, None]), axis=-1)
+    arg_scr[...] = jnp.where(blk_max > m_prev, blk_arg, arg_scr[...])
+    m_scr[...] = m_new
+    # Gather each node's token logit from its VERIFY row (unlike the chain
+    # kernel, node i is scored by row prow[i], not row i): a one-hot matmul
+    # re-indexes the [N1, BV] tile to [N, BV] before the in-block id match.
+    tok_row = tokens_ref[0, :].reshape(N)  # [N]
+    prow = prow_ref[0, :].reshape(N)  # [N]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (N, n1), 1)
+    onehot = (row_ids == prow[:, None]).astype(jnp.float32)  # [N, N1]
+    s_at = jnp.dot(onehot, s, preferred_element_type=jnp.float32)  # [N, BV]
+    ids = vb * bv + jax.lax.broadcasted_iota(jnp.int32, (N, bv), 1)
+    hit = ids == tok_row[:, None]  # [N, BV]
+    gathered = jnp.sum(jnp.where(hit, s_at, 0.0), axis=-1)
+    tok_scr[...] = jnp.where(jnp.any(hit, axis=-1), gathered, tok_scr[...])
+
+    @pl.when(vb == nv - 1)
+    def _finalize():
+        greedy = arg_scr[...]  # [N1]
+        lse = m_scr[...] + jnp.log(jnp.maximum(lse_scr[...], 1e-30))
+        n_d = nn_ref[0, 0]
+        depth = depth_ref[0, :].reshape(N)
+        oh = row_ids == prow[:, None]  # [N, N1]
+        g_at = jnp.sum(jnp.where(oh, greedy[None, :], 0), axis=-1)  # [N]
+        lse_at = jnp.sum(jnp.where(oh, lse[None, :], 0.0), axis=-1)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (N,), 0)
+        valid = pos < n_d
+        match = jnp.logical_and(g_at == tok_row, valid)
+        anc = anc_ref[0] != 0  # [N, N]
+        # accepted[i] = all nodes on root→i path match (anc[i,i] covers i).
+        accepted = jnp.logical_and(jnp.all(jnp.logical_or(match[None, :], ~anc), axis=-1), valid)
+        acc_depth = jnp.where(accepted, depth, 0)
+        n_acc = jnp.max(acc_depth)
+        best = jnp.min(jnp.where(jnp.logical_and(accepted, acc_depth == n_acc), pos, jnp.int32(2**30)))
+        best = jnp.where(n_acc > 0, best, -1)
+        best_row = jnp.where(n_acc > 0, best + 1, 0)
+        ids_n1 = jax.lax.broadcasted_iota(jnp.int32, (n1,), 0)
+        nacc_ref[0, 0] = n_acc
+        best_ref[0, 0] = best
+        corr_ref[0, 0] = jnp.sum(jnp.where(ids_n1 == best_row, greedy, 0))
+        logp_ref[0, :] = tok_scr[...] - lse_at
+
+
+def spec_verify_tree_pallas(
+    target_logits: jax.Array,  # [B, N+1, V] — row 0 anchor, row 1+i = node i
+    tokens: jax.Array,  # [B, N] i32
+    prow: jax.Array,  # [B, N] i32 (parents + 1)
+    depth: jax.Array,  # [B, N] i32 (1-based)
+    anc: jax.Array,  # [B, N, N] i32/bool packed ancestor mask
+    n_nodes: jax.Array,  # [B] i32
+    *,
+    block_v: int = DEFAULT_BV,
+    interpret: bool = False,
+):
+    B, N1, V = target_logits.shape
+    N = N1 - 1
+    if N < 1:
+        raise ValueError("tree verification needs at least one node")
+    if N1 > 128:
+        raise ValueError(f"N+1={N1} exceeds the [N1] VMEM scratch budget (max 128)")
+    bv = min(block_v, V)
+    if V % bv:
+        raise ValueError(f"V={V} must be divisible by block_v={bv}")
+    nv = V // bv
+    kernel = functools.partial(_tree_verify_kernel, bv=bv, nv=nv, n1=N1)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nv),
+        in_specs=[
+            pl.BlockSpec((1, N1, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, N), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, N), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, N, N), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, N), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((N1,), jnp.float32),
+            pltpu.VMEM((N1,), jnp.int32),
+            pltpu.VMEM((N1,), jnp.float32),
+            pltpu.VMEM((N,), jnp.float32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        target_logits,
+        tokens.astype(jnp.int32),
+        prow.astype(jnp.int32),
+        depth.astype(jnp.int32),
+        n_nodes.reshape(B, 1).astype(jnp.int32),
+        anc.astype(jnp.int32),
+    )
 
 
 def spec_verify_pallas(

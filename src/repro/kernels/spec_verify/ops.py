@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import spec_verify_pallas
-from .ref import spec_verify_ref
+from .kernel import spec_verify_pallas, spec_verify_tree_pallas
+from .ref import spec_verify_ref, spec_verify_tree_ref, tree_topology
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_v"))
@@ -93,3 +93,110 @@ def spec_verify_batched(
     )
     na, corr, logp = np.asarray(na), np.asarray(corr), np.asarray(logp)
     return [(int(na[i, 0]), int(corr[i, 0]), logp[i, : ks[i]]) for i in range(B)]
+
+
+# --------------------------------------------------------------------------- #
+# Tree-NAV entries
+# --------------------------------------------------------------------------- #
+
+
+def tree_path(parents: Sequence[int], node: int) -> List[int]:
+    """Packed node indices along the root→``node`` path (inclusive, in order).
+
+    Returns [] for ``node < 0`` (the no-acceptance sentinel), so callers can
+    feed ``best_node`` from the verifier straight through.
+    """
+    path: List[int] = []
+    i = int(node)
+    while i >= 0:
+        path.append(i)
+        i = int(parents[i])
+    path.reverse()
+    return path
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_v"))
+def spec_verify_tree(
+    target_logits: jax.Array,  # [B, N+1, V] — row 0 anchor, row 1+i = node i
+    tokens: jax.Array,  # [B, N]
+    parents: jax.Array,  # [B, N] int32, -1 = root level, parents[i] < i
+    n_nodes: jax.Array,  # [B]
+    *,
+    impl: str = "interpret",
+    block_v: int = 2048,
+):
+    """Greedy tree-NAV: (n_accepted [B,1], best_node [B,1], corr [B,1], logp [B,N])."""
+    if impl == "ref":
+        return spec_verify_tree_ref(target_logits, tokens, parents, n_nodes)
+    prow, depth, anc = tree_topology(jnp.asarray(parents, jnp.int32))
+    return spec_verify_tree_pallas(
+        target_logits,
+        tokens,
+        prow,
+        depth,
+        anc,
+        n_nodes,
+        block_v=block_v,
+        interpret=(impl == "interpret"),
+    )
+
+
+def spec_verify_tree_batched(
+    logits_seq: Sequence,  # B entries of [N_i+1, V] arrays
+    tokens_seq: Sequence,  # B entries of length-N_i int sequences
+    parents_seq: Sequence,  # B entries of length-N_i int sequences
+    *,
+    impl: str = "ref",
+    block_v: int = 2048,
+    bucket: bool = True,
+) -> List[Tuple[int, List[int], int, np.ndarray]]:
+    """Verify B sessions' ragged token TREES in ONE padded launch.
+
+    Returns, per session in input order, ``(n_accepted, path, correction,
+    logp[N_i])`` where ``path`` is the accepted root→leaf node-index list
+    (length ``n_accepted``).  Trees are padded by NODE count with the same
+    pow2 bucketing as the chain entry; pad nodes carry ``parents = -1`` and
+    pad rows ``n_nodes = 0``, both provably inert (kernel.py invariants).
+    """
+    if not (len(logits_seq) == len(tokens_seq) == len(parents_seq)) or not logits_seq:
+        raise ValueError("need equal, non-empty logits/tokens/parents sequences")
+    ns = [len(t) for t in tokens_seq]
+    for lg, pr, n in zip(logits_seq, parents_seq, ns):
+        if lg.ndim != 2 or lg.shape[0] != n + 1:
+            raise ValueError(f"logits must be [N_i+1, V]; got {lg.shape} for N_i={n}")
+        if len(pr) != n:
+            raise ValueError(f"parents length {len(pr)} != node count {n}")
+        for i, p in enumerate(pr):
+            if not (-1 <= int(p) < i):
+                raise ValueError(f"parents must be topologically packed; parents[{i}]={p}")
+    V = logits_seq[0].shape[-1]
+    if any(lg.shape[-1] != V for lg in logits_seq):
+        raise ValueError("all sessions must share one (padded) vocab size")
+    B, nmax = len(ns), max(max(ns), 1)
+    Bp = _next_pow2(B) if bucket else B
+    Np = _next_pow2(nmax) if bucket else nmax
+
+    bv = min(block_v, _next_pow2(V))
+    Vp = -(-V // bv) * bv
+    logits = np.zeros((Bp, Np + 1, Vp), np.float32)
+    if Vp > V:
+        logits[:, :, V:] = -1e30  # inert pad lanes (see chain entry)
+    tokens = np.zeros((Bp, Np), np.int32)
+    parents = np.full((Bp, Np), -1, np.int32)
+    nn = np.zeros((Bp,), np.int32)
+    for i, (lg, tk, pr, n) in enumerate(zip(logits_seq, tokens_seq, parents_seq, ns)):
+        logits[i, : n + 1, :V] = np.asarray(lg, np.float32)
+        tokens[i, :n] = np.asarray(tk, np.int32)
+        parents[i, :n] = np.asarray(pr, np.int32)
+        nn[i] = n
+
+    na, best, corr, logp = spec_verify_tree(
+        jnp.asarray(logits), jnp.asarray(tokens), jnp.asarray(parents), jnp.asarray(nn),
+        impl=impl, block_v=bv,
+    )
+    na, best, corr, logp = (np.asarray(x) for x in (na, best, corr, logp))
+    out: List[Tuple[int, List[int], int, np.ndarray]] = []
+    for i in range(B):
+        path = tree_path(parents[i], int(best[i, 0]))
+        out.append((int(na[i, 0]), path, int(corr[i, 0]), logp[i, : ns[i]]))
+    return out

@@ -6,10 +6,24 @@ is the unbatched per-session oracle the batched serving path is tested
 against: it loops sessions one at a time with no padding, so any cross-
 session leakage or padding bug in ``ops.spec_verify_batched`` shows up as a
 mismatch.
+
+Tree verification (``spec_verify_tree_ref``) generalizes the chain oracle to
+a *packed token tree*: N draft nodes in topological order (every parent
+precedes its children), ``parents[i] ∈ {-1, 0..i-1}`` with -1 marking a
+root-level node.  The target logits carry N+1 rows — row 0 is the *anchor*
+(logits after the committed prefix, which verify the root-level nodes) and
+row 1+i is the target's distribution after the root→i path (which verifies
+node i's children, and supplies the bonus token when i ends the accepted
+path).  Greedy tree-NAV accepts node i iff the target's greedy token at its
+parent's row equals ``tokens[i]`` AND every ancestor was accepted; the result
+is the deepest accepted node (ties break toward the smallest packed index,
+i.e. the highest-ranked sibling) plus the correction token from that node's
+own row.
 """
 
 from __future__ import annotations
 
+import math
 from typing import List, Sequence, Tuple
 
 import jax
@@ -45,4 +59,90 @@ def spec_verify_ragged_ref(
             jnp.asarray(lg)[None], toks, jnp.asarray([k], jnp.int32)
         )
         out.append((int(na[0, 0]), int(corr[0, 0]), np.asarray(lp[0])))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Tree-NAV (packed ancestor-mask) oracle
+# --------------------------------------------------------------------------- #
+
+
+def tree_topology(parents: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Derive (prow, depth, anc) from a packed parents array [B, N].
+
+    prow[b, i]  — the target-logits row verifying node i: ``parents + 1``
+                  (row 0 is the anchor, row 1+p is node p's own row).
+    depth[b, i] — 1-based depth of node i (root-level nodes have depth 1).
+    anc[b, i, j] — bool, node j lies on the root→i path (including j = i).
+
+    Requires topological packing (``parents[i] < i``), which makes the parent
+    one-hot strictly lower-triangular; the transitive closure then converges
+    in ⌈log2 N⌉ boolean squarings.
+    """
+    B, N = parents.shape
+    prow = (parents + 1).astype(jnp.int32)
+    oh = parents[..., None] == jnp.arange(N, dtype=parents.dtype)[None, None, :]
+    anc = jnp.eye(N, dtype=bool)[None] | oh  # self + direct parent
+    for _ in range(max(int(math.ceil(math.log2(max(N, 2)))), 1)):
+        anc = jnp.einsum("bij,bjk->bik", anc.astype(jnp.int32), anc.astype(jnp.int32)) > 0
+    depth = jnp.sum(anc, axis=-1).astype(jnp.int32)
+    return prow, depth, anc
+
+
+def spec_verify_tree_ref(
+    target_logits: jax.Array,  # [B, N+1, V] — row 0 anchor, row 1+i = node i
+    tokens: jax.Array,  # [B, N] int32 packed node tokens
+    parents: jax.Array,  # [B, N] int32, -1 = root level; parents[i] < i
+    n_nodes: jax.Array,  # [B] int32 — valid node count (positions ≥ are pad)
+):
+    """Greedy tree-NAV oracle.
+
+    Returns (n_accepted [B,1], best_node [B,1], correction [B,1], logp [B,N]):
+    n_accepted is the depth of the deepest fully-accepted node (0 if no
+    root-level node matches), best_node its packed index (-1 if none), and
+    correction the target's greedy token at the accepted path's end (the
+    anchor row when nothing is accepted).  ``logp[i]`` is the target log-prob
+    of node i's token at its verify row (garbage at padded positions —
+    callers slice ``logp[:n_nodes]``).
+    """
+    B, N1, V = target_logits.shape
+    N = N1 - 1
+    s = target_logits.astype(jnp.float32)
+    greedy = jnp.argmax(s, axis=-1).astype(jnp.int32)  # [B, N1]
+    prow, depth, anc = tree_topology(parents)
+    g_at = jnp.take_along_axis(greedy, prow, axis=-1)  # [B, N]
+    pos = jnp.arange(N)[None, :]
+    valid = pos < n_nodes[:, None]
+    match = jnp.logical_and(g_at == tokens, valid)
+    # accepted[i] = every node on the root→i path matches (own match included
+    # through anc[i, i]); pad nodes are masked out explicitly.
+    accepted = jnp.all(match[:, None, :] | ~anc, axis=-1) & valid
+    acc_depth = jnp.where(accepted, depth, 0)
+    n_acc = jnp.max(acc_depth, axis=-1).astype(jnp.int32)  # [B]
+    is_best = accepted & (acc_depth == n_acc[:, None]) & (n_acc[:, None] > 0)
+    best = jnp.where(n_acc > 0, jnp.argmax(is_best, axis=-1).astype(jnp.int32), -1)
+    best_row = jnp.where(n_acc > 0, best + 1, 0)
+    corr = jnp.take_along_axis(greedy, best_row[:, None], axis=-1)
+    logp_all = jax.nn.log_softmax(s, axis=-1)
+    lp_rows = jnp.take_along_axis(logp_all, prow[:, :, None], axis=1)  # [B, N, V]
+    logp = jnp.take_along_axis(lp_rows, tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return n_acc[:, None], best[:, None], corr, logp
+
+
+def spec_verify_tree_ragged_ref(
+    logits_seq: Sequence,  # B entries of [N_i+1, V]
+    tokens_seq: Sequence,  # B entries of length-N_i ints
+    parents_seq: Sequence,  # B entries of length-N_i ints
+) -> List[Tuple[int, int, int, np.ndarray]]:
+    """Per-session tree oracle: one unpadded ``spec_verify_tree_ref`` each."""
+    out: List[Tuple[int, int, int, np.ndarray]] = []
+    for lg, tk, pr in zip(logits_seq, tokens_seq, parents_seq):
+        n = len(tk)
+        na, best, corr, lp = spec_verify_tree_ref(
+            jnp.asarray(lg)[None],
+            jnp.asarray(tk, jnp.int32).reshape(1, n),
+            jnp.asarray(pr, jnp.int32).reshape(1, n),
+            jnp.asarray([n], jnp.int32),
+        )
+        out.append((int(na[0, 0]), int(best[0, 0]), int(corr[0, 0]), np.asarray(lp[0])))
     return out

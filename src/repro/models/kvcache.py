@@ -48,8 +48,14 @@ class RecurrentState(NamedTuple):
 
 
 def snapshot(state: Any) -> Any:
-    """Copy a state pytree (rollback point for stateful drafts)."""
-    return jax.tree_util.tree_map(lambda a: a + 0, state)
+    """Copy a state pytree (rollback point for stateful drafts).
+
+    Every leaf goes through ``jnp.asarray(...).copy()``: ``a + 0`` would
+    promote bool leaves to int32 (and leave non-array leaves aliased), while
+    an explicit copy preserves dtype and guarantees a fresh buffer for any
+    array-like leaf.
+    """
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(a).copy(), state)
 
 
 def restore(snapshot_state: Any) -> Any:

@@ -7,7 +7,10 @@ Runs the full PipeSD edge stack against a live ``CloudVerifier``:
 * environment monitor feeding the parameter updater (δ-rules, App. D);
 * **failover**: if a NAV result misses its deadline the client falls back to
   local autoregressive decoding (the paper's offline-robustness mode), keeps
-  generating, and re-probes the cloud with exponential backoff.
+  generating, and re-probes the cloud with exponential backoff;
+* **tree speculation** (``variant='tree'``): top-k branching draft trees with
+  per-path dual-threshold pruning, shipped level-by-level with packed
+  parents and verified by the server's batched tree-NAV path.
 """
 
 from __future__ import annotations
@@ -36,6 +39,12 @@ class EdgeConfig:
     nav_timeout: float = 2.0  # seconds before failover
     backoff_init: float = 0.5
     backoff_max: float = 8.0
+    # Tree speculation: variant='tree' drafts a top-k branching token tree
+    # (width children per expanded node, up to tree_depth levels, `window`
+    # acting as the node budget) and requests tree-NAV from the verifier.
+    variant: str = "chain"  # 'chain' | 'tree'
+    tree_width: int = 2
+    tree_depth: int = 8
 
 
 @dataclass
@@ -116,11 +125,59 @@ class EdgeClient:
         self.stats["drafted_tokens"] += len(tokens)
         return tokens, confs
 
-    def _send_batch(self, pending: List[Tuple[int, float]]) -> None:
+    def _draft_round_tree(self) -> Tuple[List[int], List[float], List[int]]:
+        """Draft a top-k token tree under the per-path dual threshold.
+
+        Level by level: each frontier node spawns ``tree_width`` children (one
+        draft forward per EXPANDED node → γ per expansion, not per node);
+        a child with conf ≤ R2 is pruned, and a path whose cumulative C1
+        drops to R1 keeps its node but stops expanding — the per-path
+        analogue of the chain trigger firing.  Each level's nodes ship as one
+        draft_batch carrying packed parents, so uploads overlap the next
+        level's expansion exactly as the chain path pipelines batches.
+        """
+        tokens: List[int] = []
+        confs: List[float] = []
+        parents: List[int] = []
+        frontier: List[Tuple[int, float]] = [(-1, 1.0)]  # (node idx, path C1)
+        budget = self.cfg.window
+        for _ in range(self.cfg.tree_depth):
+            time.sleep(self.cfg.gamma * len(frontier) * self.cfg.time_scale)
+            level_start = len(tokens)
+            nxt: List[Tuple[int, float]] = []
+            for pidx, pconf in frontier:
+                for _w in range(self.cfg.tree_width):
+                    tok, conf = self.draft.next()
+                    # R2 prune: hard tokens never enter the tree — except the
+                    # very first node, so a round always ships ≥ 1 draft.
+                    if conf <= self.cfg.r2 and tokens:
+                        continue
+                    if len(tokens) >= budget:
+                        break
+                    idx = len(tokens)
+                    tokens.append(tok)
+                    confs.append(conf)
+                    parents.append(pidx)
+                    cp = pconf * conf
+                    if cp > self.cfg.r1:
+                        nxt.append((idx, cp))
+            if len(tokens) > level_start:
+                self._send_batch(
+                    list(zip(tokens[level_start:], confs[level_start:])),
+                    parents=parents[level_start:],
+                )
+            frontier = nxt
+            if not frontier or len(tokens) >= budget:
+                break
+        self.stats["drafted_tokens"] += len(tokens)
+        return tokens, confs, parents
+
+    def _send_batch(self, pending: List[Tuple[int, float]], parents: Optional[List[int]] = None) -> None:
         toks = [t for t, _ in pending]
         cfs = [c for _, c in pending]
         self.seq += 1
-        self.up.send(Message("draft_batch", self.session, self.seq, len(toks), (toks, cfs, self.round)))
+        payload = (toks, cfs, self.round) if parents is None else (toks, cfs, self.round, parents)
+        self.up.send(Message("draft_batch", self.session, self.seq, len(toks), payload))
         self.monitor.observe_batch(len(toks), self.up.cfg.alpha + self.up.cfg.beta * len(toks))
 
     # ---------------------------------------------------------------- runs --
@@ -147,21 +204,20 @@ class EdgeClient:
                 backoff = min(backoff * 2, self.cfg.backoff_max)
                 continue
             self.round += 1
-            tokens, confs = self._draft_round()
+            tree_mode = self.cfg.variant == "tree"
+            if tree_mode:
+                tokens, confs, _parents = self._draft_round_tree()
+            else:
+                tokens, confs = self._draft_round()
             self.seq += 1
             timeout = self.cfg.nav_timeout * max(self.cfg.time_scale, 0.05)
             t_req = time.monotonic()
             # The deadline rides with the request: once it passes, this client
             # has failed over, so the server drops the work (straggler drop).
-            self.up.send(
-                Message(
-                    "nav_request",
-                    self.session,
-                    self.seq,
-                    1,
-                    {"n_tokens": len(tokens), "deadline": t_req + timeout, "round": self.round},
-                )
-            )
+            request = {"n_tokens": len(tokens), "deadline": t_req + timeout, "round": self.round}
+            if tree_mode:
+                request["tree"] = True
+            self.up.send(Message("nav_request", self.session, self.seq, 1, request))
             self.stats["nav_calls"] += 1
             result = self.dn.recv(timeout=timeout)
             while result is not None and result.seq != self.seq:

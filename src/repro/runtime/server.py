@@ -17,7 +17,12 @@ A continuous-batching dispatcher serves any number of edge sessions
   sessions go first, so long-draft sessions cannot starve short ones;
 * straggler mitigation: requests carry client deadlines; work whose deadline
   has already passed (the client has failed over to local decoding) and work
-  for sessions that disconnected is dropped, not verified.
+  for sessions that disconnected is dropped, not verified;
+* tree speculation: a NAV request flagged ``tree: True`` carries packed tree
+  parents alongside its tokens; tree requests ride the same buffers,
+  admission control, and coalescing window as chains, and are padded by NODE
+  count through ``spec_verify_tree_batched`` (one ancestor-masked launch per
+  dispatch).  Results additionally carry the accepted root→leaf ``path``.
 
 Per-dispatch batch size and queue depth are fed to an
 ``EnvironmentMonitor`` (core.monitor) so benchmarks can lift verifier
@@ -59,6 +64,16 @@ class VerifyBackend:
         """Verify many sessions in one call; default loops over ``verify``."""
         return [self.verify(s, t, c) for (s, t, c) in requests]
 
+    def verify_tree(self, session: int, tokens: List[int], confs: List[float], parents: List[int]):
+        """Tree request → (n_accepted, correction, path-node-indices)."""
+        raise NotImplementedError  # pragma: no cover
+
+    def verify_tree_batch(
+        self, requests: Sequence[Tuple[int, List[int], List[float], List[int]]]
+    ):
+        """Verify many sessions' token trees; default loops over ``verify_tree``."""
+        return [self.verify_tree(s, t, c, p) for (s, t, c, p) in requests]
+
 
 @dataclass
 class SyntheticBackend(VerifyBackend):
@@ -99,6 +114,43 @@ class SyntheticBackend(VerifyBackend):
         time.sleep((self.verify_time + self.verify_time_per_token * max_len) * self.time_scale)
         return [self._accept(c) for (_, _, c) in requests]
 
+    def _accept_tree(self, confs: List[float], parents: List[int]) -> Tuple[int, int, List[int]]:
+        """Per-node accept draw w.p. conf^kappa, conditioned on the parent.
+
+        The accepted path is the deepest chain of accepting nodes; siblings
+        are tried in packed order, so the tree wins whenever ANY branch at a
+        level accepts — the accepted-tokens-per-NAV edge over a chain.
+        """
+        n = len(confs)
+        children: List[List[int]] = [[] for _ in range(n + 1)]
+        for i, p in enumerate(parents):
+            children[p + 1].append(i)
+        path: List[int] = []
+        cur = 0  # anchor
+        while True:
+            nxt = None
+            for c in children[cur]:
+                if self._rng.random() < confs[c] ** self.kappa:
+                    nxt = c
+                    break
+            if nxt is None:
+                break
+            path.append(nxt)
+            cur = nxt + 1
+        correction = int(self._rng.integers(0, 1 << 16))
+        return len(path), correction, path
+
+    def verify_tree(self, session, tokens, confs, parents):
+        time.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
+        return self._accept_tree(confs, parents)
+
+    def verify_tree_batch(self, requests):
+        if not requests:
+            return []
+        max_len = max(len(t) for (_, t, _, _) in requests)
+        time.sleep((self.verify_time + self.verify_time_per_token * max_len) * self.time_scale)
+        return [self._accept_tree(c, p) for (_, _, c, p) in requests]
+
 
 class SpecVerifyBackend(VerifyBackend):
     """Real NAV verification through the fused spec_verify kernel.
@@ -128,6 +180,26 @@ class SpecVerifyBackend(VerifyBackend):
         out = spec_verify_batched(logits, tokens, impl=self.impl, block_v=self.block_v)
         return [(int(n_acc), int(corr)) for (n_acc, corr, _) in out]
 
+    def verify_tree(self, session, tokens, confs, parents):
+        return self.verify_tree_batch([(session, tokens, confs, parents)])[0]
+
+    def verify_tree_batch(self, requests):
+        """One padded tree-NAV launch over the batch (pad by node count).
+
+        ``logits_fn(session, tokens)`` must return ``[len(tokens)+1, V]`` rows
+        in packed-tree order (row 0 anchor, row 1+i node i) when the request
+        is a tree — the same contract ``tree_target_logits`` produces.
+        """
+        if not requests:
+            return []
+        from repro.kernels.spec_verify import spec_verify_tree_batched
+
+        logits = [self.logits_fn(s, t) for (s, t, _, _) in requests]
+        tokens = [t for (_, t, _, _) in requests]
+        parents = [p for (_, _, _, p) in requests]
+        out = spec_verify_tree_batched(logits, tokens, parents, impl=self.impl, block_v=self.block_v)
+        return [(int(n_acc), int(corr), list(path)) for (n_acc, path, corr, _) in out]
+
 
 @dataclass
 class _VerifyRequest:
@@ -137,6 +209,7 @@ class _VerifyRequest:
     msg: Message
     t_enqueue: float
     deadline: Optional[float]  # absolute monotonic; None = never drop
+    parents: Optional[List[int]] = None  # packed tree parents; None = chain
 
 
 @dataclass
@@ -146,15 +219,17 @@ class _Session:
     # parks and is eventually abandoned WITHOUT consuming the next round's
     # tokens, so one lost draft_batch cannot desync the whole session.
     # Round-less (legacy) messages all land in round 0 and behave like a
-    # single shared buffer.
-    buffers: Dict[int, Tuple[List[int], List[float]]] = field(default_factory=dict)
+    # single shared buffer.  The third buffer lane carries packed tree
+    # parents (absolute node indices within the round); chain rounds leave
+    # it empty.
+    buffers: Dict[int, Tuple[List[int], List[float], List[int]]] = field(default_factory=dict)
     # NAV round that arrived before its proactively-uploaded drafts did.
     pending_request: Optional[Message] = None
     last_seen: float = field(default_factory=time.monotonic)
     served: int = 0  # rounds verified — fairness key for admission
 
-    def buf(self, rnd: int) -> Tuple[List[int], List[float]]:
-        return self.buffers.setdefault(rnd, ([], []))
+    def buf(self, rnd: int) -> Tuple[List[int], List[float], List[int]]:
+        return self.buffers.setdefault(rnd, ([], [], []))
 
 
 class CloudVerifier:
@@ -247,9 +322,10 @@ class CloudVerifier:
         """
         n = msg.payload["n_tokens"]
         rnd = self._round_of(msg.payload)
-        toks, confs = sess.buf(rnd)
-        take_t, take_c = toks[:n], confs[:n]
-        sess.buffers[rnd] = (toks[n:], confs[n:])
+        is_tree = bool(msg.payload.get("tree")) if isinstance(msg.payload, dict) else False
+        toks, confs, pars = sess.buf(rnd)
+        take_t, take_c, take_p = toks[:n], confs[:n], pars[:n]
+        sess.buffers[rnd] = (toks[n:], confs[n:], pars[n:])
         if not sess.buffers[rnd][0]:
             del sess.buffers[rnd]
         self._queue.append(
@@ -260,6 +336,7 @@ class CloudVerifier:
                 msg,
                 time.monotonic(),
                 msg.payload.get("deadline") if isinstance(msg.payload, dict) else None,
+                parents=take_p if is_tree else None,
             )
         )
         self._work.notify_all()
@@ -274,11 +351,15 @@ class CloudVerifier:
             sess.last_seen = time.monotonic()
             if msg.kind == "draft_batch":
                 tokens, confs = msg.payload[0], msg.payload[1]
+                # 4th tuple slot: packed tree parents (absent for chains).
+                batch_parents = msg.payload[3] if len(msg.payload) > 3 else None
                 rnd = self._round_of(msg.payload)
                 with self._lock:
-                    toks, cfs = sess.buf(rnd)
+                    toks, cfs, pars = sess.buf(rnd)
                     toks.extend(tokens)
                     cfs.extend(confs)
+                    if batch_parents is not None:
+                        pars.extend(batch_parents)
                     # A parked NAV round becomes dispatchable the moment its
                     # proactively-uploaded drafts complete the buffer.
                     pend = sess.pending_request
@@ -363,12 +444,27 @@ class CloudVerifier:
                 batch, depth = self._admit()
             if not batch:
                 continue
-            reqs = [(r.session, r.tokens, r.confs) for r in batch]
-            results = self.backend.verify_batch(reqs)
+            # Chain and tree requests share the admission queue but pad
+            # differently (draft length vs node count), so each kind gets its
+            # own backend launch within ONE dispatch round.
+            chain = [r for r in batch if r.parents is None]
+            tree = [r for r in batch if r.parents is not None]
+            results: Dict[int, tuple] = {}
+            if chain:
+                out = self.backend.verify_batch([(r.session, r.tokens, r.confs) for r in chain])
+                for r, (n_acc, corr) in zip(chain, out):
+                    results[id(r)] = (n_acc, corr, None)
+            if tree:
+                out = self.backend.verify_tree_batch(
+                    [(r.session, r.tokens, r.confs, r.parents) for r in tree]
+                )
+                for r, (n_acc, corr, path) in zip(tree, out):
+                    results[id(r)] = (n_acc, corr, path)
             self.stats["nav_calls"] += len(batch)
             self.stats["batched_calls"] += 1
             self.monitor.observe_verifier_batch(len(batch), depth)
-            for req, (n_acc, corr) in zip(batch, results):
+            for req in batch:
+                n_acc, corr, path = results[id(req)]
                 self.stats["tokens_verified"] += len(req.tokens)
                 sess = self.sessions.get(req.session)
                 if sess is not None:
@@ -377,12 +473,7 @@ class CloudVerifier:
                 if link is None:
                     continue
                 _, dn = link
-                dn.send(
-                    Message(
-                        "nav_result",
-                        req.session,
-                        req.msg.seq,
-                        max(n_acc, 1),
-                        {"n_accepted": n_acc, "correction": corr, "n_drafted": len(req.tokens)},
-                    )
-                )
+                payload = {"n_accepted": n_acc, "correction": corr, "n_drafted": len(req.tokens)}
+                if path is not None:
+                    payload["path"] = path  # accepted packed node indices
+                dn.send(Message("nav_result", req.session, req.msg.seq, max(n_acc, 1), payload))

@@ -1,0 +1,61 @@
+"""KV-cache container semantics: rollback metadata + snapshot copying.
+
+``snapshot`` used to copy leaves via ``a + 0``, which type-promotes bool
+leaves to int32 and leaves non-array leaves aliased; these tests pin the
+fixed dtype-preserving deep-copy behaviour.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.kvcache import (
+    KVCache,
+    init_kv_cache,
+    restore,
+    set_lengths,
+    snapshot,
+)
+
+
+def test_snapshot_preserves_bool_and_int_dtypes():
+    state = {
+        "mask": jnp.asarray([True, False, True]),
+        "steps": jnp.asarray([3, 5], jnp.int32),
+        "acc": jnp.asarray([1.5, 2.5], jnp.bfloat16),
+    }
+    snap = snapshot(state)
+    assert snap["mask"].dtype == jnp.bool_  # `a + 0` promoted this to int32
+    assert snap["steps"].dtype == jnp.int32
+    assert snap["acc"].dtype == jnp.bfloat16
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(snap[k]), np.asarray(state[k]))
+
+
+def test_snapshot_copies_numpy_leaves():
+    """Mutable (numpy) leaves must be deep-copied, not aliased: mutating the
+    original after the snapshot must not leak into the rollback point."""
+    state = {"h": np.zeros((2, 3), np.float32), "flags": np.asarray([True, False])}
+    snap = snapshot(state)
+    state["h"][0, 0] = 99.0
+    state["flags"][0] = False
+    assert float(np.asarray(snap["h"])[0, 0]) == 0.0
+    assert bool(np.asarray(snap["flags"])[0]) is True
+    assert snap["flags"].dtype == jnp.bool_
+
+
+def test_snapshot_restore_roundtrip_on_kv_cache():
+    cache = init_kv_cache(n_layers=2, batch=2, max_len=8, n_kv_heads=2, head_dim=4)
+    cache = set_lengths(cache, jnp.asarray([3, 5]))
+    snap = snapshot(cache)
+    assert isinstance(snap, KVCache)
+    assert snap.lengths.dtype == jnp.int32
+    restored = restore(snap)
+    np.testing.assert_array_equal(np.asarray(restored.lengths), [3, 5])
+    assert restored.k.shape == cache.k.shape
+
+
+def test_set_lengths_is_metadata_only():
+    cache = init_kv_cache(n_layers=1, batch=2, max_len=4, n_kv_heads=1, head_dim=2)
+    rolled = set_lengths(cache, np.asarray([1, 2], np.int64))
+    assert rolled.lengths.dtype == jnp.int32
+    assert rolled.k is cache.k and rolled.v is cache.v  # buffers untouched

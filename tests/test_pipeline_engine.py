@@ -94,3 +94,50 @@ def test_autotuner_improves_or_matches_default():
     tuned = eng.run(800).tpt
     assert tuned <= default * 1.15  # BO shouldn't be much worse, usually better
     assert eng.tuned_thresholds is not None
+
+
+# ----------------------------------------------------------------- trees ----
+
+
+def test_tree_round_accounting_invariants():
+    st = _run("tree", n=400)
+    assert st.accepted_tokens >= 400
+    assert st.nav_calls == st.rounds
+    assert st.accepted_tokens == st.accepted_drafts + st.rounds
+    # Tree bookkeeping: one node-count and one depth entry per round, depth
+    # bounded by the spec's tree_depth and acceptance bounded by depth.
+    assert len(st.tree_nodes) == st.rounds == len(st.tree_depths)
+    spec = make_framework("tree")
+    assert all(1 <= d <= spec.tree_depth for d in st.tree_depths)
+    assert all(n >= d for n, d in zip(st.tree_nodes, st.tree_depths))
+    assert st.mean_tree_nodes > 0 and st.mean_tree_depth > 0
+    assert st.tokens_per_nav == pytest.approx(st.accepted_tokens / st.nav_calls)
+
+
+def test_tree_raises_tokens_per_nav_on_hard_streams():
+    """The tree's reason to exist: on low-acceptance confidence streams the
+    sibling hedge commits strictly more tokens per verification call."""
+    hard = dict(p_hard=0.4, kappa=1.5, seed=42)
+    chain = PipelineEngine(
+        make_framework("pipesd", autotune=False),
+        ChannelModel(), CloudModel(), EdgeModel(), SyntheticSource(**hard), seed=7,
+    ).run(500)
+    tree = PipelineEngine(
+        make_framework("tree", autotune=False),
+        ChannelModel(), CloudModel(), EdgeModel(), SyntheticSource(**hard), seed=7,
+    ).run(500)
+    assert tree.tokens_per_nav > chain.tokens_per_nav
+
+
+def test_tree_autotuner_tunes_width_and_depth():
+    eng = PipelineEngine(
+        make_framework("tree"),  # autotune on → 4-dim search space
+        ChannelModel(), CloudModel(), EdgeModel(), SyntheticSource(seed=42), seed=7,
+        autotune_samples=6, autotune_tokens_per_sample=12,
+    )
+    eng.run(120)
+    assert eng.tuned_thresholds is not None
+    assert 1 <= eng.spec.tree_width <= 4
+    assert 2 <= eng.spec.tree_depth <= 10
+    # The tuned thresholds are live in the spec the tree rounds read.
+    assert eng.spec.trigger_kw["r1"] == pytest.approx(eng.tuned_thresholds[0])

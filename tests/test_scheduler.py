@@ -41,6 +41,27 @@ def test_dp_dominates_heuristics(alpha, beta, gamma, n):
         assert d <= pol(n, p).makespan + 1e-12
 
 
+nonneg_floats = st.floats(min_value=0.0, max_value=0.5, allow_nan=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(alpha=nonneg_floats, beta=nonneg_floats, gamma=nonneg_floats, n=st.integers(1, 12))
+def test_dp_matches_brute_force_degenerate_params(alpha, beta, gamma, n):
+    """Theorem 4.1 holds on the BOUNDARY of the parameter box too.
+
+    α = 0 (free startup), β = 0 (infinite bandwidth), and γ = 0 (instant
+    drafting) each collapse a term of the recurrence — the DP must still
+    agree with exhaustive search, and every App. F baseline must be no
+    better than DP at the same n.
+    """
+    p = CommParams(alpha, beta, gamma)
+    d = dp_schedule(n, p)
+    b = brute_force_schedule(n, p)
+    assert d.makespan == pytest.approx(b.makespan, abs=1e-12)
+    for pol in (greedy_schedule, immediate_schedule, no_early_upload_schedule):
+        assert pol(n, p).makespan >= b.makespan - 1e-12
+
+
 @settings(max_examples=40, deadline=None)
 @given(alpha=pos_floats, beta=pos_floats, gamma=pos_floats, n=st.integers(1, 24))
 def test_boundaries_partition_tokens(alpha, beta, gamma, n):

@@ -85,6 +85,64 @@ def test_batched_pads_non_divisible_vocab(impl):
         np.testing.assert_allclose(lp1, lp2, atol=1e-4)
 
 
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("V", [96, 130, 1500, 3000])
+def test_batched_non_pow2_vocabs(impl, V):
+    """Vocab padding must stay inert across block-split shapes: V smaller
+    than one block, barely over a block, and multi-block with a remainder."""
+    logits_seq, tokens_seq = _ragged_requests([3, 5], V, seed=V)
+    batched = spec_verify_batched(logits_seq, tokens_seq, impl=impl, block_v=128)
+    oracle = spec_verify_ragged_ref(logits_seq, tokens_seq)
+    for i, ((na1, c1, lp1), (na2, c2, lp2)) in enumerate(zip(batched, oracle)):
+        assert (na1, c1) == (na2, c2), f"V={V} session {i}"
+        np.testing.assert_allclose(lp1, lp2, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_batched_single_session(impl):
+    """B=1: bucketing still pads the batch row dim — the pad row (zero
+    logits, n_drafted=0) must not perturb the one real session."""
+    logits_seq, tokens_seq = _ragged_requests([5], 512, seed=9)
+    (na, corr, lp), = spec_verify_batched(logits_seq, tokens_seq, impl=impl, block_v=256)
+    (na2, corr2, lp2), = spec_verify_ragged_ref(logits_seq, tokens_seq)
+    assert (na, corr) == (na2, corr2)
+    np.testing.assert_allclose(lp, lp2, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_batched_all_rejected_round(impl):
+    """Every draft wrong: n_accepted = 0 and the correction is the target's
+    greedy token at position 0 for every session."""
+    V = 256
+    logits_seq, tokens_seq = [], []
+    for i, k in enumerate([4, 1, 7]):
+        lg = np.asarray(jax.random.normal(jax.random.fold_in(KEY, 50 + i), (k + 1, V)) * 3, np.float32)
+        greedy = np.argmax(lg, -1)
+        tokens_seq.append(np.asarray([(g + 1) % V for g in greedy[:k]], np.int32))  # never match
+        logits_seq.append(lg)
+    out = spec_verify_batched(logits_seq, tokens_seq, impl=impl, block_v=128)
+    for (na, corr, lp), lg in zip(out, logits_seq):
+        assert na == 0
+        assert corr == int(np.argmax(lg[0]))
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_batched_all_accepted_round(impl):
+    """Every draft matches the target's greedy choice: n_accepted = K_i and
+    the correction is the BONUS token (greedy of the extra row)."""
+    V = 256
+    ks = [2, 6, 3]
+    logits_seq, tokens_seq = [], []
+    for i, k in enumerate(ks):
+        lg = np.asarray(jax.random.normal(jax.random.fold_in(KEY, 80 + i), (k + 1, V)) * 3, np.float32)
+        logits_seq.append(lg)
+        tokens_seq.append(np.argmax(lg, -1)[:k].astype(np.int32))
+    out = spec_verify_batched(logits_seq, tokens_seq, impl=impl, block_v=128)
+    for (na, corr, lp), lg, k in zip(out, logits_seq, ks):
+        assert na == k
+        assert corr == int(np.argmax(lg[k]))
+
+
 def test_batched_rejects_bad_inputs():
     lg = np.zeros((4, 64), np.float32)
     with pytest.raises(ValueError):

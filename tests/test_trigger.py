@@ -74,6 +74,69 @@ def test_window_cap_forces_fire():
     assert fires == [False, False, False, True] * 2 + [False]
 
 
+def test_sequence_r1_update_all_accepted_vs_zero_accepted():
+    """App. G.3 Eq. (7) asymmetry: full acceptance halves R1 (longer drafts);
+    a zero-accepted round leaves R1 UNCHANGED (the rejected fraction is 1,
+    so the update is the identity) rather than runaway-raising it."""
+    t = SequenceThresholdTrigger(r1=0.4)
+    t.on_verify(8, 8)  # all accepted
+    assert t.r1 == pytest.approx(0.2)
+    t.on_verify(0, 8)  # zero accepted: frac = 1 → identity update
+    assert t.r1 == pytest.approx(0.2)
+    # Partial rejection raises R1 toward 1 (earlier NAV next round)...
+    t.on_verify(6, 8)
+    assert t.r1 == pytest.approx(0.8)
+    # ...but never to/past 1 (that would fire on every token forever).
+    for _ in range(50):
+        t.on_verify(7, 8)
+    assert t.r1 < 1.0
+    # And repeated full acceptance respects the runaway-window floor.
+    for _ in range(50):
+        t.on_verify(8, 8)
+    assert t.r1 >= 0.02
+    # A degenerate window must not divide by zero.
+    t.on_verify(0, 0)
+
+
+def test_window_cap_force_fires_exactly_at_window():
+    """The cap fires at EXACTLY N̂ observations — never at N̂−1, always at N̂,
+    and the count restarts after any fire (including inner-policy fires)."""
+    inner = DualThresholdTrigger(r1=0.0, r2=0.0)  # never fires on its own
+    t = WindowCapTrigger(inner, window=5)
+    for round_ in range(3):
+        for i in range(1, 5):
+            assert not t.observe(1.0), f"fired early at {i} (round {round_})"
+        assert t.observe(1.0), f"did not fire at N̂ (round {round_})"
+    # An inner fire resets the cap count: 2 observations, inner fire, then a
+    # full window must again be needed before the cap forces one.
+    t2 = WindowCapTrigger(DualThresholdTrigger(r1=0.0, r2=0.5), window=4)
+    assert not t2.observe(0.9)
+    assert t2.observe(0.1)  # inner (R2) fire at count 2
+    assert [t2.observe(0.9) for _ in range(4)] == [False, False, False, True]
+
+
+def test_dual_c1_resets_on_fire_for_both_rules():
+    """§3.3: C1 resets to 1 on EVERY fire — whether R1 or R2 tripped it —
+    and on explicit reset(); a non-firing observe accumulates the product."""
+    # R2 (single-token) fire: the tentative C1* must be discarded.
+    t = DualThresholdTrigger(r1=0.0, r2=0.5)
+    assert not t.observe(0.9)
+    assert t.c1 == pytest.approx(0.9)
+    assert t.observe(0.4)  # R2 fire
+    assert t.c1 == 1.0
+    # R1 (sequence) fire.
+    t2 = DualThresholdTrigger(r1=0.5, r2=0.0)
+    assert not t2.observe(0.8)
+    assert t2.observe(0.6)  # C1* = 0.48 ≤ 0.5
+    assert t2.c1 == 1.0
+    # After the reset the SAME confidence stream is accepted again — the
+    # fired round's history must not leak into the next round.
+    assert not t2.observe(0.8)
+    assert t2.c1 == pytest.approx(0.8)
+    t2.reset()
+    assert t2.c1 == 1.0
+
+
 def test_make_trigger_factory():
     for kind, kw in [("dual", dict(r1=0.5, r2=0.5)), ("fixed", dict(n=4)), ("token", dict(r=0.9)), ("sequence", dict(r1=0.3))]:
         t = make_trigger(kind, window=8, **kw)

@@ -63,6 +63,10 @@ class EnvironmentMonitor:
     # admitted batch size + queue depth at each dispatch.
     _verifier_batches: Deque[int] = field(default_factory=deque, init=False)
     _verifier_depths: Deque[int] = field(default_factory=deque, init=False)
+    # Paged-KV residency (models/paged_kv.py pool behind the verifier):
+    # distinct resident bytes + page-holding sessions at each dispatch.
+    _kv_bytes: Deque[float] = field(default_factory=deque, init=False)
+    _kv_sessions: Deque[int] = field(default_factory=deque, init=False)
     # Last parameters the consumers (DP/BO) were given.
     _committed: Optional[Tuple[float, float, float]] = field(default=None, init=False)
     _committed_tpt: Optional[float] = field(default=None, init=False)
@@ -92,6 +96,14 @@ class EnvironmentMonitor:
         while len(self._verifier_batches) > self.window:
             self._verifier_batches.popleft()
             self._verifier_depths.popleft()
+
+    def observe_kv(self, resident_bytes: float, resident_sessions: int) -> None:
+        """One KV-pool sample: distinct resident bytes + page-holding sessions."""
+        self._kv_bytes.append(float(resident_bytes))
+        self._kv_sessions.append(int(resident_sessions))
+        while len(self._kv_bytes) > self.window:
+            self._kv_bytes.popleft()
+            self._kv_sessions.popleft()
 
     # ----------------------------------------------------------- estimates --
     def missing_probe_sizes(self) -> List[int]:
@@ -128,6 +140,18 @@ class EnvironmentMonitor:
 
     def verifier_depths(self) -> List[int]:
         return list(self._verifier_depths)
+
+    def kv_resident_bytes(self) -> Optional[float]:
+        """Mean distinct resident KV bytes per dispatch; None when unobserved."""
+        if not self._kv_bytes:
+            return None
+        return float(np.mean(self._kv_bytes))
+
+    def kv_bytes_series(self) -> List[float]:
+        return list(self._kv_bytes)
+
+    def kv_sessions_series(self) -> List[int]:
+        return list(self._kv_sessions)
 
     # ------------------------------------------------------------ triggers --
     @staticmethod

@@ -85,6 +85,7 @@ class ChannelModel:
     # bandwidth_trace(t) -> (uplink_mbps, downlink_mbps)
 
     def up_cost(self, n_tokens: int, t: float) -> float:
+        """Uplink time for one n-token batch starting at simulated time t."""
         beta = self.beta_up
         if self.bandwidth_trace is not None:
             up, _ = self.bandwidth_trace(t)
@@ -92,6 +93,7 @@ class ChannelModel:
         return self.alpha_up + beta * n_tokens
 
     def dn_cost(self, n_tokens: int, t: float) -> float:
+        """Downlink time for an n-token NAV result at simulated time t."""
         beta = self.beta_dn
         if self.bandwidth_trace is not None:
             _, dn = self.bandwidth_trace(t)
@@ -99,6 +101,7 @@ class ChannelModel:
         return self.alpha_dn + beta * n_tokens
 
     def effective_beta_up(self, t: float) -> float:
+        """Per-token uplink slope at time t (trace-scaled when dynamic)."""
         if self.bandwidth_trace is None:
             return self.beta_up
         up, _ = self.bandwidth_trace(t)
@@ -118,6 +121,7 @@ def periodic_bandwidth_trace(
     dns = rng.uniform(*dn_range, size=4096)
 
     def trace(t: float) -> Tuple[float, float]:
+        """Return the (uplink, downlink) Mbps in effect at time ``t``."""
         i = min(int(t / period), 4095)
         return float(ups[i]), float(dns[i])
 
@@ -134,6 +138,7 @@ class CloudModel:
     p_active: float = 86.0  # GPU power while verifying [W] (A800, small batch)
 
     def verify_time(self, n_tokens: int) -> float:
+        """Seconds for one NAV call over n drafted tokens."""
         return self.t_verify + self.t_verify_per_token * n_tokens
 
     def verify_energy(self, n_tokens: int) -> float:
@@ -150,6 +155,7 @@ class EdgeModel:
     simulated_ghz: Optional[float] = None  # e.g. 2.5 (phone) / 1.2 (IoT)
 
     def effective_gamma(self) -> float:
+        """Per-token draft time, scaled for the emulated device tier."""
         if self.simulated_ghz is None:
             return self.gamma
         # Artificial delay of App. G.2: gamma · (real/sim − 1) extra per token.
@@ -165,6 +171,7 @@ class TokenSource:
     """Yields (confidence, would_be_accepted) pairs for successive drafts."""
 
     def next_token(self) -> Tuple[float, bool]:  # pragma: no cover - interface
+        """Return the next draft's (confidence, would-be-accepted) pair."""
         raise NotImplementedError
 
     def reset_round(self) -> None:
@@ -196,6 +203,7 @@ class SyntheticSource(TokenSource):
         self._rng = np.random.default_rng(self.seed)
 
     def next_token(self) -> Tuple[float, bool]:
+        """Draw one (confidence, accepted) sample from the mixture model."""
         if self._rng.random() < self.p_hard:
             conf = float(self._rng.beta(self.a_lo, self.b_lo))
         else:
@@ -216,12 +224,14 @@ class ReplaySource(TokenSource):
     _i: int = field(default=0, init=False)
 
     def next_token(self) -> Tuple[float, bool]:
+        """Replay the next recorded (confidence, accepted) pair (looping)."""
         conf, acc = self.stream[self._i % len(self.stream)]
         self._i += 1
         return float(conf), bool(acc)
 
     @classmethod
     def from_decoder_trace(cls, trace: List[dict], lane: int = 0) -> "ReplaySource":
+        """Flatten one lane of a ``SpecDecoder`` round trace into a stream."""
         stream: List[Tuple[float, bool]] = []
         for round_rec in trace:
             n_d = round_rec["n_drafted"][lane]
@@ -241,6 +251,8 @@ class ReplaySource(TokenSource):
 
 @dataclass(frozen=True)
 class FrameworkSpec:
+    """One method x mechanism configuration from the paper's Tables 1/6."""
+
     name: str
     trigger_kind: str  # 'dual' | 'fixed' | 'token' | 'sequence'
     trigger_kw: dict
@@ -274,6 +286,7 @@ FRAMEWORKS = {
 
 
 def make_framework(name: str, **overrides) -> FrameworkSpec:
+    """Look up a named FrameworkSpec, optionally overriding fields."""
     spec = FRAMEWORKS[name]
     return replace(spec, **overrides) if overrides else spec
 
@@ -285,6 +298,10 @@ def make_framework(name: str, **overrides) -> FrameworkSpec:
 
 @dataclass
 class RunStats:
+    """Every simulated/served quantity the paper's tables (and the serving
+    benchmarks) report, accumulated per run; see ``docs/benchmarks.md``
+    for a field-by-field reading guide."""
+
     accepted_tokens: int = 0  # accepted drafts + corrections (output tokens)
     drafted_tokens: int = 0
     accepted_drafts: int = 0
@@ -311,6 +328,13 @@ class RunStats:
     # actually reached (levels generated before prune/budget stopped it).
     tree_nodes: List[int] = field(default_factory=list)
     tree_depths: List[int] = field(default_factory=list)
+    # Paged target KV (models/paged_kv.py): per round (single-session
+    # simulation) or per dispatch (fleet serving), the pool's distinct
+    # resident bytes and page-holding session count; kv_cap_hits counts
+    # rounds whose cache growth the pool could not fully back.
+    kv_resident_bytes: List[float] = field(default_factory=list)
+    kv_resident_sessions: List[int] = field(default_factory=list)
+    kv_cap_hits: int = 0
 
     @property
     def tpt(self) -> float:
@@ -324,14 +348,17 @@ class RunStats:
 
     @property
     def verification_frequency(self) -> float:
+        """NAV calls per accepted token (Table 7)."""
         return self.nav_calls / max(self.accepted_tokens, 1)
 
     @property
     def mean_draft_length(self) -> float:
+        """Mean drafted tokens (chain) or nodes (tree) per round."""
         return float(np.mean(self.draft_lengths)) if self.draft_lengths else 0.0
 
     @property
     def acceptance_rate(self) -> float:
+        """Accepted drafts / drafted tokens (Table 7)."""
         return self.accepted_drafts / max(self.drafted_tokens, 1)
 
     @property
@@ -342,10 +369,12 @@ class RunStats:
 
     @property
     def mean_tree_nodes(self) -> float:
+        """Mean packed node count per tree round."""
         return float(np.mean(self.tree_nodes)) if self.tree_nodes else 0.0
 
     @property
     def mean_tree_depth(self) -> float:
+        """Mean tree depth actually drafted per tree round."""
         return float(np.mean(self.tree_depths)) if self.tree_depths else 0.0
 
     @property
@@ -354,7 +383,27 @@ class RunStats:
         return float(np.mean(self.verifier_batches)) if self.verifier_batches else 0.0
 
     @property
+    def mean_kv_resident_bytes(self) -> float:
+        """Mean distinct resident KV bytes across samples (sharing counted once)."""
+        return float(np.mean(self.kv_resident_bytes)) if self.kv_resident_bytes else 0.0
+
+    @property
+    def peak_kv_resident_bytes(self) -> float:
+        """High-water distinct resident KV bytes — the pool size that was needed."""
+        return float(np.max(self.kv_resident_bytes)) if self.kv_resident_bytes else 0.0
+
+    @property
+    def kv_bytes_per_session(self) -> float:
+        """Mean resident KV bytes per page-holding session (prefix sharing
+        makes this drop below a flat cache's ``max_len`` footprint)."""
+        if not self.kv_resident_bytes or not self.kv_resident_sessions:
+            return 0.0
+        sessions = float(np.mean(self.kv_resident_sessions))
+        return self.mean_kv_resident_bytes / max(sessions, 1e-9)
+
+    @property
     def mean_queue_depth(self) -> float:
+        """Mean verifier queue depth observed at admission time."""
         return float(np.mean(self.verifier_queue_depths)) if self.verifier_queue_depths else 0.0
 
     def nav_latency_quantiles(self) -> Tuple[float, float]:
@@ -365,6 +414,7 @@ class RunStats:
         return float(p50), float(p99)
 
     def summary(self) -> dict:
+        """Flatten the headline metrics into one dict (benchmark CSV rows)."""
         p50, p99 = self.nav_latency_quantiles()
         return dict(
             tpt_ms=self.tpt * 1e3,
@@ -386,6 +436,10 @@ class RunStats:
             tokens_per_nav=self.tokens_per_nav,
             mean_tree_nodes=self.mean_tree_nodes,
             mean_tree_depth=self.mean_tree_depth,
+            kv_resident_mb=self.mean_kv_resident_bytes / 1e6,
+            kv_peak_mb=self.peak_kv_resident_bytes / 1e6,
+            kv_bytes_per_session_mb=self.kv_bytes_per_session / 1e6,
+            kv_cap_hits=self.kv_cap_hits,
         )
 
 
@@ -418,6 +472,8 @@ class PipelineEngine:
         monitor: Optional[EnvironmentMonitor] = None,
         autotune_samples: int = 16,
         autotune_tokens_per_sample: int = 20,
+        kv_pool=None,  # Optional[models.paged_kv.PagedKVPool]
+        kv_session: int = 0,
     ):
         self.spec = spec
         self.channel = channel
@@ -425,6 +481,21 @@ class PipelineEngine:
         self.edge = edge
         self.source = source
         self.rng = np.random.default_rng(seed)
+        # Paged target-KV accounting (models/paged_kv.py): each round appends
+        # its K+1 verified cache positions and rolls back to the committed
+        # prefix, so RunStats carries true KV residency instead of the flat
+        # cache's constant sessions x max_len footprint.
+        self.kv_pool = kv_pool
+        self.kv_session = kv_session
+        if kv_pool is not None:
+            # Deferred so importing the sim engine alone never pulls the
+            # whole models package in; cached for the per-round except path.
+            from repro.models.paged_kv import BlockPoolExhausted
+
+            self._pool_exhausted = BlockPoolExhausted
+            if kv_session not in kv_pool.tables:
+                kv_pool.create(kv_session)
+            self._kv_committed = kv_pool.length(kv_session)
         self.window = window_init
         self.recent_draft_lens: List[int] = []
         self.monitor = monitor or EnvironmentMonitor()
@@ -447,6 +518,30 @@ class PipelineEngine:
             beta=self.channel.effective_beta_up(t),
             gamma=self.edge.effective_gamma(),
         )
+
+    def _kv_round(self, n_drafted: int, n_accepted: int) -> None:
+        """Model the verifier-side paged cache for one round.
+
+        Verification writes ``n_drafted + 1`` positions past the committed
+        prefix (plus a re-prefill gap if pages were reclaimed); rejection
+        rolls back to ``committed + n_accepted + 1``, releasing whole pages.
+        A pool too small to back the growth saturates (``kv_cap_hits``) —
+        the simulated analogue of the serving dispatcher parking the round.
+        """
+        pool = self.kv_pool
+        if pool is None:
+            return
+        sid = self.kv_session
+        need = self._kv_committed - pool.length(sid) + n_drafted + 1
+        try:
+            if need > 0:
+                pool.append(sid, need)
+        except self._pool_exhausted:
+            self.stats.kv_cap_hits += 1
+        self._kv_committed += n_accepted + 1
+        pool.rollback(sid, min(self._kv_committed, pool.length(sid)))
+        self.stats.kv_resident_bytes.append(pool.resident_bytes())
+        self.stats.kv_resident_sessions.append(pool.resident_sessions)
 
     def _plan_schedule(self, n_tokens: int, p: CommParams) -> Schedule:
         key = (self.spec.schedule_policy, n_tokens, round(p.alpha, 6), round(p.beta, 6), round(p.gamma, 6))
@@ -566,6 +661,7 @@ class PipelineEngine:
         self.stats.draft_lengths.append(n)
         self.stats.accepted_drafts += n_accepted
         self.stats.accepted_tokens += n_accepted + 1  # + corrected/bonus token
+        self._kv_round(n, n_accepted)
         self.trigger.on_verify(n_accepted, n)
         if isinstance(self.trigger, WindowCapTrigger):
             # Dynamic N̂: moving average of the last 100 draft lengths (§3.3).
@@ -704,6 +800,7 @@ class PipelineEngine:
         self.stats.tree_depths.append(depth_reached)
         self.stats.accepted_drafts += n_accepted
         self.stats.accepted_tokens += n_accepted + 1  # + corrected/bonus token
+        self._kv_round(n_nodes, n_accepted)
         self.trigger.on_verify(n_accepted, depth_reached)
         return n_nodes, n_accepted, full
 
@@ -735,6 +832,7 @@ class PipelineEngine:
         bo = BOAutotuner(bounds=bounds, seed=int(self.rng.integers(2**31)))
 
         def measure(r1: float, r2: float, w: float = 0.0, d: float = 0.0) -> float:
+            """Probe one threshold setting: TPT over a few simulated rounds."""
             overrides = dict(trigger_kind="dual", trigger_kw=dict(r1=r1, r2=r2), autotune=False)
             if tree:
                 overrides.update(tree_width=int(round(w)), tree_depth=int(round(d)))

@@ -9,6 +9,18 @@ live region for local-attention layers.
 
 Working set per step: H·hd (q) + 2·BK·H·hd (k,v) + H·BK (scores) floats —
 BK=512, H≤64, hd≤256 stays well under VMEM.
+
+**Paged variant** (``paged_decode_attention_pallas``): the KV cache lives in
+a global page pool (``models/paged_kv.py``) instead of one contiguous buffer
+per lane.  The grid stays (batch, pages-per-sequence), but the kv BlockSpec's
+index map reads the *block table* — scalar-prefetched via
+``pltpu.PrefetchScalarGridSpec`` so page ids are known before the kernel body
+runs — to DMA physical page ``table[b, g]`` where the flat kernel would load
+contiguous block ``g``.  With the page size matching the flat kernel's
+``block_k``, the two kernels stream identical values in identical order, so
+their outputs are bit-exact (pinned by ``tests/test_paged_attention.py``).
+Pad table entries must hold valid page ids (the pool pads with 0); their
+positions sit past ``lengths`` and are masked like any dead slot.
 """
 
 from __future__ import annotations
@@ -110,3 +122,102 @@ def decode_attention_pallas(
         compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.reshape(B, 1).astype(jnp.int32), q, k_cache, v_cache)
+
+
+def _paged_decode_kernel(
+    bt_ref,  # [B, G] i32 scalar-prefetch — physical page id per logical page
+    len_ref,  # [B] i32 scalar-prefetch — valid KV length per lane
+    q_ref,  # [1, H, hd]
+    k_ref,  # [1, bs, H, hd] — physical page bt[b, g]
+    v_ref,  # [1, bs, H, hd]
+    o_ref,  # [1, H, hd]
+    m_scr,  # [H] f32
+    l_scr,  # [H] f32
+    acc_scr,  # [H, hd] f32
+    *,
+    sm_scale: float,
+    window: int,
+    bs: int,
+    ng: int,
+):
+    b, g = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, hd]
+    k = k_ref[0].astype(jnp.float32)  # [bs, H, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.einsum("hd,khd->hk", q, k) * sm_scale  # [H, bs]
+    length = len_ref[b]
+    # Logical positions: page g covers [g*bs, (g+1)*bs) regardless of which
+    # physical page backs it — the table indirection is purely in the DMA.
+    k_pos = g * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = k_pos < length
+    valid = jnp.logical_and(valid, k_pos >= length - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.einsum("hk,khd->hd", p, v)
+    m_scr[...] = m_new
+
+    @pl.when(g == ng - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,  # [B, H, hd] — single-position queries
+    k_pages: jax.Array,  # [P, bs, H, hd]  (GQA-expanded by the wrapper)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [B, G] i32 physical page ids (pads = any valid id)
+    lengths: jax.Array,  # [B] i32 valid prefix per lane
+    *,
+    window: int = 1 << 30,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode over a paged KV pool: block-table gather via scalar prefetch.
+
+    Grid (B, G); kv page ``g`` of lane ``b`` streams from physical page
+    ``block_tables[b, g]`` — the BlockSpec index map reads the prefetched
+    table, so the DMA engine chases the indirection, not the kernel body.
+    """
+    B, H, hd = q.shape
+    P, bs, Hk, _ = k_pages.shape
+    if Hk != H:
+        raise ValueError(f"pages must be GQA-expanded: {Hk} heads vs {H} queries")
+    G = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _paged_decode_kernel, sm_scale=sm_scale, window=int(window), bs=bs, ng=G
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=(B, G),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, g, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bs, H, hd), lambda b, g, bt, ln: (bt[b, g], 0, 0, 0)),
+            pl.BlockSpec((1, bs, H, hd), lambda b, g, bt, ln: (bt[b, g], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, g, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages, v_pages)

@@ -1,4 +1,17 @@
-"""Jit'd wrapper for decode attention (GQA expansion + impl dispatch)."""
+"""Jit'd wrappers for decode attention (GQA expansion + impl dispatch).
+
+Two entries share one dispatch convention (``impl``: ``'ref'`` pure-JAX
+oracle, ``'interpret'`` Pallas interpret mode for CPU, ``'pallas'`` compiled
+TPU):
+
+* ``decode_attention`` — flat contiguous cache ``[B, S, Hkv, hd]``;
+* ``paged_decode_attention`` — global page pool ``[P, bs, Hkv, hd]`` +
+  per-lane block tables (``models/paged_kv.py``), the serving layout where
+  sessions share prefix pages copy-on-write.  Ragged python block tables are
+  padded through ``kernels.spec_verify.pad_block_tables`` (the same pow2
+  bucketing as the batched NAV entries, pad id 0 = valid page, masked by
+  ``lengths``).
+"""
 
 from __future__ import annotations
 
@@ -7,8 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import decode_attention_pallas
-from .ref import decode_attention_ref
+from ..spec_verify.ops import pad_block_tables
+from .kernel import decode_attention_pallas, paged_decode_attention_pallas
+from .ref import decode_attention_ref, paged_decode_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("window", "impl", "block_k"))
@@ -22,6 +36,7 @@ def decode_attention(
     impl: str = "interpret",
     block_k: int = 512,
 ) -> jax.Array:
+    """Single-position decode attention over a flat contiguous KV cache."""
     H = q.shape[1]
     n_kv = k_cache.shape[2]
     if n_kv != H:
@@ -31,4 +46,51 @@ def decode_attention(
         return decode_attention_ref(q, k_cache, v_cache, lengths, window=window)
     return decode_attention_pallas(
         q, k_cache, v_cache, lengths, window=window, block_k=block_k, interpret=(impl == "interpret")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def _paged_dispatch(q, k_pages, v_pages, block_tables, lengths, *, window, impl):
+    H = q.shape[1]
+    n_kv = k_pages.shape[2]
+    if n_kv != H:
+        k_pages = jnp.repeat(k_pages, H // n_kv, axis=2)
+        v_pages = jnp.repeat(v_pages, H // n_kv, axis=2)
+    if impl == "ref":
+        return paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, window=window)
+    return paged_decode_attention_pallas(
+        q, k_pages, v_pages, block_tables, lengths, window=window, interpret=(impl == "interpret")
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array,  # [B, H, hd]
+    k_pages: jax.Array,  # [P, bs, Hkv, hd]
+    v_pages: jax.Array,
+    block_tables,  # [B, G] int32 array, or B ragged python page-id lists
+    lengths: jax.Array,  # [B]
+    *,
+    window: int = 1 << 30,
+    impl: str = "interpret",
+    bucket: bool = True,
+) -> jax.Array:
+    """Single-position decode attention gathered through KV block tables.
+
+    ``block_tables`` may be a rectangular ``[B, G]`` int32 array (e.g. from
+    ``PagedKVPool.table(sid, pad_to=G)``) or ragged per-lane page-id lists,
+    which are padded here with the serving bucketing (``pad_block_tables``).
+    Bit-exact vs the flat entry on the same logical cache: ``impl='ref'``
+    by construction (page gather + flat oracle), Pallas impls by streaming
+    pages in the flat kernel's block order (``tests/test_paged_attention.py``).
+    """
+    if isinstance(block_tables, (list, tuple)):
+        block_tables = pad_block_tables(block_tables, batch_pad=len(block_tables), bucket=bucket)
+    return _paged_dispatch(
+        q,
+        k_pages,
+        v_pages,
+        jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(lengths, jnp.int32),
+        window=window,
+        impl=impl,
     )

@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for single-position decode attention."""
+"""Pure-jnp oracles for single-position decode attention (flat and paged).
+
+The paged oracle gathers physical pages through the block table into the
+flat layout and reuses the flat oracle verbatim, so flat-vs-paged parity is
+bit-exact *by construction*: identical values flow through identical
+arithmetic (`tests/test_paged_attention.py` pins this with
+``np.testing.assert_array_equal``).
+"""
 
 from __future__ import annotations
 
@@ -24,3 +31,34 @@ def decode_attention_ref(
     s = jnp.where(valid[:, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_gather(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Assemble the flat cache view from physical pages.
+
+    ``pages: [P, bs, H, hd]`` and ``block_tables: [B, G]`` (int32 physical
+    page ids; logical position ``p`` of lane ``b`` lives in page
+    ``block_tables[b, p // bs]`` at slot ``p % bs``) gather to
+    ``[B, G*bs, H, hd]``.  Pad table entries may hold any *valid* page id
+    (the pool pads with 0): their positions sit past ``lengths`` and are
+    masked by the attention oracle/kernel.
+    """
+    B, G = block_tables.shape
+    P, bs, H, hd = pages.shape
+    flat = jnp.take(pages, block_tables.reshape(-1), axis=0)  # [B*G, bs, H, hd]
+    return flat.reshape(B, G * bs, H, hd)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,  # [B, H, hd]
+    k_pages: jax.Array,  # [P, bs, H, hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [B, G] int32 physical page ids
+    lengths: jax.Array,  # [B]
+    *,
+    window: int = 1 << 30,
+) -> jax.Array:
+    """Paged oracle: page gather + the flat oracle — bit-exact vs flat."""
+    k = paged_gather(k_pages, block_tables)
+    v = paged_gather(v_pages, block_tables)
+    return decode_attention_ref(q, k, v, lengths, window=window)

@@ -1,6 +1,7 @@
 from . import ops, ref
 from .kernel import spec_verify_pallas, spec_verify_tree_pallas
 from .ops import (
+    pad_block_tables,
     spec_verify,
     spec_verify_batched,
     spec_verify_tree,
@@ -16,6 +17,7 @@ from .ref import (
 )
 
 __all__ = [
+    "pad_block_tables",
     "spec_verify",
     "spec_verify_batched",
     "spec_verify_pallas",

@@ -17,7 +17,7 @@ before returning.
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +45,39 @@ def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
+def pad_block_tables(
+    tables_seq: Sequence, *, batch_pad: int, bucket: bool = True, pad_id: int = 0
+) -> np.ndarray:
+    """Pad ragged per-session KV block tables into one ``[Bp, Gp]`` int32 array.
+
+    The serving-side companion of the batched verify entries: a paged target
+    forward (``kernels.decode_attention`` paged path) consumes one block
+    table per admitted session, and those tables are ragged exactly like the
+    draft lengths.  They are padded with the SAME pow2 bucketing as the
+    logits batch (``batch_pad`` = the entry's ``Bp``) so a serving process
+    compiles one shape family for the fused forward+verify dispatch.  Pad
+    entries carry ``pad_id`` (default 0 — a *valid* physical page id: paged
+    attention masks pad positions by ``lengths``, so gathered garbage is
+    inert; see ``docs/kernels.md``).
+    """
+    gmax = max((len(t) for t in tables_seq), default=0)
+    Gp = max(_next_pow2(gmax) if bucket else gmax, 1)
+    out = np.full((batch_pad, Gp), pad_id, np.int32)
+    for i, t in enumerate(tables_seq):
+        if len(t):
+            out[i, : len(t)] = np.asarray(t, np.int32)
+    return out
+
+
 def spec_verify_batched(
-    logits_seq: Sequence,  # B entries of [K_i+1, V] arrays
+    logits_seq: Optional[Sequence],  # B entries of [K_i+1, V]; None with batched_logits_fn
     tokens_seq: Sequence,  # B entries of length-K_i int sequences
     *,
     impl: str = "ref",
     block_v: int = 2048,
     bucket: bool = True,
+    block_tables_seq: Optional[Sequence] = None,  # B ragged KV block tables
+    batched_logits_fn: Optional[Callable] = None,
 ) -> List[Tuple[int, int, np.ndarray]]:
     """Verify B sessions with ragged draft lengths in ONE launch.
 
@@ -59,19 +85,52 @@ def spec_verify_batched(
     order.  With ``bucket=True`` the batch and draft dimensions are padded to
     the next power of two (padding rows carry ``n_drafted = 0`` and are
     discarded), bounding the number of compiled shapes under serving load.
+
+    **Paged target forward.**  With ``batched_logits_fn`` the entry owns the
+    whole fused dispatch: it pads tokens, per-session ``n_drafted``, and the
+    sessions' KV ``block_tables_seq`` (same ``Bp`` bucketing, via
+    ``pad_block_tables``), then calls
+    ``batched_logits_fn(tokens[Bp, Kp], n_drafted[Bp], tables[Bp, Gp]|None)``
+    for one batched ``[Bp, Kp+1, V]`` target forward (paged attention over
+    the block tables in a real deployment) before the NAV reduction —
+    instead of accepting per-session precomputed ``logits_seq``.
     """
-    if len(logits_seq) != len(tokens_seq) or not logits_seq:
-        raise ValueError("need equal, non-empty logits/tokens sequences")
+    if batched_logits_fn is None:
+        if logits_seq is None or len(logits_seq) != len(tokens_seq) or not len(tokens_seq):
+            raise ValueError("need equal, non-empty logits/tokens sequences")
+    elif logits_seq is not None:
+        raise ValueError("pass logits_seq OR batched_logits_fn, not both")
+    if block_tables_seq is not None and len(block_tables_seq) != len(tokens_seq):
+        raise ValueError("need one block table per session")
     ks = [len(t) for t in tokens_seq]
-    for lg, k in zip(logits_seq, ks):
-        if lg.ndim != 2 or lg.shape[0] != k + 1:
-            raise ValueError(f"logits must be [K_i+1, V]; got {lg.shape} for K_i={k}")
-    V = logits_seq[0].shape[-1]
-    if any(lg.shape[-1] != V for lg in logits_seq):
-        raise ValueError("all sessions must share one (padded) vocab size")
-    B, kmax = len(ks), max(max(ks), 1)
+    B, kmax = len(ks), max(max(ks, default=0), 1)
     Bp = _next_pow2(B) if bucket else B
     Kp = _next_pow2(kmax) if bucket else kmax
+    tokens = np.zeros((Bp, Kp), np.int32)
+    nd = np.zeros((Bp,), np.int32)
+    for i, (tk, k) in enumerate(zip(tokens_seq, ks)):
+        tokens[i, :k] = np.asarray(tk, np.int32)
+        nd[i] = k
+
+    if batched_logits_fn is not None:
+        tables = (
+            pad_block_tables(block_tables_seq, batch_pad=Bp, bucket=bucket)
+            if block_tables_seq is not None
+            else None
+        )
+        full = np.asarray(batched_logits_fn(tokens, nd, tables), np.float32)
+        if full.shape[:2] != (Bp, Kp + 1):
+            raise ValueError(f"batched_logits_fn must return [Bp, Kp+1, V]; got {full.shape}")
+        logits_rows = full
+        V = full.shape[-1]
+    else:
+        for lg, k in zip(logits_seq, ks):
+            if lg.ndim != 2 or lg.shape[0] != k + 1:
+                raise ValueError(f"logits must be [K_i+1, V]; got {lg.shape} for K_i={k}")
+        V = logits_seq[0].shape[-1]
+        if any(lg.shape[-1] != V for lg in logits_seq):
+            raise ValueError("all sessions must share one (padded) vocab size")
+        logits_rows = None
 
     # Pallas needs V % block_v == 0: pad the vocab with -inf lanes (inert —
     # they never win the argmax, add 0 to the logsumexp, and no draft token
@@ -81,12 +140,11 @@ def spec_verify_batched(
     logits = np.zeros((Bp, Kp + 1, Vp), np.float32)
     if Vp > V:
         logits[:, :, V:] = -1e30  # only the pad lanes need the -inf sweep
-    tokens = np.zeros((Bp, Kp), np.int32)
-    nd = np.zeros((Bp,), np.int32)
-    for i, (lg, tk, k) in enumerate(zip(logits_seq, tokens_seq, ks)):
-        logits[i, : k + 1, :V] = np.asarray(lg, np.float32)
-        tokens[i, :k] = np.asarray(tk, np.int32)
-        nd[i] = k
+    if logits_rows is not None:
+        logits[:, :, :V] = logits_rows
+    else:
+        for i, (lg, k) in enumerate(zip(logits_seq, ks)):
+            logits[i, : k + 1, :V] = np.asarray(lg, np.float32)
 
     na, corr, logp = spec_verify(
         jnp.asarray(logits), jnp.asarray(tokens), jnp.asarray(nd), impl=impl, block_v=bv
@@ -142,13 +200,15 @@ def spec_verify_tree(
 
 
 def spec_verify_tree_batched(
-    logits_seq: Sequence,  # B entries of [N_i+1, V] arrays
+    logits_seq: Optional[Sequence],  # B entries of [N_i+1, V]; None with batched_logits_fn
     tokens_seq: Sequence,  # B entries of length-N_i int sequences
     parents_seq: Sequence,  # B entries of length-N_i int sequences
     *,
     impl: str = "ref",
     block_v: int = 2048,
     bucket: bool = True,
+    block_tables_seq: Optional[Sequence] = None,  # B ragged KV block tables
+    batched_logits_fn: Optional[Callable] = None,
 ) -> List[Tuple[int, List[int], int, np.ndarray]]:
     """Verify B sessions' ragged token TREES in ONE padded launch.
 
@@ -157,38 +217,71 @@ def spec_verify_tree_batched(
     (length ``n_accepted``).  Trees are padded by NODE count with the same
     pow2 bucketing as the chain entry; pad nodes carry ``parents = -1`` and
     pad rows ``n_nodes = 0``, both provably inert (kernel.py invariants).
+
+    Like the chain entry, ``batched_logits_fn`` replaces per-session
+    precomputed logits with ONE batched target forward over the padded
+    arrays: ``batched_logits_fn(tokens[Bp, Np], parents[Bp, Np],
+    n_nodes[Bp], tables[Bp, Gp]|None) -> [Bp, Np+1, V]`` — an
+    ancestor-masked paged-attention forward in a real deployment, with the
+    sessions' KV ``block_tables_seq`` padded by ``pad_block_tables`` under
+    the same ``Bp`` bucketing.
     """
-    if not (len(logits_seq) == len(tokens_seq) == len(parents_seq)) or not logits_seq:
-        raise ValueError("need equal, non-empty logits/tokens/parents sequences")
+    if not (len(tokens_seq) == len(parents_seq)) or not len(tokens_seq):
+        raise ValueError("need equal, non-empty tokens/parents sequences")
+    if batched_logits_fn is None:
+        if logits_seq is None or len(logits_seq) != len(tokens_seq):
+            raise ValueError("need equal, non-empty logits/tokens/parents sequences")
+    elif logits_seq is not None:
+        raise ValueError("pass logits_seq OR batched_logits_fn, not both")
+    if block_tables_seq is not None and len(block_tables_seq) != len(tokens_seq):
+        raise ValueError("need one block table per session")
     ns = [len(t) for t in tokens_seq]
-    for lg, pr, n in zip(logits_seq, parents_seq, ns):
-        if lg.ndim != 2 or lg.shape[0] != n + 1:
-            raise ValueError(f"logits must be [N_i+1, V]; got {lg.shape} for N_i={n}")
+    for pr, n in zip(parents_seq, ns):
         if len(pr) != n:
             raise ValueError(f"parents length {len(pr)} != node count {n}")
         for i, p in enumerate(pr):
             if not (-1 <= int(p) < i):
                 raise ValueError(f"parents must be topologically packed; parents[{i}]={p}")
-    V = logits_seq[0].shape[-1]
-    if any(lg.shape[-1] != V for lg in logits_seq):
-        raise ValueError("all sessions must share one (padded) vocab size")
     B, nmax = len(ns), max(max(ns), 1)
     Bp = _next_pow2(B) if bucket else B
     Np = _next_pow2(nmax) if bucket else nmax
+    tokens = np.zeros((Bp, Np), np.int32)
+    parents = np.full((Bp, Np), -1, np.int32)
+    nn = np.zeros((Bp,), np.int32)
+    for i, (tk, pr, n) in enumerate(zip(tokens_seq, parents_seq, ns)):
+        tokens[i, :n] = np.asarray(tk, np.int32)
+        parents[i, :n] = np.asarray(pr, np.int32)
+        nn[i] = n
+
+    if batched_logits_fn is not None:
+        tables = (
+            pad_block_tables(block_tables_seq, batch_pad=Bp, bucket=bucket)
+            if block_tables_seq is not None
+            else None
+        )
+        full = np.asarray(batched_logits_fn(tokens, parents, nn, tables), np.float32)
+        if full.shape[:2] != (Bp, Np + 1):
+            raise ValueError(f"batched_logits_fn must return [Bp, Np+1, V]; got {full.shape}")
+        V = full.shape[-1]
+    else:
+        for lg, n in zip(logits_seq, ns):
+            if lg.ndim != 2 or lg.shape[0] != n + 1:
+                raise ValueError(f"logits must be [N_i+1, V]; got {lg.shape} for N_i={n}")
+        V = logits_seq[0].shape[-1]
+        if any(lg.shape[-1] != V for lg in logits_seq):
+            raise ValueError("all sessions must share one (padded) vocab size")
+        full = None
 
     bv = min(block_v, _next_pow2(V))
     Vp = -(-V // bv) * bv
     logits = np.zeros((Bp, Np + 1, Vp), np.float32)
     if Vp > V:
         logits[:, :, V:] = -1e30  # inert pad lanes (see chain entry)
-    tokens = np.zeros((Bp, Np), np.int32)
-    parents = np.full((Bp, Np), -1, np.int32)
-    nn = np.zeros((Bp,), np.int32)
-    for i, (lg, tk, pr, n) in enumerate(zip(logits_seq, tokens_seq, parents_seq, ns)):
-        logits[i, : n + 1, :V] = np.asarray(lg, np.float32)
-        tokens[i, :n] = np.asarray(tk, np.int32)
-        parents[i, :n] = np.asarray(pr, np.int32)
-        nn[i] = n
+    if full is not None:
+        logits[:, :, :V] = full
+    else:
+        for i, (lg, n) in enumerate(zip(logits_seq, ns)):
+            logits[i, : n + 1, :V] = np.asarray(lg, np.float32)
 
     na, best, corr, logp = spec_verify_tree(
         jnp.asarray(logits), jnp.asarray(tokens), jnp.asarray(parents), jnp.asarray(nn),

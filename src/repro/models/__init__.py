@@ -2,14 +2,18 @@
 
 from .config import EncoderConfig, GLOBAL_WINDOW, ModelConfig, MoEConfig, padded_vocab
 from .kvcache import KVCache, init_kv_cache, set_lengths, snapshot
+from .paged_kv import BlockPoolExhausted, BlockTable, PagedKVPool
 from . import encdec, layers, rglru, transformer, xlstm, zoo
 
 __all__ = [
+    "BlockPoolExhausted",
+    "BlockTable",
     "EncoderConfig",
     "GLOBAL_WINDOW",
     "KVCache",
     "ModelConfig",
     "MoEConfig",
+    "PagedKVPool",
     "encdec",
     "init_kv_cache",
     "layers",

@@ -1,4 +1,4 @@
-"""KV-cache and recurrent-state containers for serving.
+"""Flat KV-cache and recurrent-state containers for serving.
 
 Caches carry *per-lane* lengths so speculative-decoding rollback (truncating
 rejected drafts) is a pure metadata update: entries past ``lengths[b]`` are
@@ -8,6 +8,19 @@ the caches scan-compatible (the layer dim is the scan axis).
 Recurrent architectures (RG-LRU, xLSTM) cannot truncate state by index; they
 roll back via round-granular *snapshots* (``snapshot``/``restore``) — the
 stateful-draft extension described in DESIGN.md §7.
+
+This is the *flat* layout: one contiguous ``max_len`` buffer per lane, which
+is simple and scan-friendly but reserves ``batch x max_len`` slots no matter
+how short the live prefixes are.  Multi-session serving instead uses the
+*paged* layout (``models/paged_kv.py``): a global block pool with per-session
+block tables and copy-on-write prefix sharing, consumed by the paged
+decode-attention kernel.  Example of the rollback metadata contract::
+
+    >>> import jax.numpy as jnp
+    >>> cache = init_kv_cache(n_layers=1, batch=2, max_len=8, n_kv_heads=1, head_dim=4)
+    >>> cache = set_lengths(cache, jnp.asarray([5, 3]))
+    >>> [int(x) for x in cache.lengths]   # O(1) truncation, buffers untouched
+    [5, 3]
 """
 
 from __future__ import annotations
@@ -21,16 +34,20 @@ __all__ = ["KVCache", "RecurrentState", "init_kv_cache", "set_lengths", "snapsho
 
 
 class KVCache(NamedTuple):
+    """Flat layer-stacked KV cache with per-lane valid lengths."""
+
     k: jax.Array  # [L, B, S_max, H_kv, head_dim]
     v: jax.Array  # [L, B, S_max, H_kv, head_dim]
     lengths: jax.Array  # [B] int32 — valid prefix length per lane
 
     @property
     def max_len(self) -> int:
+        """Token capacity reserved per lane (the flat layout's fixed cost)."""
         return self.k.shape[2]
 
 
 def init_kv_cache(n_layers: int, batch: int, max_len: int, n_kv_heads: int, head_dim: int, dtype=jnp.float32) -> KVCache:
+    """Allocate a zeroed flat cache of ``batch x max_len`` token slots."""
     shape = (n_layers, batch, max_len, n_kv_heads, head_dim)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), jnp.zeros((batch,), jnp.int32))
 
@@ -59,4 +76,5 @@ def snapshot(state: Any) -> Any:
 
 
 def restore(snapshot_state: Any) -> Any:
+    """Return the rollback point taken by ``snapshot`` (pure functional)."""
     return snapshot_state

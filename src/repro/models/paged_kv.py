@@ -1,0 +1,467 @@
+"""Paged KV-cache: a global block pool with copy-on-write prefix sharing.
+
+The flat ``KVCache`` (``models/kvcache.py``) allocates every session a
+contiguous ``[L, 1, max_len, Hkv, hd]`` buffer, so verifier memory scales with
+``sessions x max_len`` no matter how short the actual prefixes are.  This
+module replaces that with the standard production layout (vLLM-style):
+
+* **Physical pages.**  KV storage is a pool of ``num_blocks`` fixed-size
+  pages of ``block_size`` token slots each; a page spans all layers
+  (``k_pages/v_pages: [L, num_blocks, block_size, Hkv, hd]``).
+* **Block tables.**  A session's logical cache is an ordered list of int32
+  physical page ids plus a valid ``length``; logical position ``p`` lives in
+  page ``table[p // block_size]`` at slot ``p % block_size``.  Attention
+  kernels gather through the table (``kernels.decode_attention``'s paged
+  entry) instead of assuming contiguity.
+* **Copy-on-write prefix sharing.**  ``fork`` gives a child session the
+  parent's page ids and bumps refcounts — sessions verified from a common
+  system/prompt prefix reference the SAME physical pages.  The first append
+  into a shared partial tail page copies just that page (``cow_copies``
+  stat); full shared pages stay shared forever.
+* **Refcounted free + LRU reuse.**  ``rollback`` (speculative-decoding
+  rejection, tree ``replay_path`` anchor restore) releases whole pages past
+  the committed length instead of deep-copying buffers; pages return to an
+  LRU free list (oldest-freed reused first).  ``evict``/``evict_lru``
+  reclaim idle sessions' pages under pool pressure (the victim re-prefills
+  on its next round).
+
+The pool runs in two modes: **metadata-only** (default — no tensor storage;
+used by the serving dispatcher and the simulation engine for admission and
+byte accounting) and **tensor mode** (``n_layers > 0`` — real jax page
+buffers written through ``write`` and consumed by the paged attention
+kernel).
+
+Example (metadata mode; 4-token pages)::
+
+    >>> pool = PagedKVPool(num_blocks=8, block_size=4)
+    >>> pool.create(0)
+    >>> pool.append(0, 6)        # 6 tokens -> 2 pages (one partial)
+    >>> pool.used_blocks
+    2
+    >>> pool.fork(0, 1)          # CoW prefix share: no new pages
+    >>> pool.used_blocks
+    2
+    >>> pool.append(1, 1)        # first write into the shared tail page
+    >>> pool.used_blocks         # ... copies it (CoW divergence)
+    3
+    >>> pool.rollback(1, 2)      # reject back to 2 tokens: page freed
+    1
+    >>> pool.used_blocks
+    2
+    >>> pool.stats["cow_copies"]
+    1
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockPoolExhausted", "BlockTable", "PagedKVPool"]
+
+
+class BlockPoolExhausted(RuntimeError):
+    """Raised when an allocation needs more physical pages than are free."""
+
+
+@dataclass
+class BlockTable:
+    """Per-session page list + valid length (the logical->physical map)."""
+
+    blocks: List[int] = field(default_factory=list)
+    length: int = 0
+    reserved: bool = False  # flat-mode contiguous reservation (no CoW/free)
+    last_touch: int = 0  # pool clock at last append/rollback (LRU eviction key)
+
+    def capacity(self, block_size: int) -> int:
+        """Token slots currently backed by physical pages."""
+        return len(self.blocks) * block_size
+
+
+class PagedKVPool:
+    """Global physical-page pool with per-session block tables.
+
+    Parameters
+    ----------
+    num_blocks, block_size:
+        Pool geometry — ``num_blocks`` pages of ``block_size`` token slots.
+    n_layers, n_kv_heads, head_dim, dtype:
+        Tensor mode: when ``n_layers > 0``, real page buffers
+        ``k_pages/v_pages: [L, num_blocks, block_size, Hkv, hd]`` are
+        allocated and ``write`` scatters tokens into them.
+    bytes_per_token:
+        Byte-accounting override for metadata mode.  Tensor mode derives it
+        from the KV geometry (k+v); metadata mode defaults to 1 so
+        ``resident_bytes`` counts token slots.
+    """
+
+    def __init__(
+        self,
+        num_blocks: int,
+        block_size: int,
+        *,
+        n_layers: int = 0,
+        n_kv_heads: int = 0,
+        head_dim: int = 0,
+        dtype=jnp.float32,
+        bytes_per_token: Optional[int] = None,
+    ):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("num_blocks and block_size must be >= 1")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.refcounts = np.zeros(self.num_blocks, np.int32)
+        # LRU free list: freed pages append right, allocation pops left.
+        self._free: Deque[int] = deque(range(self.num_blocks))
+        self.tables: Dict[int, BlockTable] = {}
+        self._clock = 0
+        self._resident = 0  # sessions holding >=1 page, maintained incrementally
+        self.stats = {"allocs": 0, "frees": 0, "cow_copies": 0, "evictions": 0}
+        # Host seconds spent in metadata mutations (append/rollback/fork/
+        # reserve/evict) — the pool's entire latency cost on the serving
+        # path, so benchmarks can bound the TPT impact of paging.
+        self.op_seconds = 0.0
+        self.max_used_blocks = 0
+        self.max_resident_sessions = 0
+        self.k_pages: Optional[jax.Array] = None
+        self.v_pages: Optional[jax.Array] = None
+        if n_layers > 0:
+            shape = (n_layers, self.num_blocks, self.block_size, n_kv_heads, head_dim)
+            self.k_pages = jnp.zeros(shape, dtype)
+            self.v_pages = jnp.zeros(shape, dtype)
+            itemsize = jnp.dtype(dtype).itemsize
+            self.bytes_per_token = 2 * n_layers * n_kv_heads * head_dim * itemsize
+        else:
+            self.bytes_per_token = int(bytes_per_token) if bytes_per_token else 1
+        self.bytes_per_block = self.bytes_per_token * self.block_size
+
+    # ------------------------------------------------------------ geometry --
+    @property
+    def free_blocks(self) -> int:
+        """Pages currently on the free list."""
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Distinct pages referenced by at least one session."""
+        return self.num_blocks - len(self._free)
+
+    @property
+    def resident_sessions(self) -> int:
+        """Sessions currently holding at least one page (O(1) counter)."""
+        return self._resident
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to back ``n_tokens`` from an empty table."""
+        return -(-max(int(n_tokens), 0) // self.block_size)
+
+    def blocks_needed(self, session: int, n_tokens: int) -> int:
+        """Fresh pages an ``append(session, n_tokens)`` would allocate.
+
+        Counts the CoW copy of a shared partial tail page, so admission
+        control can gate on the exact allocation the append will perform.
+        """
+        t = self._table(session)
+        need = self.blocks_for(t.length + n_tokens) - len(t.blocks)
+        if n_tokens > 0 and self._tail_is_shared(t):
+            need += 1  # the append CoW-copies the shared tail page
+        return max(need, 0)
+
+    def can_append(self, session: int, n_tokens: int) -> bool:
+        """True iff ``append(session, n_tokens)`` would not exhaust the pool."""
+        t = self._table(session)
+        if t.reserved:
+            return t.length + int(n_tokens) <= t.capacity(self.block_size)
+        return self.blocks_needed(session, n_tokens) <= self.free_blocks
+
+    # ---------------------------------------------------------- allocation --
+    def _table(self, session: int) -> BlockTable:
+        if session not in self.tables:
+            raise KeyError(f"unknown session {session}")
+        return self.tables[session]
+
+    def _tail_is_shared(self, t: BlockTable) -> bool:
+        if t.reserved or not t.blocks or t.length % self.block_size == 0:
+            return False  # no partial tail page to write into
+        return int(self.refcounts[t.blocks[-1]]) > 1
+
+    def _alloc_page(self) -> int:
+        if not self._free:
+            raise BlockPoolExhausted(f"pool of {self.num_blocks} pages exhausted")
+        page = self._free.popleft()
+        self.refcounts[page] = 1
+        self.stats["allocs"] += 1
+        return page
+
+    def _decref(self, page: int) -> None:
+        self.refcounts[page] -= 1
+        if self.refcounts[page] == 0:
+            self._free.append(page)  # LRU: most recently freed goes last
+            self.stats["frees"] += 1
+
+    def _touch(self, t: BlockTable) -> None:
+        self._clock += 1
+        t.last_touch = self._clock
+        self.max_used_blocks = max(self.max_used_blocks, self.used_blocks)
+        self.max_resident_sessions = max(self.max_resident_sessions, self.resident_sessions)
+
+    def create(self, session: int) -> None:
+        """Register an empty session (no pages held until ``append``)."""
+        if session in self.tables:
+            raise ValueError(f"session {session} already exists")
+        self.tables[session] = BlockTable()
+
+    def fork(self, parent: int, child: int) -> None:
+        """Copy-on-write fork: ``child`` shares all of ``parent``'s pages.
+
+        No pages are allocated; every shared page's refcount is bumped.  The
+        first append into a shared *partial* tail page copies it (see
+        ``append``); full shared pages are never copied.
+        """
+        t0 = time.perf_counter()
+        p = self._table(parent)
+        if child in self.tables:
+            raise ValueError(f"session {child} already exists")
+        self.tables[child] = BlockTable(blocks=list(p.blocks), length=p.length)
+        for page in p.blocks:
+            self.refcounts[page] += 1
+        if p.blocks:
+            self._resident += 1
+        self._touch(self.tables[child])
+        self.op_seconds += time.perf_counter() - t0
+
+    def reserve(self, session: int, max_tokens: int) -> None:
+        """Flat-mode baseline: contiguously reserve pages for ``max_tokens``.
+
+        Models the flat ``KVCache``'s up-front ``max_len`` allocation inside
+        the same pool accounting, so flat-vs-paged residency is an
+        apples-to-apples comparison.  Reserved tables never share, CoW, or
+        release pages on rollback — exactly the flat cache's behaviour.
+        """
+        t0 = time.perf_counter()
+        t = self._table(session)
+        if t.blocks:
+            raise ValueError(f"session {session} already holds pages")
+        need = self.blocks_for(max_tokens)
+        if need > self.free_blocks:
+            raise BlockPoolExhausted(
+                f"flat reservation of {need} pages exceeds {self.free_blocks} free"
+            )
+        t.blocks = [self._alloc_page() for _ in range(need)]
+        t.reserved = True
+        if t.blocks:
+            self._resident += 1
+        self._touch(t)
+        self.op_seconds += time.perf_counter() - t0
+
+    def append(self, session: int, n_tokens: int) -> None:
+        """Extend a session by ``n_tokens`` slots, allocating pages on demand.
+
+        If the session's tail page is partial *and* shared (post-``fork``),
+        the tail is first copied to a fresh page — copy-on-write divergence:
+        the writer pays one page copy, the other holders keep the original.
+        Raises ``BlockPoolExhausted`` (leaving the table untouched) when the
+        pool cannot back the growth; callers park or evict and retry.
+        """
+        t0 = time.perf_counter()
+        t = self._table(session)
+        n_tokens = int(n_tokens)
+        if n_tokens <= 0:
+            return
+        if t.reserved:
+            if t.length + n_tokens > t.capacity(self.block_size):
+                raise BlockPoolExhausted(
+                    f"flat reservation of session {session} overflows at "
+                    f"{t.length + n_tokens} tokens"
+                )
+            t.length += n_tokens
+            self._touch(t)
+            self.op_seconds += time.perf_counter() - t0
+            return
+        if self.blocks_needed(session, n_tokens) > self.free_blocks:
+            raise BlockPoolExhausted(
+                f"append of {n_tokens} tokens needs "
+                f"{self.blocks_needed(session, n_tokens)} pages, "
+                f"{self.free_blocks} free"
+            )
+        if self._tail_is_shared(t):
+            old = t.blocks[-1]
+            new = self._alloc_page()
+            self._copy_page(old, new)
+            self.stats["cow_copies"] += 1
+            t.blocks[-1] = new
+            self._decref(old)
+        had_pages = bool(t.blocks)
+        while t.capacity(self.block_size) < t.length + n_tokens:
+            t.blocks.append(self._alloc_page())
+        if not had_pages and t.blocks:
+            self._resident += 1
+        t.length += n_tokens
+        self._touch(t)
+        self.op_seconds += time.perf_counter() - t0
+
+    def rollback(self, session: int, new_length: int) -> int:
+        """Truncate to ``new_length`` tokens, releasing whole trailing pages.
+
+        The speculative-decoding rejection path: instead of deep-copying
+        buffers, pages wholly past the committed prefix are decref'd (and
+        freed when unshared).  Returns the number of pages this session
+        dropped.  Reserved (flat) tables only move the length — the flat
+        cache never returns memory.
+        """
+        t0 = time.perf_counter()
+        t = self._table(session)
+        new_length = int(new_length)
+        if new_length > t.length:
+            raise ValueError(f"rollback to {new_length} > current length {t.length}")
+        t.length = new_length
+        if t.reserved:
+            self._touch(t)
+            self.op_seconds += time.perf_counter() - t0
+            return 0
+        keep = self.blocks_for(new_length)
+        dropped = t.blocks[keep:]
+        t.blocks = t.blocks[:keep]
+        for page in reversed(dropped):
+            self._decref(page)
+        if dropped and not t.blocks:
+            self._resident -= 1
+        self._touch(t)
+        self.op_seconds += time.perf_counter() - t0
+        return len(dropped)
+
+    def release(self, session: int) -> None:
+        """Drop a session entirely, decref'ing every page it held."""
+        t = self._table(session)
+        for page in reversed(t.blocks):
+            self._decref(page)
+        if t.blocks:
+            self._resident -= 1
+        del self.tables[session]
+
+    def evict(self, session: int) -> int:
+        """Reclaim a session's pages under pool pressure (it re-prefills later).
+
+        The session stays registered with ``length = 0`` so its next round
+        starts from an empty cache.  Returns the pages released.
+        """
+        t0 = time.perf_counter()
+        t = self._table(session)
+        dropped = len(t.blocks)
+        for page in reversed(t.blocks):
+            self._decref(page)
+        if t.blocks:
+            self._resident -= 1
+        t.blocks = []
+        t.length = 0
+        t.reserved = False
+        self.stats["evictions"] += 1
+        self.op_seconds += time.perf_counter() - t0
+        return dropped
+
+    def evict_lru(self, exclude: Sequence[int] = ()) -> Optional[int]:
+        """Evict the least-recently-touched page-holding session not excluded.
+
+        Returns the victim's id, or None when every resident session is
+        excluded (nothing safe to reclaim).
+        """
+        skip = set(exclude)
+        victims = [
+            (t.last_touch, sid)
+            for sid, t in self.tables.items()
+            if t.blocks and sid not in skip
+        ]
+        if not victims:
+            return None
+        _, sid = min(victims)
+        self.evict(sid)
+        return sid
+
+    # ------------------------------------------------------------- tensors --
+    def _copy_page(self, src: int, dst: int) -> None:
+        if self.k_pages is not None:
+            self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
+            self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+
+    def write(self, session: int, k_new: jax.Array, v_new: jax.Array) -> None:
+        """Append ``T`` tokens of KV (``[L, T, Hkv, hd]``) into the pages.
+
+        Tensor mode only.  Handles page allocation + CoW via ``append``;
+        tokens scatter into (page, slot) per the block table.
+        """
+        if self.k_pages is None:
+            raise RuntimeError("pool was built without tensor storage (n_layers=0)")
+        t = self._table(session)
+        T = k_new.shape[1]
+        start = t.length
+        self.append(session, T)
+        written = 0
+        while written < T:
+            pos = start + written
+            page = t.blocks[pos // self.block_size]
+            slot = pos % self.block_size
+            take = min(self.block_size - slot, T - written)
+            ksl = jax.lax.dynamic_slice_in_dim(k_new, written, take, axis=1)
+            vsl = jax.lax.dynamic_slice_in_dim(v_new, written, take, axis=1)
+            self.k_pages = self.k_pages.at[:, page, slot : slot + take].set(ksl)
+            self.v_pages = self.v_pages.at[:, page, slot : slot + take].set(vsl)
+            written += take
+
+    # ----------------------------------------------------------- reporting --
+    def table(self, session: int, pad_to: Optional[int] = None, pad_id: int = 0) -> np.ndarray:
+        """The session's block table as int32, optionally padded to ``pad_to``.
+
+        Pad entries carry ``pad_id`` (default 0 — a *valid* page index: the
+        attention kernels mask pad positions by length, so the gathered
+        garbage is inert; see ``docs/kernels.md``).
+        """
+        t = self._table(session)
+        ids = t.blocks
+        if pad_to is not None:
+            if len(ids) > pad_to:
+                raise ValueError(f"table of {len(ids)} pages exceeds pad_to={pad_to}")
+            ids = ids + [pad_id] * (pad_to - len(ids))
+        return np.asarray(ids, np.int32)
+
+    def length(self, session: int) -> int:
+        """The session's committed token count."""
+        return self._table(session).length
+
+    def shared_blocks(self) -> int:
+        """Distinct pages referenced by more than one session."""
+        return int(np.sum(self.refcounts > 1))
+
+    def resident_bytes(self) -> int:
+        """Bytes backing all distinct in-use pages (sharing counted once)."""
+        return self.used_blocks * self.bytes_per_block
+
+    def resident_bytes_for(self, session: int) -> int:
+        """Bytes of pages this session references (shared pages counted fully).
+
+        Summing this over sessions exceeds ``resident_bytes()`` exactly by
+        the prefix-sharing win.
+        """
+        return len(self._table(session).blocks) * self.bytes_per_block
+
+    def load_summary(self) -> dict:
+        """Point-in-time pool metrics for benchmarks and the serving monitor."""
+        n_resident = self.resident_sessions
+        return dict(
+            kv_used_blocks=self.used_blocks,
+            kv_free_blocks=self.free_blocks,
+            kv_resident_bytes=self.resident_bytes(),
+            kv_bytes_per_session=(self.resident_bytes() / n_resident if n_resident else 0.0),
+            kv_shared_blocks=self.shared_blocks(),
+            kv_resident_sessions=n_resident,
+            kv_max_resident_sessions=self.max_resident_sessions,
+            kv_max_used_blocks=self.max_used_blocks,
+            kv_cow_copies=self.stats["cow_copies"],
+            kv_evictions=self.stats["evictions"],
+            kv_op_seconds=self.op_seconds,
+        )

@@ -22,15 +22,24 @@ A continuous-batching dispatcher serves any number of edge sessions
   parents alongside its tokens; tree requests ride the same buffers,
   admission control, and coalescing window as chains, and are padded by NODE
   count through ``spec_verify_tree_batched`` (one ancestor-masked launch per
-  dispatch).  Results additionally carry the accepted root→leaf ``path``.
+  dispatch).  Results additionally carry the accepted root→leaf ``path``;
+* paged target KV (``kv_pool``): the verifier's per-session cache state
+  lives in a ``models.paged_kv.PagedKVPool`` — sessions fork from a shared
+  system-prefix session copy-on-write, each verify appends the round's
+  ``K+1`` positions and the rejection rollback releases whole pages back to
+  the pool.  Admission is additionally gated on the free-block budget: a
+  request whose KV growth the pool cannot back first tries to reclaim pages
+  from the least-recently-active idle session (``evict_lru``), then parks
+  back at the queue head (``kv_parked`` stat) until rollbacks free pages.
 
-Per-dispatch batch size and queue depth are fed to an
+Per-dispatch batch size, queue depth, and KV-pool residency are fed to an
 ``EnvironmentMonitor`` (core.monitor) so benchmarks can lift verifier
-occupancy/queue-depth into ``RunStats`` (core.pipeline).
+occupancy/queue-depth/KV-residency into ``RunStats`` (core.pipeline).
 
 The backend is pluggable: ``SyntheticBackend`` (trace-driven acceptance, used
 by benchmarks), or ``SpecVerifyBackend`` running the real fused NAV kernel
-(Pallas on TPU, pure-JAX ``ref`` on CPU).
+(Pallas on TPU, pure-JAX ``ref`` on CPU), optionally with a batched paged
+target forward (``batched_logits_fn`` + the sessions' KV block tables).
 """
 
 from __future__ import annotations
@@ -44,6 +53,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.monitor import EnvironmentMonitor
+from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
 from .transport import Channel, Message
 
 __all__ = [
@@ -58,6 +68,7 @@ class VerifyBackend:
     """Interface: verify a session's drafted tokens → (n_accepted, correction)."""
 
     def verify(self, session: int, tokens: List[int], confs: List[float]):  # pragma: no cover
+        """Verify one session's chain drafts → ``(n_accepted, correction)``."""
         raise NotImplementedError
 
     def verify_batch(self, requests: Sequence[Tuple[int, List[int], List[float]]]):
@@ -104,10 +115,12 @@ class SyntheticBackend(VerifyBackend):
         return n_acc, correction
 
     def verify(self, session: int, tokens: List[int], confs: List[float]):
+        """One simulated target forward for one session's chain drafts."""
         time.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
         return self._accept(confs)
 
     def verify_batch(self, requests):
+        """One padded pass: cost scales with the longest draft, not the sum."""
         if not requests:
             return []
         max_len = max(len(t) for (_, t, _) in requests)
@@ -141,10 +154,12 @@ class SyntheticBackend(VerifyBackend):
         return len(path), correction, path
 
     def verify_tree(self, session, tokens, confs, parents):
+        """One simulated tree-NAV call (cost scales with the node count)."""
         time.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
         return self._accept_tree(confs, parents)
 
     def verify_tree_batch(self, requests):
+        """One padded tree pass: cost scales with the largest node count."""
         if not requests:
             return []
         max_len = max(len(t) for (_, t, _, _) in requests)
@@ -160,27 +175,68 @@ class SpecVerifyBackend(VerifyBackend):
     synthetic sampler in tests).  ``verify_batch`` pads the ragged requests
     and runs them through ``spec_verify_batched`` in ONE launch — Pallas on
     TPU (``impl='pallas'``), interpret mode or the pure-JAX ``ref`` on CPU.
+
+    **Paged target forward.**  With ``batched_logits_fn`` (and a ``kv_pool``
+    supplying per-session KV block tables) the per-session ``logits_fn``
+    calls are replaced by ONE batched forward over the padded
+    ``(tokens, n_drafted, block_tables)`` arrays — the fused
+    paged-attention + NAV dispatch shape a production verifier compiles
+    (see ``kernels.spec_verify.spec_verify_batched``).
     """
 
-    def __init__(self, logits_fn: Callable, impl: str = "ref", block_v: int = 2048):
+    def __init__(
+        self,
+        logits_fn: Optional[Callable] = None,
+        impl: str = "ref",
+        block_v: int = 2048,
+        kv_pool: Optional[PagedKVPool] = None,
+        batched_logits_fn: Optional[Callable] = None,
+        batched_tree_logits_fn: Optional[Callable] = None,
+    ):
+        if logits_fn is None and batched_logits_fn is None:
+            raise ValueError("need logits_fn or batched_logits_fn")
         self.logits_fn = logits_fn
         self.impl = impl
         self.block_v = block_v
+        self.kv_pool = kv_pool
+        self.batched_logits_fn = batched_logits_fn
+        self.batched_tree_logits_fn = batched_tree_logits_fn
+
+    def _tables(self, sessions: Sequence[int]):
+        if self.kv_pool is None:
+            return None
+        return [
+            list(self.kv_pool.table(s)) if s in self.kv_pool.tables else []
+            for s in sessions
+        ]
 
     def verify(self, session: int, tokens: List[int], confs: List[float]):
+        """Verify one session through the batched path (batch of one)."""
         return self.verify_batch([(session, tokens, confs)])[0]
 
     def verify_batch(self, requests):
+        """Pad the ragged requests and run ONE fused NAV kernel launch."""
         if not requests:
             return []
         from repro.kernels.spec_verify import spec_verify_batched
 
-        logits = [self.logits_fn(s, t) for (s, t, _) in requests]
         tokens = [t for (_, t, _) in requests]
-        out = spec_verify_batched(logits, tokens, impl=self.impl, block_v=self.block_v)
+        if self.batched_logits_fn is not None:
+            out = spec_verify_batched(
+                None,
+                tokens,
+                impl=self.impl,
+                block_v=self.block_v,
+                block_tables_seq=self._tables([s for (s, _, _) in requests]),
+                batched_logits_fn=self.batched_logits_fn,
+            )
+        else:
+            logits = [self.logits_fn(s, t) for (s, t, _) in requests]
+            out = spec_verify_batched(logits, tokens, impl=self.impl, block_v=self.block_v)
         return [(int(n_acc), int(corr)) for (n_acc, corr, _) in out]
 
     def verify_tree(self, session, tokens, confs, parents):
+        """Verify one session's tree through the batched path (batch of one)."""
         return self.verify_tree_batch([(session, tokens, confs, parents)])[0]
 
     def verify_tree_batch(self, requests):
@@ -194,10 +250,28 @@ class SpecVerifyBackend(VerifyBackend):
             return []
         from repro.kernels.spec_verify import spec_verify_tree_batched
 
-        logits = [self.logits_fn(s, t) for (s, t, _, _) in requests]
         tokens = [t for (_, t, _, _) in requests]
         parents = [p for (_, _, _, p) in requests]
-        out = spec_verify_tree_batched(logits, tokens, parents, impl=self.impl, block_v=self.block_v)
+        if self.batched_tree_logits_fn is not None:
+            out = spec_verify_tree_batched(
+                None,
+                tokens,
+                parents,
+                impl=self.impl,
+                block_v=self.block_v,
+                block_tables_seq=self._tables([s for (s, _, _, _) in requests]),
+                batched_logits_fn=self.batched_tree_logits_fn,
+            )
+        elif self.logits_fn is None:
+            raise ValueError(
+                "tree requests need logits_fn or batched_tree_logits_fn "
+                "(this backend was built with only a chain batched_logits_fn)"
+            )
+        else:
+            logits = [self.logits_fn(s, t) for (s, t, _, _) in requests]
+            out = spec_verify_tree_batched(
+                logits, tokens, parents, impl=self.impl, block_v=self.block_v
+            )
         return [(int(n_acc), int(corr), list(path)) for (n_acc, path, corr, _) in out]
 
 
@@ -210,6 +284,7 @@ class _VerifyRequest:
     t_enqueue: float
     deadline: Optional[float]  # absolute monotonic; None = never drop
     parents: Optional[List[int]] = None  # packed tree parents; None = chain
+    kv_secured: bool = False  # this dispatch appended the round's KV pages
 
 
 @dataclass
@@ -227,13 +302,27 @@ class _Session:
     pending_request: Optional[Message] = None
     last_seen: float = field(default_factory=time.monotonic)
     served: int = 0  # rounds verified — fairness key for admission
+    kv_committed: int = 0  # logical target-cache length (tokens committed)
 
     def buf(self, rnd: int) -> Tuple[List[int], List[float], List[int]]:
+        """The round's (tokens, confs, parents) buffer, created on demand."""
         return self.buffers.setdefault(rnd, ([], [], []))
 
 
 class CloudVerifier:
-    """Continuous-batching dispatcher over (uplink, downlink) pairs per session."""
+    """Continuous-batching dispatcher over (uplink, downlink) pairs per session.
+
+    With ``kv_pool`` the verifier also manages per-session target KV state in
+    a paged block pool: sessions fork from a ``kv_shared_prefix``-token
+    common prefix (CoW), each dispatch appends the round's ``K+1`` cache
+    positions, and the post-verify rollback releases rejected pages.
+    ``kv_flat_reserve`` instead reserves that many contiguous token slots per
+    session up front — the flat-cache baseline, inside the same pool
+    accounting so paged-vs-flat residency is directly comparable.
+    """
+
+    #: Pool session id owning the shared system/prompt prefix pages.
+    KV_PREFIX_SESSION = -1
 
     def __init__(
         self,
@@ -243,10 +332,19 @@ class CloudVerifier:
         max_batch: Optional[int] = None,
         drop_expired: bool = True,
         monitor_window: int = 1_000_000,
+        kv_pool: Optional[PagedKVPool] = None,
+        kv_shared_prefix: int = 0,
+        kv_flat_reserve: Optional[int] = None,
     ):
         self.backend = backend
         self.batch_window = batch_window
         self.session_timeout = session_timeout
+        self.kv_pool = kv_pool
+        self.kv_shared_prefix = int(kv_shared_prefix)
+        self.kv_flat_reserve = kv_flat_reserve
+        if kv_pool is not None and kv_flat_reserve is None and self.kv_shared_prefix > 0:
+            kv_pool.create(self.KV_PREFIX_SESSION)
+            kv_pool.append(self.KV_PREFIX_SESSION, self.kv_shared_prefix)
         # Default: batching only when a coalescing window was requested.
         # batch_window == 0 keeps strict per-session serving (one request per
         # backend call, summed costs) so baselines measure what they claim.
@@ -263,6 +361,10 @@ class CloudVerifier:
             "dropped_stragglers": 0,
             "dropped_dead_sessions": 0,
             "max_queue_depth": 0,
+            # Paged-KV pressure: admissions deferred for lack of free pages,
+            # and flat reservations that saturated (the flat cache's hard cap).
+            "kv_parked": 0,
+            "kv_cap_hits": 0,
         }
         # The monitor here is an accumulator for the whole serving run, not
         # the paper's 100-observation estimator — size the window accordingly
@@ -275,19 +377,33 @@ class CloudVerifier:
         self._queue: Deque[_VerifyRequest] = deque()
 
     def attach(self, session: int, uplink: Channel, downlink: Channel) -> None:
+        """Register a session and start its receive loop.
+
+        With a flat-reserve KV pool the up-front contiguous reservation
+        happens here and ``BlockPoolExhausted`` propagates to the caller —
+        the flat baseline's hard admission limit.  Paged sessions instead
+        fork the shared prefix copy-on-write (no pages allocated).
+        """
         with self._lock:
+            sess = _Session()
+            if self.kv_pool is not None:
+                self._kv_register(session)
+                if self.kv_flat_reserve is None and self.kv_shared_prefix > 0:
+                    sess.kv_committed = self.kv_shared_prefix
             self.links[session] = (uplink, downlink)
-            self.sessions[session] = _Session()
+            self.sessions[session] = sess
         t = threading.Thread(target=self._rx_loop, args=(session,), daemon=True)
         t.start()
         self._threads.append(t)
 
     def start(self) -> None:
+        """Start the dispatch loop (receive loops start per ``attach``)."""
         t = threading.Thread(target=self._dispatch_loop, daemon=True)
         t.start()
         self._threads.append(t)
 
     def stop(self) -> None:
+        """Close uplinks and drain in-flight dispatch before returning."""
         self._stop.set()
         with self._work:
             self._work.notify_all()
@@ -297,8 +413,8 @@ class CloudVerifier:
             t.join(timeout=5.0)
 
     def load_summary(self) -> dict:
-        """Occupancy/queue-depth view for benchmarks (→ RunStats)."""
-        return dict(
+        """Occupancy/queue-depth/KV-residency view for benchmarks (→ RunStats)."""
+        out = dict(
             batch_occupancy=self.monitor.verifier_occupancy() or 0.0,
             mean_queue_depth=self.monitor.verifier_queue_depth() or 0.0,
             verifier_batches=list(self.monitor.verifier_batches()),
@@ -307,6 +423,11 @@ class CloudVerifier:
             dn_backlog=sum(dn.qsize() for (_, dn) in self.links.values()),
             **self.stats,
         )
+        if self.kv_pool is not None:
+            out.update(self.kv_pool.load_summary())
+            out["kv_bytes_series"] = self.monitor.kv_bytes_series()
+            out["kv_sessions_series"] = self.monitor.kv_sessions_series()
+        return out
 
     # ------------------------------------------------------------ receive --
     @staticmethod
@@ -390,6 +511,74 @@ class CloudVerifier:
                     sess.pending_request = None
 
     # ----------------------------------------------------------- dispatch --
+    def _kv_register(self, session: int) -> None:
+        """Give a session its pool table per the configured KV policy.
+
+        Flat mode creates + reserves up front (``BlockPoolExhausted``
+        propagates — the flat admission limit — with the half-made table
+        cleaned up); shared-prefix mode forks the prefix owner CoW; plain
+        paged mode starts empty.  Used at ``attach`` and when a
+        timed-out-then-resumed session needs its released table back.
+        Caller holds ``self._lock``.
+        """
+        if self.kv_flat_reserve is not None:
+            self.kv_pool.create(session)
+            try:
+                self.kv_pool.reserve(session, self.kv_flat_reserve)
+            except BlockPoolExhausted:
+                self.kv_pool.release(session)
+                raise
+        elif self.kv_shared_prefix > 0:
+            self.kv_pool.fork(self.KV_PREFIX_SESSION, session)
+        else:
+            self.kv_pool.create(session)
+
+    def _kv_secure(self, req: _VerifyRequest, active: set) -> bool:
+        """Back a round's KV growth with pool pages (caller holds the lock).
+
+        The round writes ``K+1`` cache positions past the session's committed
+        prefix (plus any re-prefill gap if the session was evicted).  Paged
+        sessions that cannot be backed first reclaim pages from the
+        least-recently-active idle session, then report failure (the caller
+        parks the request).  Flat reservations never block — they saturate at
+        their fixed capacity (``kv_cap_hits``), exactly like a flat cache
+        sized at ``max_len``.
+
+        A session whose table was released as dead (timeout) but that later
+        resumed is re-registered here — re-forking the shared prefix (paged)
+        or re-reserving (flat; parks while the budget is full) — so a
+        comeback never serves outside the pool's admission control.
+        """
+        pool = self.kv_pool
+        if pool is None:
+            return True
+        if req.session not in pool.tables:
+            try:
+                self._kv_register(req.session)
+            except BlockPoolExhausted:
+                return False  # comeback parks until the budget has room
+        sess = self.sessions[req.session]
+        need = sess.kv_committed - pool.length(req.session) + len(req.tokens) + 1
+        if need <= 0:
+            req.kv_secured = True
+            return True
+        table = pool.tables[req.session]
+        if table.reserved:
+            room = table.capacity(pool.block_size) - pool.length(req.session)
+            if need > room:
+                self.stats["kv_cap_hits"] += 1
+                need = room
+            if need > 0:
+                pool.append(req.session, need)
+            req.kv_secured = True
+            return True
+        while not pool.can_append(req.session, need):
+            if pool.evict_lru(exclude=active) is None:
+                return False
+        pool.append(req.session, need)
+        req.kv_secured = True
+        return True
+
     def _admit(self) -> Tuple[List[_VerifyRequest], int]:
         """Admission control under ``self._lock``: drop dead work, pick fairly.
 
@@ -397,6 +586,9 @@ class CloudVerifier:
         beyond ``max_batch`` are *reinserted* at the head in arrival order,
         so nothing is lost — but admission order is (served-rounds, arrival),
         which keeps chatty long-draft sessions from starving short ones.
+        With a KV pool, admission is additionally gated on the free-block
+        budget: a request whose cache growth cannot be backed (even after
+        LRU eviction of idle sessions) parks back at the queue head.
         """
         now = time.monotonic()
         live: List[_VerifyRequest] = []
@@ -407,19 +599,36 @@ class CloudVerifier:
             sess = self.sessions.get(req.session)
             if sess is None or now - sess.last_seen > self.session_timeout:
                 self.stats["dropped_dead_sessions"] += 1
+                if self.kv_pool is not None and req.session in self.kv_pool.tables:
+                    self.kv_pool.release(req.session)  # reclaim a dead cache
                 continue
             live.append(req)
         depth = len(live)
         self.stats["max_queue_depth"] = max(self.stats["max_queue_depth"], depth)
         if depth <= self.max_batch:
-            return live, depth
-        order = sorted(
-            range(depth),
-            key=lambda i: (self.sessions[live[i].session].served, live[i].t_enqueue),
-        )
-        take = set(order[: self.max_batch])
-        admitted = [live[i] for i in sorted(take)]
-        for req in reversed([live[i] for i in range(depth) if i not in take]):
+            admitted, overflow = live, []
+        else:
+            order = sorted(
+                range(depth),
+                key=lambda i: (self.sessions[live[i].session].served, live[i].t_enqueue),
+            )
+            take = set(order[: self.max_batch])
+            admitted = [live[i] for i in sorted(take)]
+            overflow = [live[i] for i in range(depth) if i not in take]
+        if self.kv_pool is not None and admitted:
+            # Sessions with in-flight or queued work must keep their pages:
+            # evicting them would desync committed lengths mid-round.
+            active = {r.session for r in live} | {self.KV_PREFIX_SESSION}
+            active.update(s for s, sess in self.sessions.items() if sess.pending_request)
+            secured = []
+            for req in admitted:
+                if self._kv_secure(req, active):
+                    secured.append(req)
+                else:
+                    self.stats["kv_parked"] += 1  # retried next dispatch round
+                    overflow.insert(0, req)
+            admitted = secured
+        for req in reversed(overflow):
             self._queue.appendleft(req)  # fair reinsertion, arrival order kept
         return admitted, depth
 
@@ -443,6 +652,12 @@ class CloudVerifier:
             with self._lock:
                 batch, depth = self._admit()
             if not batch:
+                # Nothing admitted but work may remain queued (all requests
+                # KV-parked): back off instead of hot-spinning until pages
+                # free up, a deadline expires, or new work arrives.
+                with self._work:
+                    if self._queue and not self._stop.is_set():
+                        self._work.wait(timeout=0.05)
                 continue
             # Chain and tree requests share the admission queue but pad
             # differently (draft length vs node count), so each kind gets its
@@ -469,6 +684,17 @@ class CloudVerifier:
                 sess = self.sessions.get(req.session)
                 if sess is not None:
                     sess.served += 1
+                    if req.kv_secured and self.kv_pool is not None:
+                        # Commit accepted + correction tokens; release every
+                        # page wholly past the new prefix (rejection rollback
+                        # is a page free, not a buffer copy).
+                        with self._lock:
+                            sess.kv_committed += n_acc + 1
+                            if req.session in self.kv_pool.tables:
+                                self.kv_pool.rollback(
+                                    req.session,
+                                    min(sess.kv_committed, self.kv_pool.length(req.session)),
+                                )
                 link = self.links.get(req.session)
                 if link is None:
                     continue
@@ -477,3 +703,8 @@ class CloudVerifier:
                 if path is not None:
                     payload["path"] = path  # accepted packed node indices
                 dn.send(Message("nav_result", req.session, req.msg.seq, max(n_acc, 1), payload))
+            if self.kv_pool is not None:
+                with self._lock:
+                    self.monitor.observe_kv(
+                        self.kv_pool.resident_bytes(), self.kv_pool.resident_sessions
+                    )

@@ -1,0 +1,202 @@
+"""Paged KV block pool: refcount/CoW/rollback/eviction invariants.
+
+The pool invariant under every test: for each physical page, its refcount
+equals the number of session block tables referencing it, and free + used
+== num_blocks.  CoW divergence, rollback page release, LRU reuse order, and
+eviction-under-pressure are the behaviours the serving dispatcher builds on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
+
+
+def _check_invariants(pool: PagedKVPool) -> None:
+    counted = np.zeros(pool.num_blocks, np.int32)
+    for t in pool.tables.values():
+        for page in t.blocks:
+            counted[page] += 1
+    np.testing.assert_array_equal(counted, pool.refcounts)
+    assert pool.free_blocks + pool.used_blocks == pool.num_blocks
+    assert set(pool._free).isdisjoint(
+        p for t in pool.tables.values() for p in t.blocks
+    )
+    # The O(1) resident counter must agree with a full recount.
+    assert pool.resident_sessions == sum(1 for t in pool.tables.values() if t.blocks)
+
+
+def test_refcount_fork_free_invariants():
+    pool = PagedKVPool(num_blocks=16, block_size=4)
+    pool.create(0)
+    pool.append(0, 10)  # 3 pages (one partial)
+    _check_invariants(pool)
+    pool.fork(0, 1)
+    pool.fork(0, 2)
+    _check_invariants(pool)
+    assert pool.used_blocks == 3  # forks allocate nothing
+    assert pool.shared_blocks() == 3
+    assert all(pool.refcounts[p] == 3 for p in pool.tables[0].blocks)
+    pool.release(1)
+    _check_invariants(pool)
+    assert pool.used_blocks == 3  # still referenced by 0 and 2
+    pool.release(0)
+    pool.release(2)
+    _check_invariants(pool)
+    assert pool.used_blocks == 0 and pool.free_blocks == 16
+
+
+def test_cow_divergence_after_shared_prefix_write():
+    """First append into a shared partial tail page copies it; the parent's
+    view of the prefix must be unchanged and full pages stay shared."""
+    pool = PagedKVPool(num_blocks=8, block_size=4, n_layers=1, n_kv_heads=1, head_dim=2)
+    pool.create(0)
+    k0 = jnp.arange(1 * 6 * 1 * 2, dtype=jnp.float32).reshape(1, 6, 1, 2)
+    pool.write(0, k0, k0 * 10)  # 6 tokens: one full + one partial page
+    pool.fork(0, 1)
+    before = np.asarray(pool.k_pages).copy()
+    parent_tail = pool.tables[0].blocks[-1]
+
+    k1 = jnp.full((1, 1, 1, 2), 99.0)
+    pool.write(1, k1, k1)  # child's first write into the shared tail
+    _check_invariants(pool)
+    assert pool.stats["cow_copies"] == 1
+    assert pool.tables[1].blocks[0] == pool.tables[0].blocks[0]  # full page shared
+    child_tail = pool.tables[1].blocks[-1]
+    assert child_tail != parent_tail  # tail diverged
+    # Parent's pages are untouched by the child's write.
+    np.testing.assert_array_equal(np.asarray(pool.k_pages)[:, parent_tail], before[:, parent_tail])
+    # Child's copied tail carries the shared prefix slots plus the new token.
+    got = np.asarray(pool.k_pages)[0, child_tail]
+    np.testing.assert_array_equal(got[:2], np.asarray(k0)[0, 4:6])
+    np.testing.assert_array_equal(got[2], np.asarray(k1)[0, 0])
+
+
+def test_rollback_frees_pages():
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    pool.create(0)
+    pool.append(0, 13)  # 4 pages
+    assert pool.used_blocks == 4
+    dropped = pool.rollback(0, 5)  # keep 2 pages
+    _check_invariants(pool)
+    assert dropped == 2 and pool.used_blocks == 2 and pool.length(0) == 5
+    # Rollback across a fork only drops THIS session's references.
+    pool.fork(0, 1)
+    pool.append(1, 7)  # CoW tail + one new page
+    shared_full = pool.tables[0].blocks[0]
+    assert pool.rollback(1, 0) == 3
+    _check_invariants(pool)
+    assert pool.refcounts[shared_full] == 1  # parent still holds it
+    assert pool.length(0) == 5  # parent untouched
+    with pytest.raises(ValueError):
+        pool.rollback(0, 6)  # cannot roll forward
+
+
+def test_eviction_under_pressure():
+    pool = PagedKVPool(num_blocks=4, block_size=4)
+    pool.create(0)
+    pool.append(0, 8)
+    pool.create(1)
+    pool.append(1, 8)
+    assert pool.free_blocks == 0
+    with pytest.raises(BlockPoolExhausted):
+        pool.append(1, 4)
+    # Session 0 is least-recently touched; exclusion protects it.
+    assert pool.evict_lru(exclude=[0, 1]) is None
+    assert pool.evict_lru(exclude=[1]) == 0
+    _check_invariants(pool)
+    assert pool.length(0) == 0 and pool.tables[0].blocks == []
+    pool.append(1, 4)  # now backed by the reclaimed pages
+    _check_invariants(pool)
+    assert pool.stats["evictions"] == 1
+
+
+def test_flat_reservation_semantics():
+    """Reserved (flat-baseline) tables: up-front pages, no CoW, no free."""
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    pool.create(0)
+    pool.reserve(0, 16)  # 4 pages immediately
+    assert pool.used_blocks == 4 and pool.length(0) == 0
+    pool.append(0, 10)
+    assert pool.used_blocks == 4  # growth consumes the reservation
+    assert pool.rollback(0, 2) == 0  # flat caches never return pages
+    assert pool.used_blocks == 4
+    with pytest.raises(BlockPoolExhausted):
+        pool.append(0, 15)  # beyond the reservation
+    pool.create(1)
+    with pytest.raises(BlockPoolExhausted):
+        pool.reserve(1, 32)  # 8 pages > 4 free
+
+
+def test_lru_free_list_reuse_order():
+    pool = PagedKVPool(num_blocks=8, block_size=1)
+    pool.create(0)
+    pool.append(0, 8)
+    pages = list(pool.tables[0].blocks)
+    pool.rollback(0, 6)  # frees pages[7] then pages[6]
+    pool.rollback(0, 4)  # then pages[5], pages[4]
+    pool.create(1)
+    pool.append(1, 2)
+    # Oldest-freed pages are reused first.
+    assert pool.tables[1].blocks == [pages[7], pages[6]]
+
+
+def test_blocks_needed_counts_cow_copy():
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    pool.create(0)
+    pool.append(0, 6)
+    pool.fork(0, 1)
+    # Appending 1 token into the shared partial tail needs the CoW page.
+    assert pool.blocks_needed(1, 1) == 1
+    assert pool.blocks_needed(1, 2) == 1  # fills the copied tail exactly
+    assert pool.blocks_needed(1, 3) == 2  # copy + one fresh page
+    free = pool.free_blocks
+    pool.append(1, 4)
+    assert free - pool.free_blocks == 2
+
+
+def test_engine_sim_tpt_identical_with_pool():
+    """Paged accounting must not perturb the simulated timing model."""
+    from repro.core.pipeline import (
+        ChannelModel,
+        CloudModel,
+        EdgeModel,
+        PipelineEngine,
+        SyntheticSource,
+        make_framework,
+    )
+
+    def run(pool):
+        eng = PipelineEngine(
+            make_framework("pipesd", autotune=False),
+            ChannelModel(),
+            CloudModel(),
+            EdgeModel(),
+            SyntheticSource(seed=5),
+            seed=9,
+            kv_pool=pool,
+        )
+        return eng.run(200)
+
+    base = run(None)
+    paged = run(PagedKVPool(num_blocks=256, block_size=16, bytes_per_token=1024))
+    assert paged.tpt == base.tpt and paged.rounds == base.rounds
+    assert paged.kv_resident_bytes and base.kv_resident_bytes == []
+    assert paged.peak_kv_resident_bytes > 0
+
+
+@pytest.mark.slow
+def test_fleet_paged_serves_more_sessions_than_flat():
+    """Fixed pool budget: paged admits the whole fleet where flat refuses
+    half, with pool bookkeeping far below the 5% TPT-impact bound."""
+    from benchmarks.fleet_bench import compare_kv
+
+    reps = compare_kv(n_sessions=8, tokens_per_session=30)
+    assert reps["flat"]["n_attached"] == 4  # budget fits 4 max_len reservations
+    assert reps["paged"]["n_attached"] == 8
+    assert reps["paged"]["kv_max_clients"] > reps["flat"]["n_attached"]
+    assert reps["paged"]["failovers"] == 0
+    st = reps["paged"]["stats"]
+    assert 0 < st.kv_bytes_per_session < reps["flat"]["stats"].kv_bytes_per_session
+    assert reps["paged_matched"]["kv_overhead_frac"] < 0.05

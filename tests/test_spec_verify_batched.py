@@ -172,3 +172,153 @@ def test_spec_verify_backend_no_cross_session_leakage():
     batched = backend.verify_batch(reqs)
     solo = [backend.verify(s, t, c) for (s, t, c) in reqs]
     assert batched == solo
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_batched_paged_target_forward_parity(impl):
+    """``batched_logits_fn`` + block tables == precomputed per-session logits.
+
+    The paged dispatch hands the entry ONE padded batch (tokens, n_drafted,
+    pow2-bucketed block tables) and gets logits back from a single target
+    forward; results must match feeding the same logits per session.
+    """
+    ks = [3, 5, 1]
+    V = 512
+    logits_seq, tokens_seq = _ragged_requests(ks, V, seed=7)
+    tables_seq = [[4, 9], [2], [7, 1, 3]]  # ragged KV block tables
+    seen = {}
+
+    def batched_logits_fn(tokens, nd, tables):
+        # Padded shapes carry the same pow2 bucketing as the logits batch.
+        assert tokens.shape == (4, 8) and nd.shape == (4,)
+        assert tables.shape == (4, 4) and tables.dtype == np.int32
+        np.testing.assert_array_equal(tables[0, :2], [4, 9])
+        np.testing.assert_array_equal(tables[2], [7, 1, 3, 0])  # pad id 0
+        np.testing.assert_array_equal(tables[3], 0)  # pad row
+        seen["called"] = True
+        out = np.zeros((tokens.shape[0], tokens.shape[1] + 1, V), np.float32)
+        for i, k in enumerate(ks):
+            out[i, : k + 1] = logits_seq[i]
+        return out
+
+    paged = spec_verify_batched(
+        None,
+        tokens_seq,
+        impl=impl,
+        block_v=256,
+        block_tables_seq=tables_seq,
+        batched_logits_fn=batched_logits_fn,
+    )
+    assert seen.get("called")
+    plain = spec_verify_batched(logits_seq, tokens_seq, impl=impl, block_v=256)
+    for i in range(len(ks)):
+        assert paged[i][0] == plain[i][0] and paged[i][1] == plain[i][1]
+        np.testing.assert_allclose(paged[i][2], plain[i][2], atol=1e-4)
+    with pytest.raises(ValueError):
+        spec_verify_batched(logits_seq, tokens_seq, batched_logits_fn=batched_logits_fn)
+
+
+def test_spec_verify_backend_paged_batched_forward():
+    """SpecVerifyBackend with a kv_pool threads block tables into ONE
+    batched forward and matches the per-session logits path."""
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import SpecVerifyBackend
+
+    V = 256
+    rngs = {s: np.random.default_rng(500 + s) for s in range(3)}
+    cache = {}
+
+    def logits_for(session, n):
+        # Deterministic per (session, draft length): both paths agree.
+        key = (session, n)
+        if key not in cache:
+            cache[key] = rngs[session].standard_normal((n + 1, V)).astype(np.float32) * 2
+        return cache[key]
+
+    pool = PagedKVPool(num_blocks=16, block_size=4)
+    reqs = [(0, [3, 9, 7], [0.9] * 3), (1, [5], [0.9]), (2, [1, 2, 3, 4], [0.9] * 4)]
+    for s, toks, _ in reqs:
+        pool.create(s)
+        pool.append(s, 5 + s)  # distinct table sizes
+
+    def batched_logits_fn(tokens, nd, tables):
+        assert tables is not None and tables.shape[0] == tokens.shape[0]
+        out = np.zeros((tokens.shape[0], tokens.shape[1] + 1, V), np.float32)
+        for i, (s, toks, _) in enumerate(reqs):
+            out[i, : len(toks) + 1] = logits_for(s, len(toks))
+        return out
+
+    paged_backend = SpecVerifyBackend(
+        kv_pool=pool, batched_logits_fn=batched_logits_fn, impl="ref"
+    )
+    plain_backend = SpecVerifyBackend(lambda s, t: logits_for(s, len(t)), impl="ref")
+    assert paged_backend.verify_batch(reqs) == plain_backend.verify_batch(reqs)
+
+
+def test_tree_batched_paged_target_forward_parity():
+    """Tree entry: batched paged forward == precomputed per-session logits."""
+    from repro.kernels.spec_verify import spec_verify_tree_batched
+
+    V = 256
+    tokens_seq = [[3, 9, 7], [5, 1]]
+    parents_seq = [[-1, 0, 0], [-1, -1]]
+    logits_seq = [
+        np.asarray(jax.random.normal(jax.random.fold_in(KEY, 33 + i), (len(t) + 1, V)) * 3, np.float32)
+        for i, t in enumerate(tokens_seq)
+    ]
+    tables_seq = [[2, 8], [5]]
+
+    def batched_logits_fn(tokens, parents, nn, tables):
+        assert tokens.shape == parents.shape == (2, 4) and tables.shape == (2, 2)
+        assert parents[0, 3] == -1  # pad nodes carry -1
+        out = np.zeros((tokens.shape[0], tokens.shape[1] + 1, V), np.float32)
+        for i, t in enumerate(tokens_seq):
+            out[i, : len(t) + 1] = logits_seq[i]
+        return out
+
+    paged = spec_verify_tree_batched(
+        None, tokens_seq, parents_seq,
+        impl="ref", block_tables_seq=tables_seq, batched_logits_fn=batched_logits_fn,
+    )
+    plain = spec_verify_tree_batched(logits_seq, tokens_seq, parents_seq, impl="ref")
+    for p, q in zip(paged, plain):
+        assert p[0] == q[0] and p[1] == q[1] and p[2] == q[2]
+        np.testing.assert_allclose(p[3], q[3], atol=1e-4)
+
+
+def test_spec_verify_backend_paged_tree_forward():
+    """A paged-forward-only backend must serve tree requests through
+    batched_tree_logits_fn (and raise clearly when it lacks one)."""
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import SpecVerifyBackend
+
+    V = 128
+    tokens, parents = [7, 9, 3], [-1, 0, 0]
+    lg = np.asarray(jax.random.normal(jax.random.fold_in(KEY, 55), (4, V)) * 3, np.float32)
+
+    def batched_tree_logits_fn(toks, pars, nn, tables):
+        assert tables is not None
+        out = np.zeros((toks.shape[0], toks.shape[1] + 1, V), np.float32)
+        out[0, :4] = lg
+        return out
+
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    pool.create(0)
+    pool.append(0, 6)
+    backend = SpecVerifyBackend(
+        kv_pool=pool,
+        batched_logits_fn=lambda t, n, b: np.zeros((t.shape[0], t.shape[1] + 1, V), np.float32),
+        batched_tree_logits_fn=batched_tree_logits_fn,
+    )
+    got = backend.verify_tree_batch([(0, tokens, [0.9] * 3, parents)])
+    from repro.kernels.spec_verify import spec_verify_tree_batched
+
+    (want,) = spec_verify_tree_batched([lg], [tokens], [parents], impl="ref")
+    assert got[0] == (int(want[0]), int(want[2]), list(want[1]))
+
+    chain_only = SpecVerifyBackend(
+        kv_pool=pool,
+        batched_logits_fn=lambda t, n, b: np.zeros((t.shape[0], t.shape[1] + 1, V), np.float32),
+    )
+    with pytest.raises(ValueError, match="tree requests need"):
+        chain_only.verify_tree_batch([(0, tokens, [0.9] * 3, parents)])

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib only) for README/docs CI.
+
+Checks every ``[text](target)`` and bare-reference link in the given
+markdown files:
+
+* relative file targets must exist on disk (resolved against the file's
+  directory, ``#fragment`` suffixes stripped);
+* intra-document ``#fragment`` links must match a heading slug in the file;
+* ``http(s)://`` / ``mailto:`` targets are reported but not fetched (CI must
+  stay hermetic).
+
+Exit code 1 when any relative link is broken.
+
+    python tools/check_links.py README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def heading_slugs(text: str) -> set:
+    """GitHub-style anchor slugs for every heading in the document."""
+    slugs = set()
+    for h in HEADING_RE.findall(CODE_FENCE_RE.sub("", text)):
+        h = re.sub(r"[`*_]", "", h.strip().lower())
+        h = re.sub(r"[^\w\- ]", "", h)
+        slugs.add(re.sub(r"\s+", "-", h).strip("-"))
+    return slugs
+
+
+def check_file(path: Path) -> list:
+    """Return a list of broken-link descriptions for one markdown file."""
+    text = path.read_text(encoding="utf-8")
+    broken = []
+    for target in LINK_RE.findall(CODE_FENCE_RE.sub("", text)):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:].lower() not in heading_slugs(text):
+                broken.append(f"{path}: missing anchor {target}")
+            continue
+        rel, _, frag = target.partition("#")
+        dest = (path.parent / rel).resolve()
+        if not dest.exists():
+            broken.append(f"{path}: missing file {target}")
+        elif frag and dest.suffix == ".md":
+            if frag.lower() not in heading_slugs(dest.read_text(encoding="utf-8")):
+                broken.append(f"{path}: missing anchor #{frag} in {rel}")
+    return broken
+
+
+def main(argv: list) -> int:
+    """Check every file given on the command line; print a summary."""
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    broken = []
+    n_files = 0
+    for arg in argv:
+        p = Path(arg)
+        if not p.exists():
+            broken.append(f"{p}: file not found")
+            continue
+        n_files += 1
+        broken.extend(check_file(p))
+    for b in broken:
+        print(f"BROKEN  {b}")
+    print(f"checked {n_files} files: {'FAIL' if broken else 'ok'} ({len(broken)} broken)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -43,8 +43,6 @@ simulated seconds and funneled through ``core.pipeline.RunStats``.
 from __future__ import annotations
 
 import sys
-import threading
-import time
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
@@ -59,13 +57,21 @@ from benchmarks.common import csv_row, scenario
 from repro.core.pipeline import RunStats
 from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
 from repro.runtime import (
+    FAULT_MATRIX,
     Channel,
     ChannelConfig,
     CloudVerifier,
     EdgeClient,
     EdgeConfig,
+    FaultScenario,
+    LinkFaults,
+    OracleBackend,
+    OracleDraft,
+    OracleStream,
     SyntheticBackend,
     SyntheticDraft,
+    SystemClock,
+    VirtualClock,
 )
 
 TS = 0.01  # run the timing model 100× faster than real time
@@ -95,6 +101,12 @@ def run_fleet(
     p_hard: float = 0.15,
     kv: Optional[str] = None,
     kv_budget_bytes: Optional[int] = None,
+    clock=None,
+    faults: Optional[FaultScenario] = None,
+    oracle: bool = False,
+    nav_timeout: float = 8.0,
+    backoff_init: float = 0.5,
+    local_gamma: Optional[float] = None,
 ) -> dict:
     """Serve ``n_sessions`` Poisson-arriving edge clients; returns a report.
 
@@ -113,6 +125,15 @@ def run_fleet(
     per session up front (sessions beyond the budget are REFUSED at attach —
     the report's ``n_attached`` drops below ``n_sessions``), paged mode
     allocates on demand with a CoW-shared ``KV_SHARED_PREFIX``.
+
+    ``clock`` selects the time base: the default ``SystemClock`` measures
+    wall time (historical behaviour, host-scheduler noisy); a
+    ``VirtualClock`` runs the identical serving code on deterministic
+    discrete-event time — bit-reproducible from ``seed``, simulated seconds
+    exact, host cost near zero.  ``faults`` attaches a declarative
+    ``FaultScenario`` to every client's link, and ``oracle=True`` swaps in
+    the deterministic oracle draft/verifier pair so the chaos harness can
+    assert the committed streams are fault-invariant.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
@@ -120,12 +141,18 @@ def run_fleet(
         raise ValueError(f"variant must be one of {VARIANTS}")
     if kv is not None and kv not in KV_MODES:
         raise ValueError(f"kv must be one of {KV_MODES}")
+    if oracle and variant == "tree":
+        raise ValueError("oracle=True supports only variant='chain' (OracleBackend has no tree verify path)")
+    clock = clock or SystemClock()
     edge, channel = scenario(scen)
     # Fleet tier: faster drafts + short windows. The verifier becomes the
     # contended resource (the regime §3.2's utilization argument targets):
     # per-session serving saturates at ~9 NAV/s while batching absorbs it.
     gamma = edge.effective_gamma() * 0.1
-    backend = SyntheticBackend(time_scale=ts, seed=seed)
+    if oracle:
+        backend = OracleBackend(time_scale=ts, seed=seed, clock=clock)
+    else:
+        backend = SyntheticBackend(time_scale=ts, seed=seed, clock=clock)
     kv_kwargs = {}
     if kv is not None:
         budget = kv_budget_bytes or (256 * KV_BLOCK_TOKENS * KV_BYTES_PER_TOKEN)
@@ -143,43 +170,66 @@ def run_fleet(
         backend,
         batch_window=(backend.verify_time * ts if mode == "batched" else 0.0),
         max_batch=(64 if mode == "batched" else 1),
+        clock=clock,
         **kv_kwargs,
     )
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_sessions))
     clients: List[EdgeClient] = []
     for sid in range(n_sessions):
-        up = Channel(ChannelConfig(alpha=channel.alpha_up, beta=channel.beta_up, time_scale=ts))
-        dn = Channel(ChannelConfig(alpha=channel.alpha_dn, beta=channel.beta_dn, time_scale=ts))
+        lf = (lambda d: LinkFaults(faults, d, seed=seed * 1009 + sid, time_scale=ts)) if faults else (lambda d: None)
+        up = Channel(
+            ChannelConfig(alpha=channel.alpha_up, beta=channel.beta_up, time_scale=ts),
+            f"up{sid}", clock=clock, faults=lf("up"),
+        )
+        dn = Channel(
+            ChannelConfig(alpha=channel.alpha_dn, beta=channel.beta_dn, time_scale=ts),
+            f"dn{sid}", clock=clock, faults=lf("dn"),
+        )
         try:
             server.attach(sid, up, dn)
         except BlockPoolExhausted:
             break  # flat reservation refused: the budget is full
-        cfg = EdgeConfig(time_scale=ts, gamma=gamma, window=8, nav_timeout=8.0)
+        lg = gamma * local_gamma if local_gamma is not None else None
+        cfg = EdgeConfig(
+            time_scale=ts, gamma=gamma, local_gamma=lg, window=8,
+            nav_timeout=nav_timeout, backoff_init=backoff_init,
+        )
         if variant == "tree":
             cfg = EdgeConfig(
-                time_scale=ts, gamma=gamma, window=16, nav_timeout=8.0,
+                time_scale=ts, gamma=gamma, local_gamma=lg, window=16,
+                nav_timeout=nav_timeout, backoff_init=backoff_init,
                 variant="tree", tree_width=2, tree_depth=8,
             )
-        clients.append(
-            EdgeClient(sid, up, dn, cfg, draft=SyntheticDraft(seed=sid, p_hard=p_hard))
-        )
+        # Oracle fleets share ONE target stream (same prompt, same truth) so
+        # the chaos harness can diff committed streams across scenarios.
+        draft = OracleDraft(seed=seed) if oracle else SyntheticDraft(seed=sid, p_hard=p_hard)
+        clients.append(EdgeClient(sid, up, dn, cfg, draft=draft))
     server.start()
     results: Dict[int, dict] = {}
+    streams: Dict[int, List[int]] = {}
 
     def _drive(c: EdgeClient, start_s: float) -> None:
-        time.sleep(start_s * ts)  # Poisson arrival (scaled)
+        clock.sleep(start_s * ts)  # Poisson arrival (scaled)
         results[c.session] = c.run(tokens_per_session)
+        streams[c.session] = list(c.tokens)
 
-    threads = [
-        threading.Thread(target=_drive, args=(c, float(arrivals[i])), daemon=True)
-        for i, c in enumerate(clients)
-    ]
-    t0 = time.monotonic()
-    [t.start() for t in threads]
-    [t.join(timeout=600) for t in threads]
-    wall = time.monotonic() - t0
-    server.stop()
+    def _serve() -> float:
+        handles = [
+            clock.spawn(
+                (lambda c=c, s=float(arrivals[i]): _drive(c, s)),
+                name=f"drive-{c.session}",
+            )
+            for i, c in enumerate(clients)
+        ]
+        t0 = clock.monotonic()
+        for h in handles:
+            h.join(timeout=600 if not getattr(clock, "virtual", False) else None)
+        wall_ = clock.monotonic() - t0
+        server.stop()
+        return wall_
+
+    wall = clock.run(_serve)
 
     load = server.load_summary()
     stats = RunStats(
@@ -193,6 +243,12 @@ def run_fleet(
         kv_resident_bytes=load.get("kv_bytes_series", []),
         kv_resident_sessions=load.get("kv_sessions_series", []),
         kv_cap_hits=load.get("kv_cap_hits", 0),
+        failovers=sum(r["failovers"] for r in results.values()),
+        fallback_tokens=sum(r["fallback_tokens"] for r in results.values()),
+        lost_draft_tokens=sum(r["lost_draft_tokens"] for r in results.values()),
+        recovery_latencies=[
+            lat / ts for r in results.values() for lat in r["recovery_latencies"]
+        ],
     )
     per_session_tpt = {
         sid: r["wall_time"] / ts / max(r["accepted_tokens"], 1) for sid, r in results.items()
@@ -212,7 +268,8 @@ def run_fleet(
         kv_max_clients=kv_max_clients,
         stats=stats,
         per_session_tpt=per_session_tpt,
-        failovers=sum(r["failovers"] for r in results.values()),
+        failovers=stats.failovers,
+        streams=streams,
         server=load,
     )
 
@@ -305,6 +362,116 @@ def compare_tree(
     return out
 
 
+def run_chaos(
+    scenarios: Tuple[FaultScenario, ...] = FAULT_MATRIX,
+    n_sessions: int = 4,
+    tokens_per_session: int = 120,
+    seed: int = 0,
+    scen: int = 1,
+) -> dict:
+    """Chaos mode: the oracle fleet under every fault scenario, virtually.
+
+    Each scenario serves ``n_sessions`` oracle clients on a fresh
+    ``VirtualClock`` with the scenario's faults on every link, and reports
+    offline-robustness metrics in exact simulated seconds: failovers,
+    fallback share, **recovery latency** (failover → next verified round)
+    and **tokens lost per outage** (drafted tokens whose round was abandoned,
+    divided by the scenario's outage windows).  ``conformant`` asserts the
+    paper's robustness claim end-to-end: every session's committed stream is
+    bit-identical to the oracle (≡ the fault-free stream).  Runs are
+    bit-reproducible from ``seed`` — the CI chaos job diffs two of them.
+    """
+    oracle_ref = OracleStream(seed)
+    out: Dict[str, dict] = {}
+    for fs in scenarios:
+        rep = run_fleet(
+            n_sessions=n_sessions,
+            mode="batched",
+            scen=scen,
+            tokens_per_session=tokens_per_session,
+            seed=seed,
+            ts=1.0,  # virtual seconds are free — run the model at true scale
+            clock=VirtualClock(),
+            faults=fs,
+            oracle=True,
+            nav_timeout=1.0,
+            backoff_init=0.1,
+            local_gamma=8.0,  # offline full-model decode is ~8x slower
+        )
+        st: RunStats = rep["stats"]
+        n_outages = len(fs.outage_windows("up")) + len(fs.outage_windows("dn"))
+        rep["scenario_name"] = fs.name
+        rep["conformant"] = all(
+            stream == oracle_ref.prefix(len(stream)) and len(stream) >= tokens_per_session
+            for stream in rep["streams"].values()
+        )
+        # Per-outage attribution only makes sense when the scenario HAS
+        # outage windows; lossy-but-outage-free scenarios report 0 here and
+        # their abandoned drafts via ``lost_draft_tokens`` directly.
+        rep["n_outages"] = n_outages
+        rep["tokens_lost_per_outage"] = (
+            st.lost_draft_tokens / n_outages if n_outages else 0.0
+        )
+        rep["recovery_latency_s"] = st.mean_recovery_latency
+        out[fs.name] = rep
+    return out
+
+
+def _chaos_lines(reports: dict) -> List[str]:
+    lines = []
+    for name, rep in reports.items():
+        st: RunStats = rep["stats"]
+        lost = (
+            f" lost/outage={rep['tokens_lost_per_outage']:.0f}"
+            if rep["n_outages"]
+            else f" lost_drafts={st.lost_draft_tokens}"
+        )
+        lines.append(
+            f"  {name:<18} conformant={rep['conformant']}"
+            f" failovers={st.failovers}"
+            f" fallback={st.fallback_fraction*100:.0f}%"
+            f" recovery={st.mean_recovery_latency*1e3:.0f}ms"
+            + lost
+            + f" navs={st.nav_calls} wall={st.wall_time:.1f}s"
+        )
+    return lines
+
+
+def chaos(n_sessions: int = 4, seed: int = 0) -> Tuple[list, List[str]]:
+    """Harness entry (benchmarks.run): one CSV row per fault scenario.
+
+    Deterministic by construction (virtual clock + seeded everything): two
+    invocations with the same arguments emit byte-identical rows, which is
+    exactly what the CI chaos job diffs.
+    """
+    reports = run_chaos(n_sessions=n_sessions, seed=seed)
+    rows, lines = [], []
+    for name, rep in reports.items():
+        st: RunStats = rep["stats"]
+        row = dict(
+            scenario_name=name,
+            conformant=rep["conformant"],
+            failovers=st.failovers,
+            fallback_fraction=st.fallback_fraction,
+            recovery_latency_s=st.mean_recovery_latency,
+            lost_draft_tokens=st.lost_draft_tokens,
+            n_outages=rep["n_outages"],
+            tokens_lost_per_outage=rep["tokens_lost_per_outage"],
+            wall_time_s=st.wall_time,
+        )
+        rows.append(row)
+        derived = (
+            f"conformant={rep['conformant']};failovers={st.failovers};"
+            f"fallback_pct={st.fallback_fraction*100:.1f};"
+            f"recovery_ms={st.mean_recovery_latency*1e3:.1f};"
+            f"lost_drafts={st.lost_draft_tokens};"
+            f"lost_per_outage={rep['tokens_lost_per_outage']:.1f};"
+            f"navs={st.nav_calls};wall_s={st.wall_time:.3f}"
+        )
+        lines.append(csv_row(f"chaos/{name}", st.wall_time * 1e6, derived))
+    return rows, lines
+
+
 def _row(rep: dict, **extra) -> Tuple[dict, str]:
     st: RunStats = rep["stats"]
     p50, p99 = st.nav_latency_quantiles()
@@ -372,10 +539,21 @@ def fleet(scenarios=(1, 2, 3, 4), n_sessions: int = 8) -> Tuple[list, List[str]]
 
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "chaos":
+        # Deterministic chaos report (virtual clock): every printed value is
+        # a pure function of the seed, so CI diffs two runs byte-for-byte.
+        try:
+            seed = int(sys.argv[2]) if len(sys.argv) > 2 else 0
+        except ValueError:
+            sys.exit(f"usage: fleet_bench.py [chaos [seed] | n_sessions]  (got {sys.argv[2]!r})")
+        print(f"=== chaos matrix, oracle fleet, virtual clock, seed {seed} ===")
+        for line in _chaos_lines(run_chaos(seed=seed)):
+            print(line)
+        return
     try:
         n = int(sys.argv[1]) if len(sys.argv) > 1 else 8
     except ValueError:
-        sys.exit(f"usage: fleet_bench.py [n_sessions]  (got {sys.argv[1]!r})")
+        sys.exit(f"usage: fleet_bench.py [chaos [seed] | n_sessions]  (got {sys.argv[1]!r})")
     print(f"=== fleet serving, {n} edge sessions, Poisson arrivals, scenario 1 ===")
     reports = {mode: run_fleet(n_sessions=n, mode=mode, scen=1) for mode in MODES}
     for mode in MODES:

@@ -14,11 +14,11 @@ import time
 
 
 def main() -> None:
-    from .fleet_bench import fleet
+    from .fleet_bench import chaos, fleet
     from .roofline_bench import roofline
     from .tables import ALL_TABLES
 
-    extras = {"roofline": roofline, "fleet": fleet}
+    extras = {"roofline": roofline, "fleet": fleet, "chaos": chaos}
     wanted = sys.argv[1:] or list(ALL_TABLES) + list(extras)
     print("name,us_per_call,derived")
     t_start = time.time()

@@ -67,6 +67,10 @@ class EnvironmentMonitor:
     # distinct resident bytes + page-holding sessions at each dispatch.
     _kv_bytes: Deque[float] = field(default_factory=deque, init=False)
     _kv_sessions: Deque[int] = field(default_factory=deque, init=False)
+    # Link health (offline robustness, runtime/client.py): run-relative
+    # failover times and per-offline-spell recovery latencies.
+    _failover_times: Deque[float] = field(default_factory=deque, init=False)
+    _recovery_latencies: Deque[float] = field(default_factory=deque, init=False)
     # Last parameters the consumers (DP/BO) were given.
     _committed: Optional[Tuple[float, float, float]] = field(default=None, init=False)
     _committed_tpt: Optional[float] = field(default=None, init=False)
@@ -104,6 +108,18 @@ class EnvironmentMonitor:
         while len(self._kv_bytes) > self.window:
             self._kv_bytes.popleft()
             self._kv_sessions.popleft()
+
+    def observe_failover(self, t: float) -> None:
+        """One NAV-timeout failover at run-relative time ``t`` [s]."""
+        self._failover_times.append(float(t))
+        while len(self._failover_times) > self.window:
+            self._failover_times.popleft()
+
+    def observe_recovery(self, latency: float) -> None:
+        """One offline-spell recovery: failover → next verified round [s]."""
+        self._recovery_latencies.append(float(latency))
+        while len(self._recovery_latencies) > self.window:
+            self._recovery_latencies.popleft()
 
     # ----------------------------------------------------------- estimates --
     def missing_probe_sizes(self) -> List[int]:
@@ -152,6 +168,14 @@ class EnvironmentMonitor:
 
     def kv_sessions_series(self) -> List[int]:
         return list(self._kv_sessions)
+
+    def failover_times(self) -> List[float]:
+        """Run-relative failover times [s] within the window."""
+        return list(self._failover_times)
+
+    def recovery_latencies(self) -> List[float]:
+        """Offline-spell recovery latencies [s] within the window."""
+        return list(self._recovery_latencies)
 
     # ------------------------------------------------------------ triggers --
     @staticmethod

@@ -335,6 +335,14 @@ class RunStats:
     kv_resident_bytes: List[float] = field(default_factory=list)
     kv_resident_sessions: List[int] = field(default_factory=list)
     kv_cap_hits: int = 0
+    # Offline robustness (runtime/faults.py chaos serving): NAV-timeout
+    # failovers, tokens decoded locally while offline, drafted tokens whose
+    # round had to be abandoned, and per-recovery latency [s] from the first
+    # failover of an offline spell to the next verified round.
+    failovers: int = 0
+    fallback_tokens: int = 0
+    lost_draft_tokens: int = 0
+    recovery_latencies: List[float] = field(default_factory=list)
 
     @property
     def tpt(self) -> float:
@@ -406,6 +414,16 @@ class RunStats:
         """Mean verifier queue depth observed at admission time."""
         return float(np.mean(self.verifier_queue_depths)) if self.verifier_queue_depths else 0.0
 
+    @property
+    def mean_recovery_latency(self) -> float:
+        """Mean offline-spell recovery latency [s]; 0 when never offline."""
+        return float(np.mean(self.recovery_latencies)) if self.recovery_latencies else 0.0
+
+    @property
+    def fallback_fraction(self) -> float:
+        """Share of output tokens decoded locally while the cloud was away."""
+        return self.fallback_tokens / max(self.accepted_tokens, 1)
+
     def nav_latency_quantiles(self) -> Tuple[float, float]:
         """(p50, p99) NAV round-trip latency [s]; (0, 0) when unrecorded."""
         if not self.nav_latencies:
@@ -440,6 +458,10 @@ class RunStats:
             kv_peak_mb=self.peak_kv_resident_bytes / 1e6,
             kv_bytes_per_session_mb=self.kv_bytes_per_session / 1e6,
             kv_cap_hits=self.kv_cap_hits,
+            failovers=self.failovers,
+            fallback_fraction=self.fallback_fraction,
+            lost_draft_tokens=self.lost_draft_tokens,
+            recovery_latency_s=self.mean_recovery_latency,
         )
 
 

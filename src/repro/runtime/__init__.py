@@ -1,16 +1,32 @@
-from .transport import Channel, ChannelConfig, Message
+from .simclock import SYSTEM_CLOCK, ActorHandle, SystemClock, VirtualClock
+from .transport import Channel, ChannelConfig, Message, make_link
+from .faults import FAULT_MATRIX, FaultScenario, LinkFaults, Phase, scenario_by_name
 from .server import CloudVerifier, VerifyBackend, SyntheticBackend, SpecVerifyBackend
 from .client import EdgeClient, EdgeConfig, SyntheticDraft
+from .oracle import OracleBackend, OracleDraft, OracleStream
 
 __all__ = [
+    "ActorHandle",
     "Channel",
     "ChannelConfig",
     "CloudVerifier",
     "EdgeClient",
     "EdgeConfig",
+    "FAULT_MATRIX",
+    "FaultScenario",
+    "LinkFaults",
     "Message",
+    "OracleBackend",
+    "OracleDraft",
+    "OracleStream",
+    "Phase",
     "SpecVerifyBackend",
+    "SYSTEM_CLOCK",
     "SyntheticBackend",
     "SyntheticDraft",
+    "SystemClock",
     "VerifyBackend",
+    "VirtualClock",
+    "make_link",
+    "scenario_by_name",
 ]

@@ -1,22 +1,38 @@
 """Edge client: drafting + transmission control + failover (§4.2, DESIGN §6).
 
 Runs the full PipeSD edge stack against a live ``CloudVerifier``:
-* drafts tokens (pluggable: ``SyntheticDraft`` or a real tiny JAX model);
+* drafts tokens (pluggable: ``SyntheticDraft``, ``runtime.oracle.OracleDraft``,
+  or a real tiny JAX model);
 * dual-threshold NAV triggering (core.trigger) with window cap;
 * token-batch pipeline transmission from the DP schedule (core.scheduler);
 * environment monitor feeding the parameter updater (δ-rules, App. D);
 * **failover**: if a NAV result misses its deadline the client falls back to
   local autoregressive decoding (the paper's offline-robustness mode), keeps
-  generating, and re-probes the cloud with exponential backoff;
+  generating, and re-probes the cloud with exponential backoff; the re-probe
+  carries the client's committed stream position so the verifier can
+  reconcile its paged-KV state (re-attach);
 * **tree speculation** (``variant='tree'``): top-k branching draft trees with
   per-path dual-threshold pruning, shipped level-by-level with packed
   parents and verified by the server's batched tree-NAV path.
+
+All timing goes through the clock inherited from the uplink channel (or an
+explicit ``clock=``): ``SystemClock`` for wall-clock serving, ``VirtualClock``
+for deterministic discrete-event runs (``runtime.simclock``).
+
+Beyond counters, the client records the actual **accepted token stream**
+(``self.tokens``: accepted drafts + corrections + local-decode fallback, in
+commit order) — the quantity the fault-conformance suite asserts is
+bit-identical with and without link faults.
+
+Draft-model protocol: ``next() -> (token, conf)`` is required; ``seek(pos)``
+(rewind to the committed stream position — called at round start and before
+fallback) and ``local_decode() -> token`` (offline full-model fallback) are
+optional and default to the stateless legacy behaviour.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -24,6 +40,7 @@ import numpy as np
 from repro.core.monitor import EnvironmentMonitor
 from repro.core.scheduler import CommParams, batch_sizes, dp_schedule
 from repro.core.trigger import make_trigger
+from .simclock import SYSTEM_CLOCK
 from .transport import Channel, Message
 
 __all__ = ["EdgeConfig", "SyntheticDraft", "EdgeClient"]
@@ -35,6 +52,10 @@ class EdgeConfig:
     r1: float = 0.9
     r2: float = 0.6
     gamma: float = 0.020  # per-token draft time [s] (scaled)
+    # Offline full-model decode time per token [s]; None = gamma (legacy).
+    # The paper's offline mode runs the whole pipeline on the edge, so real
+    # deployments set this several times gamma.
+    local_gamma: Optional[float] = None
     time_scale: float = 1.0
     nav_timeout: float = 2.0  # seconds before failover
     backoff_init: float = 0.5
@@ -71,16 +92,21 @@ class EdgeClient:
         downlink: Channel,
         cfg: EdgeConfig,
         draft=None,
+        clock=None,
     ):
         self.session = session
         self.up = uplink
         self.dn = downlink
         self.cfg = cfg
+        self.clock = clock or getattr(uplink, "clock", None) or SYSTEM_CLOCK
         self.draft = draft or SyntheticDraft(seed=session)
         self.trigger = make_trigger("dual", r1=cfg.r1, r2=cfg.r2, window=cfg.window)
         self.monitor = EnvironmentMonitor()
         self.seq = 0
         self.round = 0  # NAV round id — keys the server's per-round buffers
+        # The committed output stream: accepted drafts + corrections +
+        # locally-decoded fallback tokens, in commit order.
+        self.tokens: List[int] = []
         self.stats = {
             "accepted_tokens": 0,
             "drafted_tokens": 0,
@@ -89,12 +115,24 @@ class EdgeClient:
             "fallback_tokens": 0,
             "failovers": 0,
             "wall_time": 0.0,
-            # Per-round NAV round-trip latencies [s, wall clock] — the serving
+            # Per-round NAV round-trip latencies [s, clock time] — the serving
             # benchmarks reduce these to p50/p99 (core.pipeline.RunStats).
             "nav_latencies": [],
+            # Fault-recovery accounting (chaos benchmarks): run-relative times
+            # of each failover, of each first-NAV-success after an offline
+            # spell, and drafted tokens whose round had to be abandoned.
+            "failover_times": [],
+            "recovery_times": [],
+            "recovery_latencies": [],
+            "lost_draft_tokens": 0,
         }
 
     # ------------------------------------------------------------- drafting --
+    def _seek_draft(self) -> None:
+        """Align a positional draft model with the committed stream length."""
+        if hasattr(self.draft, "seek"):
+            self.draft.seek(len(self.tokens))
+
     def _draft_round(self) -> Tuple[List[int], List[float]]:
         tokens, confs = [], []
         plan = dp_schedule(
@@ -106,7 +144,7 @@ class EdgeClient:
         bi = 0
         pending: List[Tuple[int, float]] = []
         for _ in range(self.cfg.window):
-            time.sleep(self.cfg.gamma * self.cfg.time_scale)  # generation cost
+            self.clock.sleep(self.cfg.gamma * self.cfg.time_scale)  # generation cost
             tok, conf = self.draft.next()
             tokens.append(tok)
             confs.append(conf)
@@ -142,7 +180,7 @@ class EdgeClient:
         frontier: List[Tuple[int, float]] = [(-1, 1.0)]  # (node idx, path C1)
         budget = self.cfg.window
         for _ in range(self.cfg.tree_depth):
-            time.sleep(self.cfg.gamma * len(frontier) * self.cfg.time_scale)
+            self.clock.sleep(self.cfg.gamma * len(frontier) * self.cfg.time_scale)
             level_start = len(tokens)
             nxt: List[Tuple[int, float]] = []
             for pidx, pconf in frontier:
@@ -180,30 +218,56 @@ class EdgeClient:
         self.up.send(Message("draft_batch", self.session, self.seq, len(toks), payload))
         self.monitor.observe_batch(len(toks), self.up.cfg.alpha + self.up.cfg.beta * len(toks))
 
+    # ----------------------------------------------------------- fallback --
+    def _local_decode_one(self) -> int:
+        """One offline token: full-model local decode when the draft supports
+        it, otherwise the legacy draft-as-fallback behaviour."""
+        if hasattr(self.draft, "local_decode"):
+            return int(self.draft.local_decode())
+        return int(self.draft.next()[0])
+
+    def _commit(self, toks: List[int]) -> None:
+        self.tokens.extend(int(t) for t in toks)
+        self.stats["accepted_tokens"] += len(toks)
+
     # ---------------------------------------------------------------- runs --
     def run(self, n_tokens: int) -> dict:
         """Generate until n_tokens accepted; returns stats (incl. failovers)."""
-        t0 = time.monotonic()
+        t0 = self.clock.monotonic()
         backoff = self.cfg.backoff_init
         cloud_ok = True
+        offline_since: Optional[float] = None
         while self.stats["accepted_tokens"] < n_tokens:
             if not cloud_ok:
                 # Offline mode: local autoregressive decoding (no NAV).
-                n_local = 0
-                deadline = time.monotonic() + backoff * self.cfg.time_scale * 10
-                while time.monotonic() < deadline and self.stats["accepted_tokens"] < n_tokens:
-                    time.sleep(self.cfg.gamma * self.cfg.time_scale)
-                    self.draft.next()
-                    self.stats["accepted_tokens"] += 1
+                self._seek_draft()
+                deadline = self.clock.monotonic() + backoff * self.cfg.time_scale * 10
+                local_gamma = (
+                    self.cfg.local_gamma
+                    if self.cfg.local_gamma is not None
+                    else self.cfg.gamma
+                )
+                while (
+                    self.clock.monotonic() < deadline
+                    and self.stats["accepted_tokens"] < n_tokens
+                ):
+                    self.clock.sleep(local_gamma * self.cfg.time_scale)
+                    self._commit([self._local_decode_one()])
                     self.stats["fallback_tokens"] += 1
-                    n_local += 1
-                # Re-probe the cloud.
+                # Re-probe the cloud, announcing our committed position so the
+                # verifier reconciles its KV fork (re-attach).
                 self.seq += 1
-                self.up.send(Message("reset", self.session, self.seq, 1, None))
+                self.up.send(
+                    Message(
+                        "reset", self.session, self.seq, 1,
+                        {"position": len(self.tokens), "round": self.round},
+                    )
+                )
                 cloud_ok = True  # optimistic; next round will confirm
                 backoff = min(backoff * 2, self.cfg.backoff_max)
                 continue
             self.round += 1
+            self._seek_draft()
             tree_mode = self.cfg.variant == "tree"
             if tree_mode:
                 tokens, confs, _parents = self._draft_round_tree()
@@ -211,10 +275,17 @@ class EdgeClient:
                 tokens, confs = self._draft_round()
             self.seq += 1
             timeout = self.cfg.nav_timeout * max(self.cfg.time_scale, 0.05)
-            t_req = time.monotonic()
+            t_req = self.clock.monotonic()
             # The deadline rides with the request: once it passes, this client
             # has failed over, so the server drops the work (straggler drop).
-            request = {"n_tokens": len(tokens), "deadline": t_req + timeout, "round": self.round}
+            # ``pos`` is the stream position of the round's first draft —
+            # positional (oracle) backends verify against it statelessly.
+            request = {
+                "n_tokens": len(tokens),
+                "deadline": t_req + timeout,
+                "round": self.round,
+                "pos": len(self.tokens),
+            }
             if tree_mode:
                 request["tree"] = True
             self.up.send(Message("nav_request", self.session, self.seq, 1, request))
@@ -222,18 +293,36 @@ class EdgeClient:
             result = self.dn.recv(timeout=timeout)
             while result is not None and result.seq != self.seq:
                 # Stale reply from a round we already failed over — discard.
-                rem = t_req + timeout - time.monotonic()
+                rem = t_req + timeout - self.clock.monotonic()
                 result = self.dn.recv(timeout=rem) if rem > 0 else None
             if result is None:  # NAV lost/late → failover to local decode
                 self.stats["failovers"] += 1
+                self.stats["lost_draft_tokens"] += len(tokens)
+                now = self.clock.monotonic()
+                self.stats["failover_times"].append(now - t0)
+                self.monitor.observe_failover(now - t0)
+                if offline_since is None:
+                    offline_since = now
                 cloud_ok = False
                 self.trigger.reset()
                 continue
-            self.stats["nav_latencies"].append(time.monotonic() - t_req)
+            now = self.clock.monotonic()
+            self.stats["nav_latencies"].append(now - t_req)
+            if offline_since is not None:
+                # First verified round after an offline spell: recovered.
+                self.stats["recovery_times"].append(now - t0)
+                self.stats["recovery_latencies"].append(now - offline_since)
+                self.monitor.observe_recovery(now - offline_since)
+                offline_since = None
             backoff = self.cfg.backoff_init
             n_acc = result.payload["n_accepted"]
-            self.stats["accepted_tokens"] += n_acc + 1  # + correction token
+            path = result.payload.get("path")
+            if path is not None:  # tree round: the accepted root→leaf path
+                self._commit([tokens[i] for i in path])
+            else:
+                self._commit(tokens[:n_acc])
+            self._commit([result.payload["correction"]])
             self.stats["rounds"] += 1
             self.trigger.on_verify(n_acc, len(tokens))
-        self.stats["wall_time"] = time.monotonic() - t0
+        self.stats["wall_time"] = self.clock.monotonic() - t0
         return dict(self.stats)

@@ -1,0 +1,203 @@
+"""Declarative link-fault injection for the cloud-edge runtime.
+
+A :class:`FaultScenario` is a named, fully declarative description of how
+the edge↔cloud link degrades over a run: per-direction time *phases* during
+which messages are dropped, duplicated, reordered, the link bandwidth
+collapses (Hockney β multiplier), or the link is hard-down (outage).  A
+:class:`LinkFaults` instance compiles one direction of a scenario for one
+channel and is consulted by ``Channel.send`` for every message; all random
+decisions come from a dedicated seeded RNG, so under a ``VirtualClock`` a
+scenario replays bit-identically from its seed.
+
+Phase times are *virtual seconds relative to channel creation* and are
+multiplied by the channel's ``time_scale``, matching how every other delay
+in the transport scales.
+
+Example::
+
+    scen = FaultScenario(
+        "burst_drop_then_outage",
+        up=(Phase(0.5, 2.0, drop_prob=0.4),),
+        dn=(Phase(3.0, 4.5, outage=True),),
+    )
+    up = Channel(cfg_up, clock=clock, faults=LinkFaults(scen, "up", seed=7))
+    dn = Channel(cfg_dn, clock=clock, faults=LinkFaults(scen, "dn", seed=7))
+
+The conformance contract (``tests/test_fault_conformance.py``): for every
+scenario in :data:`FAULT_MATRIX` the accepted token stream is bit-identical
+to the fault-free run — speculative decoding with an oracle-true verifier
+is lossless, and the edge's local-decode fallback continues the same stream
+offline — and two runs with the same seed produce identical RunStats.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+__all__ = ["Phase", "FaultScenario", "LinkFaults", "FAULT_MATRIX", "scenario_by_name"]
+
+
+@dataclass(frozen=True)
+class Phase:
+    """One time window of link degradation on a single direction.
+
+    ``start``/``end`` are in unscaled link-relative seconds.  Within the
+    window each sent message is independently dropped with ``drop_prob``,
+    duplicated with ``dup_prob`` (the copy re-traverses the link), delayed
+    past later messages with ``reorder_prob`` (an extra ``reorder_jitter``
+    seconds of out-of-band delay), and every delivery pays
+    ``bandwidth_factor``× the per-token β cost.  ``outage=True`` drops
+    everything in the window regardless of probabilities.
+    """
+
+    start: float
+    end: float
+    drop_prob: float = 0.0
+    dup_prob: float = 0.0
+    reorder_prob: float = 0.0
+    reorder_jitter: float = 0.05
+    bandwidth_factor: float = 1.0
+    outage: bool = False
+
+
+@dataclass(frozen=True)
+class FaultScenario:
+    """A named fault schedule: phases for the uplink and the downlink."""
+
+    name: str
+    up: Tuple[Phase, ...] = ()
+    dn: Tuple[Phase, ...] = ()
+
+    def phases(self, direction: str) -> Tuple[Phase, ...]:
+        """The phase tuple for ``direction`` (``'up'`` or ``'dn'``)."""
+        if direction not in ("up", "dn"):
+            raise ValueError(f"direction must be 'up' or 'dn', got {direction!r}")
+        return self.up if direction == "up" else self.dn
+
+    def outage_windows(self, direction: str) -> Tuple[Tuple[float, float], ...]:
+        """(start, end) of every hard-outage phase on ``direction``."""
+        return tuple((p.start, p.end) for p in self.phases(direction) if p.outage)
+
+
+class LinkFaults:
+    """One direction of a :class:`FaultScenario`, compiled for one channel.
+
+    Holds its own ``random.Random`` seeded from ``(scenario, direction,
+    seed)`` so fault draws never perturb — and are never perturbed by —
+    any other randomness in the run.
+    """
+
+    def __init__(
+        self,
+        scenario: FaultScenario,
+        direction: str,
+        seed: int = 0,
+        time_scale: float = 1.0,
+    ):
+        self.scenario = scenario
+        self.direction = direction
+        self.time_scale = time_scale
+        self._phases = scenario.phases(direction)
+        self._rng = random.Random(f"{scenario.name}:{direction}:{seed}")
+        self.stats = {"dropped": 0, "duplicated": 0, "reordered": 0}
+
+    def _phase_at(self, t_rel: float) -> Optional[Phase]:
+        ts = max(self.time_scale, 1e-12)
+        for p in self._phases:
+            if p.start * ts <= t_rel < p.end * ts:
+                return p
+        return None
+
+    def beta_factor(self, t_rel: float) -> float:
+        """Bandwidth multiplier on the per-token β cost at link time ``t_rel``."""
+        p = self._phase_at(t_rel)
+        return p.bandwidth_factor if p is not None else 1.0
+
+    def dropped(self, t_rel: float) -> bool:
+        """Whether the message entering the link at ``t_rel`` is lost."""
+        p = self._phase_at(t_rel)
+        if p is None:
+            return False
+        if p.outage or (p.drop_prob > 0 and self._rng.random() < p.drop_prob):
+            self.stats["dropped"] += 1
+            return True
+        return False
+
+    def duplicated(self, t_rel: float) -> bool:
+        """Whether the message is delivered twice (a retransmitted copy)."""
+        p = self._phase_at(t_rel)
+        if p is not None and p.dup_prob > 0 and self._rng.random() < p.dup_prob:
+            self.stats["duplicated"] += 1
+            return True
+        return False
+
+    def reorder_delay(self, t_rel: float) -> float:
+        """Extra out-of-band delivery delay [s]; >0 lets later messages pass."""
+        p = self._phase_at(t_rel)
+        if p is not None and p.reorder_prob > 0 and self._rng.random() < p.reorder_prob:
+            self.stats["reordered"] += 1
+            return p.reorder_jitter * max(self.time_scale, 1e-12) * (1.0 + self._rng.random())
+        return 0.0
+
+
+# --------------------------------------------------------------------------- #
+# The scenario matrix: every named link condition the conformance suite and
+# the chaos benchmark exercise.  Windows assume the conformance timebase
+# (γ=0.02, window 8-16 → rounds of ~0.2-0.5 virtual seconds, runs of ~5-20 s).
+# --------------------------------------------------------------------------- #
+
+FAULT_MATRIX: Tuple[FaultScenario, ...] = (
+    FaultScenario("clean"),
+    # Random loss on one direction at a time: uplink loss starves the
+    # verifier's draft buffers (parked NAV rounds), downlink loss eats
+    # results after the work was done (stale-seq discard on the client).
+    FaultScenario("up_drop", up=(Phase(0.0, 8.0, drop_prob=0.25),)),
+    FaultScenario("dn_drop", dn=(Phase(0.0, 8.0, drop_prob=0.25),)),
+    # Retransmission pathologies: duplicated and reordered draft batches and
+    # NAV requests must not desync round buffers or double-commit KV.
+    FaultScenario(
+        "dup_reorder",
+        up=(Phase(0.0, 10.0, dup_prob=0.3, reorder_prob=0.3, reorder_jitter=0.08),),
+        dn=(Phase(0.0, 10.0, dup_prob=0.2),),
+    ),
+    # Bandwidth collapse ramp: β degrades 4× then 12× and recovers — NAV
+    # round-trips stretch toward the timeout without ever hard-failing.
+    FaultScenario(
+        "bandwidth_ramp",
+        up=(Phase(1.0, 3.0, bandwidth_factor=4.0), Phase(3.0, 5.0, bandwidth_factor=12.0)),
+        dn=(Phase(1.0, 5.0, bandwidth_factor=4.0),),
+    ),
+    # Hard outage on the downlink: the verifier keeps verifying but results
+    # never arrive → NAV timeout → local-decode fallback → re-attach.
+    FaultScenario("dn_outage", dn=(Phase(0.8, 2.2, outage=True),)),
+    # Full link down, twice: both directions out, back-to-back recoveries.
+    FaultScenario(
+        "double_outage",
+        up=(Phase(0.8, 1.6, outage=True), Phase(3.0, 3.8, outage=True)),
+        dn=(Phase(0.8, 1.6, outage=True), Phase(3.0, 3.8, outage=True)),
+    ),
+    # Everything at once: loss + duplication + reordering + a bandwidth
+    # collapse + an outage window.
+    FaultScenario(
+        "flaky_everything",
+        up=(
+            Phase(0.0, 1.5, drop_prob=0.15, dup_prob=0.15, reorder_prob=0.2),
+            Phase(1.5, 2.5, outage=True),
+            Phase(2.5, 6.0, drop_prob=0.1, bandwidth_factor=6.0),
+        ),
+        dn=(
+            Phase(0.0, 2.0, drop_prob=0.1, dup_prob=0.1),
+            Phase(2.0, 3.0, bandwidth_factor=8.0),
+        ),
+    ),
+)
+
+
+def scenario_by_name(name: str) -> FaultScenario:
+    """Look up a :data:`FAULT_MATRIX` scenario by its name."""
+    for s in FAULT_MATRIX:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown fault scenario {name!r}; have {[s.name for s in FAULT_MATRIX]}")

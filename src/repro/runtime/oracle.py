@@ -1,0 +1,170 @@
+"""Deterministic oracle target stream for fault-conformance testing.
+
+The conformance suite needs a ground truth that makes "the fault run
+produced the *right* tokens" a checkable, bit-exact statement.  These
+components model PipeSD's offline-robustness setting faithfully:
+
+* :class:`OracleStream` — the target model's greedy output: token at
+  position ``p`` is a pure hash of ``(seed, p)``.  This is what a correct
+  run must emit, faults or no faults.
+* :class:`OracleDraft` — the edge draft model: at each position it proposes
+  the oracle token with probability ``p_draft`` (high confidence) or a
+  guaranteed-wrong token (low confidence).  The proposal is a pure function
+  of the position, so redrafting after a failover replays identically.
+  ``local_decode`` models the paper's offline mode — the edge pipeline runs
+  the *full* model locally (slower, but the same greedy stream), so an
+  outage never forks the output.
+* :class:`OracleBackend` — the cloud verifier: stateless and *positional*
+  (it consumes the round's start position carried by the NAV request), it
+  accepts the longest draft prefix matching the oracle and corrects with
+  the true next token.  Because acceptance depends only on (position,
+  token), no amount of message loss, duplication, reordering, or
+  re-attachment can desynchronize it — corrupted rounds just accept less.
+
+Together these give the lossless-speculative-decoding invariant the suite
+asserts: **the accepted token stream equals ``OracleStream`` exactly, for
+every fault scenario, bit-identical to the fault-free run.**
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from .server import VerifyBackend
+from .simclock import SYSTEM_CLOCK
+
+__all__ = ["OracleStream", "OracleDraft", "OracleBackend"]
+
+_MASK64 = (1 << 64) - 1
+
+
+def _mix(seed: int, pos: int, salt: int) -> int:
+    """SplitMix64-style stable hash of (seed, pos, salt) — no PYTHONHASHSEED."""
+    x = (seed * 0x9E3779B97F4A7C15 + pos * 0xBF58476D1CE4E5B9 + salt * 0x94D049BB133111EB) & _MASK64
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & _MASK64
+    x ^= x >> 27
+    x = (x * 0x94D049BB133111EB) & _MASK64
+    x ^= x >> 31
+    return x
+
+
+def _unit(seed: int, pos: int, salt: int) -> float:
+    """Uniform [0, 1) draw, a pure function of (seed, pos, salt)."""
+    return _mix(seed, pos, salt) / float(1 << 64)
+
+
+@dataclass(frozen=True)
+class OracleStream:
+    """The target model's deterministic greedy token stream."""
+
+    seed: int = 0
+    vocab: int = 1 << 16
+
+    def token(self, pos: int) -> int:
+        """The unique correct token at position ``pos``."""
+        return _mix(self.seed, pos, 1) % self.vocab
+
+    def prefix(self, n: int) -> List[int]:
+        """The first ``n`` tokens of the stream."""
+        return [self.token(p) for p in range(n)]
+
+
+class OracleDraft:
+    """Edge draft model over an :class:`OracleStream` (seekable, replayable).
+
+    Implements the ``EdgeClient`` draft protocol: ``next()`` proposes
+    ``(token, confidence)`` and advances the position; ``seek(pos)`` rewinds
+    to the client's committed position (called at round start and after
+    verification); ``local_decode()`` emits the oracle token itself — the
+    offline full-model fallback.
+    """
+
+    def __init__(self, seed: int = 0, p_draft: float = 0.8, vocab: int = 1 << 16):
+        self.stream = OracleStream(seed, vocab)
+        self.seed = seed
+        self.p_draft = p_draft
+        self.pos = 0
+
+    def seek(self, pos: int) -> None:
+        """Reset the draft position to the client's committed stream length."""
+        self.pos = int(pos)
+
+    def next(self) -> Tuple[int, float]:
+        """Draft the next token: oracle-correct w.p. ``p_draft``, else wrong."""
+        p = self.pos
+        correct = _unit(self.seed, p, 2) < self.p_draft
+        tok = self.stream.token(p)
+        if correct:
+            conf = 0.82 + 0.17 * _unit(self.seed, p, 3)
+        else:
+            tok = (tok + 1 + _mix(self.seed, p, 4) % (self.stream.vocab - 1)) % self.stream.vocab
+            conf = 0.15 + 0.5 * _unit(self.seed, p, 5)
+        self.pos = p + 1
+        return int(tok), float(conf)
+
+    def local_decode(self) -> int:
+        """Offline fallback: the edge runs the full model → the oracle token."""
+        tok = self.stream.token(self.pos)
+        self.pos += 1
+        return int(tok)
+
+
+class OracleBackend(VerifyBackend):
+    """Stateless positional verifier over an :class:`OracleStream`.
+
+    The server passes ``(session, tokens, confs, pos)`` through
+    ``verify_batch_pos`` (``pos`` rides the NAV request), so verification is
+    a pure function — immune to duplicated or replayed requests.  The
+    simulated target-forward cost matches ``SyntheticBackend``: one padded
+    pass per batch whose time scales with the longest draft.
+    """
+
+    #: Marks the positional protocol for ``CloudVerifier``.
+    positional = True
+
+    def __init__(
+        self,
+        seed: int = 0,
+        verify_time: float = 0.080,
+        verify_time_per_token: float = 0.004,
+        time_scale: float = 1.0,
+        clock=None,
+        vocab: int = 1 << 16,
+    ):
+        self.stream = OracleStream(seed, vocab)
+        self.verify_time = verify_time
+        self.verify_time_per_token = verify_time_per_token
+        self.time_scale = time_scale
+        self.clock = clock or SYSTEM_CLOCK
+
+    def _verify_one(self, tokens: Sequence[int], pos: int) -> Tuple[int, int]:
+        n_acc = 0
+        for i, t in enumerate(tokens):
+            if int(t) != self.stream.token(pos + i):
+                break
+            n_acc += 1
+        correction = self.stream.token(pos + n_acc)
+        return n_acc, correction
+
+    def verify(self, session: int, tokens: List[int], confs: List[float]):
+        """Unsupported without a position — use the positional batch path."""
+        raise NotImplementedError("OracleBackend is positional; use verify_batch_pos")
+
+    def verify_batch_pos(
+        self, requests: Sequence[Tuple[int, List[int], List[float], Optional[int]]]
+    ):
+        """One padded oracle pass: ``[(session, tokens, confs, pos)] -> [(n_acc, corr)]``."""
+        if not requests:
+            return []
+        max_len = max(len(t) for (_, t, _, _) in requests)
+        self.clock.sleep(
+            (self.verify_time + self.verify_time_per_token * max_len) * self.time_scale
+        )
+        out = []
+        for (_, tokens, _, pos) in requests:
+            if pos is None:
+                raise ValueError("OracleBackend needs the NAV request to carry 'pos'")
+            out.append(self._verify_one(tokens, int(pos)))
+        return out

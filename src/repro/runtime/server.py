@@ -45,15 +45,15 @@ target forward (``batched_logits_fn`` + the sessions' KV block tables).
 from __future__ import annotations
 
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.monitor import EnvironmentMonitor
 from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
+from .simclock import SYSTEM_CLOCK
 from .transport import Channel, Message
 
 __all__ = [
@@ -100,9 +100,12 @@ class SyntheticBackend(VerifyBackend):
     verify_time: float = 0.080  # simulated target forward time [s]
     verify_time_per_token: float = 0.004
     time_scale: float = 1.0
+    clock: object = None  # simclock surface; None -> SYSTEM_CLOCK
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
+        if self.clock is None:
+            self.clock = SYSTEM_CLOCK
 
     def _accept(self, confs: List[float]) -> Tuple[int, int]:
         n_acc = 0
@@ -116,7 +119,7 @@ class SyntheticBackend(VerifyBackend):
 
     def verify(self, session: int, tokens: List[int], confs: List[float]):
         """One simulated target forward for one session's chain drafts."""
-        time.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
+        self.clock.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
         return self._accept(confs)
 
     def verify_batch(self, requests):
@@ -124,7 +127,7 @@ class SyntheticBackend(VerifyBackend):
         if not requests:
             return []
         max_len = max(len(t) for (_, t, _) in requests)
-        time.sleep((self.verify_time + self.verify_time_per_token * max_len) * self.time_scale)
+        self.clock.sleep((self.verify_time + self.verify_time_per_token * max_len) * self.time_scale)
         return [self._accept(c) for (_, _, c) in requests]
 
     def _accept_tree(self, confs: List[float], parents: List[int]) -> Tuple[int, int, List[int]]:
@@ -155,7 +158,7 @@ class SyntheticBackend(VerifyBackend):
 
     def verify_tree(self, session, tokens, confs, parents):
         """One simulated tree-NAV call (cost scales with the node count)."""
-        time.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
+        self.clock.sleep((self.verify_time + self.verify_time_per_token * len(tokens)) * self.time_scale)
         return self._accept_tree(confs, parents)
 
     def verify_tree_batch(self, requests):
@@ -163,7 +166,7 @@ class SyntheticBackend(VerifyBackend):
         if not requests:
             return []
         max_len = max(len(t) for (_, t, _, _) in requests)
-        time.sleep((self.verify_time + self.verify_time_per_token * max_len) * self.time_scale)
+        self.clock.sleep((self.verify_time + self.verify_time_per_token * max_len) * self.time_scale)
         return [self._accept_tree(c, p) for (_, _, c, p) in requests]
 
 
@@ -285,6 +288,8 @@ class _VerifyRequest:
     deadline: Optional[float]  # absolute monotonic; None = never drop
     parents: Optional[List[int]] = None  # packed tree parents; None = chain
     kv_secured: bool = False  # this dispatch appended the round's KV pages
+    pos: Optional[int] = None  # client stream position of the round's first draft
+    epoch: int = 0  # session reset-epoch at enqueue; stale epochs never commit
 
 
 @dataclass
@@ -297,16 +302,39 @@ class _Session:
     # single shared buffer.  The third buffer lane carries packed tree
     # parents (absolute node indices within the round); chain rounds leave
     # it empty.
-    buffers: Dict[int, Tuple[List[int], List[float], List[int]]] = field(default_factory=dict)
+    # Per-round draft fragments keyed by message seq.  Flattening in seq
+    # order reassembles the client's draft order even when batches arrive
+    # reorder-delayed, so the verifier never evaluates a scrambled round.
+    buffers: Dict[int, Dict[int, Tuple[List[int], List[float], List[int]]]] = field(
+        default_factory=dict
+    )
     # NAV round that arrived before its proactively-uploaded drafts did.
     pending_request: Optional[Message] = None
-    last_seen: float = field(default_factory=time.monotonic)
+    last_seen: float = 0.0
     served: int = 0  # rounds verified — fairness key for admission
     kv_committed: int = 0  # logical target-cache length (tokens committed)
+    # Duplicate suppression under retransmission faults: message seqs already
+    # folded into each round's buffer (dropped with the buffer), and the
+    # highest round id already enqueued for dispatch (a duplicated
+    # nav_request must not verify — and KV-commit — the round twice).
+    buf_seqs: Dict[int, Set[int]] = field(default_factory=dict)
+    max_round_enqueued: int = 0
+    # Bumped by re-attach reconciliation; an in-flight round enqueued under
+    # an older epoch was abandoned by the edge and must not commit.
+    epoch: int = 0
 
     def buf(self, rnd: int) -> Tuple[List[int], List[float], List[int]]:
-        """The round's (tokens, confs, parents) buffer, created on demand."""
-        return self.buffers.setdefault(rnd, ([], [], []))
+        """The round's (tokens, confs, parents), flattened in seq order."""
+        toks: List[int] = []
+        confs: List[float] = []
+        pars: List[int] = []
+        frags = self.buffers.get(rnd, {})
+        for seq in sorted(frags):
+            t, c, p = frags[seq]
+            toks.extend(t)
+            confs.extend(c)
+            pars.extend(p)
+        return toks, confs, pars
 
 
 class CloudVerifier:
@@ -335,7 +363,9 @@ class CloudVerifier:
         kv_pool: Optional[PagedKVPool] = None,
         kv_shared_prefix: int = 0,
         kv_flat_reserve: Optional[int] = None,
+        clock=None,
     ):
+        self.clock = clock or SYSTEM_CLOCK
         self.backend = backend
         self.batch_window = batch_window
         self.session_timeout = session_timeout
@@ -371,9 +401,9 @@ class CloudVerifier:
         # so benchmark occupancy/queue series are not tail-truncated.
         self.monitor = EnvironmentMonitor(window=monitor_window)
         self._stop = threading.Event()
-        self._threads: List[threading.Thread] = []
+        self._threads: List = []  # clock spawn handles (Thread or ActorHandle)
         self._lock = threading.Lock()
-        self._work = threading.Condition(self._lock)
+        self._work = self.clock.condition(self._lock)
         self._queue: Deque[_VerifyRequest] = deque()
 
     def attach(self, session: int, uplink: Channel, downlink: Channel) -> None:
@@ -385,22 +415,20 @@ class CloudVerifier:
         fork the shared prefix copy-on-write (no pages allocated).
         """
         with self._lock:
-            sess = _Session()
+            sess = _Session(last_seen=self.clock.monotonic())
             if self.kv_pool is not None:
                 self._kv_register(session)
                 if self.kv_flat_reserve is None and self.kv_shared_prefix > 0:
                     sess.kv_committed = self.kv_shared_prefix
             self.links[session] = (uplink, downlink)
             self.sessions[session] = sess
-        t = threading.Thread(target=self._rx_loop, args=(session,), daemon=True)
-        t.start()
-        self._threads.append(t)
+        self._threads.append(
+            self.clock.spawn(lambda: self._rx_loop(session), name=f"rx-{session}")
+        )
 
     def start(self) -> None:
         """Start the dispatch loop (receive loops start per ``attach``)."""
-        t = threading.Thread(target=self._dispatch_loop, daemon=True)
-        t.start()
-        self._threads.append(t)
+        self._threads.append(self.clock.spawn(self._dispatch_loop, name="dispatch"))
 
     def stop(self) -> None:
         """Close uplinks and drain in-flight dispatch before returning."""
@@ -446,18 +474,27 @@ class CloudVerifier:
         is_tree = bool(msg.payload.get("tree")) if isinstance(msg.payload, dict) else False
         toks, confs, pars = sess.buf(rnd)
         take_t, take_c, take_p = toks[:n], confs[:n], pars[:n]
-        sess.buffers[rnd] = (toks[n:], confs[n:], pars[n:])
-        if not sess.buffers[rnd][0]:
-            del sess.buffers[rnd]
+        rest = (toks[n:], confs[n:], pars[n:])
+        if rest[0]:
+            # Collapse the leftover into one tail fragment at the round's
+            # highest seq, keeping the seq-ordered reassembly invariant.
+            sess.buffers[rnd] = {max(sess.buffers[rnd]): rest}
+        else:
+            sess.buffers.pop(rnd, None)
+            sess.buf_seqs.pop(rnd, None)
+        sess.max_round_enqueued = max(sess.max_round_enqueued, rnd)
+        payload_get = msg.payload.get if isinstance(msg.payload, dict) else (lambda *_: None)
         self._queue.append(
             _VerifyRequest(
                 session,
                 take_t,
                 take_c,
                 msg,
-                time.monotonic(),
-                msg.payload.get("deadline") if isinstance(msg.payload, dict) else None,
+                self.clock.monotonic(),
+                payload_get("deadline"),
                 parents=take_p if is_tree else None,
+                pos=payload_get("pos"),
+                epoch=sess.epoch,
             )
         )
         self._work.notify_all()
@@ -469,36 +506,54 @@ class CloudVerifier:
             if msg is None:
                 continue
             sess = self.sessions[session]
-            sess.last_seen = time.monotonic()
+            sess.last_seen = self.clock.monotonic()
             if msg.kind == "draft_batch":
                 tokens, confs = msg.payload[0], msg.payload[1]
                 # 4th tuple slot: packed tree parents (absent for chains).
                 batch_parents = msg.payload[3] if len(msg.payload) > 3 else None
                 rnd = self._round_of(msg.payload)
                 with self._lock:
-                    toks, cfs, pars = sess.buf(rnd)
-                    toks.extend(tokens)
-                    cfs.extend(confs)
-                    if batch_parents is not None:
-                        pars.extend(batch_parents)
+                    # A retransmitted (duplicated) batch must not extend the
+                    # round buffer twice — dedupe on the message seq; the
+                    # fragment map keys on seq so reorder-delayed batches
+                    # reassemble into the client's draft order.
+                    seen = sess.buf_seqs.setdefault(rnd, set())
+                    if msg.seq in seen:
+                        continue
+                    seen.add(msg.seq)
+                    sess.buffers.setdefault(rnd, {})[msg.seq] = (
+                        list(tokens),
+                        list(confs),
+                        list(batch_parents) if batch_parents is not None else [],
+                    )
                     # A parked NAV round becomes dispatchable the moment its
                     # proactively-uploaded drafts complete the buffer.
                     pend = sess.pending_request
                     if (
                         pend is not None
                         and self._round_of(pend.payload) == rnd
-                        and len(toks) >= pend.payload["n_tokens"]
+                        and len(sess.buf(rnd)[0]) >= pend.payload["n_tokens"]
                     ):
                         sess.pending_request = None
                         self._enqueue_round(session, sess, pend)
             elif msg.kind == "nav_request":
                 rnd = self._round_of(msg.payload)
                 with self._lock:
+                    # A duplicated nav_request for an already-enqueued round
+                    # must not verify (and KV-commit) the round twice, and a
+                    # stale (reorder-delayed) request from a round the client
+                    # has since abandoned must not displace a newer parked
+                    # round.
+                    pend = sess.pending_request
+                    pend_rnd = self._round_of(pend.payload) if pend is not None else 0
+                    if 0 < rnd and (rnd <= sess.max_round_enqueued or rnd < pend_rnd):
+                        continue
                     # Abandoned earlier rounds (failover on the client) can
                     # never be requested again — drop their buffers, and any
                     # still-parked older request, without touching this round.
                     for stale in [r for r in sess.buffers if r < rnd]:
                         del sess.buffers[stale]
+                        sess.buf_seqs.pop(stale, None)
                     if sess.pending_request is not None and self._round_of(sess.pending_request.payload) < rnd:
                         sess.pending_request = None
                     if len(sess.buf(rnd)[0]) >= msg.payload["n_tokens"]:
@@ -508,9 +563,35 @@ class CloudVerifier:
             elif msg.kind == "reset":
                 with self._lock:
                     sess.buffers.clear()
+                    sess.buf_seqs.clear()
                     sess.pending_request = None
+                    if isinstance(msg.payload, dict) and "position" in msg.payload:
+                        self._kv_reconcile(session, sess, int(msg.payload["position"]))
 
     # ----------------------------------------------------------- dispatch --
+    def _kv_reconcile(self, session: int, sess: _Session, position: int) -> None:
+        """Re-attach reconciliation: adopt the edge's committed stream length.
+
+        After an offline spell the edge's position is authoritative — it kept
+        decoding locally.  The verifier's logical cache length moves to the
+        edge position; cloud-side pages past it (rounds verified whose
+        results the edge never received) roll back to the fork, and the
+        re-prefill gap (tokens the edge decoded offline) is appended by the
+        next dispatch's ``_kv_secure`` exactly like a post-eviction comeback
+        — replaying the paged-KV fork on the cloud side.  Caller holds
+        ``self._lock``.
+        """
+        base = (
+            self.kv_shared_prefix
+            if (self.kv_pool is not None and self.kv_flat_reserve is None)
+            else 0
+        )
+        sess.epoch += 1  # rounds still in flight were abandoned by the edge
+        sess.kv_committed = base + max(position, 0)
+        if self.kv_pool is not None and session in self.kv_pool.tables:
+            keep = min(self.kv_pool.length(session), sess.kv_committed)
+            self.kv_pool.rollback(session, keep)
+
     def _kv_register(self, session: int) -> None:
         """Give a session its pool table per the configured KV policy.
 
@@ -590,7 +671,7 @@ class CloudVerifier:
         budget: a request whose cache growth cannot be backed (even after
         LRU eviction of idle sessions) parks back at the queue head.
         """
-        now = time.monotonic()
+        now = self.clock.monotonic()
         live: List[_VerifyRequest] = []
         for req in self._drain_queue():
             if self.drop_expired and req.deadline is not None and now > req.deadline:
@@ -648,7 +729,7 @@ class CloudVerifier:
                 with self._lock:
                     full = len(self._queue) >= self.max_batch
                 if not full:  # a full batch needs no coalescing delay
-                    time.sleep(self.batch_window)  # absorb concurrent arrivals
+                    self.clock.sleep(self.batch_window)  # absorb concurrent arrivals
             with self._lock:
                 batch, depth = self._admit()
             if not batch:
@@ -666,7 +747,16 @@ class CloudVerifier:
             tree = [r for r in batch if r.parents is not None]
             results: Dict[int, tuple] = {}
             if chain:
-                out = self.backend.verify_batch([(r.session, r.tokens, r.confs) for r in chain])
+                if getattr(self.backend, "positional", False):
+                    # Positional backends (runtime.oracle) verify statelessly
+                    # against the stream position carried by the NAV request.
+                    out = self.backend.verify_batch_pos(
+                        [(r.session, r.tokens, r.confs, r.pos) for r in chain]
+                    )
+                else:
+                    out = self.backend.verify_batch(
+                        [(r.session, r.tokens, r.confs) for r in chain]
+                    )
                 for r, (n_acc, corr) in zip(chain, out):
                     results[id(r)] = (n_acc, corr, None)
             if tree:
@@ -684,13 +774,21 @@ class CloudVerifier:
                 sess = self.sessions.get(req.session)
                 if sess is not None:
                     sess.served += 1
-                    if req.kv_secured and self.kv_pool is not None:
-                        # Commit accepted + correction tokens; release every
-                        # page wholly past the new prefix (rejection rollback
-                        # is a page free, not a buffer copy).
-                        with self._lock:
+                    # Commit accepted + correction tokens; with a pool, also
+                    # release every page wholly past the new prefix (rejection
+                    # rollback is a page free, not a buffer copy).  A round
+                    # verified across a re-attach reconciliation (stale epoch)
+                    # was abandoned by the edge: committing it would inflate
+                    # the reconciled position, so it is dropped here (the
+                    # client discards its stale result by seq anyway).
+                    with self._lock:
+                        if req.epoch == sess.epoch:
                             sess.kv_committed += n_acc + 1
-                            if req.session in self.kv_pool.tables:
+                            if (
+                                req.kv_secured
+                                and self.kv_pool is not None
+                                and req.session in self.kv_pool.tables
+                            ):
                                 self.kv_pool.rollback(
                                     req.session,
                                     min(sess.kv_committed, self.kv_pool.length(req.session)),

@@ -1,0 +1,394 @@
+"""Deterministic virtual clock for the threaded cloud-edge runtime.
+
+The runtime (``Channel``, ``CloudVerifier``, ``EdgeClient``) never calls
+``time.monotonic``/``time.sleep``/``threading.Condition`` directly — every
+timing primitive goes through a *clock* object so the same code runs in two
+modes:
+
+* ``SystemClock`` — thin delegation to ``time``/``threading``; production and
+  wall-clock benchmarks behave exactly as before;
+* ``VirtualClock`` — a discrete-event scheduler.  Code running under it is
+  organised into *actors* (cooperatively scheduled real threads).  At most
+  one actor executes at a time; an actor only yields control at a clock
+  primitive (``sleep``, ``Condition.wait``, ``join``), and the clock advances
+  virtual time **only when every actor is blocked**, jumping straight to the
+  earliest wake deadline.  Actor wake order is a deterministic function of
+  (wake time, registration order), so a whole multi-session serving run —
+  dispatcher, rx loops, edge clients, fault injection — is bit-reproducible
+  from its seeds with zero wall-clock dependence: simulated hours run in
+  host milliseconds and two runs produce identical token streams and stats.
+
+Usage::
+
+    clock = VirtualClock()
+    ch = Channel(cfg, clock=clock)
+    server = CloudVerifier(backend, clock=clock)
+
+    def scenario():
+        server.start()
+        stats = client.run(64)
+        server.stop()
+        return stats
+
+    stats = clock.run(scenario)   # drives the event loop to completion
+
+Blocking primitives (``sleep``/``wait``/``join``) may only be called from
+inside ``clock.run`` / ``clock.spawn`` actors; non-blocking ones
+(``monotonic``, ``notify_all``, ``send``) work anywhere, so test setup can
+pre-load channels before the event loop starts.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = ["SystemClock", "VirtualClock", "ActorHandle", "SYSTEM_CLOCK"]
+
+
+class SystemClock:
+    """Wall-clock implementation of the clock surface (the default)."""
+
+    virtual = False
+
+    def monotonic(self) -> float:
+        """Wall ``time.monotonic()``."""
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        """Wall ``time.sleep`` (clamped at 0)."""
+        time.sleep(max(dt, 0.0))
+
+    def condition(self, lock: Optional[threading.Lock] = None) -> threading.Condition:
+        """A real ``threading.Condition`` (optionally over an existing lock)."""
+        return threading.Condition(lock) if lock is not None else threading.Condition()
+
+    def spawn(self, fn: Callable[[], Any], name: Optional[str] = None, daemon: bool = True):
+        """Start ``fn`` on a daemon thread; the returned handle supports ``join``."""
+        t = threading.Thread(target=fn, name=name, daemon=daemon)
+        t.start()
+        return t
+
+    def run(self, fn: Callable[[], Any]) -> Any:
+        """Execute ``fn`` inline (symmetry with ``VirtualClock.run``)."""
+        return fn()
+
+
+#: Process-wide default clock; module code uses it when none is injected.
+SYSTEM_CLOCK = SystemClock()
+
+
+# Actor states.
+_READY, _RUNNING, _SLEEPING, _WAITING, _DONE = range(5)
+_STATE_NAMES = {_READY: "ready", _RUNNING: "running", _SLEEPING: "sleeping",
+                _WAITING: "waiting", _DONE: "done"}
+
+
+class _Actor:
+    __slots__ = (
+        "aid", "name", "daemon", "thread", "state", "wake_time", "notified",
+        "resume", "result", "error", "ready_seq",
+    )
+
+    def __init__(self, aid: int, name: str, daemon: bool):
+        self.aid = aid
+        self.name = name
+        self.daemon = daemon
+        self.thread: Optional[threading.Thread] = None
+        self.state = _READY
+        self.wake_time: Optional[float] = None
+        self.notified = False
+        self.resume = threading.Event()
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.ready_seq = 0
+
+
+class ActorHandle:
+    """Join/result handle for a ``VirtualClock`` actor (Thread-like surface)."""
+
+    def __init__(self, clock: "VirtualClock", actor: _Actor):
+        self._clock = clock
+        self._actor = actor
+
+    @property
+    def name(self) -> str:
+        """The actor's diagnostic name."""
+        return self._actor.name
+
+    @property
+    def done(self) -> bool:
+        """True once the actor's function returned or raised."""
+        return self._actor.state == _DONE
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        """Block the calling actor until this actor finishes (or timeout)."""
+        self._clock._join(self._actor, timeout)
+
+    def result(self) -> Any:
+        """The actor's return value; re-raises if the actor raised."""
+        if self._actor.error is not None:
+            raise self._actor.error
+        return self._actor.result
+
+
+class _VirtualCondition:
+    """Condition variable whose timed waits run on virtual time.
+
+    ``wait``/``notify`` follow ``threading.Condition`` semantics over a real
+    lock (shared critical sections keep working verbatim); only the *timeout*
+    is virtual, so a waiting actor parks in the clock's event heap instead of
+    the OS scheduler.
+    """
+
+    def __init__(self, clock: "VirtualClock", lock: Optional[threading.Lock] = None):
+        self._clock = clock
+        self._lock = lock if lock is not None else threading.RLock()
+        self._waiters: List[_Actor] = []
+
+    # Lock surface (``with cond:`` works like threading.Condition).
+    def acquire(self, *a, **kw):
+        return self._lock.acquire(*a, **kw)
+
+    def release(self):
+        return self._lock.release()
+
+    def __enter__(self):
+        self._lock.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self._lock.release()
+        return False
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Release the lock, park until notified or virtual timeout, reacquire."""
+        clock = self._clock
+        actor = clock._require_actor("Condition.wait")
+        with clock._mutex:
+            actor.state = _WAITING
+            actor.notified = False
+            actor.wake_time = None if timeout is None else clock._now + max(timeout, 0.0)
+            self._register(actor)
+        self._lock.release()
+        try:
+            clock._yield_from_actor(actor)
+        finally:
+            self._lock.acquire()
+        with clock._mutex:
+            if actor in self._waiters:
+                self._waiters.remove(actor)
+        return actor.notified
+
+    def notify(self, n: int = 1) -> None:
+        """Wake up to ``n`` waiting actors (in wait-arrival order)."""
+        clock = self._clock
+        with clock._mutex:
+            woken = 0
+            for a in list(self._waiters):
+                if woken >= n:
+                    break
+                if a.state == _WAITING:
+                    a.notified = True
+                    clock._make_ready_locked(a)
+                    self._waiters.remove(a)
+                    woken += 1
+
+    def notify_all(self) -> None:
+        """Wake every waiting actor."""
+        self.notify(n=len(self._waiters) + 1)
+
+    def _register(self, actor: _Actor) -> None:
+        self._waiters.append(actor)
+
+
+class VirtualClock:
+    """Deterministic discrete-event clock (see module docstring).
+
+    The thread that calls :meth:`run` becomes the scheduler: it resumes one
+    ready actor at a time (FIFO over a deterministic ready queue) and, when
+    none is ready, advances ``now`` to the earliest sleeping/waiting
+    deadline.  If no actor is ready, none has a deadline, and the main actor
+    has not finished, the run is deadlocked and a diagnostic ``RuntimeError``
+    lists every actor's state.
+    """
+
+    virtual = True
+
+    def __init__(self):
+        self._now = 0.0
+        self._mutex = threading.Lock()
+        self._actors: List[_Actor] = []
+        self._ready: List[_Actor] = []
+        self._ready_seq = 0
+        self._joiners: Dict[int, List[_Actor]] = {}
+        self._current: Optional[_Actor] = None
+        self._sched_wake = threading.Event()
+        self._running = False
+
+    # ------------------------------------------------------------- surface --
+    def monotonic(self) -> float:
+        """Current virtual time [s]; starts at 0 and only the scheduler advances it."""
+        return self._now
+
+    def sleep(self, dt: float) -> None:
+        """Park the calling actor until ``now + dt`` (virtual seconds)."""
+        actor = self._require_actor("sleep")
+        with self._mutex:
+            actor.state = _SLEEPING
+            actor.wake_time = self._now + max(dt, 0.0)
+            actor.notified = False
+        self._yield_from_actor(actor)
+
+    def condition(self, lock: Optional[threading.Lock] = None) -> _VirtualCondition:
+        """A condition variable whose timed waits run on virtual time."""
+        return _VirtualCondition(self, lock)
+
+    def spawn(
+        self, fn: Callable[[], Any], name: Optional[str] = None, daemon: bool = True
+    ) -> ActorHandle:
+        """Register ``fn`` as a new actor; it runs when the scheduler picks it."""
+        with self._mutex:
+            actor = _Actor(len(self._actors), name or f"actor-{len(self._actors)}", daemon)
+            self._actors.append(actor)
+            self._make_ready_locked(actor)
+        t = threading.Thread(
+            target=self._actor_main, args=(actor, fn), name=actor.name, daemon=True
+        )
+        actor.thread = t
+        t.start()
+        return ActorHandle(self, actor)
+
+    def run(self, fn: Callable[[], Any]) -> Any:
+        """Drive the event loop until ``fn`` (the main actor) returns.
+
+        Returns ``fn()``'s value; re-raises its exception.  A *background*
+        (daemon) actor that raised during the run is re-raised at the end so
+        silent crashes in rx/dispatch loops fail tests instead of hanging or
+        vanishing.
+        """
+        if self._running:
+            raise RuntimeError("VirtualClock.run is not reentrant")
+        self._running = True
+        try:
+            main = self.spawn(fn, name="main", daemon=False)._actor
+            while main.state != _DONE:
+                actor = self._pop_ready()
+                if actor is not None:
+                    self._step(actor)
+                    continue
+                if not self._advance_time():
+                    self._raise_deadlock(main)
+            if main.error is not None:
+                raise main.error
+            for a in self._actors:
+                if a.error is not None:
+                    raise RuntimeError(
+                        f"background actor {a.name!r} raised during the run"
+                    ) from a.error
+            return main.result
+        finally:
+            self._running = False
+
+    # ----------------------------------------------------------- internals --
+    def _require_actor(self, what: str) -> _Actor:
+        actor = self._current
+        if actor is None or actor.thread is not threading.current_thread():
+            raise RuntimeError(
+                f"blocking VirtualClock call ({what}) from outside a clock actor — "
+                "wrap the calling code in clock.run(...) or clock.spawn(...)"
+            )
+        return actor
+
+    def _make_ready_locked(self, actor: _Actor) -> None:
+        actor.state = _READY
+        actor.wake_time = None
+        self._ready_seq += 1
+        actor.ready_seq = self._ready_seq
+        self._ready.append(actor)
+
+    def _pop_ready(self) -> Optional[_Actor]:
+        with self._mutex:
+            return self._ready.pop(0) if self._ready else None
+
+    def _step(self, actor: _Actor) -> None:
+        """Resume one actor and block until it yields back or finishes."""
+        self._current = actor
+        actor.state = _RUNNING
+        self._sched_wake.clear()
+        actor.resume.set()
+        self._sched_wake.wait()
+        self._current = None
+
+    def _yield_from_actor(self, actor: _Actor) -> None:
+        """Actor side of the baton pass: hand control back, wait to be resumed."""
+        self._sched_wake.set()
+        actor.resume.wait()
+        actor.resume.clear()
+
+    def _advance_time(self) -> bool:
+        """Jump ``now`` to the earliest deadline and wake those actors.
+
+        Returns False when no actor holds a deadline (deadlock or done).
+        """
+        with self._mutex:
+            pending = [
+                a for a in self._actors
+                if a.state in (_SLEEPING, _WAITING) and a.wake_time is not None
+            ]
+            if not pending:
+                return False
+            t = min(a.wake_time for a in pending)
+            self._now = max(self._now, t)
+            for a in sorted(pending, key=lambda a: (a.wake_time, a.aid)):
+                if a.wake_time <= self._now:
+                    # Timed-out waiters resume un-notified (wait() -> False).
+                    self._make_ready_locked(a)
+            return True
+
+    def _join(self, target: _Actor, timeout: Optional[float]) -> None:
+        actor = self._require_actor("join")
+        with self._mutex:
+            if target.state == _DONE:
+                return
+            self._joiners.setdefault(target.aid, []).append(actor)
+            actor.state = _WAITING
+            actor.notified = False
+            actor.wake_time = None if timeout is None else self._now + max(timeout, 0.0)
+        self._yield_from_actor(actor)
+        with self._mutex:
+            joiners = self._joiners.get(target.aid, [])
+            if actor in joiners:  # timed out before the target finished
+                joiners.remove(actor)
+
+    def _actor_main(self, actor: _Actor, fn: Callable[[], Any]) -> None:
+        actor.resume.wait()  # first schedule
+        actor.resume.clear()
+        try:
+            actor.result = fn()
+        except BaseException as e:  # noqa: BLE001 - re-raised by run()
+            actor.error = e
+        with self._mutex:
+            actor.state = _DONE
+            for j in self._joiners.pop(actor.aid, []):
+                # A joiner whose timeout fired in the same time-advance is
+                # already READY — re-readying it would deliver a spurious
+                # resume that corrupts its next blocking call.
+                if j.state == _WAITING:
+                    j.notified = True
+                    self._make_ready_locked(j)
+        self._sched_wake.set()
+
+    def _raise_deadlock(self, main: _Actor) -> None:
+        states = ", ".join(
+            f"{a.name}={_STATE_NAMES[a.state]}"
+            + (f"@{a.wake_time:.3f}" if a.wake_time is not None else "")
+            for a in self._actors
+            if a.state != _DONE
+        )
+        raise RuntimeError(
+            f"virtual-clock deadlock at t={self._now:.3f}: no actor is ready and "
+            f"none holds a wake deadline ({states}) — a wait without timeout is "
+            "blocked on an event that can no longer happen"
+        )

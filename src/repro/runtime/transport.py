@@ -1,23 +1,36 @@
 """Cloud-edge transport with Hockney-model latency and failure injection.
 
-``Channel`` carries ``Message``s between threads with a simulated delivery
+``Channel`` carries ``Message``s between actors with a simulated delivery
 delay of ``(α + β·n_tokens) × time_scale`` — the same model the paper
 measures (Fig. 6a) — so the threaded runtime reproduces the timing behaviour
-of the FastAPI deployment at any speed (``time_scale`` ≪ 1 for tests).
-Failure injection (drop probability, outage windows) drives the
-fault-tolerance paths: NAV timeout → local-decode fallback → re-attach.
+of the FastAPI deployment at any speed.  All timing goes through a *clock*
+object (``runtime.simclock``): the default ``SystemClock`` preserves the
+historical wall-clock behaviour, while a ``VirtualClock`` runs the same
+code deterministically on discrete-event time.
+
+Failure injection has two layers:
+
+* legacy knobs on ``ChannelConfig`` (``drop_prob``, ``outage``) — random
+  loss and one hard-down window, drawn from a per-channel seeded RNG;
+* a pluggable ``faults`` hook (``runtime.faults.LinkFaults``) — scripted
+  drop/duplicate/reorder schedules, bandwidth-degradation phases, and
+  multiple outage windows, compiled from a declarative ``FaultScenario``.
+
+Both drive the fault-tolerance paths: NAV timeout → local-decode fallback →
+re-attach.
 """
 
 from __future__ import annotations
 
 import heapq
 import itertools
-import threading
-import time
-from dataclasses import dataclass, field
+import random
+from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
-__all__ = ["ChannelConfig", "Message", "Channel"]
+from .simclock import SYSTEM_CLOCK
+
+__all__ = ["ChannelConfig", "Message", "Channel", "make_link"]
 
 
 @dataclass(frozen=True)
@@ -33,59 +46,88 @@ class Message:
 class ChannelConfig:
     alpha: float = 0.020  # startup overhead [s]
     beta: float = 0.002  # per-token serialization [s]
-    time_scale: float = 1.0  # multiply all delays (tests use e.g. 0.01)
+    time_scale: float = 1.0  # multiply all delays (wall-clock tests use e.g. 0.01)
     drop_prob: float = 0.0  # random loss (failure injection)
     outage: Optional[Tuple[float, float]] = None  # (start, end) relative secs
+    seed: int = 0  # seeds the channel's private loss RNG
 
 
 class Channel:
     """One direction of the link; delivery is delayed per the Hockney model.
 
-    A dedicated dispatcher thread releases messages at their delivery time, so
-    transmission of consecutive batches serializes exactly like a real link
-    (the next batch's delivery time starts after the previous one's).
+    A dedicated dispatcher is unnecessary: delivery times live in an event
+    heap keyed on the channel's clock, and ``recv`` waits (on virtual or
+    wall time) until the head message's delivery time arrives.  Transmission
+    of consecutive batches serializes exactly like a real link — the next
+    batch's delivery time starts after the previous one frees the link —
+    except for fault-injected *reordered* messages, which take an
+    out-of-band path (extra delay, no link occupancy).
     """
 
-    def __init__(self, cfg: ChannelConfig, name: str = "ch"):
+    def __init__(self, cfg: ChannelConfig, name: str = "ch", clock=None, faults=None):
         self.cfg = cfg
         self.name = name
+        self.clock = clock or SYSTEM_CLOCK
+        self.faults = faults
         self._heap: list = []
         self._counter = itertools.count()
-        self._cv = threading.Condition()
-        self._t0 = time.monotonic()
+        self._cv = self.clock.condition()
+        self._t0 = self.clock.monotonic()
         self._link_free = 0.0  # relative time the link frees up
         self._closed = False
+        # Per-channel seeded RNG: loss draws never touch the global RNG, so
+        # seeded runs replay bit-identically under a VirtualClock.
+        self._rng = random.Random(f"channel:{cfg.seed}:{name}")
+        self.stats = {"sent": 0, "dropped": 0, "duplicated": 0, "reordered": 0}
 
     # ------------------------------------------------------------- sending --
     def send(self, msg: Message) -> float:
         """Enqueue; returns the simulated delivery delay (for diagnostics)."""
-        now = time.monotonic() - self._t0
-        cost = (self.cfg.alpha + self.cfg.beta * msg.n_tokens) * self.cfg.time_scale
+        now = self.clock.monotonic() - self._t0
+        beta = self.cfg.beta
+        if self.faults is not None:
+            beta *= self.faults.beta_factor(now)
+        cost = (self.cfg.alpha + beta * msg.n_tokens) * self.cfg.time_scale
         with self._cv:
+            self.stats["sent"] += 1
             start = max(now, self._link_free)
             deliver_at = start + cost
             self._link_free = deliver_at
             if self._dropped(start):
+                self.stats["dropped"] += 1
                 self._cv.notify_all()
                 return cost  # silently lost — receiver will time out
+            extra = self.faults.reorder_delay(start) if self.faults is not None else 0.0
+            if extra > 0.0:
+                self.stats["reordered"] += 1
+                # Out-of-band path: delayed past the link-serialized slot so
+                # later messages can overtake it.
+                deliver_at += extra
             heapq.heappush(self._heap, (deliver_at, next(self._counter), msg))
+            if self.faults is not None and self.faults.duplicated(start):
+                self.stats["duplicated"] += 1
+                # The retransmitted copy re-traverses the link right behind
+                # the original.
+                dup_at = deliver_at + cost
+                self._link_free = max(self._link_free, dup_at)
+                heapq.heappush(self._heap, (dup_at, next(self._counter), msg))
             self._cv.notify_all()
         return cost
 
     def _dropped(self, t_rel: float) -> bool:
-        import random
-
+        if self.faults is not None and self.faults.dropped(t_rel):
+            return True
         if self.cfg.outage is not None and self.cfg.outage[0] <= t_rel < self.cfg.outage[1]:
             return True
-        return self.cfg.drop_prob > 0 and random.random() < self.cfg.drop_prob
+        return self.cfg.drop_prob > 0 and self._rng.random() < self.cfg.drop_prob
 
     # ----------------------------------------------------------- receiving --
     def recv(self, timeout: Optional[float] = None) -> Optional[Message]:
         """Blocking receive honoring delivery times; None on timeout/close."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self.clock.monotonic() + timeout
         with self._cv:
             while True:
-                now = time.monotonic() - self._t0
+                now = self.clock.monotonic() - self._t0
                 if self._heap and self._heap[0][0] <= now:
                     return heapq.heappop(self._heap)[2]
                 if self._closed:
@@ -94,7 +136,7 @@ class Channel:
                 if self._heap:
                     wait = self._heap[0][0] - now
                 if deadline is not None:
-                    rem = deadline - time.monotonic()
+                    rem = deadline - self.clock.monotonic()
                     if rem <= 0:
                         return None
                     wait = rem if wait is None else min(wait, rem)
@@ -111,6 +153,6 @@ class Channel:
             self._cv.notify_all()
 
 
-def make_link(up_cfg: ChannelConfig, dn_cfg: ChannelConfig) -> Tuple[Channel, Channel]:
+def make_link(up_cfg: ChannelConfig, dn_cfg: ChannelConfig, clock=None) -> Tuple[Channel, Channel]:
     """(uplink edge→cloud, downlink cloud→edge)."""
-    return Channel(up_cfg, "up"), Channel(dn_cfg, "dn")
+    return Channel(up_cfg, "up", clock=clock), Channel(dn_cfg, "dn", clock=clock)

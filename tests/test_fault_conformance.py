@@ -1,0 +1,429 @@
+"""Fault-injection conformance suite (offline robustness, deterministically).
+
+The contract, for every scenario in ``runtime.faults.FAULT_MATRIX``:
+
+* the committed token stream is **bit-identical** to the fault-free run (and
+  to the oracle ground truth) — speculative decoding against an oracle-true
+  verifier is lossless, and the edge's local-decode fallback continues the
+  same stream offline;
+* two runs with the same seed produce **identical** stats, latencies, fault
+  counters, and final virtual time — the whole runtime runs on the virtual
+  clock with zero wall-clock dependence (enforced by a grep guard below).
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.models.paged_kv import PagedKVPool
+from repro.runtime import (
+    FAULT_MATRIX,
+    Channel,
+    ChannelConfig,
+    CloudVerifier,
+    EdgeClient,
+    EdgeConfig,
+    FaultScenario,
+    LinkFaults,
+    OracleBackend,
+    OracleDraft,
+    OracleStream,
+    Phase,
+    VirtualClock,
+    scenario_by_name,
+)
+from repro.runtime.transport import Message
+
+N_TOKENS = 150
+SCENARIO_IDS = [s.name for s in FAULT_MATRIX]
+
+
+def _edge_cfg(**kw):
+    base = dict(gamma=0.02, nav_timeout=0.4, backoff_init=0.05, backoff_max=0.4)
+    base.update(kw)
+    return EdgeConfig(**base)
+
+
+def run_scenario(
+    scenario,
+    seed=7,
+    n_tokens=N_TOKENS,
+    kv_pool_blocks=None,
+    kv_shared_prefix=0,
+    session_timeout=30.0,
+    **edge_kw,
+):
+    """One seeded virtual-clock serving run; returns (stream, report)."""
+    clock = VirtualClock()
+    pool = None
+    kv_kwargs = {}
+    if kv_pool_blocks is not None:
+        pool = PagedKVPool(kv_pool_blocks, 16, bytes_per_token=1024)
+        kv_kwargs = dict(kv_pool=pool, kv_shared_prefix=kv_shared_prefix)
+    server = CloudVerifier(
+        OracleBackend(seed=seed, clock=clock),
+        batch_window=0.01,
+        clock=clock,
+        session_timeout=session_timeout,
+        **kv_kwargs,
+    )
+    lf = (lambda d: LinkFaults(scenario, d, seed=seed)) if scenario is not None else (lambda d: None)
+    up = Channel(ChannelConfig(alpha=0.02, beta=0.002), "up", clock=clock, faults=lf("up"))
+    dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005), "dn", clock=clock, faults=lf("dn"))
+    server.attach(0, up, dn)
+    client = EdgeClient(0, up, dn, _edge_cfg(**edge_kw), draft=OracleDraft(seed=seed))
+
+    def body():
+        server.start()
+        stats = client.run(n_tokens)
+        server.stop()
+        return stats
+
+    stats = clock.run(body)
+    report = dict(
+        stats=stats,
+        server_stats=dict(server.stats),
+        up_stats=dict(up.stats),
+        dn_stats=dict(dn.stats),
+        verifier_batches=server.monitor.verifier_batches(),
+        end_time=clock.monotonic(),
+        kv_length=(pool.length(0) if pool is not None and 0 in pool.tables else None),
+    )
+    return list(client.tokens), report
+
+
+@pytest.fixture(scope="module")
+def fault_free():
+    stream, report = run_scenario(None)
+    assert stream == OracleStream(7).prefix(len(stream))  # oracle ground truth
+    assert report["stats"]["failovers"] == 0
+    return stream, report
+
+
+@pytest.mark.parametrize("scenario", FAULT_MATRIX, ids=SCENARIO_IDS)
+def test_stream_bit_identical_to_fault_free(scenario, fault_free):
+    """Every matrix scenario recovers: same committed tokens as no faults."""
+    ref_stream, ref_report = fault_free
+    stream, report = run_scenario(scenario)
+    n = min(len(stream), len(ref_stream))
+    assert n >= N_TOKENS
+    assert stream[:n] == ref_stream[:n]
+    # The faults must actually have fired, or the conformance check above
+    # proved nothing about this scenario.
+    lossy = any(
+        p.outage or p.drop_prob > 0 or p.dup_prob > 0 or p.reorder_prob > 0
+        for p in scenario.up + scenario.dn
+    )
+    degraded = any(p.bandwidth_factor != 1.0 for p in scenario.up + scenario.dn)
+    if lossy:
+        assert (
+            sum(report["up_stats"][k] + report["dn_stats"][k]
+                for k in ("dropped", "duplicated", "reordered")) > 0
+        )
+    elif degraded:  # bandwidth-only: β collapse must be visible in the tail
+        assert max(report["stats"]["nav_latencies"]) > max(
+            ref_report["stats"]["nav_latencies"]
+        )
+
+
+@pytest.mark.parametrize("scenario", FAULT_MATRIX, ids=SCENARIO_IDS)
+def test_seeded_runs_are_bit_reproducible(scenario):
+    """Same seed -> identical stream, stats, fault draws, and virtual time."""
+    a = run_scenario(scenario, seed=3)
+    b = run_scenario(scenario, seed=3)
+    assert a == b
+
+
+def test_outage_scenarios_fail_over_and_recover():
+    """The outage windows force NAV-timeout -> local decode -> re-attach."""
+    for name in ("dn_outage", "double_outage"):
+        stream, report = run_scenario(scenario_by_name(name))
+        st = report["stats"]
+        assert st["failovers"] >= 1
+        assert st["fallback_tokens"] > 0  # offline progress was made
+        assert st["recovery_latencies"], name  # ... and the cloud came back
+        assert len(st["recovery_times"]) == len(st["recovery_latencies"])
+        assert stream == OracleStream(7).prefix(len(stream))
+
+
+def test_bandwidth_ramp_stretches_nav_latency_without_failover():
+    """β degradation slows NAV round-trips but never breaks the session."""
+    _, clean = run_scenario(None)
+    _, ramp = run_scenario(scenario_by_name("bandwidth_ramp"))
+    assert ramp["stats"]["failovers"] == 0
+    assert max(ramp["stats"]["nav_latencies"]) > max(clean["stats"]["nav_latencies"])
+
+
+# --------------------------------------------------------------------------- #
+# Legacy ChannelConfig fault branches (drop_prob / outage), previously untested
+# --------------------------------------------------------------------------- #
+
+
+def test_channel_drop_prob_branch_is_seeded_and_lossy():
+    """cfg.drop_prob loses messages from the channel's own seeded RNG."""
+    clock = VirtualClock()
+    ch = Channel(ChannelConfig(alpha=0.01, beta=0.001, drop_prob=0.5, seed=11), clock=clock)
+
+    def body():
+        for i in range(40):
+            ch.send(Message("m", 0, i, 1, i))
+        got = []
+        while (m := ch.recv(timeout=5.0)) is not None:
+            got.append(m.payload)
+        return got
+
+    got = clock.run(body)
+    assert 0 < len(got) < 40
+    assert ch.stats["dropped"] == 40 - len(got)
+    assert got == sorted(got)  # survivors still arrive in order
+    # Seeded: an identically-built channel drops the same messages.
+    clock2 = VirtualClock()
+    ch2 = Channel(ChannelConfig(alpha=0.01, beta=0.001, drop_prob=0.5, seed=11), clock=clock2)
+
+    def body2():
+        for i in range(40):
+            ch2.send(Message("m", 0, i, 1, i))
+        got = []
+        while (m := ch2.recv(timeout=5.0)) is not None:
+            got.append(m.payload)
+        return got
+
+    assert clock2.run(body2) == got
+
+
+def test_channel_outage_window_branch():
+    """cfg.outage drops exactly the sends whose link slot falls in the window."""
+    clock = VirtualClock()
+    ch = Channel(ChannelConfig(alpha=0.1, beta=0.0, outage=(0.25, 0.55)), clock=clock)
+
+    def body():
+        delivered = []
+        for i in range(6):  # link slots start at 0.0, 0.1, ..., 0.5
+            ch.send(Message("m", 0, i, 0, i))
+        while (m := ch.recv(timeout=5.0)) is not None:
+            delivered.append(m.payload)
+        return delivered
+
+    # Slots 0.3, 0.4, 0.5 fall inside [0.25, 0.55) -> messages 3, 4, 5 lost.
+    assert clock.run(body) == [0, 1, 2]
+    assert ch.stats["dropped"] == 3
+
+
+def test_legacy_outage_failover_path_on_virtual_clock():
+    """The pre-faults API (ChannelConfig.outage on the downlink) still drives
+    NAV timeout -> local decode -> recovery, now deterministically."""
+    clock = VirtualClock()
+    server = CloudVerifier(OracleBackend(seed=5, clock=clock), clock=clock)
+    up = Channel(ChannelConfig(alpha=0.02, beta=0.002), "up", clock=clock)
+    dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005, outage=(0.5, 1.6)), "dn", clock=clock)
+    server.attach(0, up, dn)
+    client = EdgeClient(0, up, dn, _edge_cfg(), draft=OracleDraft(seed=5))
+
+    def body():
+        server.start()
+        st = client.run(100)
+        server.stop()
+        return st
+
+    st = clock.run(body)
+    assert st["failovers"] >= 1 and st["fallback_tokens"] > 0
+    assert st["recovery_latencies"]
+    assert client.tokens == OracleStream(5).prefix(len(client.tokens))
+
+
+# --------------------------------------------------------------------------- #
+# Parked-session and paged-KV interactions under faults
+# --------------------------------------------------------------------------- #
+
+
+def test_parked_round_with_lost_drafts_is_abandoned_cleanly():
+    """An uplink drop window can deliver a nav_request whose drafts were lost:
+    the round parks, the client fails over, and the NEXT round verifies its
+    own tokens — the parked request never corrupts the stream."""
+    scen = FaultScenario("parked", up=(Phase(0.2, 0.8, drop_prob=0.9),))
+    stream, report = run_scenario(scen, seed=13)
+    assert stream == OracleStream(13).prefix(len(stream))
+    assert report["stats"]["failovers"] >= 1
+
+
+def test_stale_nav_request_cannot_displace_newer_parked_round():
+    """A reorder-delayed nav_request from an abandoned round must not evict
+    a newer round's parked request (which would wedge the session)."""
+    clock = VirtualClock()
+    server = CloudVerifier(OracleBackend(seed=2, clock=clock), clock=clock)
+    up = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), "up", clock=clock)
+    dn = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), "dn", clock=clock)
+    server.attach(0, up, dn)
+    oracle = OracleStream(2)
+
+    def body():
+        server.start()
+        # Round 2 parks: its nav_request arrived but its drafts were lost.
+        t2 = oracle.prefix(4)[2:]
+        up.send(Message("nav_request", 0, 3, 1, {"n_tokens": 2, "round": 2, "pos": 2}))
+        assert dn.recv(timeout=0.3) is None
+        # The STALE round-1 request (delayed by reordering; round 1 was
+        # abandoned at failover) arrives late. It must be ignored.
+        up.send(Message("nav_request", 0, 1, 1, {"n_tokens": 2, "round": 1, "pos": 0}))
+        assert dn.recv(timeout=0.3) is None
+        # Round 2's drafts finally arrive -> the PARKED round dispatches.
+        up.send(Message("draft_batch", 0, 4, 2, (t2, [0.9, 0.9], 2)))
+        msg = dn.recv(timeout=5.0)
+        server.stop()
+        return msg
+
+    msg = clock.run(body)
+    assert msg is not None and msg.seq == 3  # round 2 served, round 1 dead
+    assert msg.payload["n_accepted"] == 2  # verified at pos 2, oracle-true
+
+
+def test_reordered_draft_batches_reassemble_in_seq_order():
+    """Draft batches arriving out of order must verify in the CLIENT's draft
+    order (fragments keyed by seq), not arrival order — checked with an
+    order-sensitive fingerprint backend."""
+    from test_runtime import EchoBackend
+
+    clock = VirtualClock()
+    server = CloudVerifier(EchoBackend(), clock=clock)
+    up = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), "up", clock=clock)
+    dn = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), "dn", clock=clock)
+    server.attach(0, up, dn)
+
+    def body():
+        server.start()
+        # Batch seq 2 ([3, 4]) overtakes batch seq 1 ([1, 2]) in transit.
+        up.send(Message("draft_batch", 0, 2, 2, ([3, 4], [0.9, 0.9], 1)))
+        up.send(Message("draft_batch", 0, 1, 2, ([1, 2], [0.9, 0.9], 1)))
+        up.send(Message("nav_request", 0, 3, 1, {"n_tokens": 4, "round": 1}))
+        msg = dn.recv(timeout=5.0)
+        server.stop()
+        return msg
+
+    msg = clock.run(body)
+    assert msg is not None and msg.payload["n_drafted"] == 4
+    # Order-sensitive hash: only [1, 2, 3, 4] (draft order) is acceptable.
+    assert msg.payload["correction"] == EchoBackend.fingerprint(0, [1, 2, 3, 4])
+
+
+def test_inflight_round_does_not_commit_across_reattach_reconcile():
+    """A verify still running when the edge's reset reconciles the session
+    must not advance the reconciled position when it completes."""
+    clock = VirtualClock()
+    backend = OracleBackend(seed=4, clock=clock, verify_time=1.0)  # slow verify
+    server = CloudVerifier(backend, clock=clock)
+    up = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), "up", clock=clock)
+    dn = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), "dn", clock=clock)
+    server.attach(0, up, dn)
+    toks = OracleStream(4).prefix(4)
+
+    def body():
+        server.start()
+        up.send(Message("draft_batch", 0, 1, 4, (toks, [0.9] * 4, 1)))
+        up.send(Message("nav_request", 0, 2, 1, {"n_tokens": 4, "round": 1, "pos": 0}))
+        clock.sleep(0.5)  # the 1s verify is now in flight
+        # The edge failed over and re-attaches at position 0: round 1 is dead.
+        up.send(Message("reset", 0, 3, 1, {"position": 0, "round": 1}))
+        clock.sleep(2.0)  # let the stale verify finish
+        committed = server.sessions[0].kv_committed
+        server.stop()
+        return committed
+
+    assert clock.run(body) == 0  # the abandoned round never committed
+
+
+def test_duplicate_messages_never_double_commit():
+    """Heavy duplication (draft batches AND nav requests retransmitted) must
+    not double-verify a round or desync positions."""
+    scen = FaultScenario(
+        "dup_heavy",
+        up=(Phase(0.0, 20.0, dup_prob=0.8),),
+        dn=(Phase(0.0, 20.0, dup_prob=0.8),),
+    )
+    stream, report = run_scenario(scen, seed=17)
+    assert report["up_stats"]["duplicated"] > 0
+    assert stream == OracleStream(17).prefix(len(stream))
+    # Each server-side verified round commits exactly once: the client's
+    # accepted count equals the stream length.
+    assert report["stats"]["accepted_tokens"] == len(stream)
+
+
+def test_outage_reattach_reconciles_paged_kv():
+    """After an offline spell the reset carries the edge position; the cloud
+    rolls its paged-KV fork back and re-prefills — the pool's final length
+    matches the shared prefix + the client's committed stream."""
+    stream, report = run_scenario(
+        scenario_by_name("double_outage"), seed=7,
+        kv_pool_blocks=256, kv_shared_prefix=32,
+    )
+    assert stream == OracleStream(7).prefix(len(stream))
+    assert report["stats"]["failovers"] >= 1
+    assert report["kv_length"] is not None
+    # The cloud's cache never ends up ahead of what the edge committed
+    # (plus the shared prefix and at most one in-flight round's K+1 slots).
+    assert report["kv_length"] <= 32 + len(stream) + 17
+
+
+def test_kv_pressure_under_faults_parks_or_evicts_but_stays_conformant():
+    """A pool far too small for the run forces evict/park/re-prefill churn;
+    the stream must still be oracle-exact."""
+    stream, report = run_scenario(
+        scenario_by_name("flaky_everything"), seed=7,
+        kv_pool_blocks=6, kv_shared_prefix=16,
+    )
+    assert stream == OracleStream(7).prefix(len(stream))
+
+
+def test_dead_session_pages_released_on_timeout():
+    """A session that stops heartbeating is dropped at dispatch and its KV
+    pages return to the pool (message-level, deterministic timing)."""
+    clock = VirtualClock()
+    pool = PagedKVPool(32, 16, bytes_per_token=1024)
+    server = CloudVerifier(
+        OracleBackend(seed=1, clock=clock), clock=clock,
+        kv_pool=pool, kv_shared_prefix=16, session_timeout=0.5,
+    )
+    up = Channel(ChannelConfig(alpha=0.001, beta=0.0), "up", clock=clock)
+    dn = Channel(ChannelConfig(alpha=0.001, beta=0.0), "dn", clock=clock)
+    server.attach(0, up, dn)
+    oracle = OracleStream(1)
+
+    def body():
+        # The attach forked the shared prefix: the session holds pages.
+        assert 0 in pool.tables and pool.length(0) == 16
+        toks = oracle.prefix(4)
+        up.send(Message("draft_batch", 0, 1, 4, (toks, [0.9] * 4, 1)))
+        up.send(Message("nav_request", 0, 2, 1, {"n_tokens": 4, "round": 1, "pos": 0}))
+        clock.sleep(1.0)  # rx queues the round; the session then goes quiet
+        server.start()  # first dispatch happens AFTER the session timed out
+        clock.sleep(1.0)
+        server.stop()
+
+    clock.run(body)
+    assert server.stats["dropped_dead_sessions"] == 1
+    assert 0 not in pool.tables  # pages reclaimed
+
+
+# --------------------------------------------------------------------------- #
+# The no-wall-clock guard: every runtime hot path runs on the injected clock
+# --------------------------------------------------------------------------- #
+
+
+def test_runtime_has_no_wall_clock_reads():
+    """Grep guard: outside simclock.py, runtime modules must not touch
+    ``time.*`` or spawn/synchronize threads behind the clock's back."""
+    runtime_dir = Path(__file__).parent.parent / "src" / "repro" / "runtime"
+    banned = re.compile(
+        r"\btime\.(monotonic|sleep|time|perf_counter)\b"
+        r"|\bthreading\.(Thread|Condition|Timer)\b"
+        r"|^\s*import time\b|^\s*from time\b",
+        re.MULTILINE,
+    )
+    offenders = {}
+    for path in sorted(runtime_dir.glob("*.py")):
+        if path.name == "simclock.py":  # the one place wall time may live
+            continue
+        hits = banned.findall(path.read_text())
+        if hits:
+            offenders[path.name] = hits
+    assert not offenders, f"wall-clock/thread primitives on runtime hot paths: {offenders}"

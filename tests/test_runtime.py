@@ -1,8 +1,11 @@
 """Threaded cloud-edge runtime: e2e sessions, multi-client, failover, hedging,
-continuous-batched NAV (coalescing, session isolation, straggler drop)."""
+continuous-batched NAV (coalescing, session isolation, straggler drop).
 
-import threading
-import time
+All tests run on the deterministic ``VirtualClock`` — the timing model runs
+at true scale (``time_scale=1.0``) with zero wall-clock cost, so there are
+no ``time.sleep`` calls, no ``time_scale=0.01`` compression hacks, and no
+scheduler-jitter flakiness: every assertion on time is exact.
+"""
 
 import pytest
 
@@ -14,10 +17,9 @@ from repro.runtime import (
     EdgeConfig,
     SyntheticBackend,
     VerifyBackend,
+    VirtualClock,
 )
 from repro.runtime.transport import Message
-
-TS = 0.01  # run the timing model 100× faster than real time
 
 
 class EchoBackend(VerifyBackend):
@@ -38,72 +40,119 @@ class EchoBackend(VerifyBackend):
         return len(tokens), self.fingerprint(session, tokens)
 
 
-def _fast_pair(server, sid):
-    up = Channel(ChannelConfig(alpha=1e-4, beta=1e-5))
-    dn = Channel(ChannelConfig(alpha=1e-4, beta=1e-5))
+@pytest.fixture()
+def clock():
+    return VirtualClock()
+
+
+def _fast_pair(server, sid, clock):
+    up = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), f"up{sid}", clock=clock)
+    dn = Channel(ChannelConfig(alpha=1e-4, beta=1e-5), f"dn{sid}", clock=clock)
     server.attach(sid, up, dn)
     return up, dn
 
 
-def _mk_client(server, sid, ts=TS, outage=None, nav_timeout=3.0):
-    up = Channel(ChannelConfig(alpha=0.02, beta=0.002, time_scale=ts))
-    dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005, time_scale=ts, outage=outage))
+def _mk_client(server, sid, clock, outage=None, nav_timeout=3.0):
+    up = Channel(ChannelConfig(alpha=0.02, beta=0.002), f"up{sid}", clock=clock)
+    dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005, outage=outage), f"dn{sid}", clock=clock)
     server.attach(sid, up, dn)
-    return EdgeClient(sid, up, dn, EdgeConfig(time_scale=ts, gamma=0.02, nav_timeout=nav_timeout))
+    return EdgeClient(sid, up, dn, EdgeConfig(gamma=0.02, nav_timeout=nav_timeout))
 
 
-def test_single_session_end_to_end():
-    server = CloudVerifier(SyntheticBackend(time_scale=TS))
-    server.start()
-    c = _mk_client(server, 0)
-    stats = c.run(60)
-    server.stop()
+def test_single_session_end_to_end(clock):
+    server = CloudVerifier(SyntheticBackend(clock=clock), clock=clock)
+    c = _mk_client(server, 0, clock)
+
+    def body():
+        server.start()
+        stats = c.run(60)
+        server.stop()
+        return stats
+
+    stats = clock.run(body)
     assert stats["accepted_tokens"] >= 60
     assert stats["nav_calls"] == stats["rounds"] + stats["failovers"]
     assert server.stats["nav_calls"] >= stats["rounds"]
+    # The committed stream IS the accepted-token count (drafts + corrections).
+    assert len(c.tokens) == stats["accepted_tokens"]
 
 
-def test_multi_client_concurrent():
-    server = CloudVerifier(SyntheticBackend(time_scale=TS), batch_window=0.002)
-    server.start()
-    clients = [_mk_client(server, sid) for sid in range(4)]
-    res = {}
-    ths = [threading.Thread(target=lambda c=c: res.update({c.session: c.run(40)})) for c in clients]
-    [t.start() for t in ths]
-    [t.join(timeout=60) for t in ths]
-    server.stop()
+def test_single_session_is_bit_reproducible():
+    """Two identically-seeded runs: same stream, same stats, same end time."""
+
+    def once():
+        clock = VirtualClock()
+        server = CloudVerifier(SyntheticBackend(clock=clock), clock=clock)
+        c = _mk_client(server, 0, clock)
+
+        def body():
+            server.start()
+            st = c.run(60)
+            server.stop()
+            return st
+
+        st = clock.run(body)
+        return list(c.tokens), st, dict(server.stats), clock.monotonic()
+
+    assert once() == once()
+
+
+def test_multi_client_concurrent(clock):
+    server = CloudVerifier(SyntheticBackend(clock=clock), batch_window=0.002, clock=clock)
+    clients = [_mk_client(server, sid, clock) for sid in range(4)]
+
+    def body():
+        server.start()
+        hs = [clock.spawn(lambda c=c: c.run(40), name=f"c{c.session}") for c in clients]
+        for h in hs:
+            h.join()
+        server.stop()
+        return {c.session: h.result() for c, h in zip(clients, hs)}
+
+    res = clock.run(body)
     assert len(res) == 4
     assert all(r["accepted_tokens"] >= 40 for r in res.values())
     # Batched NAV should have amortized some calls.
     assert server.stats["batched_calls"] <= server.stats["nav_calls"]
 
 
-def test_failover_to_local_decode_and_recovery():
+def test_failover_to_local_decode_and_recovery(clock):
     """Downlink outage → NAV timeout → local decoding → re-attach."""
-    server = CloudVerifier(SyntheticBackend(time_scale=TS))
-    server.start()
-    c = _mk_client(server, 9, outage=(0.0, 0.3), nav_timeout=0.2)
-    stats = c.run(50)
-    server.stop()
+    server = CloudVerifier(SyntheticBackend(clock=clock), clock=clock)
+    c = _mk_client(server, 9, clock, outage=(0.0, 1.2), nav_timeout=0.4)
+
+    def body():
+        server.start()
+        stats = c.run(50)
+        server.stop()
+        return stats
+
+    stats = clock.run(body)
     assert stats["failovers"] >= 1
     assert stats["fallback_tokens"] > 0  # offline progress was made
     assert stats["accepted_tokens"] >= 50
+    assert len(stats["failover_times"]) == stats["failovers"]
 
 
-def test_batched_nav_coalesces_and_isolates_sessions():
+def test_batched_nav_coalesces_and_isolates_sessions(clock):
     """Concurrent NAV rounds coalesce into one backend call within
     batch_window, and each session gets exactly its own result back."""
-    server = CloudVerifier(EchoBackend(), batch_window=0.08)
-    links = {sid: _fast_pair(server, sid) for sid in range(3)}
-    server.start()
+    server = CloudVerifier(EchoBackend(), batch_window=0.08, clock=clock)
+    links = {sid: _fast_pair(server, sid, clock) for sid in range(3)}
     sent = {}
-    for sid, (up, dn) in links.items():
-        toks = [100 * sid + j for j in range(sid + 2)]  # ragged lengths 2,3,4
-        up.send(Message("draft_batch", sid, 1, len(toks), (toks, [0.9] * len(toks))))
-        up.send(Message("nav_request", sid, 2, 1, {"n_tokens": len(toks)}))
-        sent[sid] = toks
-    results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
-    server.stop()
+
+    def body():
+        for sid, (up, dn) in links.items():
+            toks = [100 * sid + j for j in range(sid + 2)]  # ragged lengths 2,3,4
+            up.send(Message("draft_batch", sid, 1, len(toks), (toks, [0.9] * len(toks))))
+            up.send(Message("nav_request", sid, 2, 1, {"n_tokens": len(toks)}))
+            sent[sid] = toks
+        server.start()
+        results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
+        server.stop()
+        return results
+
+    results = clock.run(body)
     for sid, msg in results.items():
         assert msg is not None and msg.kind == "nav_result"
         assert msg.payload["n_drafted"] == len(sent[sid])
@@ -115,74 +164,117 @@ def test_batched_nav_coalesces_and_isolates_sessions():
     assert server.monitor.verifier_occupancy() > 1.0
 
 
-def test_pending_nav_waits_for_proactive_drafts():
+def test_pending_nav_waits_for_proactive_drafts(clock):
     """A NAV round that outruns its pipelined uploads parks until the
     remaining drafts arrive, then dispatches."""
-    server = CloudVerifier(EchoBackend())
-    up, dn = _fast_pair(server, 7)
-    server.start()
-    up.send(Message("draft_batch", 7, 1, 2, ([1, 2], [0.9, 0.9])))
-    up.send(Message("nav_request", 7, 2, 1, {"n_tokens": 4}))
-    assert dn.recv(timeout=0.3) is None  # only 2 of 4 tokens buffered
-    up.send(Message("draft_batch", 7, 3, 2, ([3, 4], [0.9, 0.9])))
-    msg = dn.recv(timeout=5.0)
-    server.stop()
+    server = CloudVerifier(EchoBackend(), clock=clock)
+    up, dn = _fast_pair(server, 7, clock)
+
+    def body():
+        server.start()
+        up.send(Message("draft_batch", 7, 1, 2, ([1, 2], [0.9, 0.9])))
+        up.send(Message("nav_request", 7, 2, 1, {"n_tokens": 4}))
+        assert dn.recv(timeout=0.3) is None  # only 2 of 4 tokens buffered
+        up.send(Message("draft_batch", 7, 3, 2, ([3, 4], [0.9, 0.9])))
+        msg = dn.recv(timeout=5.0)
+        server.stop()
+        return msg
+
+    msg = clock.run(body)
     assert msg is not None
     assert msg.payload["n_drafted"] == 4
     assert msg.payload["correction"] == EchoBackend.fingerprint(7, [1, 2, 3, 4])
 
 
-def test_lost_draft_batch_does_not_desync_next_round():
+def test_lost_draft_batch_does_not_desync_next_round(clock):
     """A round with a dropped draft_batch parks forever, but per-round
     buffering means the NEXT round still verifies its own tokens cleanly."""
-    server = CloudVerifier(EchoBackend())
-    up, dn = _fast_pair(server, 3)
-    server.start()
-    # Round 1: client drafted 4 tokens but one draft_batch (2 of them) was
-    # lost in transit — only [1, 2] arrive, so nav round 1 parks.
-    up.send(Message("draft_batch", 3, 1, 2, ([1, 2], [0.9, 0.9], 1)))
-    up.send(Message("nav_request", 3, 2, 1, {"n_tokens": 4, "round": 1}))
-    assert dn.recv(timeout=0.3) is None
-    # Client failed over; its reset was ALSO lost. Round 2 proceeds anyway.
-    up.send(Message("draft_batch", 3, 3, 3, ([7, 8, 9], [0.9] * 3, 2)))
-    up.send(Message("nav_request", 3, 4, 1, {"n_tokens": 3, "round": 2}))
-    msg = dn.recv(timeout=5.0)
-    server.stop()
+    server = CloudVerifier(EchoBackend(), clock=clock)
+    up, dn = _fast_pair(server, 3, clock)
+
+    def body():
+        server.start()
+        # Round 1: client drafted 4 tokens but one draft_batch (2 of them) was
+        # lost in transit — only [1, 2] arrive, so nav round 1 parks.
+        up.send(Message("draft_batch", 3, 1, 2, ([1, 2], [0.9, 0.9], 1)))
+        up.send(Message("nav_request", 3, 2, 1, {"n_tokens": 4, "round": 1}))
+        assert dn.recv(timeout=0.3) is None
+        # Client failed over; its reset was ALSO lost. Round 2 proceeds anyway.
+        up.send(Message("draft_batch", 3, 3, 3, ([7, 8, 9], [0.9] * 3, 2)))
+        up.send(Message("nav_request", 3, 4, 1, {"n_tokens": 3, "round": 2}))
+        msg = dn.recv(timeout=5.0)
+        server.stop()
+        return msg
+
+    msg = clock.run(body)
     assert msg is not None and msg.seq == 4
     assert msg.payload["n_drafted"] == 3
     # Round 2 verified exactly its own tokens — round 1's leftovers untouched.
     assert msg.payload["correction"] == EchoBackend.fingerprint(3, [7, 8, 9])
 
 
-def test_straggler_requests_are_dropped():
+def test_duplicate_nav_request_dispatches_once(clock):
+    """A retransmitted nav_request for an already-served round is dropped."""
+    server = CloudVerifier(EchoBackend(), clock=clock)
+    up, dn = _fast_pair(server, 5, clock)
+
+    def body():
+        server.start()
+        up.send(Message("draft_batch", 5, 1, 2, ([4, 5], [0.9, 0.9], 1)))
+        up.send(Message("nav_request", 5, 2, 1, {"n_tokens": 2, "round": 1}))
+        first = dn.recv(timeout=5.0)
+        # The duplicate arrives after the round was already verified.
+        up.send(Message("nav_request", 5, 2, 1, {"n_tokens": 2, "round": 1}))
+        second = dn.recv(timeout=0.5)
+        server.stop()
+        return first, second
+
+    first, second = clock.run(body)
+    assert first is not None and first.payload["n_drafted"] == 2
+    assert second is None  # no double verify
+    assert server.stats["nav_calls"] == 1
+
+
+def test_straggler_requests_are_dropped(clock):
     """Work whose client deadline already passed is dropped, not verified."""
-    server = CloudVerifier(EchoBackend(), batch_window=0.02)
-    up, dn = _fast_pair(server, 0)
-    server.start()
-    up.send(Message("draft_batch", 0, 1, 2, ([5, 6], [0.9, 0.9])))
-    up.send(
-        Message(
-            "nav_request", 0, 2, 1,
-            {"n_tokens": 2, "deadline": time.monotonic() - 1.0},  # already expired
+    server = CloudVerifier(EchoBackend(), batch_window=0.02, clock=clock)
+    up, dn = _fast_pair(server, 0, clock)
+
+    def body():
+        server.start()
+        clock.sleep(2.0)  # let virtual time pass so the deadline is in the past
+        up.send(Message("draft_batch", 0, 1, 2, ([5, 6], [0.9, 0.9])))
+        up.send(
+            Message(
+                "nav_request", 0, 2, 1,
+                {"n_tokens": 2, "deadline": clock.monotonic() - 1.0},  # expired
+            )
         )
-    )
-    assert dn.recv(timeout=0.5) is None  # no reply — client has failed over
-    server.stop()
+        got = dn.recv(timeout=0.5)
+        server.stop()
+        return got
+
+    assert clock.run(body) is None  # no reply — client has failed over
     assert server.stats["dropped_stragglers"] == 1
     assert server.stats["nav_calls"] == 0
 
 
-def test_admission_cap_with_fair_reinsertion():
+def test_admission_cap_with_fair_reinsertion(clock):
     """Oversubscribed dispatch admits max_batch and reinserts the rest."""
-    server = CloudVerifier(EchoBackend(), batch_window=0.08, max_batch=2)
-    links = {sid: _fast_pair(server, sid) for sid in range(4)}
-    for sid, (up, dn) in links.items():
-        up.send(Message("draft_batch", sid, 1, 1, ([sid], [0.9])))
-        up.send(Message("nav_request", sid, 2, 1, {"n_tokens": 1}))
-    time.sleep(0.3)  # let all four requests queue before dispatch starts
-    server.start()
-    results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
-    server.stop()
+    server = CloudVerifier(EchoBackend(), batch_window=0.08, max_batch=2, clock=clock)
+    links = {sid: _fast_pair(server, sid, clock) for sid in range(4)}
+
+    def body():
+        for sid, (up, dn) in links.items():
+            up.send(Message("draft_batch", sid, 1, 1, ([sid], [0.9])))
+            up.send(Message("nav_request", sid, 2, 1, {"n_tokens": 1}))
+        clock.sleep(0.3)  # let all four requests queue before dispatch starts
+        server.start()
+        results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
+        server.stop()
+        return results
+
+    results = clock.run(body)
     assert all(m is not None for m in results.values())  # nothing lost
     assert all(
         m.payload["correction"] == EchoBackend.fingerprint(sid, [sid])
@@ -193,32 +285,48 @@ def test_admission_cap_with_fair_reinsertion():
 
 
 def test_fleet_bench_smoke():
-    """Fleet benchmark end-to-end: occupancy > 1 under concurrent sessions."""
+    """Fleet benchmark end-to-end on the virtual clock: deterministic
+    occupancy > 1 under concurrent sessions, zero wall-clock cost."""
     import sys
     from pathlib import Path
 
     sys.path.insert(0, str(Path(__file__).parent.parent))
     from benchmarks.fleet_bench import run_fleet
 
-    rep = run_fleet(n_sessions=4, mode="batched", tokens_per_session=25, ts=0.005)
+    rep = run_fleet(
+        n_sessions=4, mode="batched", tokens_per_session=25, ts=1.0,
+        clock=VirtualClock(),
+    )
     st = rep["stats"]
     assert len(rep["per_session_tpt"]) == 4
     assert st.verifier_batch_occupancy > 1.0
     p50, p99 = st.nav_latency_quantiles()
     assert 0 < p50 <= p99
+    # Determinism: an identical virtual run reproduces the stats exactly.
+    rep2 = run_fleet(
+        n_sessions=4, mode="batched", tokens_per_session=25, ts=1.0,
+        clock=VirtualClock(),
+    )
+    assert rep2["stats"] == st
+    assert rep2["per_session_tpt"] == rep["per_session_tpt"]
 
 
-def test_channel_serializes_batches():
-    """Two back-to-back sends: second delivery waits for the first (Hockney)."""
-    ch = Channel(ChannelConfig(alpha=0.05, beta=0.01, time_scale=1.0))
-    from repro.runtime.transport import Message
+def test_channel_serializes_batches(clock):
+    """Two back-to-back sends: second delivery waits for the first (Hockney),
+    with EXACT virtual timings."""
+    ch = Channel(ChannelConfig(alpha=0.05, beta=0.01), clock=clock)
 
-    t0 = time.monotonic()
-    ch.send(Message("a", 0, 1, 10, None))  # 0.05 + 0.1 = 0.15s
-    ch.send(Message("b", 0, 2, 10, None))  # completes at 0.30s
-    m1 = ch.recv(timeout=2.0)
-    m2 = ch.recv(timeout=2.0)
-    dt = time.monotonic() - t0
-    ch.close()
+    def body():
+        ch.send(Message("a", 0, 1, 10, None))  # 0.05 + 0.1 = 0.15s
+        ch.send(Message("b", 0, 2, 10, None))  # completes at 0.30s
+        m1 = ch.recv(timeout=2.0)
+        t1 = clock.monotonic()
+        m2 = ch.recv(timeout=2.0)
+        t2 = clock.monotonic()
+        ch.close()
+        return m1, t1, m2, t2
+
+    m1, t1, m2, t2 = clock.run(body)
     assert m1.kind == "a" and m2.kind == "b"
-    assert dt >= 0.28  # serialized, not parallel
+    assert t1 == pytest.approx(0.15)  # exact, not >= with slack
+    assert t2 == pytest.approx(0.30)  # serialized, not parallel

@@ -1,0 +1,316 @@
+"""VirtualClock unit tests: event ordering, condition semantics, determinism,
+join, actor error propagation, and deadlock diagnostics."""
+
+import threading
+
+import pytest
+
+from repro.runtime.simclock import SYSTEM_CLOCK, SystemClock, VirtualClock
+
+
+def test_monotonic_starts_at_zero_and_sleep_advances_exactly():
+    clock = VirtualClock()
+    seen = {}
+
+    def body():
+        seen["t0"] = clock.monotonic()
+        clock.sleep(1.5)
+        seen["t1"] = clock.monotonic()
+        clock.sleep(0.25)
+        seen["t2"] = clock.monotonic()
+
+    clock.run(body)
+    assert seen == {"t0": 0.0, "t1": 1.5, "t2": 1.75}
+
+
+def test_sleepers_wake_in_deadline_order_with_id_tiebreak():
+    clock = VirtualClock()
+    order = []
+
+    def sleeper(name, dt):
+        def body():
+            clock.sleep(dt)
+            order.append((name, clock.monotonic()))
+        return body
+
+    def main():
+        hs = [
+            clock.spawn(sleeper("late", 2.0), name="late"),
+            clock.spawn(sleeper("early", 1.0), name="early"),
+            clock.spawn(sleeper("tie_a", 1.0), name="tie_a"),
+        ]
+        for h in hs:
+            h.join()
+
+    clock.run(main)
+    # 'early' spawned before 'tie_a' -> same deadline, registration order wins.
+    assert order == [("early", 1.0), ("tie_a", 1.0), ("late", 2.0)]
+
+
+def test_time_only_advances_when_all_actors_blocked():
+    """A busy actor yielding via 0-sleeps never sees time jump past a peer."""
+    clock = VirtualClock()
+    samples = []
+
+    def busy():
+        for _ in range(50):
+            samples.append(clock.monotonic())
+            clock.sleep(0.0)
+
+    def sleeper():
+        clock.sleep(10.0)
+
+    def main():
+        h1 = clock.spawn(busy)
+        h2 = clock.spawn(sleeper)
+        h1.join()
+        assert clock.monotonic() == 0.0  # busy work costs no virtual time
+        h2.join()
+        assert clock.monotonic() == 10.0
+
+    clock.run(main)
+    assert samples == [0.0] * 50
+
+
+def test_condition_notify_wakes_before_timeout():
+    clock = VirtualClock()
+    cond = clock.condition()
+    out = {}
+
+    def waiter():
+        with cond:
+            notified = cond.wait(timeout=100.0)
+        out["notified"] = notified
+        out["t"] = clock.monotonic()
+
+    def main():
+        h = clock.spawn(waiter)
+        clock.sleep(2.0)
+        with cond:
+            cond.notify_all()
+        h.join()
+
+    clock.run(main)
+    assert out == {"notified": True, "t": 2.0}
+
+
+def test_condition_timeout_fires_at_exact_virtual_deadline():
+    clock = VirtualClock()
+    cond = clock.condition()
+    out = {}
+
+    def waiter():
+        with cond:
+            out["notified"] = cond.wait(timeout=3.25)
+        out["t"] = clock.monotonic()
+
+    def main():
+        clock.spawn(waiter).join()
+
+    clock.run(main)
+    assert out == {"notified": False, "t": 3.25}
+
+
+def test_condition_notify_one_wakes_in_wait_order():
+    clock = VirtualClock()
+    cond = clock.condition()
+    woken = []
+
+    def waiter(name):
+        def body():
+            with cond:
+                cond.wait(timeout=50.0)
+            woken.append((name, clock.monotonic()))
+        return body
+
+    def main():
+        ha = clock.spawn(waiter("a"))
+        hb = clock.spawn(waiter("b"))
+        clock.sleep(1.0)
+        with cond:
+            cond.notify(1)
+        clock.sleep(1.0)
+        with cond:
+            cond.notify(1)
+        ha.join()
+        hb.join()
+
+    clock.run(main)
+    assert woken == [("a", 1.0), ("b", 2.0)]
+
+
+def test_condition_over_shared_external_lock():
+    """Condition built over an existing Lock keeps critical sections exclusive
+    (the CloudVerifier pattern: ``with self._lock`` and ``self._work`` share)."""
+    clock = VirtualClock()
+    lock = threading.Lock()
+    work = clock.condition(lock)
+    items = []
+    done = []
+
+    def producer():
+        for i in range(3):
+            clock.sleep(0.5)
+            with lock:
+                items.append(i)
+            with work:
+                work.notify_all()
+
+    def consumer():
+        got = []
+        while len(got) < 3:
+            with work:
+                while not items:
+                    work.wait(timeout=10.0)
+                got.append(items.pop(0))
+        done.append(got)
+
+    def main():
+        hp = clock.spawn(producer)
+        hc = clock.spawn(consumer)
+        hp.join()
+        hc.join()
+
+    clock.run(main)
+    assert done == [[0, 1, 2]]
+    assert clock.monotonic() == 1.5
+
+
+def test_join_timeout_and_result():
+    clock = VirtualClock()
+
+    def slow():
+        clock.sleep(5.0)
+        return 42
+
+    def main():
+        h = clock.spawn(slow)
+        h.join(timeout=1.0)
+        assert not h.done and clock.monotonic() == 1.0
+        h.join()
+        assert h.done and clock.monotonic() == 5.0
+        return h.result()
+
+    assert clock.run(main) == 42
+
+
+def test_join_timeout_tied_with_target_finish_no_spurious_resume():
+    """When a join timeout and the target's finish land on the same virtual
+    instant, the joiner must be resumed exactly once — a double-ready would
+    make its NEXT blocking call return instantly at the wrong time."""
+    clock = VirtualClock()
+    # Spawn the target BEFORE run() so it has the lower actor id and is
+    # readied (and finishes) ahead of the timed-out joiner at the tie.
+    target = clock.spawn(lambda: clock.sleep(5.0), name="target")
+
+    def main():
+        target.join(timeout=5.0)  # deadline ties the target's wake exactly
+        t_joined = clock.monotonic()
+        clock.sleep(3.0)  # a spurious resume would cut this sleep short
+        return t_joined, clock.monotonic()
+
+    t_joined, t_end = clock.run(main)
+    assert t_joined == 5.0
+    assert t_end == 8.0
+
+
+def test_run_is_deterministic_across_repeats():
+    """Same program -> identical event trace, timestamps, and final time."""
+
+    def program():
+        clock = VirtualClock()
+        trace = []
+
+        def actor(name, period, n):
+            def body():
+                for i in range(n):
+                    clock.sleep(period)
+                    trace.append((name, i, clock.monotonic()))
+            return body
+
+        def main():
+            hs = [
+                clock.spawn(actor("a", 0.3, 7)),
+                clock.spawn(actor("b", 0.7, 4)),
+                clock.spawn(actor("c", 0.21, 9)),
+            ]
+            for h in hs:
+                h.join()
+
+        clock.run(main)
+        return trace, clock.monotonic()
+
+    assert program() == program()
+
+
+def test_main_actor_exception_propagates():
+    clock = VirtualClock()
+
+    def main():
+        clock.sleep(1.0)
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError, match="boom"):
+        clock.run(main)
+
+
+def test_background_actor_exception_surfaces_at_end_of_run():
+    clock = VirtualClock()
+
+    def bad():
+        clock.sleep(0.5)
+        raise KeyError("rx loop crashed")
+
+    def main():
+        clock.spawn(bad, name="rx")
+        clock.sleep(1.0)
+
+    with pytest.raises(RuntimeError, match="background actor 'rx'"):
+        clock.run(main)
+
+
+def test_deadlock_raises_with_actor_states():
+    clock = VirtualClock()
+    cond = clock.condition()
+
+    def stuck():
+        with cond:
+            cond.wait()  # no timeout, nobody will notify
+
+    def main():
+        clock.spawn(stuck, name="stuck").join()
+
+    with pytest.raises(RuntimeError, match="deadlock"):
+        clock.run(main)
+
+
+def test_blocking_call_outside_actor_raises():
+    clock = VirtualClock()
+    with pytest.raises(RuntimeError, match="outside a clock actor"):
+        clock.sleep(1.0)
+
+
+def test_nonblocking_calls_work_outside_run():
+    """Setup code may read time / notify before the event loop starts."""
+    clock = VirtualClock()
+    assert clock.monotonic() == 0.0
+    cond = clock.condition()
+    with cond:
+        cond.notify_all()  # no waiters: a no-op, not an error
+
+
+def test_system_clock_surface():
+    """SystemClock provides the same surface on wall time."""
+    clock = SystemClock()
+    t0 = clock.monotonic()
+    clock.sleep(0.01)
+    assert clock.monotonic() >= t0 + 0.009
+    cond = clock.condition()
+    with cond:
+        cond.notify_all()
+    out = []
+    h = clock.spawn(lambda: out.append(1))
+    h.join(timeout=5.0)
+    assert out == [1]
+    assert clock.run(lambda: 7) == 7
+    assert SYSTEM_CLOCK.virtual is False and VirtualClock().virtual is True

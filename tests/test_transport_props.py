@@ -1,0 +1,123 @@
+"""Hypothesis property tests for Channel invariants on the virtual clock.
+
+Fault-free channels must guarantee, for ANY message sequence:
+
+* FIFO delivery per link (receive order == send order);
+* link serialization: batch i's delivery time is
+  ``max(send_i, deliver_{i-1}) + cost_i`` — the next batch departs only
+  after the previous one frees the link;
+* Hockney delay exactness: ``cost_i == (α + β·n_i) · time_scale`` to float
+  precision, measured on virtual timestamps (no wall-clock noise).
+
+Skipped (not failed) when hypothesis is missing — see tests/conftest.py.
+"""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime import Channel, ChannelConfig, VirtualClock
+from repro.runtime.transport import Message
+
+MSGS = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=64),  # n_tokens
+        st.floats(min_value=0.0, max_value=0.5, allow_nan=False, width=32),  # send gap [s]
+    ),
+    min_size=1,
+    max_size=24,
+)
+
+
+@settings(deadline=None, max_examples=60)
+@given(msgs=MSGS, alpha=st.floats(0.001, 0.1, width=32), beta=st.floats(0.0, 0.01, width=32))
+def test_fifo_serialization_and_hockney_exactness(msgs, alpha, beta):
+    clock = VirtualClock()
+    ch = Channel(ChannelConfig(alpha=alpha, beta=beta), clock=clock)
+
+    def receiver():
+        # Always parked in recv before the next delivery, so the observed
+        # timestamp IS the delivery time (not the pickup time).
+        out = []
+        for _ in msgs:
+            m = ch.recv(timeout=1e6)
+            assert m is not None
+            out.append((m.seq, clock.monotonic()))
+        return out
+
+    def body():
+        rx = clock.spawn(receiver, name="rx")
+        sends = []  # (seq, send time, n_tokens)
+        for seq, (n, gap) in enumerate(msgs):
+            clock.sleep(gap)
+            ch.send(Message("m", 0, seq, n, None))
+            sends.append((seq, clock.monotonic(), n))
+        rx.join()
+        return sends, rx.result()
+
+    sends, recvs = clock.run(body)
+
+    # FIFO per link: delivery order is exactly send order.
+    assert [seq for seq, _ in recvs] == [seq for seq, _, _ in sends]
+
+    # Serialization + Hockney exactness: replay the link model on the
+    # virtual timestamps and demand equality to float tolerance.
+    link_free = 0.0
+    for (seq, t_send, n), (_, t_recv) in zip(sends, recvs):
+        cost = alpha + beta * n
+        expect = max(t_send, link_free) + cost
+        link_free = expect
+        assert abs(t_recv - expect) < 1e-9, (seq, t_recv, expect)
+
+
+@settings(deadline=None, max_examples=40)
+@given(msgs=MSGS, scale=st.sampled_from([0.01, 0.25, 1.0, 3.0]))
+def test_time_scale_scales_every_delay(msgs, scale):
+    """All delivery delays stretch by exactly ``time_scale``."""
+    alpha, beta = 0.02, 0.002
+
+    def deliveries(ts):
+        clock = VirtualClock()
+        ch = Channel(ChannelConfig(alpha=alpha, beta=beta, time_scale=ts), clock=clock)
+
+        def body():
+            for seq, (n, _) in enumerate(msgs):
+                ch.send(Message("m", 0, seq, n, None))
+            out = []
+            for _ in msgs:
+                ch.recv(timeout=1e6)
+                out.append(clock.monotonic())
+            return out
+
+        return clock.run(body)
+
+    base = deliveries(1.0)
+    scaled = deliveries(scale)
+    for t1, ts_ in zip(base, scaled):
+        assert abs(ts_ - t1 * scale) < 1e-9
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    msgs=MSGS,
+    drop_seed=st.integers(min_value=0, max_value=2**31),
+    drop_prob=st.floats(0.1, 0.9),
+)
+def test_lossy_channel_preserves_order_of_survivors(msgs, drop_seed, drop_prob):
+    """drop_prob loses messages but never reorders the survivors."""
+    clock = VirtualClock()
+    ch = Channel(
+        ChannelConfig(alpha=0.01, beta=0.001, drop_prob=drop_prob, seed=drop_seed),
+        clock=clock,
+    )
+
+    def body():
+        for seq, (n, _) in enumerate(msgs):
+            ch.send(Message("m", 0, seq, n, None))
+        got = []
+        while (m := ch.recv(timeout=10.0)) is not None:
+            got.append(m.seq)
+        return got
+
+    got = clock.run(body)
+    assert got == sorted(got)
+    assert len(got) + ch.stats["dropped"] == len(msgs)

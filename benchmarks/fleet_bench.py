@@ -61,10 +61,13 @@ from repro.runtime import (
     Channel,
     ChannelConfig,
     CloudVerifier,
+    DraftFragment,
     EdgeClient,
     EdgeConfig,
     FaultScenario,
     LinkFaults,
+    NavRequest,
+    NavResult,
     OracleBackend,
     OracleDraft,
     OracleStream,
@@ -72,6 +75,8 @@ from repro.runtime import (
     SyntheticDraft,
     SystemClock,
     VirtualClock,
+    decode,
+    encode,
 )
 
 TS = 0.01  # run the timing model 100× faster than real time
@@ -472,6 +477,42 @@ def chaos(n_sessions: int = 4, seed: int = 0) -> Tuple[list, List[str]]:
     return rows, lines
 
 
+def codec_bench(n_iters: int = 50_000) -> Tuple[list, List[str]]:
+    """Wire-codec overhead: encode+decode round-trip cost per message.
+
+    Times the three messages that dominate serving traffic (a 16-token
+    ``DraftFragment``, a ``NavRequest``, a ``NavResult``) and reports
+    ns/message plus frame bytes.  The sanity bound the row exists to check:
+    codec time per *drafted token* must sit orders of magnitude below the
+    link's per-token serialization cost (Hockney β = 2 ms at the paper's
+    operating point), i.e. framing is never the serving bottleneck.
+    """
+    import time
+
+    msgs = {
+        "draft16": DraftFragment(
+            session=1, seq=7, round=3,
+            tokens=tuple(range(1000, 1016)), confs=tuple(0.5 + 0.03 * i for i in range(16)),
+        ),
+        "nav_request": NavRequest(session=1, seq=8, round=3, n_tokens=16, deadline=1.25, pos=640),
+        "nav_result": NavResult(session=1, seq=8, n_accepted=12, correction=31337, n_drafted=16),
+    }
+    rows, lines = [], []
+    for name, msg in msgs.items():
+        frame = encode(msg)
+        assert decode(frame) == msg  # round-trip exact, every run
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            decode(encode(msg))
+        dt = time.perf_counter() - t0
+        ns_per_msg = dt / n_iters * 1e9
+        row = dict(message=name, ns_per_msg=ns_per_msg, frame_bytes=len(frame))
+        rows.append(row)
+        derived = f"ns_per_msg={ns_per_msg:.0f};frame_bytes={len(frame)};iters={n_iters}"
+        lines.append(csv_row(f"fleet/codec/{name}", ns_per_msg * 1e-3, derived))
+    return rows, lines
+
+
 def _row(rep: dict, **extra) -> Tuple[dict, str]:
     st: RunStats = rep["stats"]
     p50, p99 = st.nav_latency_quantiles()
@@ -535,6 +576,9 @@ def fleet(scenarios=(1, 2, 3, 4), n_sessions: int = 8) -> Tuple[list, List[str]]
             f";kv_overhead_pct={rep['kv_overhead_frac']*100:.2f}"
         )
         lines.append(csv_row(f"fleet/kv/{name}", row["tpt_ms"] * 1e3, derived))
+    codec_rows, codec_lines = codec_bench()
+    rows.extend(codec_rows)
+    lines.extend(codec_lines)
     return rows, lines
 
 
@@ -592,6 +636,15 @@ def main() -> None:
         f" {kv_reps['paged_matched']['kv_overhead_frac']*100:.2f}% of serving time"
         f" bounds the paging TPT cost (sim parity is exact)"
     )
+    codec_rows, _ = codec_bench(n_iters=20_000)
+    print("=== wire-codec overhead (encode+decode round trip) ===")
+    for row in codec_rows:
+        per_tok_ns = row["ns_per_msg"] / 16 if row["message"] == "draft16" else row["ns_per_msg"]
+        print(
+            f"  {row['message']:<12} {row['ns_per_msg']:>8.0f} ns/msg"
+            f" {row['frame_bytes']:>4d} B/frame"
+            f"  ({per_tok_ns/2e6*100:.4f}% of the 2ms/token link budget)"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+"""Loopback-socket serving: typed wire protocol over real TCP, one process.
+
+The same ``CloudVerifier``/``EdgeClient`` pair that the simulated runtime
+drives in-process here talks length-prefixed protocol frames over a real
+localhost socket — the paper's client/server testbed shape, without the
+second shell (``launch/serve.py`` runs the genuinely two-process version).
+
+Three edge clients attach through the ``Hello``/``Attach`` version
+handshake and stream concurrently against one continuous-batching
+verifier; each client's committed stream is checked against the shared
+deterministic oracle.
+
+    PYTHONPATH=src python examples/socket_serve.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.runtime import (
+    SYSTEM_CLOCK,
+    ChannelConfig,
+    CloudVerifier,
+    Detach,
+    EdgeClient,
+    EdgeConfig,
+    OracleBackend,
+    OracleDraft,
+    OracleStream,
+    SocketListener,
+    connect_transport,
+)
+
+N_CLIENTS = 3
+TOKENS = 48
+SEED = 11
+
+
+def run_one_client(host: str, port: int, sid: int, results: dict) -> None:
+    transport = connect_transport(
+        host, port, session=sid, cfg=ChannelConfig(alpha=0.001, beta=0.0001)
+    )
+    client = EdgeClient(
+        transport.session,
+        transport,
+        transport,
+        EdgeConfig(gamma=0.004, window=8, nav_timeout=5.0),
+        draft=OracleDraft(seed=SEED),
+    )
+    stats = client.run(TOKENS)
+    client.seq += 1
+    transport.send(Detach(session=transport.session, seq=client.seq))
+    transport.close()
+    results[transport.session] = (list(client.tokens), stats)
+
+
+def main() -> None:
+    backend = OracleBackend(seed=SEED, verify_time=0.002, verify_time_per_token=0.0)
+    verifier = CloudVerifier(backend, batch_window=0.002)
+    listener = SocketListener(
+        lambda sid, t: verifier.attach(sid, t, t), host="127.0.0.1", port=0
+    )
+    verifier.start()
+    print(f"verifier listening on {listener.host}:{listener.port}")
+
+    results: dict = {}
+    workers = [
+        SYSTEM_CLOCK.spawn(
+            lambda sid=sid: run_one_client(listener.host, listener.port, sid, results),
+            name=f"edge-{sid}",
+        )
+        for sid in range(N_CLIENTS)
+    ]
+    for w in workers:
+        w.join(timeout=60.0)
+    listener.close()
+    verifier.stop()
+
+    # A crashed or hung client thread must fail the run, not shrink the report.
+    assert len(results) == N_CLIENTS, (
+        f"only {sorted(results)} of {N_CLIENTS} clients completed"
+    )
+    oracle = OracleStream(SEED)
+    for sid in sorted(results):
+        stream, stats = results[sid]
+        ok = stream == oracle.prefix(len(stream))
+        print(
+            f"session {sid}: {stats['accepted_tokens']} tokens in"
+            f" {stats['rounds']} rounds, {stats['wall_time']:.2f}s —"
+            f" stream == oracle: {ok}"
+        )
+        assert ok, f"session {sid} diverged from the oracle stream"
+    s = verifier.stats
+    print(
+        f"verifier: nav_calls={s['nav_calls']} tokens_verified={s['tokens_verified']}"
+        f" batched_calls={s['batched_calls']} (coalescing amortized"
+        f" {s['nav_calls'] - s['batched_calls']} calls)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Two-process cloud-edge serving over the socket transport.
+
+This is the paper's testbed shape (edge client and cloud verifier as
+separate machines talking over the network) on the repo's typed wire
+protocol: the cloud process runs ``CloudVerifier`` behind a
+``SocketListener``, the edge process dials it with ``connect_transport``
+(``Hello``/``Attach`` version handshake) and streams tokens through
+``EdgeClient`` over length-prefixed protocol frames.
+
+Run the two roles in two shells (or two machines)::
+
+    PYTHONPATH=src python launch/serve.py --listen 127.0.0.1:7421 --sessions 1
+    PYTHONPATH=src python launch/serve.py --connect 127.0.0.1:7421 --tokens 64
+
+With the default deterministic oracle draft/backend pair, the edge
+process's committed stream equals the oracle stream exactly — compare
+with::
+
+    PYTHONPATH=src python launch/serve.py --print-oracle 64
+
+(``--check-oracle`` makes the client do that diff itself and exit
+non-zero on any mismatch.)  ``--demo`` runs both roles over a loopback
+socket in one process.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.runtime import (  # noqa: E402 (path bootstrap above)
+    SYSTEM_CLOCK,
+    ChannelConfig,
+    CloudVerifier,
+    Detach,
+    EdgeClient,
+    EdgeConfig,
+    OracleBackend,
+    OracleDraft,
+    OracleStream,
+    SocketListener,
+    SyntheticBackend,
+    SyntheticDraft,
+    connect_transport,
+)
+
+
+def _host_port(spec: str) -> Tuple[str, int]:
+    host, _, port = spec.rpartition(":")
+    if not host or not port.isdigit():
+        raise argparse.ArgumentTypeError(f"expected HOST:PORT, got {spec!r}")
+    return host, int(port)
+
+
+def run_server(args) -> int:
+    """Cloud role: listen, attach socket sessions, serve until they finish."""
+    host, port = args.listen
+    if args.backend == "oracle":
+        backend = OracleBackend(
+            seed=args.seed, verify_time=args.verify_time, verify_time_per_token=0.0
+        )
+    else:
+        backend = SyntheticBackend(seed=args.seed, verify_time=args.verify_time)
+    verifier = CloudVerifier(backend, batch_window=args.batch_window)
+    listener = SocketListener(
+        lambda sid, transport: verifier.attach(sid, transport, transport),
+        host=host,
+        port=port,
+    )
+    verifier.start()
+    # Port 0 binds ephemerally; announce the real port for the client side.
+    print(f"LISTENING {listener.host}:{listener.port}", flush=True)
+    try:
+        while True:
+            SYSTEM_CLOCK.sleep(0.1)
+            done = sum(t.closed for t in listener.transports)
+            if args.sessions and done >= args.sessions:
+                break
+    except KeyboardInterrupt:
+        pass
+    finally:
+        listener.close()
+        verifier.stop()
+    s = verifier.stats
+    print(
+        f"SERVED sessions={listener.stats['accepted']} nav_calls={s['nav_calls']}"
+        f" tokens_verified={s['tokens_verified']} batched_calls={s['batched_calls']}",
+        flush=True,
+    )
+    return 0
+
+
+def run_client(args) -> int:
+    """Edge role: dial the cloud, stream ``--tokens`` tokens, print them."""
+    host, port = args.connect
+    transport = connect_transport(
+        host, port, session=args.session, cfg=ChannelConfig(alpha=0.001, beta=0.0001)
+    )
+    if args.draft == "oracle":
+        draft = OracleDraft(seed=args.seed)
+    else:
+        draft = SyntheticDraft(seed=args.seed)
+    cfg = EdgeConfig(gamma=args.gamma, window=8, nav_timeout=args.nav_timeout)
+    client = EdgeClient(transport.session, transport, transport, cfg, draft=draft)
+    stats = client.run(args.tokens)
+    client.seq += 1
+    transport.send(Detach(session=transport.session, seq=client.seq))
+    transport.close()
+    stream = client.tokens[: args.tokens]
+    for tok in stream:
+        print(tok)
+    print(
+        f"# session={transport.session} rounds={stats['rounds']}"
+        f" accepted={stats['accepted_tokens']} failovers={stats['failovers']}"
+        f" wall={stats['wall_time']:.2f}s",
+        file=sys.stderr,
+    )
+    if args.check_oracle:
+        expect = OracleStream(args.seed).prefix(len(stream))
+        if stream != expect:
+            print("# ORACLE MISMATCH", file=sys.stderr)
+            return 1
+        print("# stream == oracle: OK", file=sys.stderr)
+    return 0
+
+
+def run_demo(args) -> int:
+    """Both roles over a loopback socket in one process (quickstart)."""
+    backend = OracleBackend(seed=args.seed, verify_time=args.verify_time, verify_time_per_token=0.0)
+    verifier = CloudVerifier(backend, batch_window=args.batch_window)
+    listener = SocketListener(
+        lambda sid, t: verifier.attach(sid, t, t), host="127.0.0.1", port=0
+    )
+    verifier.start()
+    args.connect = (listener.host, listener.port)
+    args.check_oracle = True
+    try:
+        return run_client(args)
+    finally:
+        listener.close()
+        verifier.stop()
+
+
+def main(argv=None) -> int:
+    """CLI entry: ``--listen`` (cloud), ``--connect`` (edge), or helpers."""
+    p = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    role = p.add_mutually_exclusive_group(required=True)
+    role.add_argument("--listen", type=_host_port, metavar="HOST:PORT", help="run the cloud verifier")
+    role.add_argument("--connect", type=_host_port, metavar="HOST:PORT", help="run the edge client")
+    role.add_argument("--demo", action="store_true", help="loopback demo: both roles, one process")
+    role.add_argument(
+        "--print-oracle", type=int, metavar="N", help="print the first N oracle tokens and exit"
+    )
+    p.add_argument("--seed", type=int, default=7, help="oracle/synthetic seed (must match across roles)")
+    p.add_argument("--backend", choices=("oracle", "synthetic"), default="oracle")
+    p.add_argument("--draft", choices=("oracle", "synthetic"), default="oracle")
+    p.add_argument("--sessions", type=int, default=1, help="server exits after N sessions finish (0 = forever)")
+    p.add_argument("--session", type=int, default=0, help="client's proposed session id")
+    p.add_argument("--tokens", type=int, default=64, help="tokens to stream per client")
+    p.add_argument(
+        "--check-oracle", action="store_true",
+        help="client: verify the committed stream equals the oracle stream (exit 1 on mismatch)",
+    )
+    p.add_argument("--gamma", type=float, default=0.005, help="edge per-token draft time [s]")
+    p.add_argument("--nav-timeout", type=float, default=5.0, help="edge NAV timeout before failover [s]")
+    p.add_argument("--batch-window", type=float, default=0.002, help="server NAV coalescing window [s]")
+    p.add_argument("--verify-time", type=float, default=0.002, help="simulated target forward time [s]")
+    args = p.parse_args(argv)
+    if args.print_oracle is not None:
+        for tok in OracleStream(args.seed).prefix(args.print_oracle):
+            print(tok)
+        return 0
+    if args.demo:
+        return run_demo(args)
+    if args.listen:
+        return run_server(args)
+    return run_client(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

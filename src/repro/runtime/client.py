@@ -33,15 +33,16 @@ optional and default to the stateless legacy behaviour.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.monitor import EnvironmentMonitor
 from repro.core.scheduler import CommParams, batch_sizes, dp_schedule
 from repro.core.trigger import make_trigger
+from .protocol import DraftFragment, NavRequest, NavResult, Reset, TreeNavRequest
 from .simclock import SYSTEM_CLOCK
-from .transport import Channel, Message
+from .transport import Transport
 
 __all__ = ["EdgeConfig", "SyntheticDraft", "EdgeClient"]
 
@@ -88,8 +89,8 @@ class EdgeClient:
     def __init__(
         self,
         session: int,
-        uplink: Channel,
-        downlink: Channel,
+        uplink: Transport,
+        downlink: Transport,
         cfg: EdgeConfig,
         draft=None,
         clock=None,
@@ -107,7 +108,7 @@ class EdgeClient:
         # The committed output stream: accepted drafts + corrections +
         # locally-decoded fallback tokens, in commit order.
         self.tokens: List[int] = []
-        self.stats = {
+        self.stats: Dict[str, Any] = {
             "accepted_tokens": 0,
             "drafted_tokens": 0,
             "nav_calls": 0,
@@ -214,8 +215,16 @@ class EdgeClient:
         toks = [t for t, _ in pending]
         cfs = [c for _, c in pending]
         self.seq += 1
-        payload = (toks, cfs, self.round) if parents is None else (toks, cfs, self.round, parents)
-        self.up.send(Message("draft_batch", self.session, self.seq, len(toks), payload))
+        self.up.send(
+            DraftFragment(
+                session=self.session,
+                seq=self.seq,
+                round=self.round,
+                tokens=tuple(toks),
+                confs=tuple(cfs),
+                parents=tuple(parents) if parents is not None else (),
+            )
+        )
         self.monitor.observe_batch(len(toks), self.up.cfg.alpha + self.up.cfg.beta * len(toks))
 
     # ----------------------------------------------------------- fallback --
@@ -258,9 +267,11 @@ class EdgeClient:
                 # verifier reconciles its KV fork (re-attach).
                 self.seq += 1
                 self.up.send(
-                    Message(
-                        "reset", self.session, self.seq, 1,
-                        {"position": len(self.tokens), "round": self.round},
+                    Reset(
+                        session=self.session,
+                        seq=self.seq,
+                        round=self.round,
+                        position=len(self.tokens),
                     )
                 )
                 cloud_ok = True  # optimistic; next round will confirm
@@ -280,22 +291,28 @@ class EdgeClient:
             # has failed over, so the server drops the work (straggler drop).
             # ``pos`` is the stream position of the round's first draft —
             # positional (oracle) backends verify against it statelessly.
-            request = {
-                "n_tokens": len(tokens),
-                "deadline": t_req + timeout,
-                "round": self.round,
-                "pos": len(self.tokens),
-            }
-            if tree_mode:
-                request["tree"] = True
-            self.up.send(Message("nav_request", self.session, self.seq, 1, request))
+            req_cls = TreeNavRequest if tree_mode else NavRequest
+            self.up.send(
+                req_cls(
+                    session=self.session,
+                    seq=self.seq,
+                    round=self.round,
+                    n_tokens=len(tokens),
+                    deadline=t_req + timeout,
+                    pos=len(self.tokens),
+                )
+            )
             self.stats["nav_calls"] += 1
             result = self.dn.recv(timeout=timeout)
-            while result is not None and result.seq != self.seq:
-                # Stale reply from a round we already failed over — discard.
+            while result is not None and (
+                not isinstance(result, NavResult) or result.seq != self.seq
+            ):
+                # Stale reply from a round we already failed over (or a
+                # non-result control message) — discard.
                 rem = t_req + timeout - self.clock.monotonic()
                 result = self.dn.recv(timeout=rem) if rem > 0 else None
-            if result is None:  # NAV lost/late → failover to local decode
+            if result is None or not isinstance(result, NavResult):
+                # NAV lost/late → failover to local decode
                 self.stats["failovers"] += 1
                 self.stats["lost_draft_tokens"] += len(tokens)
                 now = self.clock.monotonic()
@@ -315,13 +332,12 @@ class EdgeClient:
                 self.monitor.observe_recovery(now - offline_since)
                 offline_since = None
             backoff = self.cfg.backoff_init
-            n_acc = result.payload["n_accepted"]
-            path = result.payload.get("path")
-            if path is not None:  # tree round: the accepted root→leaf path
-                self._commit([tokens[i] for i in path])
+            n_acc = result.n_accepted
+            if result.path is not None:  # tree round: the accepted root→leaf path
+                self._commit([tokens[i] for i in result.path])
             else:
                 self._commit(tokens[:n_acc])
-            self._commit([result.payload["correction"]])
+            self._commit([result.correction])
             self.stats["rounds"] += 1
             self.trigger.on_verify(n_acc, len(tokens))
         self.stats["wall_time"] = self.clock.monotonic() - t0

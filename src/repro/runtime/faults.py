@@ -32,11 +32,20 @@ offline — and two runs with the same seed produce identical RunStats.
 
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
-__all__ = ["Phase", "FaultScenario", "LinkFaults", "FAULT_MATRIX", "scenario_by_name"]
+__all__ = [
+    "Phase",
+    "FaultScenario",
+    "LinkFaults",
+    "ComposedLinkFaults",
+    "legacy_link_faults",
+    "FAULT_MATRIX",
+    "scenario_by_name",
+]
 
 
 @dataclass(frozen=True)
@@ -140,6 +149,80 @@ class LinkFaults:
             self.stats["reordered"] += 1
             return p.reorder_jitter * max(self.time_scale, 1e-12) * (1.0 + self._rng.random())
         return 0.0
+
+
+def legacy_link_faults(
+    drop_prob: float,
+    outage: Optional[Tuple[float, float]],
+    seed: int,
+    name: str,
+) -> Optional["LinkFaults"]:
+    """Compile the legacy ``ChannelConfig`` knobs into a :class:`LinkFaults`.
+
+    ``drop_prob``/``outage`` predate the declarative fault layer; compiling
+    them into a one-scenario phase schedule gives ``Channel`` a single fault
+    path instead of two parallel ones.  The compiled instance reproduces the
+    legacy semantics exactly:
+
+    * phase times are *already-scaled* channel-relative seconds (the legacy
+      knobs never multiplied by ``time_scale``), hence ``time_scale=1.0``;
+    * the outage phase precedes the drop phase, so in-window sends are lost
+      without consuming a random draw — the legacy check order;
+    * the RNG is seeded from the historical ``channel:{seed}:{name}`` string,
+      so seeded runs draw the identical loss sequence they always did.
+
+    Returns ``None`` when neither knob is set (no fault layer at all).
+    """
+    phases = []
+    if outage is not None:
+        phases.append(Phase(float(outage[0]), float(outage[1]), outage=True))
+    if drop_prob > 0:
+        phases.append(Phase(0.0, math.inf, drop_prob=drop_prob))
+    if not phases:
+        return None
+    scen = FaultScenario(f"legacy:{name}", up=tuple(phases))
+    lf = LinkFaults(scen, "up", seed=seed, time_scale=1.0)
+    lf._rng = random.Random(f"channel:{seed}:{name}")
+    return lf
+
+
+class ComposedLinkFaults:
+    """Two fault layers on one channel, consulted in order.
+
+    Used when a channel has BOTH an explicit :class:`LinkFaults` schedule and
+    compiled legacy knobs: drop/duplicate checks short-circuit left to right
+    (the second layer draws only for messages the first layer passes, exactly
+    the historical check order), bandwidth factors multiply, and reorder
+    delays add.
+    """
+
+    def __init__(self, first, second):
+        self.first = first
+        self.second = second
+
+    @property
+    def stats(self) -> dict:
+        """Summed per-layer fault counters."""
+        out = dict(self.first.stats)
+        for k, v in self.second.stats.items():
+            out[k] = out.get(k, 0) + v
+        return out
+
+    def beta_factor(self, t_rel: float) -> float:
+        """Product of the layers' bandwidth multipliers at ``t_rel``."""
+        return self.first.beta_factor(t_rel) * self.second.beta_factor(t_rel)
+
+    def dropped(self, t_rel: float) -> bool:
+        """Whether either layer loses the message (first layer checked first)."""
+        return self.first.dropped(t_rel) or self.second.dropped(t_rel)
+
+    def duplicated(self, t_rel: float) -> bool:
+        """Whether either layer retransmits the message."""
+        return self.first.duplicated(t_rel) or self.second.duplicated(t_rel)
+
+    def reorder_delay(self, t_rel: float) -> float:
+        """Summed out-of-band reorder delay across the layers."""
+        return self.first.reorder_delay(t_rel) + self.second.reorder_delay(t_rel)
 
 
 # --------------------------------------------------------------------------- #

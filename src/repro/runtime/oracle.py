@@ -15,11 +15,12 @@ components model PipeSD's offline-robustness setting faithfully:
   the *full* model locally (slower, but the same greedy stream), so an
   outage never forks the output.
 * :class:`OracleBackend` — the cloud verifier: stateless and *positional*
-  (it consumes the round's start position carried by the NAV request), it
-  accepts the longest draft prefix matching the oracle and corrects with
-  the true next token.  Because acceptance depends only on (position,
-  token), no amount of message loss, duplication, reordering, or
-  re-attachment can desynchronize it — corrupted rounds just accept less.
+  (it consumes the round's start position carried by the typed
+  ``protocol.NavRequest.pos`` field), it accepts the longest draft prefix
+  matching the oracle and corrects with the true next token.  Because
+  acceptance depends only on (position, token), no amount of message loss,
+  duplication, reordering, or re-attachment can desynchronize it —
+  corrupted rounds just accept less.
 
 Together these give the lossless-speculative-decoding invariant the suite
 asserts: **the accepted token stream equals ``OracleStream`` exactly, for
@@ -115,8 +116,9 @@ class OracleBackend(VerifyBackend):
     """Stateless positional verifier over an :class:`OracleStream`.
 
     The server passes ``(session, tokens, confs, pos)`` through
-    ``verify_batch_pos`` (``pos`` rides the NAV request), so verification is
-    a pure function — immune to duplicated or replayed requests.  The
+    ``verify_batch_pos`` (``pos`` rides ``protocol.NavRequest``), so
+    verification is a pure function — immune to duplicated or replayed
+    requests.  The
     simulated target-forward cost matches ``SyntheticBackend``: one padded
     pass per batch whose time scales with the longest draft.
     """

@@ -1,0 +1,471 @@
+"""Typed, versioned wire protocol for the cloud-edge runtime.
+
+Every message that crosses the edge↔cloud link is one of the frozen
+dataclasses below — explicit named fields replacing the positional tuples
+and stringly-keyed dicts that accreted across the runtime's growth.  The
+module also provides a deterministic length-prefixed binary codec
+(:func:`encode` / :func:`decode`; struct-packed, no pickle) so the same
+typed messages travel over a real socket byte-for-byte reproducibly, and
+the :data:`PROTOCOL_VERSION` negotiation used at attach.
+
+Layering
+--------
+
+::
+
+    EdgeClient / CloudVerifier          (typed messages, this module)
+            |            ^
+            v            |
+    Transport.send     Transport.recv   (runtime.transport)
+            |            |
+      InProcTransport: the message OBJECT rides the Hockney-model
+          Channel; faults (runtime.faults) act below this line, on
+          whole messages — the codec never runs, so the deterministic
+          conformance suite is byte-independent of this module;
+      SocketTransport: encode() -> length-prefixed frame -> TCP ->
+          decode(); the codec IS the wire format.
+
+Message catalogue
+-----------------
+
+===============  =============================================================
+type             meaning
+===============  =============================================================
+Hello            client -> server: open a session, propose ``session`` id,
+                 carry the client's ``version`` (checked at attach)
+Attach           server -> client: accept/reject the Hello; carries the
+                 server's version and the final session id
+DraftFragment    client -> server: one pipelined upload of drafted tokens
+                 (``round``-scoped; ``parents`` packs tree structure)
+NavRequest       client -> server: verify the round's first ``n_tokens``
+                 buffered drafts (chain speculation)
+TreeNavRequest   client -> server: same, but the round's fragments carry a
+                 packed token tree (verified by tree-NAV)
+NavResult        server -> client: accepted count, correction token, and —
+                 for tree rounds — the accepted root→leaf ``path``
+Reset            client -> server: re-attach after an offline spell; carries
+                 the edge's committed stream ``position`` for KV reconcile
+Detach           client -> server: the session is finished; buffered state
+                 and KV pages may be reclaimed
+Heartbeat        either direction: liveness signal (refreshes the server's
+                 ``last_seen`` like any other message)
+===============  =============================================================
+
+Clock domains
+-------------
+
+``NavRequest.deadline`` is an *absolute* timestamp on the clock shared by
+client and server.  In-process transports share that clock by construction;
+``SocketTransport`` rebases the deadline through a relative time budget at
+the send/recv boundary (see ``runtime.transport``), so the field is always
+directly comparable to ``clock.monotonic()`` on the receiving side.
+
+Link cost
+---------
+
+:func:`wire_tokens` maps each message to the token count the Hockney model
+charges for it (``alpha + beta * n``): a draft fragment pays per drafted
+token, a NAV result per accepted token, and control messages pay one token.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, fields
+from typing import Dict, Optional, Tuple, Type, Union
+
+__all__ = [
+    "PROTOCOL_VERSION",
+    "ProtocolError",
+    "Hello",
+    "Attach",
+    "DraftFragment",
+    "NavRequest",
+    "TreeNavRequest",
+    "NavResult",
+    "Reset",
+    "Detach",
+    "Heartbeat",
+    "MESSAGE_TYPES",
+    "ProtocolMessage",
+    "encode",
+    "decode",
+    "wire_tokens",
+    "handshake_reply",
+]
+
+#: Wire-protocol version carried by ``Hello`` and checked at attach.  Bump on
+#: any change to the message set, field layout, or codec byte format.
+PROTOCOL_VERSION = 1
+
+
+class ProtocolError(ValueError):
+    """Malformed frame, unknown message type, or failed version negotiation."""
+
+
+# --------------------------------------------------------------------------- #
+# Message types
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class Hello:
+    """Client -> server: open a session and negotiate the protocol version."""
+
+    session: int
+    seq: int = 0
+    version: int = PROTOCOL_VERSION
+
+
+@dataclass(frozen=True)
+class Attach:
+    """Server -> client: accept or reject a ``Hello`` (version negotiation).
+
+    ``session`` is the *final* session id (the server may remap the client's
+    proposal on collision); ``accepted=False`` carries a human-readable
+    ``reason`` and the server's own ``version`` so the client can report the
+    mismatch precisely.
+    """
+
+    session: int
+    seq: int = 0
+    version: int = PROTOCOL_VERSION
+    accepted: bool = True
+    reason: str = ""
+
+
+@dataclass(frozen=True)
+class DraftFragment:
+    """Client -> server: one pipelined upload of drafted tokens.
+
+    Fragments are scoped to a NAV ``round`` and reassembled server-side in
+    ``seq`` order, so reorder-delayed uploads recover the client's draft
+    order.  ``parents`` packs tree structure (parent node index per token,
+    ``-1`` for roots) and is empty for chain rounds.
+    """
+
+    session: int
+    seq: int
+    round: int
+    tokens: Tuple[int, ...]
+    confs: Tuple[float, ...]
+    parents: Tuple[int, ...] = ()
+
+
+@dataclass(frozen=True)
+class NavRequest:
+    """Client -> server: verify the round's first ``n_tokens`` buffered drafts.
+
+    ``deadline`` is the absolute receiver-clock time after which the client
+    has failed over (the server drops the work — straggler mitigation);
+    ``None`` never expires.  ``pos`` is the committed stream position of the
+    round's first draft, consumed by stateless positional verifiers
+    (``runtime.oracle.OracleBackend``).
+    """
+
+    session: int
+    seq: int
+    round: int
+    n_tokens: int
+    deadline: Optional[float] = None
+    pos: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class TreeNavRequest(NavRequest):
+    """Client -> server: NAV over a packed token tree (same fields as chain).
+
+    The tree structure itself rides the round's ``DraftFragment.parents``
+    lanes; this type only switches the verifier onto the tree-NAV path.
+    """
+
+
+@dataclass(frozen=True)
+class NavResult:
+    """Server -> client: the verdict for one NAV round.
+
+    ``seq`` echoes the request's ``seq`` so the client can discard stale
+    replies after a failover.  ``path`` is ``None`` for chain rounds and the
+    accepted root→leaf packed-node-index path for tree rounds (possibly
+    empty when nothing was accepted).
+    """
+
+    session: int
+    seq: int
+    n_accepted: int
+    correction: int
+    n_drafted: int
+    path: Optional[Tuple[int, ...]] = None
+
+
+@dataclass(frozen=True)
+class Reset:
+    """Client -> server: re-attach after an offline spell.
+
+    ``position`` is the edge's committed stream length — authoritative after
+    local decoding — which the verifier adopts (rolling its paged-KV fork
+    back past it and bumping the session's reset epoch so in-flight rounds
+    never commit).
+    """
+
+    session: int
+    seq: int
+    round: int
+    position: int
+
+
+@dataclass(frozen=True)
+class Detach:
+    """Client -> server: the session is finished; reclaim its state."""
+
+    session: int
+    seq: int = 0
+
+
+@dataclass(frozen=True)
+class Heartbeat:
+    """Either direction: liveness probe (``t_send`` is the sender's clock)."""
+
+    session: int
+    seq: int = 0
+    t_send: float = 0.0
+
+
+#: Every concrete message type, in wire-id order (codec round-trip tests
+#: iterate this).
+MESSAGE_TYPES: Tuple[type, ...] = (
+    Hello,
+    Attach,
+    DraftFragment,
+    NavRequest,
+    TreeNavRequest,
+    NavResult,
+    Reset,
+    Detach,
+    Heartbeat,
+)
+
+ProtocolMessage = Union[
+    Hello, Attach, DraftFragment, NavRequest, TreeNavRequest, NavResult,
+    Reset, Detach, Heartbeat,
+]
+
+
+def wire_tokens(msg: ProtocolMessage) -> int:
+    """Token count the Hockney link model charges for ``msg``.
+
+    Draft fragments pay per drafted token and NAV results per accepted token
+    (at least one — the correction always ships); every control message pays
+    a single token.  These are exactly the historical per-kind costs, so the
+    deterministic conformance timings are unchanged by the typed protocol.
+    """
+    if isinstance(msg, DraftFragment):
+        return len(msg.tokens)
+    if isinstance(msg, NavResult):
+        return max(msg.n_accepted, 1)
+    return 1
+
+
+# --------------------------------------------------------------------------- #
+# Codec: deterministic length-prefixed binary frames (struct-packed, no pickle)
+# --------------------------------------------------------------------------- #
+#
+# Frame layout (all little-endian):
+#
+#     +----------+---------+------------------------------+
+#     | u32 size | u8 type | fields, in declaration order |
+#     +----------+---------+------------------------------+
+#     '--- size counts everything after the u32 ----------'
+#
+# Field encodings by spec code:
+#     i   int            -> s64
+#     f   float          -> f64 (exact round-trip)
+#     b   bool           -> u8
+#     s   str            -> u32 byte-length + UTF-8 bytes
+#     ti  Tuple[int,...]   -> u32 count + s64 * count
+#     tf  Tuple[float,...] -> u32 count + f64 * count
+#     oi / of / oti      -> u8 presence flag + encoding of the value
+#
+# The encoding of a message is a pure function of its field values (no
+# timestamps, no randomness, no interning), so equal messages encode to
+# equal bytes — the property the determinism benchmarks rely on.
+
+_U32 = struct.Struct("<I")
+_S64 = struct.Struct("<q")
+_F64 = struct.Struct("<d")
+_U8 = struct.Struct("<B")
+
+#: Per-type field spec: (field name, spec code) in wire order.  Kept explicit
+#: (rather than introspected from annotations) so the wire format is frozen
+#: even if dataclass defaults or typing idioms change.
+_FIELD_SPECS: Dict[type, Tuple[Tuple[str, str], ...]] = {
+    Hello: (("session", "i"), ("seq", "i"), ("version", "i")),
+    Attach: (
+        ("session", "i"), ("seq", "i"), ("version", "i"),
+        ("accepted", "b"), ("reason", "s"),
+    ),
+    DraftFragment: (
+        ("session", "i"), ("seq", "i"), ("round", "i"),
+        ("tokens", "ti"), ("confs", "tf"), ("parents", "ti"),
+    ),
+    NavRequest: (
+        ("session", "i"), ("seq", "i"), ("round", "i"),
+        ("n_tokens", "i"), ("deadline", "of"), ("pos", "oi"),
+    ),
+    TreeNavRequest: (
+        ("session", "i"), ("seq", "i"), ("round", "i"),
+        ("n_tokens", "i"), ("deadline", "of"), ("pos", "oi"),
+    ),
+    NavResult: (
+        ("session", "i"), ("seq", "i"), ("n_accepted", "i"),
+        ("correction", "i"), ("n_drafted", "i"), ("path", "oti"),
+    ),
+    Reset: (("session", "i"), ("seq", "i"), ("round", "i"), ("position", "i")),
+    Detach: (("session", "i"), ("seq", "i")),
+    Heartbeat: (("session", "i"), ("seq", "i"), ("t_send", "f")),
+}
+
+_TYPE_IDS: Dict[type, int] = {cls: i for i, cls in enumerate(MESSAGE_TYPES, start=1)}
+_ID_TYPES: Dict[int, type] = {i: cls for cls, i in _TYPE_IDS.items()}
+
+# The spec table and the dataclasses must agree field-for-field; checked at
+# import so a drifting message definition fails loudly, not as bad bytes.
+for _cls, _spec in _FIELD_SPECS.items():
+    _declared = tuple(f.name for f in fields(_cls))
+    _specced = tuple(name for name, _ in _spec)
+    if _declared != _specced:
+        raise AssertionError(
+            f"protocol spec drift for {_cls.__name__}: "
+            f"dataclass fields {_declared} != wire spec {_specced}"
+        )
+
+
+def _pack_value(code: str, value, out: list) -> None:
+    if code == "i":
+        out.append(_S64.pack(value))
+    elif code == "f":
+        out.append(_F64.pack(value))
+    elif code == "b":
+        out.append(_U8.pack(1 if value else 0))
+    elif code == "s":
+        raw = value.encode("utf-8")
+        out.append(_U32.pack(len(raw)))
+        out.append(raw)
+    elif code == "ti":
+        out.append(_U32.pack(len(value)))
+        out.append(struct.pack(f"<{len(value)}q", *value))
+    elif code == "tf":
+        out.append(_U32.pack(len(value)))
+        out.append(struct.pack(f"<{len(value)}d", *value))
+    elif code.startswith("o"):
+        if value is None:
+            out.append(_U8.pack(0))
+        else:
+            out.append(_U8.pack(1))
+            _pack_value(code[1:], value, out)
+    else:  # pragma: no cover - spec table is static
+        raise ProtocolError(f"unknown field spec code {code!r}")
+
+
+def _unpack_value(code: str, buf: bytes, off: int):
+    if code == "i":
+        return _S64.unpack_from(buf, off)[0], off + 8
+    if code == "f":
+        return _F64.unpack_from(buf, off)[0], off + 8
+    if code == "b":
+        return bool(_U8.unpack_from(buf, off)[0]), off + 1
+    if code == "s":
+        (n,) = _U32.unpack_from(buf, off)
+        off += 4
+        return buf[off:off + n].decode("utf-8"), off + n
+    if code == "ti":
+        (n,) = _U32.unpack_from(buf, off)
+        off += 4
+        return tuple(struct.unpack_from(f"<{n}q", buf, off)), off + 8 * n
+    if code == "tf":
+        (n,) = _U32.unpack_from(buf, off)
+        off += 4
+        return tuple(struct.unpack_from(f"<{n}d", buf, off)), off + 8 * n
+    if code.startswith("o"):
+        present = _U8.unpack_from(buf, off)[0]
+        off += 1
+        if not present:
+            return None, off
+        return _unpack_value(code[1:], buf, off)
+    raise ProtocolError(f"unknown field spec code {code!r}")  # pragma: no cover
+
+
+def encode(msg: ProtocolMessage) -> bytes:
+    """Serialize ``msg`` to one length-prefixed binary frame.
+
+    Deterministic: equal messages produce equal bytes.  Raises
+    :class:`ProtocolError` for objects that are not protocol messages.
+    """
+    spec = _FIELD_SPECS.get(type(msg))
+    if spec is None:
+        raise ProtocolError(f"not a protocol message: {type(msg).__name__}")
+    out: list = [_U8.pack(_TYPE_IDS[type(msg)])]
+    try:
+        for name, code in spec:
+            _pack_value(code, getattr(msg, name), out)
+    except struct.error as e:
+        raise ProtocolError(f"unencodable field on {type(msg).__name__}: {e}") from e
+    body = b"".join(out)
+    return _U32.pack(len(body)) + body
+
+
+def decode(data: bytes) -> ProtocolMessage:
+    """Parse one length-prefixed frame back into its typed message.
+
+    The exact inverse of :func:`encode`: ``decode(encode(m)) == m`` for every
+    message type.  Raises :class:`ProtocolError` on truncated frames, unknown
+    type ids, or trailing bytes.
+    """
+    if len(data) < 5:
+        raise ProtocolError(f"frame too short ({len(data)} bytes)")
+    (size,) = _U32.unpack_from(data, 0)
+    if len(data) != 4 + size:
+        raise ProtocolError(f"frame length mismatch: header says {size}, have {len(data) - 4}")
+    type_id = _U8.unpack_from(data, 4)[0]
+    cls = _ID_TYPES.get(type_id)
+    if cls is None:
+        raise ProtocolError(f"unknown message type id {type_id}")
+    off = 5
+    kwargs = {}
+    try:
+        for name, code in _FIELD_SPECS[cls]:
+            kwargs[name], off = _unpack_value(code, data, off)
+    except (struct.error, UnicodeDecodeError) as e:
+        raise ProtocolError(f"truncated/corrupt {cls.__name__} frame: {e}") from e
+    if off != len(data):
+        raise ProtocolError(f"{len(data) - off} trailing bytes after {cls.__name__}")
+    return cls(**kwargs)
+
+
+# --------------------------------------------------------------------------- #
+# Version negotiation
+# --------------------------------------------------------------------------- #
+
+
+def handshake_reply(hello: Hello, session: Optional[int] = None) -> Attach:
+    """The server's :class:`Attach` reply to a client :class:`Hello`.
+
+    Accepts exactly the server's own :data:`PROTOCOL_VERSION`; anything else
+    is rejected with a diagnostic ``reason`` (the transport closes the
+    connection after delivering the rejection).  ``session`` overrides the
+    client's proposed id (collision remapping); by default the proposal is
+    accepted verbatim.
+    """
+    sid = hello.session if session is None else session
+    if hello.version != PROTOCOL_VERSION:
+        return Attach(
+            session=sid,
+            seq=hello.seq,
+            version=PROTOCOL_VERSION,
+            accepted=False,
+            reason=(
+                f"protocol version mismatch: client speaks v{hello.version}, "
+                f"server speaks v{PROTOCOL_VERSION}"
+            ),
+        )
+    return Attach(session=sid, seq=hello.seq, version=PROTOCOL_VERSION, accepted=True)

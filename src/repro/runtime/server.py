@@ -18,8 +18,8 @@ A continuous-batching dispatcher serves any number of edge sessions
 * straggler mitigation: requests carry client deadlines; work whose deadline
   has already passed (the client has failed over to local decoding) and work
   for sessions that disconnected is dropped, not verified;
-* tree speculation: a NAV request flagged ``tree: True`` carries packed tree
-  parents alongside its tokens; tree requests ride the same buffers,
+* tree speculation: a ``TreeNavRequest`` round's draft fragments carry packed
+  tree parents alongside their tokens; tree requests ride the same buffers,
   admission control, and coalescing window as chains, and are padded by NODE
   count through ``spec_verify_tree_batched`` (one ancestor-masked launch per
   dispatch).  Results additionally carry the accepted root→leaf ``path``;
@@ -47,14 +47,24 @@ from __future__ import annotations
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.monitor import EnvironmentMonitor
 from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
+from .protocol import (
+    Detach,
+    DraftFragment,
+    Hello,
+    NavRequest,
+    NavResult,
+    Reset,
+    TreeNavRequest,
+    handshake_reply,
+)
 from .simclock import SYSTEM_CLOCK
-from .transport import Channel, Message
+from .transport import Transport
 
 __all__ = [
     "VerifyBackend",
@@ -67,6 +77,10 @@ __all__ = [
 class VerifyBackend:
     """Interface: verify a session's drafted tokens → (n_accepted, correction)."""
 
+    #: Positional backends are stateless: the dispatcher routes them through
+    #: ``verify_batch_pos`` with the stream position each NAV request carries.
+    positional: bool = False
+
     def verify(self, session: int, tokens: List[int], confs: List[float]):  # pragma: no cover
         """Verify one session's chain drafts → ``(n_accepted, correction)``."""
         raise NotImplementedError
@@ -74,6 +88,15 @@ class VerifyBackend:
     def verify_batch(self, requests: Sequence[Tuple[int, List[int], List[float]]]):
         """Verify many sessions in one call; default loops over ``verify``."""
         return [self.verify(s, t, c) for (s, t, c) in requests]
+
+    def verify_batch_pos(
+        self, requests: Sequence[Tuple[int, List[int], List[float], Optional[int]]]
+    ):  # pragma: no cover
+        """Positional batch verify ``[(session, tokens, confs, pos)]``.
+
+        Only meaningful on ``positional`` backends (``runtime.oracle``).
+        """
+        raise NotImplementedError
 
     def verify_tree(self, session: int, tokens: List[int], confs: List[float], parents: List[int]):
         """Tree request → (n_accepted, correction, path-node-indices)."""
@@ -100,7 +123,7 @@ class SyntheticBackend(VerifyBackend):
     verify_time: float = 0.080  # simulated target forward time [s]
     verify_time_per_token: float = 0.004
     time_scale: float = 1.0
-    clock: object = None  # simclock surface; None -> SYSTEM_CLOCK
+    clock: Any = None  # simclock surface; None -> SYSTEM_CLOCK
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
@@ -283,7 +306,7 @@ class _VerifyRequest:
     session: int
     tokens: List[int]
     confs: List[float]
-    msg: Message
+    msg: NavRequest  # the originating (typed) request; its seq keys the reply
     t_enqueue: float
     deadline: Optional[float]  # absolute monotonic; None = never drop
     parents: Optional[List[int]] = None  # packed tree parents; None = chain
@@ -309,7 +332,7 @@ class _Session:
         default_factory=dict
     )
     # NAV round that arrived before its proactively-uploaded drafts did.
-    pending_request: Optional[Message] = None
+    pending_request: Optional[NavRequest] = None
     last_seen: float = 0.0
     served: int = 0  # rounds verified — fairness key for admission
     kv_committed: int = 0  # logical target-cache length (tokens committed)
@@ -406,7 +429,7 @@ class CloudVerifier:
         self._work = self.clock.condition(self._lock)
         self._queue: Deque[_VerifyRequest] = deque()
 
-    def attach(self, session: int, uplink: Channel, downlink: Channel) -> None:
+    def attach(self, session: int, uplink: Transport, downlink: Transport) -> None:
         """Register a session and start its receive loop.
 
         With a flat-reserve KV pool the up-front contiguous reservation
@@ -458,20 +481,13 @@ class CloudVerifier:
         return out
 
     # ------------------------------------------------------------ receive --
-    @staticmethod
-    def _round_of(payload) -> int:
-        if isinstance(payload, dict):
-            return int(payload.get("round", 0))
-        return int(payload[2]) if len(payload) > 2 else 0
-
-    def _enqueue_round(self, session: int, sess: _Session, msg: Message) -> None:
+    def _enqueue_round(self, session: int, sess: _Session, msg: NavRequest) -> None:
         """Pop the round's tokens off its buffer and queue the request.
 
         Caller holds ``self._lock``.
         """
-        n = msg.payload["n_tokens"]
-        rnd = self._round_of(msg.payload)
-        is_tree = bool(msg.payload.get("tree")) if isinstance(msg.payload, dict) else False
+        n = msg.n_tokens
+        rnd = msg.round
         toks, confs, pars = sess.buf(rnd)
         take_t, take_c, take_p = toks[:n], confs[:n], pars[:n]
         rest = (toks[n:], confs[n:], pars[n:])
@@ -483,7 +499,6 @@ class CloudVerifier:
             sess.buffers.pop(rnd, None)
             sess.buf_seqs.pop(rnd, None)
         sess.max_round_enqueued = max(sess.max_round_enqueued, rnd)
-        payload_get = msg.payload.get if isinstance(msg.payload, dict) else (lambda *_: None)
         self._queue.append(
             _VerifyRequest(
                 session,
@@ -491,9 +506,9 @@ class CloudVerifier:
                 take_c,
                 msg,
                 self.clock.monotonic(),
-                payload_get("deadline"),
-                parents=take_p if is_tree else None,
-                pos=payload_get("pos"),
+                msg.deadline,
+                parents=take_p if isinstance(msg, TreeNavRequest) else None,
+                pos=msg.pos,
                 epoch=sess.epoch,
             )
         )
@@ -504,48 +519,51 @@ class CloudVerifier:
         while not self._stop.is_set():
             msg = up.recv(timeout=0.25)
             if msg is None:
+                if getattr(up, "closed", False):
+                    # The link is permanently gone (socket EOF / channel
+                    # close): end the receive loop instead of hot-polling a
+                    # dead transport.  Dispatch-side session cleanup still
+                    # runs through the session-timeout path.
+                    return
                 continue
             sess = self.sessions[session]
             sess.last_seen = self.clock.monotonic()
-            if msg.kind == "draft_batch":
-                tokens, confs = msg.payload[0], msg.payload[1]
-                # 4th tuple slot: packed tree parents (absent for chains).
-                batch_parents = msg.payload[3] if len(msg.payload) > 3 else None
-                rnd = self._round_of(msg.payload)
+            if isinstance(msg, DraftFragment):
+                rnd = msg.round
                 with self._lock:
-                    # A retransmitted (duplicated) batch must not extend the
+                    # A retransmitted (duplicated) fragment must not extend the
                     # round buffer twice — dedupe on the message seq; the
-                    # fragment map keys on seq so reorder-delayed batches
+                    # fragment map keys on seq so reorder-delayed fragments
                     # reassemble into the client's draft order.
                     seen = sess.buf_seqs.setdefault(rnd, set())
                     if msg.seq in seen:
                         continue
                     seen.add(msg.seq)
                     sess.buffers.setdefault(rnd, {})[msg.seq] = (
-                        list(tokens),
-                        list(confs),
-                        list(batch_parents) if batch_parents is not None else [],
+                        list(msg.tokens),
+                        list(msg.confs),
+                        list(msg.parents),
                     )
                     # A parked NAV round becomes dispatchable the moment its
                     # proactively-uploaded drafts complete the buffer.
                     pend = sess.pending_request
                     if (
                         pend is not None
-                        and self._round_of(pend.payload) == rnd
-                        and len(sess.buf(rnd)[0]) >= pend.payload["n_tokens"]
+                        and pend.round == rnd
+                        and len(sess.buf(rnd)[0]) >= pend.n_tokens
                     ):
                         sess.pending_request = None
                         self._enqueue_round(session, sess, pend)
-            elif msg.kind == "nav_request":
-                rnd = self._round_of(msg.payload)
+            elif isinstance(msg, NavRequest):  # chain and tree alike
+                rnd = msg.round
                 with self._lock:
-                    # A duplicated nav_request for an already-enqueued round
+                    # A duplicated NavRequest for an already-enqueued round
                     # must not verify (and KV-commit) the round twice, and a
                     # stale (reorder-delayed) request from a round the client
                     # has since abandoned must not displace a newer parked
                     # round.
                     pend = sess.pending_request
-                    pend_rnd = self._round_of(pend.payload) if pend is not None else 0
+                    pend_rnd = pend.round if pend is not None else 0
                     if 0 < rnd and (rnd <= sess.max_round_enqueued or rnd < pend_rnd):
                         continue
                     # Abandoned earlier rounds (failover on the client) can
@@ -554,19 +572,32 @@ class CloudVerifier:
                     for stale in [r for r in sess.buffers if r < rnd]:
                         del sess.buffers[stale]
                         sess.buf_seqs.pop(stale, None)
-                    if sess.pending_request is not None and self._round_of(sess.pending_request.payload) < rnd:
+                    if sess.pending_request is not None and sess.pending_request.round < rnd:
                         sess.pending_request = None
-                    if len(sess.buf(rnd)[0]) >= msg.payload["n_tokens"]:
+                    if len(sess.buf(rnd)[0]) >= msg.n_tokens:
                         self._enqueue_round(session, sess, msg)
                     else:
                         sess.pending_request = msg
-            elif msg.kind == "reset":
+            elif isinstance(msg, Reset):
                 with self._lock:
                     sess.buffers.clear()
                     sess.buf_seqs.clear()
                     sess.pending_request = None
-                    if isinstance(msg.payload, dict) and "position" in msg.payload:
-                        self._kv_reconcile(session, sess, int(msg.payload["position"]))
+                    self._kv_reconcile(session, sess, msg.position)
+            elif isinstance(msg, Hello):
+                # In-band attach (socket clients handshake at the listener;
+                # an in-process Hello still gets a well-formed reply).
+                dn.send(handshake_reply(msg, session=session))
+            elif isinstance(msg, Detach):
+                # The client is done: drop buffered rounds and return the
+                # session's KV pages to the pool.
+                with self._lock:
+                    sess.buffers.clear()
+                    sess.buf_seqs.clear()
+                    sess.pending_request = None
+                    if self.kv_pool is not None and session in self.kv_pool.tables:
+                        self.kv_pool.release(session)
+            # Heartbeat (and anything unrecognized): last_seen was refreshed.
 
     # ----------------------------------------------------------- dispatch --
     def _kv_reconcile(self, session: int, sess: _Session, position: int) -> None:
@@ -747,7 +778,7 @@ class CloudVerifier:
             tree = [r for r in batch if r.parents is not None]
             results: Dict[int, tuple] = {}
             if chain:
-                if getattr(self.backend, "positional", False):
+                if self.backend.positional:
                     # Positional backends (runtime.oracle) verify statelessly
                     # against the stream position carried by the NAV request.
                     out = self.backend.verify_batch_pos(
@@ -797,10 +828,18 @@ class CloudVerifier:
                 if link is None:
                     continue
                 _, dn = link
-                payload = {"n_accepted": n_acc, "correction": corr, "n_drafted": len(req.tokens)}
-                if path is not None:
-                    payload["path"] = path  # accepted packed node indices
-                dn.send(Message("nav_result", req.session, req.msg.seq, max(n_acc, 1), payload))
+                dn.send(
+                    NavResult(
+                        session=req.session,
+                        seq=req.msg.seq,
+                        n_accepted=n_acc,
+                        correction=corr,
+                        n_drafted=len(req.tokens),
+                        # Chain rounds carry no path; tree rounds carry the
+                        # accepted packed node indices (possibly empty).
+                        path=tuple(path) if path is not None else None,
+                    )
+                )
             if self.kv_pool is not None:
                 with self._lock:
                     self.monitor.observe_kv(

@@ -29,6 +29,11 @@ except ModuleNotFoundError:
         def __getattr__(self, name):
             return self
 
+        def __or__(self, other):  # `st.none() | ints` composition
+            return self
+
+        __ror__ = __or__
+
         def __repr__(self):  # pragma: no cover - debugging nicety
             return "<hypothesis stub strategy>"
 

@@ -33,7 +33,7 @@ from repro.runtime import (
     VirtualClock,
     scenario_by_name,
 )
-from repro.runtime.transport import Message
+from repro.runtime.protocol import DraftFragment, Heartbeat, NavRequest, Reset
 
 N_TOKENS = 150
 SCENARIO_IDS = [s.name for s in FAULT_MATRIX]
@@ -167,10 +167,10 @@ def test_channel_drop_prob_branch_is_seeded_and_lossy():
 
     def body():
         for i in range(40):
-            ch.send(Message("m", 0, i, 1, i))
+            ch.send(Heartbeat(0, seq=i))
         got = []
         while (m := ch.recv(timeout=5.0)) is not None:
-            got.append(m.payload)
+            got.append(m.seq)
         return got
 
     got = clock.run(body)
@@ -183,10 +183,10 @@ def test_channel_drop_prob_branch_is_seeded_and_lossy():
 
     def body2():
         for i in range(40):
-            ch2.send(Message("m", 0, i, 1, i))
+            ch2.send(Heartbeat(0, seq=i))
         got = []
         while (m := ch2.recv(timeout=5.0)) is not None:
-            got.append(m.payload)
+            got.append(m.seq)
         return got
 
     assert clock2.run(body2) == got
@@ -200,14 +200,47 @@ def test_channel_outage_window_branch():
     def body():
         delivered = []
         for i in range(6):  # link slots start at 0.0, 0.1, ..., 0.5
-            ch.send(Message("m", 0, i, 0, i))
+            ch.send(Heartbeat(0, seq=i))
         while (m := ch.recv(timeout=5.0)) is not None:
-            delivered.append(m.payload)
+            delivered.append(m.seq)
         return delivered
 
     # Slots 0.3, 0.4, 0.5 fall inside [0.25, 0.55) -> messages 3, 4, 5 lost.
     assert clock.run(body) == [0, 1, 2]
     assert ch.stats["dropped"] == 3
+
+
+def test_legacy_knobs_compose_with_explicit_fault_schedules():
+    """A channel with BOTH an explicit FaultScenario and legacy drop_prob
+    gets one composed fault path: either layer can lose a message, and the
+    per-layer seeded draws stay independent."""
+    clock = VirtualClock()
+    scen = FaultScenario("half_drop", up=(Phase(0.0, 100.0, drop_prob=0.5),))
+    ch = Channel(
+        ChannelConfig(alpha=0.01, beta=0.001, drop_prob=0.5, seed=11),
+        "up",
+        clock=clock,
+        faults=LinkFaults(scen, "up", seed=11),
+    )
+    from repro.runtime import ComposedLinkFaults
+
+    assert isinstance(ch.faults, ComposedLinkFaults)
+
+    def body():
+        for i in range(60):
+            ch.send(Heartbeat(0, seq=i))
+        got = []
+        while (m := ch.recv(timeout=5.0)) is not None:
+            got.append(m.seq)
+        return got
+
+    got = clock.run(body)
+    # Both layers fire: survivors ~25%, strictly fewer than one layer alone.
+    assert 0 < len(got) < 30
+    assert got == sorted(got)
+    assert ch.stats["dropped"] == 60 - len(got)
+    # The composed view sums the per-layer counters.
+    assert ch.faults.stats["dropped"] == ch.stats["dropped"]
 
 
 def test_legacy_outage_failover_path_on_virtual_clock():
@@ -261,21 +294,21 @@ def test_stale_nav_request_cannot_displace_newer_parked_round():
         server.start()
         # Round 2 parks: its nav_request arrived but its drafts were lost.
         t2 = oracle.prefix(4)[2:]
-        up.send(Message("nav_request", 0, 3, 1, {"n_tokens": 2, "round": 2, "pos": 2}))
+        up.send(NavRequest(0, 3, 2, n_tokens=2, pos=2))
         assert dn.recv(timeout=0.3) is None
         # The STALE round-1 request (delayed by reordering; round 1 was
         # abandoned at failover) arrives late. It must be ignored.
-        up.send(Message("nav_request", 0, 1, 1, {"n_tokens": 2, "round": 1, "pos": 0}))
+        up.send(NavRequest(0, 1, 1, n_tokens=2, pos=0))
         assert dn.recv(timeout=0.3) is None
         # Round 2's drafts finally arrive -> the PARKED round dispatches.
-        up.send(Message("draft_batch", 0, 4, 2, (t2, [0.9, 0.9], 2)))
+        up.send(DraftFragment(0, 4, 2, tuple(t2), (0.9, 0.9)))
         msg = dn.recv(timeout=5.0)
         server.stop()
         return msg
 
     msg = clock.run(body)
     assert msg is not None and msg.seq == 3  # round 2 served, round 1 dead
-    assert msg.payload["n_accepted"] == 2  # verified at pos 2, oracle-true
+    assert msg.n_accepted == 2  # verified at pos 2, oracle-true
 
 
 def test_reordered_draft_batches_reassemble_in_seq_order():
@@ -293,17 +326,17 @@ def test_reordered_draft_batches_reassemble_in_seq_order():
     def body():
         server.start()
         # Batch seq 2 ([3, 4]) overtakes batch seq 1 ([1, 2]) in transit.
-        up.send(Message("draft_batch", 0, 2, 2, ([3, 4], [0.9, 0.9], 1)))
-        up.send(Message("draft_batch", 0, 1, 2, ([1, 2], [0.9, 0.9], 1)))
-        up.send(Message("nav_request", 0, 3, 1, {"n_tokens": 4, "round": 1}))
+        up.send(DraftFragment(0, 2, 1, (3, 4), (0.9, 0.9)))
+        up.send(DraftFragment(0, 1, 1, (1, 2), (0.9, 0.9)))
+        up.send(NavRequest(0, 3, 1, n_tokens=4))
         msg = dn.recv(timeout=5.0)
         server.stop()
         return msg
 
     msg = clock.run(body)
-    assert msg is not None and msg.payload["n_drafted"] == 4
+    assert msg is not None and msg.n_drafted == 4
     # Order-sensitive hash: only [1, 2, 3, 4] (draft order) is acceptable.
-    assert msg.payload["correction"] == EchoBackend.fingerprint(0, [1, 2, 3, 4])
+    assert msg.correction == EchoBackend.fingerprint(0, [1, 2, 3, 4])
 
 
 def test_inflight_round_does_not_commit_across_reattach_reconcile():
@@ -319,11 +352,11 @@ def test_inflight_round_does_not_commit_across_reattach_reconcile():
 
     def body():
         server.start()
-        up.send(Message("draft_batch", 0, 1, 4, (toks, [0.9] * 4, 1)))
-        up.send(Message("nav_request", 0, 2, 1, {"n_tokens": 4, "round": 1, "pos": 0}))
+        up.send(DraftFragment(0, 1, 1, tuple(toks), (0.9,) * 4))
+        up.send(NavRequest(0, 2, 1, n_tokens=4, pos=0))
         clock.sleep(0.5)  # the 1s verify is now in flight
         # The edge failed over and re-attaches at position 0: round 1 is dead.
-        up.send(Message("reset", 0, 3, 1, {"position": 0, "round": 1}))
+        up.send(Reset(0, 3, 1, position=0))
         clock.sleep(2.0)  # let the stale verify finish
         committed = server.sessions[0].kv_committed
         server.stop()
@@ -392,8 +425,8 @@ def test_dead_session_pages_released_on_timeout():
         # The attach forked the shared prefix: the session holds pages.
         assert 0 in pool.tables and pool.length(0) == 16
         toks = oracle.prefix(4)
-        up.send(Message("draft_batch", 0, 1, 4, (toks, [0.9] * 4, 1)))
-        up.send(Message("nav_request", 0, 2, 1, {"n_tokens": 4, "round": 1, "pos": 0}))
+        up.send(DraftFragment(0, 1, 1, tuple(toks), (0.9,) * 4))
+        up.send(NavRequest(0, 2, 1, n_tokens=4, pos=0))
         clock.sleep(1.0)  # rx queues the round; the session then goes quiet
         server.start()  # first dispatch happens AFTER the session timed out
         clock.sleep(1.0)

@@ -1,0 +1,222 @@
+"""Wire-protocol unit + property tests: codec exactness, negotiation, guards.
+
+The codec contract: ``decode(encode(m)) == m`` for every message type and
+every field value (hypothesis-verified), encoding is deterministic, and
+malformed frames raise ``ProtocolError`` instead of producing garbage
+messages.  The grep guard enforces the API redesign's end state: no module
+outside ``protocol.py`` builds raw stringly-typed messages or pokes at
+positional/dict payloads.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.protocol import (
+    MESSAGE_TYPES,
+    PROTOCOL_VERSION,
+    Attach,
+    Detach,
+    DraftFragment,
+    Heartbeat,
+    Hello,
+    NavRequest,
+    NavResult,
+    ProtocolError,
+    Reset,
+    TreeNavRequest,
+    decode,
+    encode,
+    handshake_reply,
+    wire_tokens,
+)
+
+I64_MIN, I64_MAX = -(1 << 63), (1 << 63) - 1
+
+# Representative instance per type, exercising defaults and optionals.
+EXAMPLES = [
+    Hello(session=3),
+    Hello(session=I64_MAX, seq=I64_MIN, version=2),
+    Attach(session=1),
+    Attach(session=9, seq=4, version=3, accepted=False, reason="no — ünïcode reason"),
+    DraftFragment(session=0, seq=1, round=2, tokens=(), confs=()),  # empty draft
+    DraftFragment(
+        session=5, seq=6, round=7,
+        tokens=(0, I64_MAX, I64_MIN), confs=(0.0, 1.0, 0.3333333333333333),
+        parents=(-1, 0, 1),
+    ),
+    NavRequest(session=1, seq=2, round=3, n_tokens=4),  # deadline/pos None
+    NavRequest(session=1, seq=2, round=3, n_tokens=4, deadline=12.5, pos=640),
+    TreeNavRequest(session=1, seq=2, round=3, n_tokens=5, deadline=0.0, pos=0),
+    NavResult(session=1, seq=2, n_accepted=3, correction=4, n_drafted=5),
+    NavResult(session=1, seq=2, n_accepted=0, correction=4, n_drafted=5, path=()),
+    NavResult(session=1, seq=2, n_accepted=2, correction=4, n_drafted=5, path=(0, 3)),
+    Reset(session=1, seq=2, round=3, position=0),
+    Detach(session=8),
+    Heartbeat(session=2, seq=9, t_send=123.456),
+]
+
+
+@pytest.mark.parametrize("msg", EXAMPLES, ids=lambda m: type(m).__name__)
+def test_roundtrip_examples(msg):
+    """decode(encode(m)) == m, type included, for curated edge cases."""
+    out = decode(encode(msg))
+    assert out == msg
+    assert type(out) is type(msg)  # TreeNavRequest must not collapse to NavRequest
+
+
+def test_every_message_type_has_an_example():
+    assert {type(m) for m in EXAMPLES} == set(MESSAGE_TYPES)
+
+
+def test_encoding_is_deterministic():
+    """Equal messages produce identical bytes (no timestamps, no interning)."""
+    for msg in EXAMPLES:
+        assert encode(msg) == encode(msg)
+
+
+def test_wire_tokens_matches_link_cost_contract():
+    """Hockney cost tokens: drafts pay per token, results per accepted (>=1)."""
+    assert wire_tokens(DraftFragment(0, 1, 0, (1, 2, 3), (0.5, 0.5, 0.5))) == 3
+    assert wire_tokens(DraftFragment(0, 1, 0, (), ())) == 0
+    assert wire_tokens(NavResult(0, 1, n_accepted=5, correction=0, n_drafted=6)) == 5
+    assert wire_tokens(NavResult(0, 1, n_accepted=0, correction=0, n_drafted=6)) == 1
+    for msg in (Hello(0), Attach(0), NavRequest(0, 1, 2, 3), Reset(0, 1, 2, 3),
+                Detach(0), Heartbeat(0)):
+        assert wire_tokens(msg) == 1
+
+
+# --------------------------------------------------------------------------- #
+# Hypothesis: round-trip exactness over the full field domains
+# --------------------------------------------------------------------------- #
+
+_i64 = st.integers(min_value=I64_MIN, max_value=I64_MAX)
+_f64 = st.floats(allow_nan=False)  # NaN breaks ==; every other float is exact
+_toks = st.lists(_i64, max_size=12).map(tuple)
+_confs = st.lists(_f64, max_size=12).map(tuple)
+_opt_f = st.one_of(st.none(), _f64)
+_opt_i = st.one_of(st.none(), _i64)
+_opt_toks = st.one_of(st.none(), _toks)
+
+_STRATEGIES = {
+    Hello: st.builds(Hello, session=_i64, seq=_i64, version=_i64),
+    Attach: st.builds(
+        Attach, session=_i64, seq=_i64, version=_i64,
+        accepted=st.booleans(), reason=st.text(max_size=40),
+    ),
+    DraftFragment: st.builds(
+        DraftFragment, session=_i64, seq=_i64, round=_i64,
+        tokens=_toks, confs=_confs, parents=_toks,
+    ),
+    NavRequest: st.builds(
+        NavRequest, session=_i64, seq=_i64, round=_i64,
+        n_tokens=_i64, deadline=_opt_f, pos=_opt_i,
+    ),
+    TreeNavRequest: st.builds(
+        TreeNavRequest, session=_i64, seq=_i64, round=_i64,
+        n_tokens=_i64, deadline=_opt_f, pos=_opt_i,
+    ),
+    NavResult: st.builds(
+        NavResult, session=_i64, seq=_i64, n_accepted=_i64,
+        correction=_i64, n_drafted=_i64, path=_opt_toks,
+    ),
+    Reset: st.builds(Reset, session=_i64, seq=_i64, round=_i64, position=_i64),
+    Detach: st.builds(Detach, session=_i64, seq=_i64),
+    Heartbeat: st.builds(Heartbeat, session=_i64, seq=_i64, t_send=_f64),
+}
+
+
+def test_strategy_table_covers_every_type():
+    assert set(_STRATEGIES) == set(MESSAGE_TYPES)
+
+
+@settings(deadline=None, max_examples=60)
+@given(data=st.data())
+def test_roundtrip_property_every_type(data):
+    """decode(encode(m)) == m for arbitrary field values of every type."""
+    for cls in MESSAGE_TYPES:
+        msg = data.draw(_STRATEGIES[cls], label=cls.__name__)
+        frame = encode(msg)
+        out = decode(frame)
+        assert out == msg and type(out) is cls
+        # Frames are internally sized: the length prefix covers the body.
+        assert len(frame) == 4 + int.from_bytes(frame[:4], "little")
+
+
+# --------------------------------------------------------------------------- #
+# Malformed frames
+# --------------------------------------------------------------------------- #
+
+
+def test_decode_rejects_malformed_frames():
+    frame = encode(Hello(session=1))
+    with pytest.raises(ProtocolError):
+        decode(frame[:-1])  # truncated
+    with pytest.raises(ProtocolError):
+        decode(frame + b"\x00")  # length mismatch
+    bad_type = frame[:4] + b"\xff" + frame[5:]
+    with pytest.raises(ProtocolError):
+        decode(bad_type)  # unknown type id
+    with pytest.raises(ProtocolError):
+        decode(b"\x01")  # shorter than any header
+    with pytest.raises(ProtocolError):
+        encode(object())  # not a protocol message
+
+
+def test_decode_rejects_trailing_bytes_inside_frame():
+    frame = bytearray(encode(Detach(session=1)))
+    # Grow the declared size and pad: decode must flag the trailing bytes.
+    frame[0:4] = (int.from_bytes(frame[0:4], "little") + 2).to_bytes(4, "little")
+    frame += b"\x00\x00"
+    with pytest.raises(ProtocolError):
+        decode(bytes(frame))
+
+
+# --------------------------------------------------------------------------- #
+# Version negotiation at attach
+# --------------------------------------------------------------------------- #
+
+
+def test_handshake_accepts_matching_version():
+    reply = handshake_reply(Hello(session=4, seq=2))
+    assert reply == Attach(session=4, seq=2, version=PROTOCOL_VERSION, accepted=True)
+
+
+def test_handshake_rejects_version_mismatch():
+    reply = handshake_reply(Hello(session=4, version=PROTOCOL_VERSION + 1))
+    assert not reply.accepted
+    assert reply.version == PROTOCOL_VERSION
+    assert f"v{PROTOCOL_VERSION + 1}" in reply.reason and f"v{PROTOCOL_VERSION}" in reply.reason
+
+
+def test_handshake_can_remap_session_id():
+    reply = handshake_reply(Hello(session=0), session=17)
+    assert reply.accepted and reply.session == 17
+
+
+# --------------------------------------------------------------------------- #
+# Grep guard: the typed protocol is the ONLY message surface
+# --------------------------------------------------------------------------- #
+
+
+def test_no_raw_message_construction_outside_protocol():
+    """No module may construct stringly-typed ``Message(kind, ...)`` blobs or
+    poke positional/dict payloads — the typed protocol replaced them."""
+    root = Path(__file__).parent.parent
+    banned = re.compile(
+        r"""\bMessage\(\s*["']"""  # raw Message(kind="...") construction
+        r"""|\.payload\["""  # positional/dict payload indexing
+        r"""|\.payload\.get\(""",  # dict payload probing
+    )
+    offenders = {}
+    for sub in ("src", "tests", "benchmarks", "examples", "launch"):
+        for path in sorted((root / sub).rglob("*.py")):
+            if path.name == "protocol.py":
+                continue
+            hits = banned.findall(path.read_text())
+            if hits:
+                offenders[str(path.relative_to(root))] = hits
+    assert not offenders, f"raw message payloads outside protocol.py: {offenders}"

@@ -19,7 +19,7 @@ from repro.runtime import (
     VerifyBackend,
     VirtualClock,
 )
-from repro.runtime.transport import Message
+from repro.runtime.protocol import DraftFragment, NavRequest, NavResult
 
 
 class EchoBackend(VerifyBackend):
@@ -144,8 +144,8 @@ def test_batched_nav_coalesces_and_isolates_sessions(clock):
     def body():
         for sid, (up, dn) in links.items():
             toks = [100 * sid + j for j in range(sid + 2)]  # ragged lengths 2,3,4
-            up.send(Message("draft_batch", sid, 1, len(toks), (toks, [0.9] * len(toks))))
-            up.send(Message("nav_request", sid, 2, 1, {"n_tokens": len(toks)}))
+            up.send(DraftFragment(sid, 1, 0, tuple(toks), (0.9,) * len(toks)))
+            up.send(NavRequest(sid, 2, 0, n_tokens=len(toks)))
             sent[sid] = toks
         server.start()
         results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
@@ -154,11 +154,11 @@ def test_batched_nav_coalesces_and_isolates_sessions(clock):
 
     results = clock.run(body)
     for sid, msg in results.items():
-        assert msg is not None and msg.kind == "nav_result"
-        assert msg.payload["n_drafted"] == len(sent[sid])
-        assert msg.payload["n_accepted"] == len(sent[sid])
+        assert isinstance(msg, NavResult)
+        assert msg.n_drafted == len(sent[sid])
+        assert msg.n_accepted == len(sent[sid])
         # No cross-session token leakage: correction is this session's hash.
-        assert msg.payload["correction"] == EchoBackend.fingerprint(sid, sent[sid])
+        assert msg.correction == EchoBackend.fingerprint(sid, sent[sid])
     assert server.stats["nav_calls"] == 3
     assert server.stats["batched_calls"] < 3  # coalesced
     assert server.monitor.verifier_occupancy() > 1.0
@@ -172,18 +172,18 @@ def test_pending_nav_waits_for_proactive_drafts(clock):
 
     def body():
         server.start()
-        up.send(Message("draft_batch", 7, 1, 2, ([1, 2], [0.9, 0.9])))
-        up.send(Message("nav_request", 7, 2, 1, {"n_tokens": 4}))
+        up.send(DraftFragment(7, 1, 0, (1, 2), (0.9, 0.9)))
+        up.send(NavRequest(7, 2, 0, n_tokens=4))
         assert dn.recv(timeout=0.3) is None  # only 2 of 4 tokens buffered
-        up.send(Message("draft_batch", 7, 3, 2, ([3, 4], [0.9, 0.9])))
+        up.send(DraftFragment(7, 3, 0, (3, 4), (0.9, 0.9)))
         msg = dn.recv(timeout=5.0)
         server.stop()
         return msg
 
     msg = clock.run(body)
     assert msg is not None
-    assert msg.payload["n_drafted"] == 4
-    assert msg.payload["correction"] == EchoBackend.fingerprint(7, [1, 2, 3, 4])
+    assert msg.n_drafted == 4
+    assert msg.correction == EchoBackend.fingerprint(7, [1, 2, 3, 4])
 
 
 def test_lost_draft_batch_does_not_desync_next_round(clock):
@@ -196,21 +196,21 @@ def test_lost_draft_batch_does_not_desync_next_round(clock):
         server.start()
         # Round 1: client drafted 4 tokens but one draft_batch (2 of them) was
         # lost in transit — only [1, 2] arrive, so nav round 1 parks.
-        up.send(Message("draft_batch", 3, 1, 2, ([1, 2], [0.9, 0.9], 1)))
-        up.send(Message("nav_request", 3, 2, 1, {"n_tokens": 4, "round": 1}))
+        up.send(DraftFragment(3, 1, 1, (1, 2), (0.9, 0.9)))
+        up.send(NavRequest(3, 2, 1, n_tokens=4))
         assert dn.recv(timeout=0.3) is None
         # Client failed over; its reset was ALSO lost. Round 2 proceeds anyway.
-        up.send(Message("draft_batch", 3, 3, 3, ([7, 8, 9], [0.9] * 3, 2)))
-        up.send(Message("nav_request", 3, 4, 1, {"n_tokens": 3, "round": 2}))
+        up.send(DraftFragment(3, 3, 2, (7, 8, 9), (0.9,) * 3))
+        up.send(NavRequest(3, 4, 2, n_tokens=3))
         msg = dn.recv(timeout=5.0)
         server.stop()
         return msg
 
     msg = clock.run(body)
     assert msg is not None and msg.seq == 4
-    assert msg.payload["n_drafted"] == 3
+    assert msg.n_drafted == 3
     # Round 2 verified exactly its own tokens — round 1's leftovers untouched.
-    assert msg.payload["correction"] == EchoBackend.fingerprint(3, [7, 8, 9])
+    assert msg.correction == EchoBackend.fingerprint(3, [7, 8, 9])
 
 
 def test_duplicate_nav_request_dispatches_once(clock):
@@ -220,17 +220,17 @@ def test_duplicate_nav_request_dispatches_once(clock):
 
     def body():
         server.start()
-        up.send(Message("draft_batch", 5, 1, 2, ([4, 5], [0.9, 0.9], 1)))
-        up.send(Message("nav_request", 5, 2, 1, {"n_tokens": 2, "round": 1}))
+        up.send(DraftFragment(5, 1, 1, (4, 5), (0.9, 0.9)))
+        up.send(NavRequest(5, 2, 1, n_tokens=2))
         first = dn.recv(timeout=5.0)
         # The duplicate arrives after the round was already verified.
-        up.send(Message("nav_request", 5, 2, 1, {"n_tokens": 2, "round": 1}))
+        up.send(NavRequest(5, 2, 1, n_tokens=2))
         second = dn.recv(timeout=0.5)
         server.stop()
         return first, second
 
     first, second = clock.run(body)
-    assert first is not None and first.payload["n_drafted"] == 2
+    assert first is not None and first.n_drafted == 2
     assert second is None  # no double verify
     assert server.stats["nav_calls"] == 1
 
@@ -243,12 +243,9 @@ def test_straggler_requests_are_dropped(clock):
     def body():
         server.start()
         clock.sleep(2.0)  # let virtual time pass so the deadline is in the past
-        up.send(Message("draft_batch", 0, 1, 2, ([5, 6], [0.9, 0.9])))
+        up.send(DraftFragment(0, 1, 0, (5, 6), (0.9, 0.9)))
         up.send(
-            Message(
-                "nav_request", 0, 2, 1,
-                {"n_tokens": 2, "deadline": clock.monotonic() - 1.0},  # expired
-            )
+            NavRequest(0, 2, 0, n_tokens=2, deadline=clock.monotonic() - 1.0)  # expired
         )
         got = dn.recv(timeout=0.5)
         server.stop()
@@ -266,8 +263,8 @@ def test_admission_cap_with_fair_reinsertion(clock):
 
     def body():
         for sid, (up, dn) in links.items():
-            up.send(Message("draft_batch", sid, 1, 1, ([sid], [0.9])))
-            up.send(Message("nav_request", sid, 2, 1, {"n_tokens": 1}))
+            up.send(DraftFragment(sid, 1, 0, (sid,), (0.9,)))
+            up.send(NavRequest(sid, 2, 0, n_tokens=1))
         clock.sleep(0.3)  # let all four requests queue before dispatch starts
         server.start()
         results = {sid: dn.recv(timeout=5.0) for sid, (up, dn) in links.items()}
@@ -277,7 +274,7 @@ def test_admission_cap_with_fair_reinsertion(clock):
     results = clock.run(body)
     assert all(m is not None for m in results.values())  # nothing lost
     assert all(
-        m.payload["correction"] == EchoBackend.fingerprint(sid, [sid])
+        m.correction == EchoBackend.fingerprint(sid, [sid])
         for sid, m in results.items()
     )
     assert max(server.monitor.verifier_batches()) <= 2  # cap respected
@@ -315,10 +312,11 @@ def test_channel_serializes_batches(clock):
     """Two back-to-back sends: second delivery waits for the first (Hockney),
     with EXACT virtual timings."""
     ch = Channel(ChannelConfig(alpha=0.05, beta=0.01), clock=clock)
+    ten = DraftFragment(0, 1, 0, tuple(range(10)), (0.9,) * 10)  # wire cost: 10 tokens
 
     def body():
-        ch.send(Message("a", 0, 1, 10, None))  # 0.05 + 0.1 = 0.15s
-        ch.send(Message("b", 0, 2, 10, None))  # completes at 0.30s
+        ch.send(ten)  # 0.05 + 0.1 = 0.15s
+        ch.send(DraftFragment(0, 2, 0, ten.tokens, ten.confs))  # completes at 0.30s
         m1 = ch.recv(timeout=2.0)
         t1 = clock.monotonic()
         m2 = ch.recv(timeout=2.0)
@@ -327,6 +325,6 @@ def test_channel_serializes_batches(clock):
         return m1, t1, m2, t2
 
     m1, t1, m2, t2 = clock.run(body)
-    assert m1.kind == "a" and m2.kind == "b"
+    assert m1.seq == 1 and m2.seq == 2
     assert t1 == pytest.approx(0.15)  # exact, not >= with slack
     assert t2 == pytest.approx(0.30)  # serialized, not parallel

@@ -1,0 +1,194 @@
+"""Socket transport: loopback serving, version rejection, process separation.
+
+These tests run the SAME ``CloudVerifier``/``EdgeClient`` code the simulated
+runtime uses, but over real localhost TCP sockets carrying encoded protocol
+frames — and, for the smoke test, as two genuinely separate OS processes via
+``launch/serve.py`` (the paper's client/server testbed shape).
+"""
+
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.runtime import (
+    PROTOCOL_VERSION,
+    CloudVerifier,
+    Detach,
+    EdgeClient,
+    EdgeConfig,
+    NavRequest,
+    OracleBackend,
+    OracleDraft,
+    OracleStream,
+    ProtocolError,
+    SocketListener,
+    VirtualClock,
+    connect_transport,
+)
+
+ROOT = Path(__file__).parent.parent
+
+
+@pytest.fixture()
+def server():
+    """A live verifier behind an ephemeral-port listener; closed on teardown."""
+    backend = OracleBackend(seed=3, verify_time=0.001, verify_time_per_token=0.0)
+    verifier = CloudVerifier(backend, batch_window=0.001)
+    listener = SocketListener(
+        lambda sid, t: verifier.attach(sid, t, t), host="127.0.0.1", port=0
+    )
+    verifier.start()
+    yield verifier, listener
+    listener.close()
+    verifier.stop()
+
+
+def test_loopback_socket_serving_matches_oracle(server):
+    """EdgeClient over a real TCP loopback commits the oracle stream."""
+    verifier, listener = server
+    transport = connect_transport(listener.host, listener.port, session=0)
+    client = EdgeClient(
+        transport.session, transport, transport,
+        EdgeConfig(gamma=0.002, window=8, nav_timeout=5.0),
+        draft=OracleDraft(seed=3),
+    )
+    stats = client.run(32)
+    client.seq += 1
+    transport.send(Detach(session=transport.session, seq=client.seq))
+    transport.close()
+    assert stats["failovers"] == 0
+    assert client.tokens == OracleStream(3).prefix(len(client.tokens))
+    assert verifier.stats["nav_calls"] == stats["rounds"]
+
+
+def test_attach_rejects_version_mismatch(server):
+    """A client speaking the wrong protocol version is refused at attach."""
+    _, listener = server
+    with pytest.raises(ProtocolError, match="version mismatch"):
+        connect_transport(
+            listener.host, listener.port, session=0, version=PROTOCOL_VERSION + 1
+        )
+    assert listener.stats["rejected"] == 1
+
+
+def test_attach_remaps_colliding_session_ids(server):
+    """Two clients proposing the same id get distinct server-side sessions."""
+    _, listener = server
+    a = connect_transport(listener.host, listener.port, session=5)
+    b = connect_transport(listener.host, listener.port, session=5)
+    try:
+        assert a.session == 5
+        assert b.session == 6  # remapped to the next free id
+    finally:
+        a.close()
+        b.close()
+
+
+def test_deadline_rebases_across_the_socket_boundary():
+    """NavRequest deadlines arrive as absolute times on the RECEIVER's clock.
+
+    The wire carries a relative budget; whatever clock-origin skew exists
+    between peers, the reconstructed deadline lands ~budget seconds into
+    the receiver's future.
+    """
+    accepted = {}
+    listener = SocketListener(lambda sid, t: accepted.update({sid: t}), port=0)
+    transport = connect_transport(listener.host, listener.port, session=9)
+    try:
+        for _ in range(100):  # the accept loop registers asynchronously
+            if 9 in accepted:
+                break
+            time.sleep(0.02)
+        srv_side = accepted[9]
+        budget = 3.0
+        t_send = transport.clock.monotonic()
+        transport.send(
+            NavRequest(session=9, seq=1, round=1, n_tokens=1, deadline=t_send + budget)
+        )
+        msg = srv_side.recv(timeout=5.0)
+        assert isinstance(msg, NavRequest)
+        remaining = msg.deadline - srv_side.clock.monotonic()
+        assert 0.0 < remaining <= budget + 0.01
+        assert remaining > budget - 1.0  # lost at most the transit latency
+    finally:
+        transport.close()
+        listener.close()
+
+
+def test_corrupt_frame_closes_the_transport():
+    """A post-handshake frame that fails decode() must tear the link down
+    (closed=True) instead of silently killing the rx pump and wedging."""
+    import socket as socklib
+
+    from repro.runtime import Hello, encode
+
+    accepted = {}
+    listener = SocketListener(lambda sid, t: accepted.update({sid: t}), port=0)
+    raw = socklib.create_connection((listener.host, listener.port))
+    try:
+        raw.sendall(encode(Hello(session=1)))
+        header = raw.recv(4)  # the Attach reply (length prefix + body)
+        raw.recv(int.from_bytes(header, "little"))
+        # A well-framed body with an unknown type id: decode() raises.
+        raw.sendall((1).to_bytes(4, "little") + b"\xff")
+        for _ in range(200):
+            if accepted.get(1) is not None and accepted[1].closed:
+                break
+            time.sleep(0.02)
+        assert accepted[1].closed
+        assert accepted[1].recv(timeout=0.1) is None  # reads see the dead link
+    finally:
+        raw.close()
+        listener.close()
+
+
+def test_rx_loop_exits_when_socket_peer_disconnects(server):
+    """A disconnected session's receive loop must END (no hot-polling a
+    closed transport until shutdown)."""
+    verifier, listener = server
+    transport = connect_transport(listener.host, listener.port, session=2)
+    transport.close()
+    rx = next(t for t in verifier._threads if t.name == f"rx-{transport.session}")
+    rx.join(timeout=5.0)
+    assert not rx.is_alive()
+
+
+def test_socket_transport_refuses_virtual_clock():
+    """Real sockets cannot block on virtual time — constructor must reject."""
+    with pytest.raises(ValueError, match="VirtualClock"):
+        SocketListener(lambda s, t: None, port=0, clock=VirtualClock())
+
+
+def test_two_process_socket_serving_matches_oracle():
+    """launch/serve.py as two OS processes: the streamed tokens == oracle.
+
+    This is the acceptance shape of the socket backend — server and client
+    share nothing but the TCP connection and the seed.
+    """
+    serve = ROOT / "launch" / "serve.py"
+    srv = subprocess.Popen(
+        [sys.executable, str(serve), "--listen", "127.0.0.1:0", "--sessions", "1",
+         "--seed", "11"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+    )
+    try:
+        # The server announces its ephemeral port on the first line.
+        line = srv.stdout.readline()
+        assert line.startswith("LISTENING "), line
+        port = int(line.strip().rsplit(":", 1)[1])
+        out = subprocess.run(
+            [sys.executable, str(serve), "--connect", f"127.0.0.1:{port}",
+             "--tokens", "48", "--seed", "11", "--check-oracle"],
+            capture_output=True, text=True, timeout=60,
+        )
+        assert out.returncode == 0, out.stderr
+        stream = [int(x) for x in out.stdout.split()]
+        assert stream == OracleStream(11).prefix(48)
+        assert srv.wait(timeout=30) == 0
+    finally:
+        if srv.poll() is None:
+            srv.kill()
+            srv.wait()

@@ -16,7 +16,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.runtime import Channel, ChannelConfig, VirtualClock
-from repro.runtime.transport import Message
+from repro.runtime.protocol import DraftFragment
 
 MSGS = st.lists(
     st.tuples(
@@ -49,7 +49,7 @@ def test_fifo_serialization_and_hockney_exactness(msgs, alpha, beta):
         sends = []  # (seq, send time, n_tokens)
         for seq, (n, gap) in enumerate(msgs):
             clock.sleep(gap)
-            ch.send(Message("m", 0, seq, n, None))
+            ch.send(DraftFragment(0, seq, 0, (0,) * n, (0.5,) * n))
             sends.append((seq, clock.monotonic(), n))
         rx.join()
         return sends, rx.result()
@@ -81,7 +81,7 @@ def test_time_scale_scales_every_delay(msgs, scale):
 
         def body():
             for seq, (n, _) in enumerate(msgs):
-                ch.send(Message("m", 0, seq, n, None))
+                ch.send(DraftFragment(0, seq, 0, (0,) * n, (0.5,) * n))
             out = []
             for _ in msgs:
                 ch.recv(timeout=1e6)
@@ -112,7 +112,7 @@ def test_lossy_channel_preserves_order_of_survivors(msgs, drop_seed, drop_prob):
 
     def body():
         for seq, (n, _) in enumerate(msgs):
-            ch.send(Message("m", 0, seq, n, None))
+            ch.send(DraftFragment(0, seq, 0, (0,) * n, (0.5,) * n))
         got = []
         while (m := ch.recv(timeout=10.0)) is not None:
             got.append(m.seq)

@@ -389,8 +389,10 @@ def test_cloud_verifier_dispatches_mixed_chain_and_tree():
         Channel,
         ChannelConfig,
         CloudVerifier,
-        Message,
+        DraftFragment,
+        NavRequest,
         SyntheticBackend,
+        TreeNavRequest,
     )
 
     ts = 0.01
@@ -406,21 +408,21 @@ def test_cloud_verifier_dispatches_mixed_chain_and_tree():
     try:
         # Session 0: chain round. Session 1: tree round with packed parents.
         up0, dn0 = links[0]
-        up0.send(Message("draft_batch", 0, 1, 3, ([5, 6, 7], [0.99, 0.99, 0.99], 1)))
-        up0.send(Message("nav_request", 0, 2, 1, {"n_tokens": 3, "round": 1}))
+        up0.send(DraftFragment(0, 1, 1, (5, 6, 7), (0.99, 0.99, 0.99)))
+        up0.send(NavRequest(0, 2, 1, n_tokens=3))
         up1, dn1 = links[1]
         parents = [-1, -1, 0, 1, 2]
-        up1.send(Message("draft_batch", 1, 1, 5, ([1, 2, 3, 4, 5], [0.99] * 5, 1, parents)))
-        up1.send(Message("nav_request", 1, 2, 1, {"n_tokens": 5, "round": 1, "tree": True}))
+        up1.send(DraftFragment(1, 1, 1, (1, 2, 3, 4, 5), (0.99,) * 5, tuple(parents)))
+        up1.send(TreeNavRequest(1, 2, 1, n_tokens=5))
         r0 = dn0.recv(timeout=5.0)
         r1 = dn1.recv(timeout=5.0)
     finally:
         server.stop()
-    assert r0 is not None and "path" not in r0.payload
-    assert 0 <= r0.payload["n_accepted"] <= 3
-    assert r1 is not None and "path" in r1.payload
-    path = r1.payload["path"]
-    assert len(path) == r1.payload["n_accepted"]
+    assert r0 is not None and r0.path is None
+    assert 0 <= r0.n_accepted <= 3
+    assert r1 is not None and r1.path is not None
+    path = r1.path
+    assert len(path) == r1.n_accepted
     # The path must be a root→leaf chain under the sent parents.
     for a, b in zip(path, path[1:]):
         assert parents[b] == a

@@ -8,7 +8,9 @@ HumanEval-like (code — high confidence) and GSM8K-like (math — harder).
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Dict, Optional
 
 from repro.core.pipeline import (
@@ -89,3 +91,16 @@ def run_method(
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.3f},{derived}"
+
+
+def write_bench_json(area: str, rows: list, root: Optional[Path] = None) -> Path:
+    """Commit a benchmark's rows as ``BENCH_<area>.json`` at the repo root.
+
+    The file is the stable, diffable record of a deterministic benchmark
+    (virtual clock + seeded everything): re-running the bench on any host
+    must reproduce it byte-for-byte, which is what makes it safe to commit.
+    """
+    out = (root or Path(__file__).resolve().parent.parent) / f"BENCH_{area}.json"
+    payload = {"version": 1, "area": area, "rows": rows}
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return out

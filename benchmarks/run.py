@@ -14,11 +14,15 @@ import time
 
 
 def main() -> None:
-    from .fleet_bench import chaos, fleet
+    from .common import write_bench_json
+    from .fleet_bench import chaos, fleet, router
     from .roofline_bench import roofline
     from .tables import ALL_TABLES
 
-    extras = {"roofline": roofline, "fleet": fleet, "chaos": chaos}
+    extras = {"roofline": roofline, "fleet": fleet, "chaos": chaos, "router": router}
+    # Deterministic benches whose rows are committed as BENCH_<area>.json
+    # (the router sweep runs on a virtual clock: same rows on every host).
+    committed = {"router": "fleet"}
     wanted = sys.argv[1:] or list(ALL_TABLES) + list(extras)
     print("name,us_per_call,derived")
     t_start = time.time()
@@ -35,6 +39,9 @@ def main() -> None:
             continue
         for line in lines:
             print(line, flush=True)
+        if name in committed:
+            path = write_bench_json(committed[name], rows)
+            print(f"# {name}: wrote {path.name}", file=sys.stderr)
         print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s", file=sys.stderr)
     print(f"# total {time.time()-t_start:.1f}s", file=sys.stderr)
 

@@ -21,6 +21,23 @@ with::
 (``--check-oracle`` makes the client do that diff itself and exit
 non-zero on any mismatch.)  ``--demo`` runs both roles over a loopback
 socket in one process.
+
+``--router`` runs the multi-verifier control plane in front of a fleet:
+clients dial the router exactly as they would a lone verifier; sessions
+are placed least-loaded and can live-migrate between fleet members
+mid-stream.  The fleet is either in-process (``--verifiers N``) or
+remote verifier processes (repeatable ``--verifier HOST:PORT``)::
+
+    PYTHONPATH=src python launch/serve.py --listen 127.0.0.1:7431 --sessions 0
+    PYTHONPATH=src python launch/serve.py --listen 127.0.0.1:7432 --sessions 0
+    PYTHONPATH=src python launch/serve.py --router 127.0.0.1:7421 \\
+        --verifier 127.0.0.1:7431 --verifier 127.0.0.1:7432 --migrate-every 0.3
+    PYTHONPATH=src python launch/serve.py --connect 127.0.0.1:7421 \\
+        --tokens 64 --check-oracle
+
+``--migrate-every S`` forces a round-robin migration sweep every S
+seconds — the committed stream must stay oracle-exact through every
+hand-off (this is the CI router-smoke job).
 """
 
 from __future__ import annotations
@@ -39,9 +56,12 @@ from repro.runtime import (  # noqa: E402 (path bootstrap above)
     Detach,
     EdgeClient,
     EdgeConfig,
+    LocalVerifier,
     OracleBackend,
     OracleDraft,
     OracleStream,
+    RemoteVerifier,
+    Router,
     SocketListener,
     SyntheticBackend,
     SyntheticDraft,
@@ -59,13 +79,7 @@ def _host_port(spec: str) -> Tuple[str, int]:
 def run_server(args) -> int:
     """Cloud role: listen, attach socket sessions, serve until they finish."""
     host, port = args.listen
-    if args.backend == "oracle":
-        backend = OracleBackend(
-            seed=args.seed, verify_time=args.verify_time, verify_time_per_token=0.0
-        )
-    else:
-        backend = SyntheticBackend(seed=args.seed, verify_time=args.verify_time)
-    verifier = CloudVerifier(backend, batch_window=args.batch_window)
+    verifier = CloudVerifier(_make_backend(args), batch_window=args.batch_window)
     listener = SocketListener(
         lambda sid, transport: verifier.attach(sid, transport, transport),
         host=host,
@@ -89,6 +103,62 @@ def run_server(args) -> int:
     print(
         f"SERVED sessions={listener.stats['accepted']} nav_calls={s['nav_calls']}"
         f" tokens_verified={s['tokens_verified']} batched_calls={s['batched_calls']}",
+        flush=True,
+    )
+    return 0
+
+
+def _make_backend(args):
+    if args.backend == "oracle":
+        return OracleBackend(
+            seed=args.seed, verify_time=args.verify_time, verify_time_per_token=0.0
+        )
+    return SyntheticBackend(seed=args.seed, verify_time=args.verify_time)
+
+
+def run_router(args) -> int:
+    """Control-plane role: route socket clients across a verifier fleet."""
+    host, port = args.router
+    fleet = []
+    for vhost, vport in args.verifier or ():
+        fleet.append(
+            RemoteVerifier(
+                len(fleet), vhost, vport, cfg=ChannelConfig(alpha=0.001, beta=0.0001)
+            )
+        )
+    for _ in range(args.verifiers):
+        v = CloudVerifier(_make_backend(args), batch_window=args.batch_window)
+        v.start()
+        fleet.append(LocalVerifier(len(fleet), v))
+    if not fleet:
+        print("--router needs --verifier HOST:PORT and/or --verifiers N", file=sys.stderr)
+        return 2
+    router = Router(fleet, rebalance_interval=args.migrate_every)
+    # FleetFullError propagates into the listener, which hangs up on the
+    # refused client; everyone already placed keeps streaming.
+    listener = SocketListener(
+        lambda sid, t: router.attach(sid, t, t), host=host, port=port
+    )
+    router.start()
+    print(f"LISTENING {listener.host}:{listener.port}", flush=True)
+    try:
+        while True:
+            SYSTEM_CLOCK.sleep(0.1)
+            done = sum(1 for rs in list(router.sessions.values()) if rs.done)
+            if args.sessions and done >= args.sessions:
+                break
+    except KeyboardInterrupt:
+        pass
+    finally:
+        listener.close()
+        router.stop()
+        for vc in fleet:
+            vc.stop()
+    s = router.stats
+    print(
+        f"ROUTED sessions={s['sessions_placed']} migrations={s['migrations']}"
+        f" failover_migrations={s['failover_migrations']} drains={s['drains']}"
+        f" crashes={s['verifier_crashes']} refusals={s['admission_refusals']}",
         flush=True,
     )
     return 0
@@ -151,6 +221,7 @@ def main(argv=None) -> int:
     role = p.add_mutually_exclusive_group(required=True)
     role.add_argument("--listen", type=_host_port, metavar="HOST:PORT", help="run the cloud verifier")
     role.add_argument("--connect", type=_host_port, metavar="HOST:PORT", help="run the edge client")
+    role.add_argument("--router", type=_host_port, metavar="HOST:PORT", help="run the fleet router")
     role.add_argument("--demo", action="store_true", help="loopback demo: both roles, one process")
     role.add_argument(
         "--print-oracle", type=int, metavar="N", help="print the first N oracle tokens and exit"
@@ -165,6 +236,18 @@ def main(argv=None) -> int:
         "--check-oracle", action="store_true",
         help="client: verify the committed stream equals the oracle stream (exit 1 on mismatch)",
     )
+    p.add_argument(
+        "--verifier", type=_host_port, action="append", metavar="HOST:PORT",
+        help="router: add a remote fleet member (repeatable)",
+    )
+    p.add_argument(
+        "--verifiers", type=int, default=0,
+        help="router: number of in-process fleet members to spawn",
+    )
+    p.add_argument(
+        "--migrate-every", type=float, default=None, metavar="S",
+        help="router: force a round-robin migration sweep every S seconds",
+    )
     p.add_argument("--gamma", type=float, default=0.005, help="edge per-token draft time [s]")
     p.add_argument("--nav-timeout", type=float, default=5.0, help="edge NAV timeout before failover [s]")
     p.add_argument("--batch-window", type=float, default=0.002, help="server NAV coalescing window [s]")
@@ -178,6 +261,8 @@ def main(argv=None) -> int:
         return run_demo(args)
     if args.listen:
         return run_server(args)
+    if args.router:
+        return run_router(args)
     return run_client(args)
 
 

@@ -33,14 +33,22 @@ optional and default to the stateless legacy behaviour.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.monitor import EnvironmentMonitor
 from repro.core.scheduler import CommParams, batch_sizes, dp_schedule
 from repro.core.trigger import make_trigger
-from .protocol import DraftFragment, NavRequest, NavResult, Reset, TreeNavRequest
+from .protocol import (
+    DraftFragment,
+    Migrate,
+    NavRequest,
+    NavResult,
+    Reset,
+    Route,
+    TreeNavRequest,
+)
 from .simclock import SYSTEM_CLOCK
 from .transport import Transport
 
@@ -94,11 +102,16 @@ class EdgeClient:
         cfg: EdgeConfig,
         draft=None,
         clock=None,
+        reconnect: Optional[Callable[[], Any]] = None,
     ):
         self.session = session
         self.up = uplink
         self.dn = downlink
         self.cfg = cfg
+        # Optional re-dial hook: called when the links are permanently closed
+        # (router/verifier gone) before a cloud re-probe.  Returns a duplex
+        # transport or an (uplink, downlink) pair to a live control plane.
+        self.reconnect = reconnect
         self.clock = clock or getattr(uplink, "clock", None) or SYSTEM_CLOCK
         self.draft = draft or SyntheticDraft(seed=session)
         self.trigger = make_trigger("dual", r1=cfg.r1, r2=cfg.r2, window=cfg.window)
@@ -126,6 +139,11 @@ class EdgeClient:
             "recovery_times": [],
             "recovery_latencies": [],
             "lost_draft_tokens": 0,
+            # Control-plane observability (multi-verifier router): how often
+            # this session was (re)placed or live-migrated, and re-dials.
+            "routes_seen": 0,
+            "migrations_seen": 0,
+            "reattaches": 0,
         }
 
     # ------------------------------------------------------------- drafting --
@@ -264,7 +282,16 @@ class EdgeClient:
                     self._commit([self._local_decode_one()])
                     self.stats["fallback_tokens"] += 1
                 # Re-probe the cloud, announcing our committed position so the
-                # verifier reconciles its KV fork (re-attach).
+                # verifier reconciles its KV fork (re-attach).  A permanently
+                # closed link first re-dials through the reconnect hook — the
+                # re-attach-to-new-verifier path when a router/verifier died.
+                if self.reconnect is not None and (
+                    getattr(self.up, "closed", False)
+                    or getattr(self.dn, "closed", False)
+                ):
+                    link = self.reconnect()
+                    self.up, self.dn = link if isinstance(link, tuple) else (link, link)
+                    self.stats["reattaches"] += 1
                 self.seq += 1
                 self.up.send(
                     Reset(
@@ -308,7 +335,12 @@ class EdgeClient:
                 not isinstance(result, NavResult) or result.seq != self.seq
             ):
                 # Stale reply from a round we already failed over (or a
-                # non-result control message) — discard.
+                # non-result control message) — discard.  Router placement /
+                # migration announcements are counted on the way through.
+                if isinstance(result, Route):
+                    self.stats["routes_seen"] += 1
+                elif isinstance(result, Migrate):
+                    self.stats["migrations_seen"] += 1
                 rem = t_req + timeout - self.clock.monotonic()
                 result = self.dn.recv(timeout=rem) if rem > 0 else None
             if result is None or not isinstance(result, NavResult):

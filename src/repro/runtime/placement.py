@@ -1,0 +1,98 @@
+"""Session -> verifier placement policy for the multi-verifier control plane.
+
+The router (``runtime/router.py``) fronts a fleet of ``CloudVerifier``
+instances and must decide, per arriving session, which verifier admits it.
+This module keeps that decision *pure*: the router snapshots each fleet
+member into a :class:`VerifierLoad` and hands the list to a
+:class:`PlacementPolicy`, which returns a verifier id or ``None`` (admission
+refusal).  Policies never touch transports or clocks, so they are unit- and
+property-testable in isolation (``tests/test_router.py``).
+
+The default :class:`LeastLoadedPlacement` implements the paper-adjacent
+serving heuristic: among alive, non-draining verifiers with enough free
+paged-KV blocks for the new session, pick the one with the fewest placed
+sessions, breaking ties by shallower verify queue, then by more free KV
+blocks, then by lowest id (for determinism).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+__all__ = ["VerifierLoad", "PlacementPolicy", "LeastLoadedPlacement"]
+
+
+@dataclass(frozen=True)
+class VerifierLoad:
+    """Point-in-time load snapshot of one fleet member.
+
+    ``free_blocks``/``capacity_blocks`` are ``None`` when the verifier runs
+    without a paged-KV pool (unbounded); ``queue_depth`` is the verify-queue
+    length (fractional values allowed for smoothed estimates).
+    """
+
+    verifier: int
+    sessions: int = 0
+    queue_depth: float = 0.0
+    free_blocks: Optional[int] = None
+    capacity_blocks: Optional[int] = None
+    draining: bool = False
+    alive: bool = True
+
+    @property
+    def free_fraction(self) -> float:
+        """Fraction of KV capacity still free (1.0 when unbounded)."""
+        if self.free_blocks is None or not self.capacity_blocks:
+            return 1.0
+        return self.free_blocks / self.capacity_blocks
+
+
+class PlacementPolicy:
+    """Interface: map a fleet load snapshot to an admitting verifier id."""
+
+    def place(
+        self, loads: Sequence[VerifierLoad], need_blocks: int = 0
+    ) -> Optional[int]:
+        """Return the verifier id to place on, or ``None`` to refuse.
+
+        ``need_blocks`` is the paged-KV block headroom the new session
+        requires; a verifier whose ``free_blocks`` is below it is never
+        eligible (the property test in ``tests/test_router.py`` enforces
+        this budget invariant for every policy).
+        """
+        raise NotImplementedError
+
+
+@dataclass
+class LeastLoadedPlacement(PlacementPolicy):
+    """Least-loaded admission with a KV-free-block tiebreak.
+
+    Eligibility: alive, not draining, and ``free_blocks`` (when bounded)
+    covers ``need_blocks``.  Selection key, in order: fewest sessions,
+    shallowest queue, most free KV blocks, lowest verifier id.
+    """
+
+    def admissible(self, load: VerifierLoad, need_blocks: int = 0) -> bool:
+        """True when ``load`` may admit a session needing ``need_blocks``."""
+        if not load.alive or load.draining:
+            return False
+        return load.free_blocks is None or load.free_blocks >= need_blocks
+
+    def place(
+        self, loads: Sequence[VerifierLoad], need_blocks: int = 0
+    ) -> Optional[int]:
+        """Pick the least-loaded admissible verifier (``None`` if fleet full)."""
+        candidates = [ld for ld in loads if self.admissible(ld, need_blocks)]
+        if not candidates:
+            return None
+        best = min(
+            candidates,
+            key=lambda ld: (
+                ld.sessions,
+                ld.queue_depth,
+                -(ld.free_blocks if ld.free_blocks is not None else float("inf")),
+                ld.verifier,
+            ),
+        )
+        return best.verifier

@@ -49,6 +49,12 @@ Detach           client -> server: the session is finished; buffered state
                  and KV pages may be reclaimed
 Heartbeat        either direction: liveness signal (refreshes the server's
                  ``last_seen`` like any other message)
+Route            router -> client: the session was placed on ``verifier``
+                 (control plane; informational for the client)
+Migrate          router -> client: the session live-migrated ``src`` ->
+                 ``dst`` at committed ``position`` (control plane)
+Drain            router/admin -> verifier: stop admitting new sessions;
+                 existing sessions keep serving until migrated away
 ===============  =============================================================
 
 Clock domains
@@ -86,6 +92,9 @@ __all__ = [
     "Reset",
     "Detach",
     "Heartbeat",
+    "Route",
+    "Migrate",
+    "Drain",
     "MESSAGE_TYPES",
     "ProtocolMessage",
     "encode",
@@ -96,7 +105,9 @@ __all__ = [
 
 #: Wire-protocol version carried by ``Hello`` and checked at attach.  Bump on
 #: any change to the message set, field layout, or codec byte format.
-PROTOCOL_VERSION = 1
+#: v2: control-plane messages (``Route``/``Migrate``/``Drain``) for the
+#: multi-verifier router.
+PROTOCOL_VERSION = 2
 
 
 class ProtocolError(ValueError):
@@ -231,8 +242,55 @@ class Heartbeat:
     t_send: float = 0.0
 
 
+@dataclass(frozen=True)
+class Route:
+    """Router -> client: the session was placed on ``verifier``.
+
+    Control-plane announcement from the multi-verifier router: purely
+    informational for the client (the router relays all traffic), but it
+    makes placement observable end-to-end and gives operator tooling a
+    typed event to log.
+    """
+
+    session: int
+    seq: int = 0
+    verifier: int = 0
+
+
+@dataclass(frozen=True)
+class Migrate:
+    """Router -> client: the session live-migrated ``src`` -> ``dst``.
+
+    ``position`` is the committed stream position the router serialized and
+    replayed onto the destination verifier (via ``Reset``); the client needs
+    no action — stale results are already discarded by ``seq`` — but counts
+    these in its stats so migrations are observable at the edge.
+    """
+
+    session: int
+    seq: int = 0
+    src: int = 0
+    dst: int = 0
+    position: int = 0
+
+
+@dataclass(frozen=True)
+class Drain:
+    """Router/admin -> verifier: stop admitting new sessions.
+
+    Existing sessions keep serving until the control plane migrates them
+    away; ``verifier`` names the drained instance (``session`` is ``-1``:
+    control messages are not session-scoped).
+    """
+
+    session: int = -1
+    seq: int = 0
+    verifier: int = 0
+
+
 #: Every concrete message type, in wire-id order (codec round-trip tests
-#: iterate this).
+#: iterate this).  APPEND-ONLY: wire type ids are assigned by enumeration
+#: order, so new types go at the end to keep existing ids stable.
 MESSAGE_TYPES: Tuple[type, ...] = (
     Hello,
     Attach,
@@ -243,11 +301,14 @@ MESSAGE_TYPES: Tuple[type, ...] = (
     Reset,
     Detach,
     Heartbeat,
+    Route,
+    Migrate,
+    Drain,
 )
 
 ProtocolMessage = Union[
     Hello, Attach, DraftFragment, NavRequest, TreeNavRequest, NavResult,
-    Reset, Detach, Heartbeat,
+    Reset, Detach, Heartbeat, Route, Migrate, Drain,
 ]
 
 
@@ -323,6 +384,12 @@ _FIELD_SPECS: Dict[type, Tuple[Tuple[str, str], ...]] = {
     Reset: (("session", "i"), ("seq", "i"), ("round", "i"), ("position", "i")),
     Detach: (("session", "i"), ("seq", "i")),
     Heartbeat: (("session", "i"), ("seq", "i"), ("t_send", "f")),
+    Route: (("session", "i"), ("seq", "i"), ("verifier", "i")),
+    Migrate: (
+        ("session", "i"), ("seq", "i"), ("src", "i"),
+        ("dst", "i"), ("position", "i"),
+    ),
+    Drain: (("session", "i"), ("seq", "i"), ("verifier", "i")),
 }
 
 _TYPE_IDS: Dict[type, int] = {cls: i for i, cls in enumerate(MESSAGE_TYPES, start=1)}

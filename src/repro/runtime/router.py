@@ -1,0 +1,810 @@
+"""Multi-verifier control plane: router, live session migration, autoscaling.
+
+PipeSD's cloud side (``runtime/server.py``) is one ``CloudVerifier``; serving
+a large edge population needs a *fleet*.  The :class:`Router` fronts N
+verifiers behind the same attach surface a single verifier exposes —
+``attach(session, uplink, downlink)`` — so edge clients, the socket
+listener, and the conformance harness are unchanged.  Internally it:
+
+* **places** each arriving session on a verifier via a pluggable
+  :class:`~repro.runtime.placement.PlacementPolicy` (default: least-loaded
+  with a paged-KV free-block admission gate), refusing admission
+  (:class:`FleetFullError`) when no verifier has headroom;
+* **relays** traffic both ways, caching just enough per-session state to
+  make migration possible: the committed stream position (from
+  ``NavRequest.pos``/``Reset.position``), the current round's draft
+  fragments, and the round's unanswered NAV request;
+* **live-migrates** sessions: open a link on the destination, replay the
+  committed position through ``Reset`` (driving the destination's
+  ``_kv_reconcile`` re-attach path), replay the in-flight round's fragments
+  and NAV request, and detach from the source — the client only ever sees a
+  bit-identical committed stream (the conformance suite's equality check);
+* **fails over**: a severed verifier link (crash) triggers migration of
+  every session placed there; sessions stranded while the fleet is full are
+  rescued by the control loop once capacity returns;
+* **scales** the fleet from occupancy/queue-depth signals via
+  :class:`~repro.runtime.scaling.AutoScaler` — up through a
+  ``make_verifier`` factory, down by draining and retiring the least-loaded
+  member.
+
+Everything runs on the injectable clock (``runtime/simclock.py``): under a
+``VirtualClock`` the whole control plane — crashes, migrations, restarts —
+is deterministic, so failover is tested as a stream-equality check, not a
+flaky timing test.  Verifier fleet members are wrapped in
+:class:`LocalVerifier` (in-process, zero-cost internal links, exact load
+hints) or :class:`RemoteVerifier` (socket dial-out per session).
+
+Router restart is modelled explicitly: ``stop()`` detaches the fleet but
+leaves client links untouched, ``snapshot()`` serializes per-session
+positions, and a fresh router ``adopt()``s the live links — the restart
+conformance scenario replays exactly this sequence.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .placement import LeastLoadedPlacement, PlacementPolicy, VerifierLoad
+from .protocol import (
+    Detach,
+    DraftFragment,
+    Drain,
+    Hello,
+    Migrate,
+    NavRequest,
+    NavResult,
+    Reset,
+    Route,
+    handshake_reply,
+)
+from .scaling import AutoScaler
+from .server import CloudVerifier
+from .simclock import SYSTEM_CLOCK
+from .transport import Channel, ChannelConfig, Transport, connect_transport
+
+__all__ = [
+    "FleetFullError",
+    "VerifierClient",
+    "LocalVerifier",
+    "RemoteVerifier",
+    "Router",
+    "RouterEvent",
+    "RouterScenario",
+    "ROUTER_FAULT_MATRIX",
+]
+
+
+class FleetFullError(RuntimeError):
+    """Admission refused: no verifier has session or KV-block headroom."""
+
+
+# --------------------------------------------------------------------------- #
+# Fleet members: router-side handles on one verifier each
+# --------------------------------------------------------------------------- #
+
+
+class VerifierClient:
+    """Router-side handle on one verifier (in-process or remote).
+
+    ``open_link(session)`` returns an (uplink, downlink) pair attached to the
+    verifier for that session; ``load_hint()`` reports whatever load signals
+    the handle can observe (the router fills gaps from its own bookkeeping).
+    """
+
+    verifier_id: int = -1
+    alive: bool = True
+
+    def open_link(self, session: int) -> Tuple[Transport, Transport]:
+        """Attach ``session`` on the verifier; returns (uplink, downlink)."""
+        raise NotImplementedError
+
+    def load_hint(self) -> Dict[str, Any]:
+        """Best-effort load signals (sessions/queue_depth/free_blocks/...)."""
+        return {}
+
+    def drain(self) -> None:
+        """Ask the verifier to refuse new sessions."""
+
+    def stop(self) -> None:
+        """Shut the verifier (or our handle on it) down."""
+
+
+class LocalVerifier(VerifierClient):
+    """An in-process ``CloudVerifier`` fleet member.
+
+    Links are zero-cost ``Channel``s on the shared clock (the modelled
+    network hop is the CLIENT<->router link; router and verifiers are
+    co-located).  Load hints are exact: live session count, verify-queue
+    depth, and paged-KV free blocks straight from the verifier.
+    """
+
+    def __init__(
+        self,
+        verifier_id: int,
+        verifier: CloudVerifier,
+        clock=None,
+        link_cfg: Optional[ChannelConfig] = None,
+    ) -> None:
+        """Wrap ``verifier`` as fleet member ``verifier_id``."""
+        self.verifier_id = verifier_id
+        self.verifier = verifier
+        self.alive = True
+        self.clock = clock or verifier.clock
+        self.link_cfg = link_cfg or ChannelConfig(alpha=0.0, beta=0.0)
+        self._links: List[Tuple[Transport, Transport]] = []
+
+    def open_link(self, session: int) -> Tuple[Transport, Transport]:
+        """Attach ``session`` over a fresh zero-cost channel pair."""
+        vid = self.verifier_id
+        up = Channel(self.link_cfg, f"r-v{vid}-up{session}", clock=self.clock)
+        dn = Channel(self.link_cfg, f"r-v{vid}-dn{session}", clock=self.clock)
+        self.verifier.attach(session, up, dn)
+        self._links.append((up, dn))
+        return up, dn
+
+    def load_hint(self) -> Dict[str, Any]:
+        """Exact in-process load: sessions, queue depth, KV free blocks."""
+        v = self.verifier
+        hint: Dict[str, Any] = dict(
+            sessions=len(v.sessions),
+            queue_depth=float(len(v._queue)),
+            draining=v.draining,
+        )
+        if v.kv_pool is not None:
+            hint["free_blocks"] = v.kv_pool.free_blocks
+            hint["capacity_blocks"] = v.kv_pool.num_blocks
+        return hint
+
+    def drain(self) -> None:
+        """Refuse new sessions on the wrapped verifier."""
+        self.verifier.drain()
+
+    def crash(self) -> None:
+        """Simulate abrupt verifier death: stop serving, sever every link.
+
+        The router's downlink loops observe the severed links and run the
+        failover-migration path exactly as they would for a remote peer
+        vanishing mid-stream.
+        """
+        self.alive = False
+        self.verifier._stop.set()
+        with self.verifier._work:
+            self.verifier._work.notify_all()
+        for up, dn in self._links:
+            up.close()
+            dn.close()
+
+    def stop(self) -> None:
+        """Graceful shutdown: stop the verifier and close our links."""
+        self.alive = False
+        self.verifier.stop()
+        for up, dn in self._links:
+            up.close()
+            dn.close()
+
+
+class RemoteVerifier(VerifierClient):
+    """A verifier process behind a ``SocketListener``, dialed per session.
+
+    Load hints are limited to the configured ``capacity_blocks`` (the router
+    estimates occupancy from its own placement bookkeeping); draining is
+    requested over the wire with a ``Drain`` control message.
+    """
+
+    #: Session-id base for throwaway control links (``Drain`` delivery).
+    CONTROL_SESSION_BASE = 1 << 20
+
+    def __init__(
+        self,
+        verifier_id: int,
+        host: str,
+        port: int,
+        cfg: Optional[ChannelConfig] = None,
+        clock=None,
+        capacity_blocks: Optional[int] = None,
+    ) -> None:
+        """Handle on the verifier listening at ``host:port``."""
+        self.verifier_id = verifier_id
+        self.alive = True
+        self.host = host
+        self.port = port
+        self.cfg = cfg
+        self.clock = clock
+        self.capacity_blocks = capacity_blocks
+        self._links: Dict[int, Transport] = {}
+
+    def open_link(self, session: int) -> Tuple[Transport, Transport]:
+        """Dial a duplex socket transport for ``session``."""
+        t = connect_transport(
+            self.host, self.port, session=session, cfg=self.cfg, clock=self.clock
+        )
+        self._links[session] = t
+        return t, t
+
+    def load_hint(self) -> Dict[str, Any]:
+        """Only static capacity is observable from the dialing side."""
+        if self.capacity_blocks is None:
+            return {}
+        return dict(capacity_blocks=self.capacity_blocks)
+
+    def drain(self) -> None:
+        """Deliver ``Drain`` over any live link (or a throwaway dial)."""
+        msg = Drain(verifier=self.verifier_id)
+        for t in self._links.values():
+            if not getattr(t, "closed", False):
+                t.send(msg)
+                return
+        t = connect_transport(
+            self.host,
+            self.port,
+            session=self.CONTROL_SESSION_BASE + self.verifier_id,
+            cfg=self.cfg,
+            clock=self.clock,
+        )
+        t.send(msg)
+        t.close()
+
+    def stop(self) -> None:
+        """Close every dialed link (the remote process outlives the handle)."""
+        self.alive = False
+        for t in self._links.values():
+            t.close()
+
+
+# --------------------------------------------------------------------------- #
+# The router
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class _RoutedSession:
+    """Router-side record of one client session (migration state included)."""
+
+    up_c: Transport  # client -> router
+    dn_c: Transport  # router -> client
+    verifier: int
+    v_up: Transport  # router -> verifier
+    v_dn: Transport  # verifier -> router
+    pos: int = 0  # committed stream position (from NavRequest.pos / Reset)
+    round: int = 0  # current NAV round id
+    frags: Dict[int, DraftFragment] = field(default_factory=dict)
+    nav: Optional[NavRequest] = None  # in-flight, unanswered NAV request
+    epoch: int = 0  # bumped per migration; stale downlink loops exit
+    done: bool = False  # client detached
+
+
+class Router:
+    """Session router/master fronting a fleet of verifiers.
+
+    Exposes the single-verifier attach surface (``attach(session, up, dn)``)
+    so it drops in wherever a ``CloudVerifier`` does — behind a
+    ``SocketListener`` (``launch/serve.py --router``) or wired directly to
+    in-process ``Channel`` pairs (tests, benchmarks).
+
+    ``need_blocks`` is the paged-KV headroom a new session must find on its
+    verifier (the placement property test's budget invariant).  With a
+    ``scaler`` + ``make_verifier`` the control loop grows and shrinks the
+    fleet; ``rebalance_interval`` forces periodic round-robin migration
+    (exercises the migration path continuously — the CI smoke uses it).
+    """
+
+    def __init__(
+        self,
+        verifiers: Sequence[VerifierClient] = (),
+        policy: Optional[PlacementPolicy] = None,
+        scaler: Optional[AutoScaler] = None,
+        make_verifier: Optional[Callable[[int], VerifierClient]] = None,
+        clock=None,
+        need_blocks: int = 2,
+        control_interval: float = 0.25,
+        rebalance_interval: Optional[float] = None,
+        name: str = "router",
+    ) -> None:
+        """Create a router over ``verifiers`` (see class docstring)."""
+        self.clock = clock or SYSTEM_CLOCK
+        self.policy = policy or LeastLoadedPlacement()
+        self.scaler = scaler
+        self.make_verifier = make_verifier
+        self.need_blocks = need_blocks
+        self.control_interval = control_interval
+        self.rebalance_interval = rebalance_interval
+        self.name = name
+        self.fleet: Dict[int, VerifierClient] = {
+            v.verifier_id: v for v in verifiers
+        }
+        self.sessions: Dict[int, _RoutedSession] = {}
+        self._draining: Set[int] = set()
+        self._retiring: Set[int] = set()
+        self._down: Set[int] = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._threads: List[Any] = []
+        self._ctl_seq = 0
+        self.stats: Dict[str, int] = {
+            "sessions_placed": 0,
+            "admission_refusals": 0,
+            "migrations": 0,
+            "failover_migrations": 0,
+            "verifier_crashes": 0,
+            "scale_ups": 0,
+            "scale_downs": 0,
+            "drains": 0,
+        }
+
+    # ------------------------------------------------------------ lifecycle --
+    def start(self) -> None:
+        """Start the control loop (placement itself is demand-driven)."""
+        self._threads.append(
+            self.clock.spawn(self._control_loop, name=f"{self.name}-ctl")
+        )
+
+    def stop(self, detach: bool = True) -> None:
+        """Stop relaying; optionally detach fleet sessions (router restart).
+
+        Client links are left OPEN: a replacement router can ``adopt`` them
+        from a ``snapshot()``.  With ``detach`` the fleet is told to drop the
+        sessions (freeing KV) so the replacement re-attaches cleanly.
+        """
+        self._stop.set()
+        with self._lock:
+            live = [(sid, rs) for sid, rs in self.sessions.items() if not rs.done]
+        for sid, rs in live:
+            vc = self.fleet.get(rs.verifier)
+            if detach and vc is not None and vc.alive:
+                self._ctl_seq += 1
+                rs.v_up.send(Detach(session=sid, seq=self._ctl_seq))
+            rs.v_up.close()
+            rs.v_dn.close()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def snapshot(self) -> Dict[int, Tuple[int, int]]:
+        """Serialize live sessions as ``{session: (position, round)}``."""
+        with self._lock:
+            return {
+                sid: (rs.pos, rs.round)
+                for sid, rs in self.sessions.items()
+                if not rs.done
+            }
+
+    # ------------------------------------------------------------ placement --
+    def loads(self) -> List[VerifierLoad]:
+        """Snapshot the fleet for the placement/scaling policies.
+
+        Local members report exact sessions/queue/KV; gaps (remote members)
+        are filled from the router's own bookkeeping: placed-session counts
+        and in-flight NAV rounds as a queue-depth proxy.
+        """
+        with self._lock:
+            placed: Dict[int, int] = {vid: 0 for vid in self.fleet}
+            inflight: Dict[int, int] = {vid: 0 for vid in self.fleet}
+            for rs in self.sessions.values():
+                if rs.done:
+                    continue
+                placed[rs.verifier] = placed.get(rs.verifier, 0) + 1
+                if rs.nav is not None:
+                    inflight[rs.verifier] = inflight.get(rs.verifier, 0) + 1
+            members = list(self.fleet.items())
+            draining = set(self._draining)
+        out = []
+        for vid, vc in members:
+            hint = vc.load_hint()
+            out.append(
+                VerifierLoad(
+                    verifier=vid,
+                    sessions=int(hint.get("sessions", placed.get(vid, 0))),
+                    queue_depth=float(
+                        hint.get("queue_depth", inflight.get(vid, 0))
+                    ),
+                    free_blocks=hint.get("free_blocks"),
+                    capacity_blocks=hint.get("capacity_blocks"),
+                    draining=bool(hint.get("draining", False)) or vid in draining,
+                    alive=vc.alive,
+                )
+            )
+        return out
+
+    def attach(self, session: int, uplink: Transport, downlink: Transport) -> int:
+        """Place ``session`` on a verifier and start relaying; returns its id.
+
+        Raises :class:`FleetFullError` when the placement policy refuses
+        admission (no alive, non-draining verifier with ``need_blocks`` of
+        KV headroom).
+        """
+        vid = self.policy.place(self.loads(), need_blocks=self.need_blocks)
+        if vid is None:
+            with self._lock:
+                self.stats["admission_refusals"] += 1
+            raise FleetFullError(f"no verifier can admit session {session}")
+        v_up, v_dn = self.fleet[vid].open_link(session)
+        rs = _RoutedSession(uplink, downlink, vid, v_up, v_dn)
+        with self._lock:
+            self.sessions[session] = rs
+            self.stats["sessions_placed"] += 1
+            self._ctl_seq += 1
+            seq = self._ctl_seq
+        downlink.send(Route(session=session, seq=seq, verifier=vid))
+        self._threads.append(
+            self.clock.spawn(
+                lambda: self._up_loop(session, rs), name=f"{self.name}-up-{session}"
+            )
+        )
+        self._spawn_dn_loop(session, rs, rs.epoch, v_dn)
+        return vid
+
+    def adopt(
+        self, session: int, uplink: Transport, downlink: Transport,
+        position: int = 0, round_id: int = 0,
+    ) -> int:
+        """Adopt a live client link after a router restart.
+
+        Places the session like ``attach`` and immediately replays the
+        snapshotted committed ``position`` to the verifier via ``Reset``
+        (driving its ``_kv_reconcile`` re-attach path), so serving resumes
+        where the previous router left off.
+        """
+        vid = self.attach(session, uplink, downlink)
+        with self._lock:
+            rs = self.sessions[session]
+            rs.pos = position
+            rs.round = round_id
+            self._ctl_seq += 1
+            seq = self._ctl_seq
+        rs.v_up.send(
+            Reset(session=session, seq=seq, round=round_id, position=position)
+        )
+        return vid
+
+    # ------------------------------------------------------------ relaying --
+    def _up_loop(self, session: int, rs: _RoutedSession) -> None:
+        """Forward client->verifier, caching migration state on the way."""
+        up = rs.up_c
+        while not self._stop.is_set():
+            msg = up.recv(timeout=0.25)
+            if msg is None:
+                if getattr(up, "closed", False):
+                    return
+                continue
+            detached = False
+            hello = None
+            with self._lock:
+                v_up = rs.v_up
+                if isinstance(msg, DraftFragment):
+                    if msg.round > rs.round:
+                        rs.round = msg.round
+                        rs.frags.clear()
+                        rs.nav = None
+                    if msg.round == rs.round:
+                        rs.frags[msg.seq] = msg
+                elif isinstance(msg, NavRequest):  # TreeNavRequest included
+                    if msg.round > rs.round:
+                        rs.round = msg.round
+                        rs.frags.clear()
+                    if msg.round == rs.round:
+                        rs.nav = msg
+                    if msg.pos is not None:
+                        rs.pos = max(rs.pos, msg.pos)
+                elif isinstance(msg, Reset):
+                    rs.pos = msg.position
+                    rs.round = msg.round
+                    rs.frags.clear()
+                    rs.nav = None
+                elif isinstance(msg, Detach):
+                    rs.done = True
+                    rs.frags.clear()
+                    rs.nav = None
+                    detached = True
+                elif isinstance(msg, Hello):
+                    # Answer at the router (the fleet link is attached); sent
+                    # below, outside the lock — Channel.send takes link time.
+                    hello = handshake_reply(msg, session=session)
+            if hello is not None:
+                rs.dn_c.send(hello)
+                continue
+            v_up.send(msg)
+            if detached:
+                rs.v_up.close()
+                rs.v_dn.close()
+                return
+
+    def _spawn_dn_loop(
+        self, session: int, rs: _RoutedSession, epoch: int, v_dn: Transport
+    ) -> None:
+        """Start the verifier->client forwarding loop for one epoch."""
+        self._threads.append(
+            self.clock.spawn(
+                lambda: self._dn_loop(session, rs, epoch, v_dn),
+                name=f"{self.name}-dn-{session}e{epoch}",
+            )
+        )
+
+    def _dn_loop(
+        self, session: int, rs: _RoutedSession, epoch: int, v_dn: Transport
+    ) -> None:
+        """Forward verifier->client; a severed link triggers failover."""
+        while not self._stop.is_set():
+            with self._lock:
+                if rs.epoch != epoch or rs.done:
+                    return  # migrated away or finished; a newer loop owns it
+                vid = rs.verifier
+            msg = v_dn.recv(timeout=0.25)
+            if msg is None:
+                if getattr(v_dn, "closed", False):
+                    with self._lock:
+                        stale = rs.epoch != epoch or rs.done
+                    if not stale and not self._stop.is_set():
+                        self._on_verifier_down(vid)
+                    return
+                continue
+            if isinstance(msg, NavResult):
+                with self._lock:
+                    if rs.epoch != epoch or rs.done:
+                        return  # stale result; the replay re-produces it
+                    if rs.nav is not None and msg.seq == rs.nav.seq:
+                        # Round answered: nothing in flight to replay if the
+                        # session migrates from here on.
+                        rs.nav = None
+                        rs.frags.clear()
+            rs.dn_c.send(msg)
+
+    # ------------------------------------------------------------ migration --
+    def migrate(
+        self, session: int, dst: Optional[int] = None, failover: bool = False
+    ) -> Optional[int]:
+        """Live-migrate ``session`` to ``dst`` (or the policy's pick).
+
+        Serializes the committed position, re-attaches on the destination
+        (``Reset`` -> ``_kv_reconcile``), replays the in-flight round's
+        cached fragments and NAV request, and detaches from the source.
+        Returns the destination id, or ``None`` when the session is gone.
+        Raises :class:`FleetFullError` when no destination can admit it.
+        """
+        with self._lock:
+            rs = self.sessions.get(session)
+            if rs is None or rs.done:
+                return None
+            src = rs.verifier
+        if dst is None:
+            candidates = [ld for ld in self.loads() if ld.verifier != src]
+            dst = self.policy.place(candidates, need_blocks=self.need_blocks)
+            if dst is None:
+                with self._lock:
+                    self.stats["admission_refusals"] += 1
+                raise FleetFullError(f"no migration target for session {session}")
+        nu, nd = self.fleet[dst].open_link(session)
+        with self._lock:
+            old_up, old_dn, old_vid = rs.v_up, rs.v_dn, rs.verifier
+            rs.v_up, rs.v_dn, rs.verifier = nu, nd, dst
+            rs.epoch += 1
+            epoch = rs.epoch
+            replay_frags = [rs.frags[s] for s in sorted(rs.frags)]
+            replay_nav = rs.nav
+            pos, rnd = rs.pos, rs.round
+            self.stats["failover_migrations" if failover else "migrations"] += 1
+            self._ctl_seq += 3
+            seq = self._ctl_seq
+        old_vc = self.fleet.get(old_vid)
+        if old_vc is not None and old_vc.alive:
+            old_up.send(Detach(session=session, seq=seq - 2))
+        old_up.close()
+        old_dn.close()
+        # Serialize the committed position onto the destination, then replay
+        # the in-flight round (fragments in seq order, then the NAV request).
+        nu.send(Reset(session=session, seq=seq - 1, round=rnd, position=pos))
+        for frag in replay_frags:
+            nu.send(frag)
+        if replay_nav is not None:
+            nu.send(replay_nav)
+        self._spawn_dn_loop(session, rs, epoch, nd)
+        rs.dn_c.send(
+            Migrate(session=session, seq=seq, src=old_vid, dst=dst, position=pos)
+        )
+        return dst
+
+    def _on_verifier_down(self, vid: int) -> None:
+        """Failover: re-place every session of a crashed verifier."""
+        with self._lock:
+            if vid in self._down:
+                return  # another downlink loop already ran the failover
+            self._down.add(vid)
+            vc = self.fleet.get(vid)
+            if vc is not None:
+                vc.alive = False
+            self.stats["verifier_crashes"] += 1
+            victims = [
+                sid
+                for sid, rs in self.sessions.items()
+                if rs.verifier == vid and not rs.done
+            ]
+        for sid in victims:
+            try:
+                self.migrate(sid, failover=True)
+            except FleetFullError:
+                # Stranded: the control loop rescues it once capacity
+                # returns (scale-up or another verifier freeing headroom);
+                # meanwhile the client makes progress decoding locally.
+                pass
+
+    def drain_verifier(self, vid: int, migrate_sessions: bool = True) -> int:
+        """Drain ``vid`` (no new placements) and migrate its sessions away.
+
+        Returns the number of sessions migrated.  The drained member stays
+        in the fleet (it may be undrained operationally); scale-down retires
+        it via the control loop instead.
+        """
+        with self._lock:
+            self._draining.add(vid)
+            self.stats["drains"] += 1
+        vc = self.fleet.get(vid)
+        if vc is not None:
+            vc.drain()
+        moved = 0
+        if migrate_sessions:
+            with self._lock:
+                victims = [
+                    sid
+                    for sid, rs in self.sessions.items()
+                    if rs.verifier == vid and not rs.done
+                ]
+            for sid in victims:
+                try:
+                    if self.migrate(sid) is not None:
+                        moved += 1
+                except FleetFullError:
+                    break  # nowhere to put the rest; retry from the ctl loop
+        return moved
+
+    # ------------------------------------------------------------- control --
+    def _control_loop(self) -> None:
+        """Scaling + rescue + rebalance ticks every ``control_interval``."""
+        last_rebalance = self.clock.monotonic()
+        while not self._stop.is_set():
+            self.clock.sleep(self.control_interval)
+            if self._stop.is_set():
+                return
+            self._rescue_stranded()
+            self._finish_retirements()
+            if self.scaler is not None:
+                self._autoscale_tick()
+            if self.rebalance_interval is not None:
+                now = self.clock.monotonic()
+                if now - last_rebalance >= self.rebalance_interval:
+                    last_rebalance = now
+                    self._rebalance_tick()
+
+    def _rescue_stranded(self) -> None:
+        """Re-place sessions stuck on dead/retired verifiers."""
+        with self._lock:
+            stranded = [
+                sid
+                for sid, rs in self.sessions.items()
+                if not rs.done
+                and (
+                    rs.verifier not in self.fleet
+                    or not self.fleet[rs.verifier].alive
+                )
+            ]
+        for sid in stranded:
+            try:
+                self.migrate(sid, failover=True)
+            except FleetFullError:
+                return
+
+    def _finish_retirements(self) -> None:
+        """Stop drained-for-retirement verifiers once they are empty."""
+        with self._lock:
+            ready = [
+                vid
+                for vid in self._retiring
+                if not any(
+                    rs.verifier == vid and not rs.done
+                    for rs in self.sessions.values()
+                )
+            ]
+        for vid in ready:
+            with self._lock:
+                self._retiring.discard(vid)
+                self._draining.discard(vid)
+                vc = self.fleet.pop(vid, None)
+            if vc is not None:
+                vc.stop()
+
+    def _autoscale_tick(self) -> None:
+        """One scaler decision: grow via the factory or drain-to-retire."""
+        decision = self.scaler.decide(self.loads(), self.clock.monotonic())
+        if decision.action == "up" and self.make_verifier is not None:
+            vid = max(self.fleet, default=-1) + 1
+            vc = self.make_verifier(vid)
+            with self._lock:
+                self.fleet[vid] = vc
+                self.stats["scale_ups"] += 1
+        elif decision.action == "down" and decision.drain in self.fleet:
+            with self._lock:
+                self.stats["scale_downs"] += 1
+                self._retiring.add(decision.drain)
+            self.drain_verifier(decision.drain)
+
+    def _rebalance_tick(self) -> None:
+        """Round-robin forced migration (the CI smoke's migration driver)."""
+        with self._lock:
+            vids = sorted(
+                vid
+                for vid, vc in self.fleet.items()
+                if vc.alive and vid not in self._draining
+            )
+            live = [
+                (sid, rs.verifier)
+                for sid, rs in self.sessions.items()
+                if not rs.done
+            ]
+        if len(vids) < 2:
+            return
+        for sid, cur in live:
+            nxt = vids[(vids.index(cur) + 1) % len(vids)] if cur in vids else vids[0]
+            try:
+                self.migrate(sid, dst=nxt)
+            except FleetFullError:
+                return
+
+
+# --------------------------------------------------------------------------- #
+# Router-layer fault scenarios (consumed by tests/test_fault_conformance.py)
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class RouterEvent:
+    """One timed control-plane event in a :class:`RouterScenario`.
+
+    ``kind`` is ``'crash'`` (abrupt verifier death), ``'migrate'`` (forced
+    live migration of ``session`` to ``dst``, policy-picked when ``dst`` is
+    -1), or ``'drain'`` (drain ``verifier`` and migrate its sessions away).
+    """
+
+    t: float
+    kind: str
+    verifier: int = -1
+    session: int = -1
+    dst: int = -1
+
+
+@dataclass(frozen=True)
+class RouterScenario:
+    """A named, deterministic schedule of router-layer faults."""
+
+    name: str
+    events: Tuple[RouterEvent, ...] = ()
+    n_verifiers: int = 2
+
+
+#: Router-layer conformance matrix: under every scenario the committed
+#: client streams must stay bit-identical to the fault-free oracle run.
+ROUTER_FAULT_MATRIX: Tuple[RouterScenario, ...] = (
+    RouterScenario("router_clean"),
+    RouterScenario(
+        "verifier_crash_midstream",
+        events=(RouterEvent(t=1.1, kind="crash", verifier=0),),
+    ),
+    RouterScenario(
+        "migrate_midstream",
+        events=(
+            RouterEvent(t=0.8, kind="migrate", session=0, dst=1),
+            RouterEvent(t=1.4, kind="migrate", session=0, dst=0),
+            RouterEvent(t=1.7, kind="migrate", session=1, dst=0),
+        ),
+    ),
+    RouterScenario(
+        "drain_midstream",
+        events=(RouterEvent(t=1.0, kind="drain", verifier=0),),
+    ),
+    RouterScenario(
+        "crash_then_drain",
+        n_verifiers=3,
+        events=(
+            RouterEvent(t=0.9, kind="crash", verifier=1),
+            RouterEvent(t=1.6, kind="drain", verifier=0),
+        ),
+    ),
+)

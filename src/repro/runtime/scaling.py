@@ -1,0 +1,131 @@
+"""Fleet autoscaling policy: occupancy/queue-depth signals -> scale decisions.
+
+Like placement (``runtime/placement.py``), scaling is a *pure* policy: the
+router's control loop snapshots the fleet into ``VerifierLoad`` records and
+asks :class:`AutoScaler` for a :class:`ScaleDecision`.  The scaler never
+spawns or stops verifiers itself — the router owns the mechanics (spawn via
+its ``make_verifier`` factory, retire via drain + migrate-away) — so the
+policy is deterministic and directly unit-testable on synthetic loads.
+
+Signals (thresholds in :class:`ScalingConfig`):
+
+* scale **up** when the mean verify-queue depth, the mean session occupancy,
+  or the worst KV free-fraction crosses its high-water mark;
+* scale **down** when the fleet would comfortably fit on one fewer verifier,
+  draining the least-loaded member (fewest sessions to migrate away);
+* decisions are cooldown-gated so one burst cannot thrash the fleet.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from .placement import VerifierLoad
+
+__all__ = ["ScalingConfig", "ScaleDecision", "AutoScaler"]
+
+
+@dataclass(frozen=True)
+class ScalingConfig:
+    """Thresholds and bounds for :class:`AutoScaler`.
+
+    ``sessions_high`` is the per-verifier occupancy above which the fleet
+    scales up; ``queue_high`` the mean queue depth trigger;
+    ``free_frac_low`` the KV free-fraction floor; ``sessions_low_factor``
+    the headroom multiplier required before scaling down (the fleet must fit
+    on ``n - 1`` verifiers at ``sessions_low_factor * sessions_high``
+    occupancy); ``cooldown`` the minimum spacing between decisions, in
+    clock seconds.
+    """
+
+    min_verifiers: int = 1
+    max_verifiers: int = 8
+    sessions_high: float = 8.0
+    queue_high: float = 4.0
+    free_frac_low: float = 0.10
+    sessions_low_factor: float = 0.5
+    cooldown: float = 2.0
+
+
+@dataclass(frozen=True)
+class ScaleDecision:
+    """Outcome of one control tick: ``action`` is 'up', 'down', or 'hold'.
+
+    For 'down', ``drain`` names the verifier to retire (drain + migrate its
+    sessions away); ``reason`` is a human-readable trigger description.
+    """
+
+    action: str
+    drain: Optional[int] = None
+    reason: str = ""
+
+
+_HOLD = ScaleDecision("hold")
+
+
+class AutoScaler:
+    """Cooldown-gated threshold scaler over fleet load snapshots.
+
+    ``decide`` is deterministic in (loads, now, prior decisions): the only
+    internal state is the timestamp of the last non-hold decision, used for
+    cooldown gating.
+    """
+
+    def __init__(self, cfg: Optional[ScalingConfig] = None) -> None:
+        """Create a scaler with ``cfg`` thresholds (defaults when ``None``)."""
+        self.cfg = cfg or ScalingConfig()
+        self._last_action_at: Optional[float] = None
+
+    def decide(self, loads: Sequence[VerifierLoad], now: float) -> ScaleDecision:
+        """Return the scale action for the fleet snapshot ``loads`` at ``now``."""
+        cfg = self.cfg
+        active = [ld for ld in loads if ld.alive and not ld.draining]
+        n = len(active)
+        if n == 0:
+            # A dead fleet always warrants a replacement (ignores cooldown:
+            # there is nothing left to thrash).
+            self._last_action_at = now
+            return ScaleDecision("up", reason="no active verifiers")
+        if (
+            self._last_action_at is not None
+            and now - self._last_action_at < cfg.cooldown
+        ):
+            return _HOLD
+        total_sessions = sum(ld.sessions for ld in active)
+        mean_queue = sum(ld.queue_depth for ld in active) / n
+        min_free_frac = min(ld.free_fraction for ld in active)
+        if n < cfg.max_verifiers:
+            if mean_queue > cfg.queue_high:
+                self._last_action_at = now
+                return ScaleDecision(
+                    "up", reason=f"mean queue {mean_queue:.1f} > {cfg.queue_high}"
+                )
+            if total_sessions > cfg.sessions_high * n:
+                self._last_action_at = now
+                return ScaleDecision(
+                    "up",
+                    reason=f"{total_sessions} sessions > "
+                    f"{cfg.sessions_high:.0f} per verifier",
+                )
+            if min_free_frac < cfg.free_frac_low:
+                self._last_action_at = now
+                return ScaleDecision(
+                    "up",
+                    reason=f"KV free fraction {min_free_frac:.2f} < "
+                    f"{cfg.free_frac_low}",
+                )
+        if (
+            n > cfg.min_verifiers
+            and mean_queue <= 1.0
+            and total_sessions
+            <= cfg.sessions_high * cfg.sessions_low_factor * (n - 1)
+        ):
+            victim = min(active, key=lambda ld: (ld.sessions, ld.queue_depth, ld.verifier))
+            self._last_action_at = now
+            return ScaleDecision(
+                "down",
+                drain=victim.verifier,
+                reason=f"{total_sessions} sessions fit on {n - 1} verifiers",
+            )
+        return _HOLD

@@ -56,6 +56,7 @@ from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
 from .protocol import (
     Detach,
     DraftFragment,
+    Drain,
     Hello,
     NavRequest,
     NavResult,
@@ -71,7 +72,12 @@ __all__ = [
     "SyntheticBackend",
     "SpecVerifyBackend",
     "CloudVerifier",
+    "VerifierDraining",
 ]
+
+
+class VerifierDraining(RuntimeError):
+    """Raised by ``CloudVerifier.attach`` when the verifier is draining."""
 
 
 class VerifyBackend:
@@ -405,6 +411,7 @@ class CloudVerifier:
             max_batch = 32 if batch_window > 0 else 1
         self.max_batch = max(int(max_batch), 1)
         self.drop_expired = drop_expired
+        self.draining = False  # set by drain(): attach refuses new sessions
         self.links: Dict[int, tuple] = {}  # session -> (uplink, downlink)
         self.sessions: Dict[int, _Session] = {}
         self.stats = {
@@ -436,18 +443,45 @@ class CloudVerifier:
         happens here and ``BlockPoolExhausted`` propagates to the caller —
         the flat baseline's hard admission limit.  Paged sessions instead
         fork the shared prefix copy-on-write (no pages allocated).
+
+        Raises ``VerifierDraining`` while draining (the control plane must
+        place new sessions elsewhere).  Re-attaching an existing session id
+        (router restart / migration replay) supersedes the old links: the old
+        receive loop ends, the old epoch's in-flight rounds never commit, and
+        the session keeps its KV pages and committed position until the
+        follow-up ``Reset`` reconciles them.
         """
         with self._lock:
+            if self.draining:
+                raise VerifierDraining(f"draining: session {session} refused")
+            old = self.sessions.get(session)
+            if old is not None:
+                old_up, _ = self.links[session]
+                old_up.close()  # ends the superseded receive loop
             sess = _Session(last_seen=self.clock.monotonic())
+            if old is not None:
+                sess.epoch = old.epoch + 1
+                sess.kv_committed = old.kv_committed
+                sess.served = old.served
             if self.kv_pool is not None:
-                self._kv_register(session)
-                if self.kv_flat_reserve is None and self.kv_shared_prefix > 0:
+                if session not in self.kv_pool.tables:
+                    self._kv_register(session)
+                if (
+                    old is None
+                    and self.kv_flat_reserve is None
+                    and self.kv_shared_prefix > 0
+                ):
                     sess.kv_committed = self.kv_shared_prefix
             self.links[session] = (uplink, downlink)
             self.sessions[session] = sess
         self._threads.append(
             self.clock.spawn(lambda: self._rx_loop(session), name=f"rx-{session}")
         )
+
+    def drain(self) -> None:
+        """Stop admitting new sessions; existing sessions keep serving."""
+        with self._lock:
+            self.draining = True
 
     def start(self) -> None:
         """Start the dispatch loop (receive loops start per ``attach``)."""
@@ -458,7 +492,7 @@ class CloudVerifier:
         self._stop.set()
         with self._work:
             self._work.notify_all()
-        for s, (up, dn) in self.links.items():
+        for s, (up, dn) in list(self.links.items()):
             up.close()
         for t in self._threads:  # drain in-flight dispatch before reporting
             t.join(timeout=5.0)
@@ -526,8 +560,16 @@ class CloudVerifier:
                     # runs through the session-timeout path.
                     return
                 continue
-            sess = self.sessions[session]
+            with self._lock:
+                sess = self.sessions.get(session)
+                if sess is None or self.links.get(session, (None,))[0] is not up:
+                    # Detached, or superseded by a re-attach: late messages
+                    # on the old link must not touch the new session's state.
+                    return
             sess.last_seen = self.clock.monotonic()
+            if isinstance(msg, Drain):
+                self.drain()
+                continue
             if isinstance(msg, DraftFragment):
                 rnd = msg.round
                 with self._lock:
@@ -589,14 +631,21 @@ class CloudVerifier:
                 # an in-process Hello still gets a well-formed reply).
                 dn.send(handshake_reply(msg, session=session))
             elif isinstance(msg, Detach):
-                # The client is done: drop buffered rounds and return the
-                # session's KV pages to the pool.
+                # The client is done: drop buffered rounds, return the
+                # session's KV pages to the pool, deregister the session, and
+                # end the receive loop.  (Migration sends this on the OLD
+                # verifier so its placement slot frees immediately.)
                 with self._lock:
+                    if self.sessions.get(session) is not sess:
+                        return  # superseded mid-handling; nothing to clean
                     sess.buffers.clear()
                     sess.buf_seqs.clear()
                     sess.pending_request = None
                     if self.kv_pool is not None and session in self.kv_pool.tables:
                         self.kv_pool.release(session)
+                    del self.sessions[session]
+                    self.links.pop(session, None)
+                return
             # Heartbeat (and anything unrecognized): last_seen was refreshed.
 
     # ----------------------------------------------------------- dispatch --

@@ -194,7 +194,11 @@ class Channel(Transport):
         with self._cv:
             while True:
                 now = self.clock.monotonic() - self._t0
-                if self._heap and self._heap[0][0] <= now:
+                # The 1ns slack absorbs float rounding between channels with
+                # different time origins (a mid-run channel forwarding to a
+                # t0=0 one can land a delivery time sub-ulp above ``now``,
+                # which a virtual clock could otherwise never advance past).
+                if self._heap and self._heap[0][0] <= now + 1e-9:
                     return heapq.heappop(self._heap)[2]
                 if self.closed:
                     return None
@@ -451,6 +455,11 @@ class SocketListener:
             conn.close()
             self.stats["rejected"] += 1
             return None
+        # Dead links release their session ids: a re-dial for the same
+        # session (router migration / client re-attach) is not a collision.
+        for t in [t for t in self.transports if t.closed]:
+            self.transports.remove(t)
+            self._sessions.discard(t.session)
         session = hello.session
         while session in self._sessions:  # collision: remap to the next free id
             session += 1
@@ -488,7 +497,13 @@ class SocketListener:
             if transport is None:
                 continue
             self.transports.append(transport)
-            self.on_session(transport.session, transport)
+            try:
+                self.on_session(transport.session, transport)
+            except Exception:
+                # Admission refusal (draining verifier, full fleet): hang up
+                # on this client; the listener keeps serving others.
+                transport.close()
+                self.stats["rejected"] += 1
 
     def close(self) -> None:
         """Stop accepting and close every accepted transport."""

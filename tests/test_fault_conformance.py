@@ -19,17 +19,21 @@ import pytest
 from repro.models.paged_kv import PagedKVPool
 from repro.runtime import (
     FAULT_MATRIX,
+    ROUTER_FAULT_MATRIX,
     Channel,
     ChannelConfig,
     CloudVerifier,
     EdgeClient,
     EdgeConfig,
     FaultScenario,
+    FleetFullError,
     LinkFaults,
+    LocalVerifier,
     OracleBackend,
     OracleDraft,
     OracleStream,
     Phase,
+    Router,
     VirtualClock,
     scenario_by_name,
 )
@@ -438,6 +442,189 @@ def test_dead_session_pages_released_on_timeout():
 
 
 # --------------------------------------------------------------------------- #
+# Router-layer conformance: control-plane faults never corrupt the stream
+# --------------------------------------------------------------------------- #
+
+ROUTER_SCENARIO_IDS = [s.name for s in ROUTER_FAULT_MATRIX]
+N_ROUTER_SESSIONS = 2
+N_ROUTER_TOKENS = 150
+
+
+def run_router_scenario(scenario, seed=7, n_tokens=N_ROUTER_TOKENS, verify_time=0.080):
+    """One seeded multi-verifier run under a router-fault schedule.
+
+    Returns (per-session streams, report).  The event controller replays the
+    scenario's crash/migrate/drain schedule on the virtual clock while every
+    client decodes to ``n_tokens``.
+    """
+    clock = VirtualClock()
+    fleet = []
+    for vid in range(scenario.n_verifiers):
+        pool = PagedKVPool(128, 16, bytes_per_token=1024)
+        v = CloudVerifier(
+            OracleBackend(seed=seed, clock=clock, verify_time=verify_time),
+            batch_window=0.01,
+            clock=clock,
+            kv_pool=pool,
+            kv_shared_prefix=16,
+        )
+        v.start()
+        fleet.append(LocalVerifier(vid, v, clock=clock))
+    router = Router(fleet, clock=clock)
+    clients = []
+    for sid in range(N_ROUTER_SESSIONS):
+        up = Channel(ChannelConfig(alpha=0.02, beta=0.002), f"up{sid}", clock=clock)
+        dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005), f"dn{sid}", clock=clock)
+        router.attach(sid, up, dn)
+        clients.append(
+            EdgeClient(sid, up, dn, _edge_cfg(), draft=OracleDraft(seed=seed))
+        )
+
+    def controller():
+        for ev in scenario.events:
+            clock.sleep(max(0.0, ev.t - clock.monotonic()))
+            if ev.kind == "crash":
+                fleet[ev.verifier].crash()
+            elif ev.kind == "migrate":
+                try:
+                    router.migrate(ev.session, dst=(ev.dst if ev.dst >= 0 else None))
+                except FleetFullError:
+                    pass  # nowhere to go: the session rides out the fault
+            elif ev.kind == "drain":
+                router.drain_verifier(ev.verifier)
+
+    def body():
+        ctl = clock.spawn(controller, name="ctl")
+        handles = [
+            clock.spawn(lambda c=c: c.run(n_tokens), name=f"cli-{c.session}")
+            for c in clients
+        ]
+        out = []
+        for h in handles:
+            h.join()
+            out.append(h.result())
+        ctl.join()
+        router.stop()
+        for vc in fleet:
+            if vc.alive:
+                vc.stop()
+        return out
+
+    stats = clock.run(body)
+    report = dict(
+        stats=stats,
+        router_stats=dict(router.stats),
+        end_time=clock.monotonic(),
+    )
+    return [list(c.tokens) for c in clients], report
+
+
+@pytest.fixture(scope="module")
+def router_fault_free():
+    streams, report = run_router_scenario(ROUTER_FAULT_MATRIX[0])
+    for stream in streams:
+        assert stream == OracleStream(7).prefix(len(stream))
+    assert report["router_stats"]["verifier_crashes"] == 0
+    return streams, report
+
+
+@pytest.mark.parametrize("scenario", ROUTER_FAULT_MATRIX, ids=ROUTER_SCENARIO_IDS)
+def test_router_streams_bit_identical_under_control_plane_faults(
+    scenario, router_fault_free
+):
+    """Crash/migrate/drain mid-stream: every session's committed stream stays
+    bit-identical to the fault-free run (and the oracle)."""
+    ref_streams, _ = router_fault_free
+    streams, report = run_router_scenario(scenario)
+    for stream, ref in zip(streams, ref_streams):
+        n = min(len(stream), len(ref))
+        assert n >= N_ROUTER_TOKENS
+        assert stream[:n] == ref[:n]
+    # The scheduled faults must actually have fired.
+    rs = report["router_stats"]
+    kinds = {ev.kind for ev in scenario.events}
+    if "crash" in kinds:
+        assert rs["verifier_crashes"] >= 1
+        assert rs["failover_migrations"] >= 1
+    if "migrate" in kinds:
+        assert rs["migrations"] >= 1
+    if "drain" in kinds:
+        assert rs["drains"] >= 1
+
+
+@pytest.mark.parametrize("scenario", ROUTER_FAULT_MATRIX, ids=ROUTER_SCENARIO_IDS)
+def test_router_runs_are_bit_reproducible(scenario):
+    """Same seed -> identical streams, stats, and virtual end time."""
+    a = run_router_scenario(scenario, seed=3)
+    b = run_router_scenario(scenario, seed=3)
+    assert a == b
+
+
+def test_migration_during_inflight_nav_is_bit_identical():
+    """Migrate while a 1s verify is in flight on the source: the replayed
+    round completes on the destination with the same committed stream."""
+    scenario = next(s for s in ROUTER_FAULT_MATRIX if s.name == "migrate_midstream")
+    streams, report = run_router_scenario(scenario, verify_time=1.0, n_tokens=40)
+    for stream in streams:
+        assert len(stream) >= 40
+        assert stream == OracleStream(7).prefix(len(stream))
+    assert report["router_stats"]["migrations"] >= 1
+
+
+def test_router_restart_midstream_is_bit_identical():
+    """Kill the router mid-stream, adopt every live session into a fresh one
+    from a snapshot: the committed streams stay oracle-exact."""
+    seed = 7
+    clock = VirtualClock()
+    fleet = []
+    for vid in range(2):
+        v = CloudVerifier(
+            OracleBackend(seed=seed, clock=clock), batch_window=0.01, clock=clock
+        )
+        v.start()
+        fleet.append(LocalVerifier(vid, v, clock=clock))
+    router1 = Router(fleet, clock=clock, name="router1")
+    clients = []
+    for sid in range(N_ROUTER_SESSIONS):
+        up = Channel(ChannelConfig(alpha=0.02, beta=0.002), f"up{sid}", clock=clock)
+        dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005), f"dn{sid}", clock=clock)
+        router1.attach(sid, up, dn)
+        clients.append(
+            EdgeClient(sid, up, dn, _edge_cfg(), draft=OracleDraft(seed=seed))
+        )
+    routers = [router1]
+
+    def controller():
+        clock.sleep(1.2)
+        snap = router1.snapshot()
+        router1.stop()  # detaches the fleet; client links stay open
+        router2 = Router(fleet, clock=clock, name="router2")
+        routers.append(router2)
+        for c in clients:
+            pos, rnd = snap[c.session]
+            router2.adopt(c.session, c.up, c.dn, position=pos, round_id=rnd)
+
+    def body():
+        ctl = clock.spawn(controller, name="ctl")
+        handles = [
+            clock.spawn(lambda c=c: c.run(N_ROUTER_TOKENS), name=f"cli-{c.session}")
+            for c in clients
+        ]
+        for h in handles:
+            h.join()
+        ctl.join()
+        routers[-1].stop()
+        for vc in fleet:
+            vc.stop()
+
+    clock.run(body)
+    assert len(routers) == 2
+    for c in clients:
+        assert len(c.tokens) >= N_ROUTER_TOKENS
+        assert c.tokens == OracleStream(seed).prefix(len(c.tokens))
+
+
+# --------------------------------------------------------------------------- #
 # The no-wall-clock guard: every runtime hot path runs on the injected clock
 # --------------------------------------------------------------------------- #
 
@@ -452,11 +639,15 @@ def test_runtime_has_no_wall_clock_reads():
         r"|^\s*import time\b|^\s*from time\b",
         re.MULTILINE,
     )
+    scanned = set()
     offenders = {}
     for path in sorted(runtime_dir.glob("*.py")):
         if path.name == "simclock.py":  # the one place wall time may live
             continue
+        scanned.add(path.name)
         hits = banned.findall(path.read_text())
         if hits:
             offenders[path.name] = hits
+    # The control-plane modules must be inside the guard's net.
+    assert {"router.py", "placement.py", "scaling.py"} <= scanned
     assert not offenders, f"wall-clock/thread primitives on runtime hot paths: {offenders}"

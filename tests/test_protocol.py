@@ -21,12 +21,15 @@ from repro.runtime.protocol import (
     Attach,
     Detach,
     DraftFragment,
+    Drain,
     Heartbeat,
     Hello,
+    Migrate,
     NavRequest,
     NavResult,
     ProtocolError,
     Reset,
+    Route,
     TreeNavRequest,
     decode,
     encode,
@@ -57,6 +60,9 @@ EXAMPLES = [
     Reset(session=1, seq=2, round=3, position=0),
     Detach(session=8),
     Heartbeat(session=2, seq=9, t_send=123.456),
+    Route(session=4, seq=1, verifier=2),
+    Migrate(session=4, seq=2, src=0, dst=3, position=97),
+    Drain(verifier=1),  # session defaults to -1: not session-scoped
 ]
 
 
@@ -85,7 +91,7 @@ def test_wire_tokens_matches_link_cost_contract():
     assert wire_tokens(NavResult(0, 1, n_accepted=5, correction=0, n_drafted=6)) == 5
     assert wire_tokens(NavResult(0, 1, n_accepted=0, correction=0, n_drafted=6)) == 1
     for msg in (Hello(0), Attach(0), NavRequest(0, 1, 2, 3), Reset(0, 1, 2, 3),
-                Detach(0), Heartbeat(0)):
+                Detach(0), Heartbeat(0), Route(0), Migrate(0), Drain()):
         assert wire_tokens(msg) == 1
 
 
@@ -126,6 +132,11 @@ _STRATEGIES = {
     Reset: st.builds(Reset, session=_i64, seq=_i64, round=_i64, position=_i64),
     Detach: st.builds(Detach, session=_i64, seq=_i64),
     Heartbeat: st.builds(Heartbeat, session=_i64, seq=_i64, t_send=_f64),
+    Route: st.builds(Route, session=_i64, seq=_i64, verifier=_i64),
+    Migrate: st.builds(
+        Migrate, session=_i64, seq=_i64, src=_i64, dst=_i64, position=_i64,
+    ),
+    Drain: st.builds(Drain, session=_i64, seq=_i64, verifier=_i64),
 }
 
 
@@ -212,11 +223,15 @@ def test_no_raw_message_construction_outside_protocol():
         r"""|\.payload\.get\(""",  # dict payload probing
     )
     offenders = {}
+    scanned = set()
     for sub in ("src", "tests", "benchmarks", "examples", "launch"):
         for path in sorted((root / sub).rglob("*.py")):
             if path.name == "protocol.py":
                 continue
+            scanned.add(path.name)
             hits = banned.findall(path.read_text())
             if hits:
                 offenders[str(path.relative_to(root))] = hits
+    # The control-plane modules must be inside the guard's net.
+    assert {"router.py", "placement.py", "scaling.py"} <= scanned
     assert not offenders, f"raw message payloads outside protocol.py: {offenders}"

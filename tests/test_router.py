@@ -1,0 +1,603 @@
+"""Multi-verifier control plane: placement/scaling units + router integration.
+
+Three layers, mirroring the control plane's structure:
+
+* **placement policy** (pure): least-loaded selection, KV-budget tiebreaks,
+  admission refusal, drain exclusion — plus a hypothesis property that
+  placement NEVER admits a session onto a verifier without the required
+  free-block budget, under random arrival/departure sequences;
+* **scaling policy** (pure): threshold triggers, cooldown gating, bounds;
+* **router integration** on the virtual clock: spreading, live migration
+  mid-NAV, crash failover, drain, restart/adopt, client re-attach, and
+  autoscaling — every run asserting the committed stream stays oracle-exact
+  (the conformance suite extends these to the full fault matrix).
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.paged_kv import PagedKVPool
+from repro.runtime import (
+    AutoScaler,
+    Channel,
+    ChannelConfig,
+    CloudVerifier,
+    EdgeClient,
+    EdgeConfig,
+    FleetFullError,
+    LeastLoadedPlacement,
+    LocalVerifier,
+    OracleBackend,
+    OracleDraft,
+    OracleStream,
+    Router,
+    ScalingConfig,
+    VerifierDraining,
+    VerifierLoad,
+    VirtualClock,
+)
+
+ROOT = Path(__file__).parent.parent
+
+
+# --------------------------------------------------------------------------- #
+# Placement policy (pure)
+# --------------------------------------------------------------------------- #
+
+
+def test_least_loaded_prefers_fewest_sessions():
+    policy = LeastLoadedPlacement()
+    loads = [
+        VerifierLoad(verifier=0, sessions=3),
+        VerifierLoad(verifier=1, sessions=1),
+        VerifierLoad(verifier=2, sessions=2),
+    ]
+    assert policy.place(loads) == 1
+
+
+def test_queue_depth_breaks_session_ties():
+    policy = LeastLoadedPlacement()
+    loads = [
+        VerifierLoad(verifier=0, sessions=2, queue_depth=5.0),
+        VerifierLoad(verifier=1, sessions=2, queue_depth=1.0),
+    ]
+    assert policy.place(loads) == 1
+
+
+def test_kv_free_blocks_break_remaining_ties():
+    policy = LeastLoadedPlacement()
+    loads = [
+        VerifierLoad(verifier=0, sessions=2, free_blocks=4, capacity_blocks=32),
+        VerifierLoad(verifier=1, sessions=2, free_blocks=20, capacity_blocks=32),
+    ]
+    assert policy.place(loads, need_blocks=2) == 1
+
+
+def test_admission_refused_without_kv_budget():
+    policy = LeastLoadedPlacement()
+    loads = [
+        VerifierLoad(verifier=0, sessions=0, free_blocks=1, capacity_blocks=8),
+        VerifierLoad(verifier=1, sessions=0, free_blocks=0, capacity_blocks=8),
+    ]
+    assert policy.place(loads, need_blocks=2) is None
+    assert policy.place(loads, need_blocks=1) == 0
+
+
+def test_draining_and_dead_verifiers_never_admit():
+    policy = LeastLoadedPlacement()
+    loads = [
+        VerifierLoad(verifier=0, sessions=0, draining=True),
+        VerifierLoad(verifier=1, sessions=9),
+        VerifierLoad(verifier=2, sessions=0, alive=False),
+    ]
+    assert policy.place(loads) == 1  # busiest, but the only admissible one
+    assert policy.place([loads[0], loads[2]]) is None
+
+
+def test_unbounded_verifiers_ignore_block_budget():
+    policy = LeastLoadedPlacement()
+    loads = [VerifierLoad(verifier=0, sessions=5, free_blocks=None)]
+    assert policy.place(loads, need_blocks=10_000) == 0
+
+
+@settings(deadline=None, max_examples=80)
+@given(data=st.data())
+def test_placement_never_exceeds_free_block_budget(data):
+    """Property: under random arrivals/departures, a placed session always
+    lands on a verifier whose free-block budget covers it, and no verifier's
+    modelled free count ever goes negative."""
+    policy = LeastLoadedPlacement()
+    n_verifiers = data.draw(st.integers(1, 5), label="n_verifiers")
+    capacity = data.draw(st.integers(1, 24), label="capacity")
+    need = data.draw(st.integers(1, 6), label="need_blocks")
+    free = {v: capacity for v in range(n_verifiers)}
+    sessions = {v: 0 for v in range(n_verifiers)}
+    placed = []  # list of verifier ids, one per live session
+    steps = data.draw(
+        st.lists(st.sampled_from(["arrive", "depart"]), max_size=40),
+        label="steps",
+    )
+    for step in steps:
+        if step == "arrive":
+            loads = [
+                VerifierLoad(
+                    verifier=v,
+                    sessions=sessions[v],
+                    free_blocks=free[v],
+                    capacity_blocks=capacity,
+                )
+                for v in range(n_verifiers)
+            ]
+            vid = policy.place(loads, need_blocks=need)
+            if vid is None:
+                # Refusal must mean NO verifier had the budget.
+                assert all(free[v] < need for v in range(n_verifiers))
+                continue
+            assert free[vid] >= need  # the budget invariant
+            free[vid] -= need
+            sessions[vid] += 1
+            placed.append(vid)
+        elif placed:
+            vid = placed.pop(data.draw(st.integers(0, len(placed) - 1)))
+            free[vid] += need
+            sessions[vid] -= 1
+        assert all(f >= 0 for f in free.values())
+
+
+# --------------------------------------------------------------------------- #
+# Scaling policy (pure)
+# --------------------------------------------------------------------------- #
+
+
+def _scaler(**kw):
+    base = dict(min_verifiers=1, max_verifiers=4, sessions_high=4.0,
+                queue_high=3.0, cooldown=1.0)
+    base.update(kw)
+    return AutoScaler(ScalingConfig(**base))
+
+
+def test_scaler_scales_up_on_queue_depth():
+    s = _scaler()
+    loads = [VerifierLoad(verifier=0, sessions=2, queue_depth=5.0)]
+    assert s.decide(loads, now=0.0).action == "up"
+
+
+def test_scaler_scales_up_on_occupancy():
+    s = _scaler()
+    loads = [VerifierLoad(verifier=0, sessions=9)]
+    assert s.decide(loads, now=0.0).action == "up"
+
+
+def test_scaler_cooldown_gates_consecutive_decisions():
+    s = _scaler(cooldown=2.0)
+    loads = [VerifierLoad(verifier=0, sessions=9)]
+    assert s.decide(loads, now=0.0).action == "up"
+    assert s.decide(loads, now=1.0).action == "hold"  # inside the cooldown
+    assert s.decide(loads, now=2.5).action == "up"
+
+
+def test_scaler_scales_down_draining_least_loaded():
+    s = _scaler()
+    loads = [
+        VerifierLoad(verifier=0, sessions=1),
+        VerifierLoad(verifier=1, sessions=0),
+    ]
+    d = s.decide(loads, now=0.0)
+    assert d.action == "down" and d.drain == 1
+
+
+def test_scaler_respects_min_and_max_bounds():
+    s = _scaler(max_verifiers=1)
+    assert s.decide([VerifierLoad(verifier=0, sessions=50)], now=0.0).action == "hold"
+    s = _scaler(min_verifiers=1)
+    assert s.decide([VerifierLoad(verifier=0, sessions=0)], now=0.0).action == "hold"
+
+
+# --------------------------------------------------------------------------- #
+# Router integration on the virtual clock
+# --------------------------------------------------------------------------- #
+
+SEED = 7
+
+
+def _make_fleet(clock, n, seed=SEED, verify_time=0.080, pool_blocks=128):
+    """N oracle verifiers with small paged pools, wrapped as fleet members."""
+    members = []
+    for vid in range(n):
+        pool = PagedKVPool(pool_blocks, 16, bytes_per_token=1024)
+        v = CloudVerifier(
+            OracleBackend(seed=seed, clock=clock, verify_time=verify_time),
+            batch_window=0.01,
+            clock=clock,
+            kv_pool=pool,
+            kv_shared_prefix=16,
+        )
+        v.start()
+        members.append(LocalVerifier(vid, v, clock=clock))
+    return members
+
+
+def _make_client(clock, router, sid, seed=SEED, **cfg_kw):
+    """One edge client attached through the router over faultless channels."""
+    up = Channel(ChannelConfig(alpha=0.02, beta=0.002), f"up{sid}", clock=clock)
+    dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005), f"dn{sid}", clock=clock)
+    router.attach(sid, up, dn)
+    base = dict(gamma=0.02, nav_timeout=5.0, backoff_init=0.05, backoff_max=0.4)
+    base.update(cfg_kw)
+    return EdgeClient(sid, up, dn, EdgeConfig(**base), draft=OracleDraft(seed=seed))
+
+
+def _run_clients(clock, clients, n_tokens, teardown):
+    """Drive every client to ``n_tokens`` accepted; returns their stats."""
+    def body():
+        handles = [
+            clock.spawn(lambda c=c: c.run(n_tokens), name=f"cli-{c.session}")
+            for c in clients
+        ]
+        out = [(h.join(), h.result())[1] for h in handles]
+        teardown()
+        return out
+
+    return clock.run(body)
+
+
+def test_router_spreads_sessions_and_serves_oracle_streams():
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2)
+    router = Router(fleet, clock=clock)
+    clients = [_make_client(clock, router, sid) for sid in range(4)]
+
+    def teardown():
+        router.stop()
+        for vc in fleet:
+            vc.stop()
+
+    stats = _run_clients(clock, clients, 60, teardown)
+    # Least-loaded placement spreads 4 sessions 2/2.
+    placed = [rs.verifier for rs in router.sessions.values()]
+    assert sorted(placed) == [0, 0, 1, 1]
+    for c, st_ in zip(clients, stats):
+        assert st_["failovers"] == 0
+        assert st_["routes_seen"] >= 1  # the placement announcement arrived
+        assert c.tokens == OracleStream(SEED).prefix(len(c.tokens))
+
+
+def test_router_admission_refusal_when_fleet_full():
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2, pool_blocks=8)
+    router = Router(fleet, clock=clock, need_blocks=10_000)
+
+    def body():
+        up = Channel(ChannelConfig(), "up", clock=clock)
+        dn = Channel(ChannelConfig(), "dn", clock=clock)
+        with pytest.raises(FleetFullError):
+            router.attach(0, up, dn)
+        router.stop()
+        for vc in fleet:
+            vc.stop()
+
+    clock.run(body)
+    assert router.stats["admission_refusals"] == 1
+    assert router.stats["sessions_placed"] == 0
+
+
+def test_live_migration_during_inflight_nav_round():
+    """Migrate while the source verifier is mid-verify: the replayed round
+    completes on the destination and the stream stays oracle-exact."""
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2, verify_time=1.0)  # slow verify
+    router = Router(fleet, clock=clock)
+    client = _make_client(clock, router, 0, nav_timeout=10.0)
+
+    def teardown():
+        router.stop()
+        for vc in fleet:
+            vc.stop()
+
+    def events():
+        clock.sleep(0.8)  # round 1's NAV is now in flight on verifier 0
+        assert router.migrate(0, dst=1) == 1
+
+    def body():
+        ev = clock.spawn(events, name="events")
+        h = clock.spawn(lambda: client.run(40), name="cli")
+        h.join()
+        st_ = h.result()
+        ev.join()
+        # Before teardown: the source dropped the session, the dst serves it.
+        assert 0 not in fleet[0].verifier.sessions
+        assert 0 in fleet[1].verifier.sessions
+        teardown()
+        return st_
+
+    st_ = clock.run(body)
+    assert router.stats["migrations"] == 1
+    assert st_["migrations_seen"] >= 1
+    assert st_["failovers"] == 0  # the replay beat the NAV timeout
+    assert router.sessions[0].verifier == 1
+    assert client.tokens == OracleStream(SEED).prefix(len(client.tokens))
+
+
+def test_verifier_crash_fails_sessions_over():
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2)
+    router = Router(fleet, clock=clock)
+    clients = [_make_client(clock, router, sid) for sid in range(2)]
+    crashed = [rs.verifier for rs in router.sessions.values()][0]
+
+    def teardown():
+        router.stop()
+        for vc in fleet:
+            if vc.alive:
+                vc.stop()
+
+    def events():
+        clock.sleep(1.1)
+        fleet[crashed].crash()
+
+    def body():
+        ev = clock.spawn(events, name="events")
+        handles = [clock.spawn(lambda c=c: c.run(60), name=f"cli-{c.session}") for c in clients]
+        out = [(h.join(), h.result())[1] for h in handles]
+        ev.join()
+        teardown()
+        return out
+
+    clock.run(body)
+    assert router.stats["verifier_crashes"] == 1
+    assert router.stats["failover_migrations"] >= 1
+    survivor = 1 - crashed
+    for c in clients:
+        assert c.tokens == OracleStream(SEED).prefix(len(c.tokens))
+        assert router.sessions[c.session].verifier == survivor
+
+
+def test_drain_migrates_sessions_and_refuses_new_placements():
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2)
+    router = Router(fleet, clock=clock)
+    clients = [_make_client(clock, router, sid) for sid in range(2)]
+
+    def teardown():
+        router.stop()
+        for vc in fleet:
+            vc.stop()
+
+    def events():
+        clock.sleep(1.0)
+        moved = router.drain_verifier(0)
+        assert moved == 1  # its one session went to verifier 1
+        # A drained verifier refuses direct attaches too (server-side drain).
+        with pytest.raises(VerifierDraining):
+            fleet[0].verifier.attach(99, Channel(ChannelConfig(), clock=clock),
+                                     Channel(ChannelConfig(), clock=clock))
+        # ... and the router never places on it again.
+        c = _make_client(clock, router, 7)
+        assert router.sessions[7].verifier == 1
+        return c
+
+    def body():
+        ev = clock.spawn(events, name="events")
+        handles = [clock.spawn(lambda c=c: c.run(60), name=f"cli-{c.session}") for c in clients]
+        ev.join()
+        late = ev.result()
+        h_late = clock.spawn(lambda: late.run(30), name="cli-late")
+        for h in handles:
+            h.join()
+        h_late.join()
+        teardown()
+        return late
+
+    late = clock.run(body)
+    assert router.stats["drains"] == 1 and router.stats["migrations"] == 1
+    for c in clients + [late]:
+        assert c.tokens == OracleStream(SEED).prefix(len(c.tokens))
+        assert router.sessions[c.session].verifier == 1
+
+
+def test_router_restart_adopts_live_sessions():
+    """stop() + snapshot() + a fresh router's adopt(): serving resumes on the
+    same client links and the stream stays oracle-exact."""
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2)
+    router1 = Router(fleet, clock=clock, name="router1")
+    clients = [_make_client(clock, router1, sid, nav_timeout=0.4) for sid in range(2)]
+    routers = [router1]
+
+    def events():
+        clock.sleep(1.2)
+        snap = router1.snapshot()
+        router1.stop()  # detaches the fleet; client links stay open
+        router2 = Router(fleet, clock=clock, name="router2")
+        routers.append(router2)
+        for c in clients:
+            pos, rnd = snap[c.session]
+            router2.adopt(c.session, c.up, c.dn, position=pos, round_id=rnd)
+
+    def body():
+        ev = clock.spawn(events, name="events")
+        handles = [clock.spawn(lambda c=c: c.run(80), name=f"cli-{c.session}") for c in clients]
+        out = [(h.join(), h.result())[1] for h in handles]
+        ev.join()
+        routers[-1].stop()
+        for vc in fleet:
+            vc.stop()
+        return out
+
+    clock.run(body)
+    assert len(routers) == 2
+    assert routers[1].stats["sessions_placed"] == 2
+    for c in clients:
+        assert c.tokens == OracleStream(SEED).prefix(len(c.tokens))
+
+
+def test_client_reconnect_reattaches_to_new_verifier():
+    """A severed client link + the reconnect hook: the client re-dials a
+    fresh verifier, announces its position via Reset, and the stream stays
+    oracle-exact across the re-attach."""
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2)
+    va, vb = fleet[0].verifier, fleet[1].verifier
+
+    up = Channel(ChannelConfig(alpha=0.02, beta=0.002), "up", clock=clock)
+    dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005), "dn", clock=clock)
+    va.attach(0, up, dn)
+
+    def reconnect():
+        nu = Channel(ChannelConfig(alpha=0.02, beta=0.002), "up2", clock=clock)
+        nd = Channel(ChannelConfig(alpha=0.01, beta=0.0005), "dn2", clock=clock)
+        vb.attach(0, nu, nd)
+        return nu, nd
+
+    client = EdgeClient(
+        0, up, dn,
+        EdgeConfig(gamma=0.02, nav_timeout=0.4, backoff_init=0.05, backoff_max=0.4),
+        draft=OracleDraft(seed=SEED),
+        reconnect=reconnect,
+    )
+
+    def events():
+        clock.sleep(1.0)
+        up.close()  # verifier A's host died: both directions sever
+        dn.close()
+
+    def body():
+        ev = clock.spawn(events, name="events")
+        st_ = client.run(80)
+        ev.join()
+        for vc in fleet:
+            vc.stop()
+        return st_
+
+    st_ = clock.run(body)
+    assert st_["reattaches"] == 1
+    assert st_["failovers"] >= 1
+    assert client.tokens == OracleStream(SEED).prefix(len(client.tokens))
+    assert 0 in vb.sessions  # serving moved to the new verifier
+
+
+def test_autoscaler_grows_fleet_under_load():
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 1)
+    spawned = []
+
+    def make_verifier(vid):
+        vc = _make_fleet(clock, 1, verify_time=0.080)[0]
+        vc.verifier_id = vid
+        spawned.append(vc)
+        return vc
+
+    router = Router(
+        fleet,
+        clock=clock,
+        scaler=AutoScaler(ScalingConfig(
+            min_verifiers=1, max_verifiers=3, sessions_high=2.0,
+            queue_high=2.0, cooldown=0.5,
+            # Loaded enough that shrink never triggers mid-run.
+            sessions_low_factor=0.0,
+        )),
+        make_verifier=make_verifier,
+        control_interval=0.25,
+    )
+    clients = [_make_client(clock, router, sid) for sid in range(6)]
+
+    def body():
+        router.start()
+        handles = [clock.spawn(lambda c=c: c.run(60), name=f"cli-{c.session}") for c in clients]
+        out = [(h.join(), h.result())[1] for h in handles]
+        router.stop()
+        for vc in fleet + spawned:
+            vc.stop()
+        return out
+
+    clock.run(body)
+    assert router.stats["scale_ups"] >= 1
+    assert len(router.fleet) >= 2
+    for c in clients:
+        assert c.tokens == OracleStream(SEED).prefix(len(c.tokens))
+
+
+def test_autoscaler_retires_idle_verifier():
+    clock = VirtualClock()
+    fleet = _make_fleet(clock, 2)
+    router = Router(
+        fleet,
+        clock=clock,
+        scaler=AutoScaler(ScalingConfig(
+            min_verifiers=1, max_verifiers=2, sessions_high=8.0,
+            queue_high=50.0, cooldown=0.5,
+        )),
+        control_interval=0.25,
+    )
+    client = _make_client(clock, router, 0)
+
+    def body():
+        router.start()
+        st_ = client.run(60)
+        router.stop()
+        for vc in fleet:
+            vc.stop()
+        return st_
+
+    clock.run(body)
+    assert router.stats["scale_downs"] == 1
+    assert len(router.fleet) == 1  # the idle member was drained and retired
+    assert router.sessions[0].verifier in router.fleet
+    assert client.tokens == OracleStream(SEED).prefix(len(client.tokens))
+
+
+# --------------------------------------------------------------------------- #
+# Two-verifier multi-process smoke (the CI router-smoke job's shape)
+# --------------------------------------------------------------------------- #
+
+
+def test_router_two_process_fleet_streams_through_migrations():
+    """launch/serve.py as router + 2 verifier processes: 64 tokens streamed
+    through forced migrations still match the oracle."""
+    serve = ROOT / "launch" / "serve.py"
+
+    def spawn(args):
+        return subprocess.Popen(
+            [sys.executable, str(serve), *args],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        )
+
+    def port_of(proc):
+        line = proc.stdout.readline()
+        assert line.startswith("LISTENING "), line
+        return int(line.strip().rsplit(":", 1)[1])
+
+    v1 = spawn(["--listen", "127.0.0.1:0", "--sessions", "0", "--seed", "11"])
+    v2 = spawn(["--listen", "127.0.0.1:0", "--sessions", "0", "--seed", "11"])
+    router = None
+    try:
+        p1, p2 = port_of(v1), port_of(v2)
+        router = spawn([
+            "--router", "127.0.0.1:0",
+            "--verifier", f"127.0.0.1:{p1}", "--verifier", f"127.0.0.1:{p2}",
+            "--migrate-every", "0.3", "--sessions", "1", "--seed", "11",
+        ])
+        rp = port_of(router)
+        out = subprocess.run(
+            [sys.executable, str(serve), "--connect", f"127.0.0.1:{rp}",
+             "--tokens", "64", "--seed", "11", "--check-oracle"],
+            capture_output=True, text=True, timeout=120,
+        )
+        assert out.returncode == 0, out.stderr
+        stream = [int(x) for x in out.stdout.split()]
+        assert stream == OracleStream(11).prefix(64)
+        assert router.wait(timeout=30) == 0
+        summary = router.stdout.read()
+        assert "ROUTED" in summary, summary
+        migrations = int(summary.split("migrations=")[1].split()[0])
+        assert migrations >= 1  # the stream really crossed a migration
+    finally:
+        for proc in (v1, v2, router):
+            if proc is not None and proc.poll() is None:
+                proc.kill()
+                proc.wait()

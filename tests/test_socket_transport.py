@@ -151,7 +151,14 @@ def test_rx_loop_exits_when_socket_peer_disconnects(server):
     verifier, listener = server
     transport = connect_transport(listener.host, listener.port, session=2)
     transport.close()
-    rx = next(t for t in verifier._threads if t.name == f"rx-{transport.session}")
+    # The accept loop registers the session asynchronously — wait for it.
+    name = f"rx-{transport.session}"
+    for _ in range(200):
+        rx = next((t for t in verifier._threads if t.name == name), None)
+        if rx is not None:
+            break
+        time.sleep(0.02)
+    assert rx is not None
     rx.join(timeout=5.0)
     assert not rx.is_alive()
 

@@ -93,14 +93,37 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.3f},{derived}"
 
 
+def round_metrics(rows: list, ndigits: int = 6):
+    """Round every float in a list of benchmark row dicts to ``ndigits``.
+
+    Committed BENCH_*.json files are diffed across commits; raw floats
+    carry ~1-ulp noise from summation order (e.g. virtual-clock quantile
+    math emitting ``1007.5000000000074``) that turns every regeneration
+    into a spurious diff.  Six digits is far below any tolerance the CI
+    bench-diff applies, and far above the noise floor.
+    """
+
+    def _round(v):
+        if isinstance(v, float):
+            return round(v, ndigits)
+        if isinstance(v, dict):
+            return {k: _round(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [_round(x) for x in v]
+        return v
+
+    return [_round(r) for r in rows]
+
+
 def write_bench_json(area: str, rows: list, root: Optional[Path] = None) -> Path:
     """Commit a benchmark's rows as ``BENCH_<area>.json`` at the repo root.
 
     The file is the stable, diffable record of a deterministic benchmark
     (virtual clock + seeded everything): re-running the bench on any host
     must reproduce it byte-for-byte, which is what makes it safe to commit.
+    Floats are rounded (``round_metrics``) so regeneration is noise-free.
     """
     out = (root or Path(__file__).resolve().parent.parent) / f"BENCH_{area}.json"
-    payload = {"version": 1, "area": area, "rows": rows}
+    payload = {"version": 1, "area": area, "rows": round_metrics(rows)}
     out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return out

@@ -12,12 +12,41 @@ from .common import csv_row
 RESULTS_DIR = Path(__file__).parent.parent / "dryrun_results"
 
 
+def _fused_verify_rows() -> Tuple[list, List[str]]:
+    """Single-launch fused verify vs the two-launch composition on the HBM
+    roofline — same traffic model as ``kernel_bench``, surfaced here so the
+    roofline table shows the launch-count claim next to the dryrun cells."""
+    from .kernel_bench import GEOM, LAUNCH_S, _verify_traffic
+
+    from repro.roofline.hw import HBM_BW
+
+    rows, lines = [], []
+    base = None
+    for variant in ("composed", "fused"):
+        m = _verify_traffic(variant)
+        t = m["bytes"] / HBM_BW + m["launches"] * LAUNCH_S
+        base = base or t
+        rows.append(dict(
+            arch="v5e", shape=f"spec_verify/{variant}", dominant="memory",
+            launches=m["launches"], modeled_us=round(t * 1e6, 3),
+            speedup_vs_composed=round(base / t, 4),
+        ))
+        lines.append(csv_row(
+            f"roofline/spec_verify/{variant}", t * 1e6,
+            f"launches={m['launches']};B={GEOM['batch']};K={GEOM['k_draft']};"
+            f"bytes={m['bytes']};speedup={base / t:.2f}x",
+        ))
+    return rows, lines
+
+
 def roofline() -> Tuple[list, List[str]]:
+    fv_rows, fv_lines = _fused_verify_rows()
     rows, lines = [], []
     if not RESULTS_DIR.exists():
-        return [dict(note="dryrun_results/ missing — run repro.launch.dryrun --all")], [
-            csv_row("roofline/missing", 0.0, "run_dryrun_first")
-        ]
+        return (
+            [dict(note="dryrun_results/ missing — run repro.launch.dryrun --all")] + fv_rows,
+            [csv_row("roofline/missing", 0.0, "run_dryrun_first")] + fv_lines,
+        )
     cells = roofline_table(RESULTS_DIR, mesh="pod")
     for c in cells:
         rows.append(dict(arch=c.arch, shape=c.shape, dominant=c.dominant,
@@ -31,4 +60,4 @@ def roofline() -> Tuple[list, List[str]]:
             f"dominant={c.dominant};frac={c.roofline_fraction():.3f};useful={c.useful_ratio:.2f};"
             f"compute={c.compute_corrected_s*1e3:.2f}ms;mem={c.memory_s*1e3:.2f}ms;coll={c.collective_s*1e3:.2f}ms",
         ))
-    return rows, lines
+    return rows + fv_rows, lines + fv_lines

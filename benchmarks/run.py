@@ -16,13 +16,21 @@ import time
 def main() -> None:
     from .common import write_bench_json
     from .fleet_bench import chaos, fleet, router
+    from .kernel_bench import kernels
     from .roofline_bench import roofline
     from .tables import ALL_TABLES
 
-    extras = {"roofline": roofline, "fleet": fleet, "chaos": chaos, "router": router}
+    extras = {
+        "roofline": roofline,
+        "fleet": fleet,
+        "chaos": chaos,
+        "router": router,
+        "kernels": kernels,
+    }
     # Deterministic benches whose rows are committed as BENCH_<area>.json
-    # (the router sweep runs on a virtual clock: same rows on every host).
-    committed = {"router": "fleet"}
+    # (the router sweep runs on a virtual clock; the kernel rows are pool
+    # accounting + a roofline traffic model: same rows on every host).
+    committed = {"router": "fleet", "kernels": "kernels"}
     wanted = sys.argv[1:] or list(ALL_TABLES) + list(extras)
     print("name,us_per_call,derived")
     t_start = time.time()

@@ -1,14 +1,27 @@
 from . import ops, ref
-from .kernel import decode_attention_pallas, paged_decode_attention_pallas
+from .kernel import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+    paged_decode_attention_q8_pallas,
+)
 from .ops import decode_attention, paged_decode_attention
-from .ref import decode_attention_ref, paged_decode_attention_ref, paged_gather
+from .ref import (
+    decode_attention_ref,
+    dequantize_pages,
+    paged_decode_attention_q8_ref,
+    paged_decode_attention_ref,
+    paged_gather,
+)
 
 __all__ = [
     "decode_attention",
     "decode_attention_pallas",
     "decode_attention_ref",
+    "dequantize_pages",
     "paged_decode_attention",
     "paged_decode_attention_pallas",
+    "paged_decode_attention_q8_pallas",
+    "paged_decode_attention_q8_ref",
     "paged_decode_attention_ref",
     "paged_gather",
     "ops",

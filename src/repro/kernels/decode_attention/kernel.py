@@ -19,8 +19,17 @@ runs — to DMA physical page ``table[b, g]`` where the flat kernel would load
 contiguous block ``g``.  With the page size matching the flat kernel's
 ``block_k``, the two kernels stream identical values in identical order, so
 their outputs are bit-exact (pinned by ``tests/test_paged_attention.py``).
-Pad table entries must hold valid page ids (the pool pads with 0); their
-positions sit past ``lengths`` and are masked like any dead slot.
+Pad table entries must hold valid page ids (the pool pads with its
+zero-filled sentinel page); their positions sit past ``lengths`` and are
+masked like any dead slot.
+
+**Int8 variant** (``paged_decode_attention_q8_pallas``): pages carry int8
+payload plus per-(slot, head) float32 ``scale``/``zero`` (affine over
+``head_dim``; ``models/paged_kv.py``).  The scale/zero pages ride the same
+block-table index map as the payload, and the kernel dequantizes in VMEM —
+``x_hat = (q + 128) * scale + zero`` — before the identical online-softmax
+math, so HBM traffic drops to ~1/4 + params while the arithmetic matches
+the fp32 kernel on the dequantized values bit-for-bit.
 """
 
 from __future__ import annotations
@@ -221,3 +230,128 @@ def paged_decode_attention_pallas(
         compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages, v_pages)
+
+
+def _paged_decode_q8_kernel(
+    bt_ref,  # [B, G] i32 scalar-prefetch
+    len_ref,  # [B] i32 scalar-prefetch
+    q_ref,  # [1, H, hd]
+    k_ref,  # [1, bs, H, hd] int8 — physical page bt[b, g]
+    v_ref,  # [1, bs, H, hd] int8
+    ks_ref,  # [1, bs, H] f32 scale
+    kz_ref,  # [1, bs, H] f32 zero
+    vs_ref,  # [1, bs, H] f32
+    vz_ref,  # [1, bs, H] f32
+    o_ref,  # [1, H, hd]
+    m_scr,  # [H] f32
+    l_scr,  # [H] f32
+    acc_scr,  # [H, hd] f32
+    *,
+    sm_scale: float,
+    window: int,
+    bs: int,
+    ng: int,
+):
+    b, g = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, hd]
+    # In-VMEM affine dequant: x_hat = (int8 + 128) * scale + zero, params
+    # broadcast over head_dim.  Matches PagedKVPool.dequantize_kv exactly.
+    k = (k_ref[0].astype(jnp.float32) + 128.0) * ks_ref[0][..., None] + kz_ref[0][..., None]
+    v = (v_ref[0].astype(jnp.float32) + 128.0) * vs_ref[0][..., None] + vz_ref[0][..., None]
+    s = jnp.einsum("hd,khd->hk", q, k) * sm_scale  # [H, bs]
+    length = len_ref[b]
+    k_pos = g * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = k_pos < length
+    valid = jnp.logical_and(valid, k_pos >= length - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.einsum("hk,khd->hd", p, v)
+    m_scr[...] = m_new
+
+    @pl.when(g == ng - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention_q8_pallas(
+    q: jax.Array,  # [B, H, hd]
+    k_pages: jax.Array,  # [P, bs, H, hd] int8  (GQA-expanded by the wrapper)
+    v_pages: jax.Array,
+    k_scale: jax.Array,  # [P, bs, H] f32 — affine params over head_dim
+    k_zero: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    block_tables: jax.Array,  # [B, G] i32 physical page ids
+    lengths: jax.Array,  # [B] i32
+    *,
+    window: int = 1 << 30,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged flash-decode over int8 pages with in-kernel affine dequant.
+
+    Same grid and DMA indirection as ``paged_decode_attention_pallas``; the
+    four quant-param planes ride the identical ``bt[b, g]`` index map so a
+    page's payload and parameters always arrive together.
+    """
+    B, H, hd = q.shape
+    P, bs, Hk, _ = k_pages.shape
+    if Hk != H:
+        raise ValueError(f"pages must be GQA-expanded: {Hk} heads vs {H} queries")
+    if k_pages.dtype != jnp.int8:
+        raise TypeError(f"q8 entry needs int8 pages, got {k_pages.dtype}")
+    G = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _paged_decode_q8_kernel, sm_scale=sm_scale, window=int(window), bs=bs, ng=G
+    )
+    page_spec = pl.BlockSpec((1, bs, H, hd), lambda b, g, bt, ln: (bt[b, g], 0, 0, 0))
+    param_spec = pl.BlockSpec((1, bs, H), lambda b, g, bt, ln: (bt[b, g], 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=(B, G),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, g, bt, ln: (b, 0, 0)),
+            page_spec,
+            page_spec,
+            param_spec,
+            param_spec,
+            param_spec,
+            param_spec,
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, g, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+        k_scale.astype(jnp.float32),
+        k_zero.astype(jnp.float32),
+        v_scale.astype(jnp.float32),
+        v_zero.astype(jnp.float32),
+    )

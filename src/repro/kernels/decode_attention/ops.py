@@ -21,8 +21,16 @@ import jax
 import jax.numpy as jnp
 
 from ..spec_verify.ops import pad_block_tables
-from .kernel import decode_attention_pallas, paged_decode_attention_pallas
-from .ref import decode_attention_ref, paged_decode_attention_ref
+from .kernel import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+    paged_decode_attention_q8_pallas,
+)
+from .ref import (
+    decode_attention_ref,
+    paged_decode_attention_q8_ref,
+    paged_decode_attention_ref,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "impl", "block_k"))
@@ -63,9 +71,28 @@ def _paged_dispatch(q, k_pages, v_pages, block_tables, lengths, *, window, impl)
     )
 
 
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def _paged_q8_dispatch(q, k_pages, v_pages, quant, block_tables, lengths, *, window, impl):
+    H = q.shape[1]
+    n_kv = k_pages.shape[2]
+    if n_kv != H:
+        k_pages = jnp.repeat(k_pages, H // n_kv, axis=2)
+        v_pages = jnp.repeat(v_pages, H // n_kv, axis=2)
+        quant = tuple(jnp.repeat(p, H // n_kv, axis=2) for p in quant)
+    ks, kz, vs, vz = quant
+    if impl == "ref":
+        return paged_decode_attention_q8_ref(
+            q, k_pages, v_pages, ks, kz, vs, vz, block_tables, lengths, window=window
+        )
+    return paged_decode_attention_q8_pallas(
+        q, k_pages, v_pages, ks, kz, vs, vz, block_tables, lengths,
+        window=window, interpret=(impl == "interpret"),
+    )
+
+
 def paged_decode_attention(
     q: jax.Array,  # [B, H, hd]
-    k_pages: jax.Array,  # [P, bs, Hkv, hd]
+    k_pages: jax.Array,  # [P, bs, Hkv, hd]  (int8 payload when quantized)
     v_pages: jax.Array,
     block_tables,  # [B, G] int32 array, or B ragged python page-id lists
     lengths: jax.Array,  # [B]
@@ -73,24 +100,35 @@ def paged_decode_attention(
     window: int = 1 << 30,
     impl: str = "interpret",
     bucket: bool = True,
+    quant=None,  # (k_scale, k_zero, v_scale, v_zero), each [P, bs, Hkv] f32
+    pad_page_id: int = 0,
 ) -> jax.Array:
     """Single-position decode attention gathered through KV block tables.
 
     ``block_tables`` may be a rectangular ``[B, G]`` int32 array (e.g. from
     ``PagedKVPool.table(sid, pad_to=G)``) or ragged per-lane page-id lists,
-    which are padded here with the serving bucketing (``pad_block_tables``).
-    Bit-exact vs the flat entry on the same logical cache: ``impl='ref'``
-    by construction (page gather + flat oracle), Pallas impls by streaming
-    pages in the flat kernel's block order (``tests/test_paged_attention.py``).
+    which are padded here with the serving bucketing (``pad_block_tables``)
+    using ``pad_page_id`` — pass the pool's ``sentinel_page`` so padded
+    lanes never DMA another session's pages.  Bit-exact vs the flat entry on
+    the same logical cache: ``impl='ref'`` by construction (page gather +
+    flat oracle), Pallas impls by streaming pages in the flat kernel's
+    block order (``tests/test_paged_attention.py``).
+
+    With ``quant`` (the pool's four affine-parameter planes), pages are
+    int8 and dequantized in-kernel; output error vs the fp32 cache is
+    bounded per ``docs/kernels.md`` §7.
     """
     if isinstance(block_tables, (list, tuple)):
-        block_tables = pad_block_tables(block_tables, batch_pad=len(block_tables), bucket=bucket)
+        block_tables = pad_block_tables(
+            block_tables, batch_pad=len(block_tables), bucket=bucket, pad_id=pad_page_id
+        )
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if quant is not None:
+        return _paged_q8_dispatch(
+            q, k_pages, v_pages, tuple(quant), block_tables, lengths,
+            window=window, impl=impl,
+        )
     return _paged_dispatch(
-        q,
-        k_pages,
-        v_pages,
-        jnp.asarray(block_tables, jnp.int32),
-        jnp.asarray(lengths, jnp.int32),
-        window=window,
-        impl=impl,
+        q, k_pages, v_pages, block_tables, lengths, window=window, impl=impl
     )

@@ -49,6 +49,38 @@ def paged_gather(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
     return flat.reshape(B, G * bs, H, hd)
 
 
+def dequantize_pages(pages: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+    """Affine-dequantize int8 pages to float32.
+
+    ``pages: [P, bs, H, hd]`` int8, ``scale/zero: [P, bs, H]`` f32 →
+    ``x_hat = (q + 128) * scale + zero``, the exact inverse the pool's
+    ``write`` quantizer targets (``models/paged_kv.py``) and the arithmetic
+    the q8 kernel performs in VMEM — so kernel-vs-ref parity on int8 pages
+    is bit-exact, while int8-vs-fp32 parity is bounded by ``scale / 2`` per
+    element.
+    """
+    return (pages.astype(jnp.float32) + 128.0) * scale[..., None] + zero[..., None]
+
+
+def paged_decode_attention_q8_ref(
+    q: jax.Array,  # [B, H, hd]
+    k_pages: jax.Array,  # [P, bs, H, hd] int8
+    v_pages: jax.Array,
+    k_scale: jax.Array,  # [P, bs, H] f32
+    k_zero: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    block_tables: jax.Array,  # [B, G]
+    lengths: jax.Array,  # [B]
+    *,
+    window: int = 1 << 30,
+) -> jax.Array:
+    """Int8 paged oracle: dequantize pages, then the fp32 paged oracle."""
+    k = dequantize_pages(k_pages, k_scale, k_zero)
+    v = dequantize_pages(v_pages, v_scale, v_zero)
+    return paged_decode_attention_ref(q, k, v, block_tables, lengths, window=window)
+
+
 def paged_decode_attention_ref(
     q: jax.Array,  # [B, H, hd]
     k_pages: jax.Array,  # [P, bs, H, hd]

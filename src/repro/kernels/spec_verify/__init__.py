@@ -1,14 +1,18 @@
 from . import ops, ref
-from .kernel import spec_verify_pallas, spec_verify_tree_pallas
+from .kernel import spec_verify_fused_pallas, spec_verify_pallas, spec_verify_tree_pallas
 from .ops import (
     pad_block_tables,
     spec_verify,
     spec_verify_batched,
+    spec_verify_fused,
+    spec_verify_fused_batched,
     spec_verify_tree,
     spec_verify_tree_batched,
     tree_path,
 )
 from .ref import (
+    fused_target_logits,
+    spec_verify_fused_ref,
     spec_verify_ref,
     spec_verify_ragged_ref,
     spec_verify_tree_ragged_ref,
@@ -17,9 +21,14 @@ from .ref import (
 )
 
 __all__ = [
+    "fused_target_logits",
     "pad_block_tables",
     "spec_verify",
     "spec_verify_batched",
+    "spec_verify_fused",
+    "spec_verify_fused_batched",
+    "spec_verify_fused_pallas",
+    "spec_verify_fused_ref",
     "spec_verify_pallas",
     "spec_verify_ref",
     "spec_verify_ragged_ref",

@@ -25,6 +25,25 @@ ragged multi-session requests into one rectangular launch):
 * ``logp`` lanes at padded positions carry garbage by design — callers
   slice ``logp[:K_i]``.
 
+``_fused_verify_kernel`` goes one step further than fusing the logits
+post-processing: it fuses the TARGET FORWARD itself — paged flash-decode
+attention over the session's KV block tables (the
+``kernels/decode_attention`` PrefetchScalarGridSpec machinery) plus the
+LM-head projection plus the accept/reject scan — so a K-token chain verify
+is ONE kernel launch instead of attention-launch-then-verify-launch.  Grid
+``(B, G + NV)``: steps ``t < G`` stream physical page ``bt[b, t]`` and
+advance K+1 online-softmax states (one per query position, causal
+per-position lengths), step ``t == G-1`` finalizes attention into a
+``[K1, F]`` VMEM tile, and steps ``t >= G`` stream LM-head tiles
+``W[:, (t-G)*bv : ...]``, form the logits tile in-VMEM (masking padded
+vocab ids to ``NEG_INF``), and run the UNMODIFIED ``_verify_kernel`` update
+on it.  Because every op/shape matches the unfused kernels exactly — same
+``einsum`` tiles, same output-dtype round-trip, same blocked ``jnp.dot``,
+same scan — the fused launch is bit-exact vs the
+``paged_decode_attention`` → projection → ``spec_verify`` composition
+(``tests/test_spec_verify_fused.py``).  The int8 variant dequantizes pages
+in-VMEM exactly like ``paged_decode_attention_q8_pallas``.
+
 ``_tree_verify_kernel`` is the tree-NAV generalization: N packed tree nodes
 verified against N+1 logits rows (row 0 = anchor, row 1+i = node i), where
 node i is scored by its PARENT's row (``prow = parents + 1``) and acceptance
@@ -40,6 +59,7 @@ acceptance.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +127,238 @@ def _verify_kernel(
         nacc_ref[0, 0] = n_acc
         corr_ref[0, 0] = jnp.sum(jnp.where(pos == jnp.minimum(n_acc, K), greedy, 0))
         logp_ref[0, :] = (tok_scr[...] - lse)[:K]
+
+
+def _fused_verify_kernel(
+    bt_ref,  # [B, G] i32 scalar-prefetch — physical page id per logical page
+    len_ref,  # [B, K1] i32 scalar-prefetch — valid KV length per query position
+    q_ref,  # [1, K1, H, hd] — query per draft position (row K = bonus)
+    k_ref,  # [1, bs, H, hd] — physical page bt[b, min(t, G-1)]
+    v_ref,  # [1, bs, H, hd]
+    *rest,  # [quant: ks/kz/vs/vz [1, bs, H]] w [F, bv], tokens, nd, outs, scratch
+    sm_scale: float,
+    window: int,
+    bs: int,
+    ng: int,
+    bv: int,
+    nv: int,
+    k1: int,
+    v_true: int,
+    quantized: bool,
+):
+    if quantized:
+        ks_ref, kz_ref, vs_ref, vz_ref = rest[:4]
+        rest = rest[4:]
+    (
+        w_ref,  # [F, bv] f32 LM-head tile (t - ng)
+        tokens_ref,  # [1, K] i32 (SMEM)
+        nd_ref,  # [1, 1] i32 (SMEM)
+        nacc_ref,  # [1, 1] i32 out
+        corr_ref,  # [1, 1] i32 out
+        logp_ref,  # [1, K] f32 out
+        m_att,  # [K1, H] f32 — attention running max per position
+        l_att,  # [K1, H] f32
+        acc_att,  # [K1, H, hd] f32
+        o_scr,  # [K1, F] f32 — finalized attention outputs (F = H*hd)
+        m_scr,  # [K1] f32 — verify running max
+        arg_scr,  # [K1] i32
+        lse_scr,  # [K1] f32
+        tok_scr,  # [K1] f32
+    ) = rest
+    b, t = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_att[...] = jnp.full_like(m_att, NEG_INF)
+        l_att[...] = jnp.zeros_like(l_att)
+        acc_att[...] = jnp.zeros_like(acc_att)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        arg_scr[...] = jnp.zeros_like(arg_scr)
+        lse_scr[...] = jnp.zeros_like(lse_scr)
+        tok_scr[...] = jnp.full_like(tok_scr, NEG_INF)
+
+    # ---- Phase 1 (t < ng): paged flash-decode for K1 query positions. ----
+    # Per position the ops/shapes mirror _paged_decode_kernel exactly (one
+    # [H, hd] x [bs, H, hd] einsum per position) so phase-1 state is bitwise
+    # what the unfused paged kernel would hold for the same (lane, page).
+    @pl.when(t < ng)
+    def _attend():
+        if quantized:
+            k = (k_ref[0].astype(jnp.float32) + 128.0) * ks_ref[0][..., None] + kz_ref[0][..., None]
+            v = (v_ref[0].astype(jnp.float32) + 128.0) * vs_ref[0][..., None] + vz_ref[0][..., None]
+        else:
+            k = k_ref[0].astype(jnp.float32)  # [bs, H, hd]
+            v = v_ref[0].astype(jnp.float32)
+        k_pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        for i in range(k1):
+            q = q_ref[0, i].astype(jnp.float32)  # [H, hd]
+            s = jnp.einsum("hd,khd->hk", q, k) * sm_scale  # [H, bs]
+            length = len_ref[b, i]
+            valid = k_pos < length
+            valid = jnp.logical_and(valid, k_pos >= length - window)
+            s = jnp.where(valid, s, NEG_INF)
+            m_prev = m_att[i, :]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_att[i, :] = alpha * l_att[i, :] + jnp.sum(p, axis=-1)
+            acc_att[i, :, :] = acc_att[i, :, :] * alpha[:, None] + jnp.einsum("hk,khd->hd", p, v)
+            m_att[i, :] = m_new
+
+    @pl.when(t == ng - 1)
+    def _finalize_attention():
+        # Round-trip through the query dtype exactly like the unfused
+        # kernel's o_ref cast, so downstream logits see identical values.
+        for i in range(k1):
+            denom = jnp.maximum(l_att[i, :], 1e-30)[:, None]
+            o = (acc_att[i, :, :] / denom).astype(q_ref.dtype)  # [H, hd]
+            o_scr[i, :] = o.astype(jnp.float32).reshape(-1)
+
+    # ---- Phase 2 (t >= ng): LM-head tile + the _verify_kernel update. ----
+    K = k1 - 1
+    tok_row = jnp.concatenate(
+        [tokens_ref[0, :].reshape(K), jnp.full((1,), -1, jnp.int32)]
+    )  # [K1]
+
+    @pl.when(t >= ng)
+    def _verify():
+        vb = t - ng
+        s = jnp.dot(o_scr[...], w_ref[...])  # [K1, bv] f32
+        ids = vb * bv + jax.lax.broadcasted_iota(jnp.int32, (k1, bv), 1)
+        s = jnp.where(ids >= v_true, NEG_INF, s)  # vocab pad lanes are inert
+        blk_max = jnp.max(s, axis=-1)  # [K1]
+        blk_arg = jnp.min(jnp.where(s == blk_max[:, None], ids, jnp.int32(2**30)), axis=-1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, blk_max)
+        lse_scr[...] = lse_scr[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+            jnp.exp(s - m_new[:, None]), axis=-1
+        )
+        arg_scr[...] = jnp.where(blk_max > m_prev, blk_arg, arg_scr[...])
+        m_scr[...] = m_new
+        hit = ids == tok_row[:, None]  # [K1, bv]
+        gathered = jnp.sum(jnp.where(hit, s, 0.0), axis=-1)
+        tok_scr[...] = jnp.where(jnp.any(hit, axis=-1), gathered, tok_scr[...])
+
+    @pl.when(t == ng + nv - 1)
+    def _finalize():
+        greedy = arg_scr[...]  # [K1]
+        lse = m_scr[...] + jnp.log(jnp.maximum(lse_scr[...], 1e-30))
+        n_d = nd_ref[0, 0]
+        pos = jax.lax.broadcasted_iota(jnp.int32, (k1,), 0)
+        match = jnp.logical_and(greedy == tok_row, pos < n_d)[:K]
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32)))
+        nacc_ref[0, 0] = n_acc
+        corr_ref[0, 0] = jnp.sum(jnp.where(pos == jnp.minimum(n_acc, K), greedy, 0))
+        logp_ref[0, :] = (tok_scr[...] - lse)[:K]
+
+
+def spec_verify_fused_pallas(
+    q: jax.Array,  # [B, K+1, H, hd] — per-position queries (GQA-expanded pages)
+    k_pages: jax.Array,  # [P, bs, H, hd] (int8 when quant is given)
+    v_pages: jax.Array,
+    w: jax.Array,  # [H*hd, Vp] f32 LM head, Vp % block_v == 0 (zero-padded)
+    block_tables: jax.Array,  # [B, G] i32 physical page ids
+    lengths: jax.Array,  # [B, K+1] i32 valid KV length per query position
+    draft_tokens: jax.Array,  # [B, K] i32
+    n_drafted: jax.Array,  # [B] i32
+    *,
+    v_true: int,
+    window: int = 1 << 30,
+    block_v: int = DEFAULT_BV,
+    quant=None,  # (k_scale, k_zero, v_scale, v_zero), each [P, bs, H] f32
+    interpret: bool = False,
+):
+    """One-launch chain verify: paged attention + LM head + NAV scan fused.
+
+    Returns ``(n_accepted [B,1], correction [B,1], logp [B,K])`` — the same
+    contract as ``spec_verify_pallas`` — from queries + paged KV + LM head
+    instead of precomputed logits.  Bit-exact vs the unfused composition by
+    construction (see module docstring).
+    """
+    B, K1, H, hd = q.shape
+    P, bs, Hk, _ = k_pages.shape
+    if Hk != H:
+        raise ValueError(f"pages must be GQA-expanded: {Hk} heads vs {H} queries")
+    if K1 > 128:
+        raise ValueError(f"K+1={K1} exceeds the [K1] VMEM scratch budget (max 128)")
+    F, Vp = w.shape
+    if F != H * hd:
+        raise ValueError(f"LM head rows {F} != H*hd = {H * hd}")
+    bv = min(block_v, Vp)
+    if Vp % bv:
+        raise ValueError(f"Vp={Vp} must be divisible by block_v={bv}")
+    nv = Vp // bv
+    G = block_tables.shape[1]
+    K = K1 - 1
+    sm_scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _fused_verify_kernel,
+        sm_scale=sm_scale,
+        window=int(window),
+        bs=bs,
+        ng=G,
+        bv=bv,
+        nv=nv,
+        k1=K1,
+        v_true=int(v_true),
+        quantized=quant is not None,
+    )
+    page_ix = lambda b, t, bt, ln: (bt[b, jnp.minimum(t, G - 1)], 0, 0, 0)  # noqa: E731
+    param_ix = lambda b, t, bt, ln: (bt[b, jnp.minimum(t, G - 1)], 0, 0)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((1, K1, H, hd), lambda b, t, bt, ln: (b, 0, 0, 0)),
+        pl.BlockSpec((1, bs, H, hd), page_ix),
+        pl.BlockSpec((1, bs, H, hd), page_ix),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant is not None:
+        in_specs += [pl.BlockSpec((1, bs, H), param_ix)] * 4
+        operands += [p.astype(jnp.float32) for p in quant]
+    in_specs += [
+        pl.BlockSpec((F, bv), lambda b, t, bt, ln: (0, jnp.maximum(t - G, 0))),
+        pl.BlockSpec((1, K), lambda b, t, bt, ln: (b, 0), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1), lambda b, t, bt, ln: (b, 0), memory_space=pltpu.SMEM),
+    ]
+    operands += [
+        w.astype(jnp.float32),
+        draft_tokens.astype(jnp.int32),
+        n_drafted.reshape(B, 1).astype(jnp.int32),
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, per-position lengths
+        grid=(B, G + nv),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, t, bt, ln: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, t, bt, ln: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, K), lambda b, t, bt, ln: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((K1, H), jnp.float32),
+            pltpu.VMEM((K1, H), jnp.float32),
+            pltpu.VMEM((K1, H, hd), jnp.float32),
+            pltpu.VMEM((K1, F), jnp.float32),
+            pltpu.VMEM((K1,), jnp.float32),
+            pltpu.VMEM((K1,), jnp.int32),
+            pltpu.VMEM((K1,), jnp.float32),
+            pltpu.VMEM((K1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        *operands,
+    )
 
 
 def _tree_verify_kernel(

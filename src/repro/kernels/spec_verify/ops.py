@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import spec_verify_pallas, spec_verify_tree_pallas
-from .ref import spec_verify_ref, spec_verify_tree_ref, tree_topology
+from .kernel import spec_verify_fused_pallas, spec_verify_pallas, spec_verify_tree_pallas
+from .ref import spec_verify_fused_ref, spec_verify_ref, spec_verify_tree_ref, tree_topology
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_v"))
@@ -45,6 +45,140 @@ def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
+@functools.partial(
+    jax.jit, static_argnames=("v_true", "impl", "block_v", "window")
+)
+def spec_verify_fused(
+    q: jax.Array,  # [B, K+1, H, hd] — per-position queries
+    k_pages: jax.Array,  # [P, bs, Hkv, hd] (int8 payload when quant is given)
+    v_pages: jax.Array,
+    w: jax.Array,  # [H*hd, V] LM head (padded to a block_v multiple here)
+    block_tables: jax.Array,  # [B, G] i32 physical page ids
+    lengths: jax.Array,  # [B, K+1] i32 valid KV length per query position
+    draft_tokens: jax.Array,  # [B, K] i32
+    n_drafted: jax.Array,  # [B] i32
+    *,
+    v_true: Optional[int] = None,
+    impl: str = "interpret",
+    block_v: int = 2048,
+    window: int = 1 << 30,
+    quant=None,  # (k_scale, k_zero, v_scale, v_zero), each [P, bs, Hkv] f32
+):
+    """ONE-launch chain verify: paged target attention + LM head + NAV scan.
+
+    The rectangular fused entry: instead of precomputed ``[B, K+1, V]``
+    logits it takes the target's per-position queries, the paged KV pool
+    slices, the LM head, and the sessions' block tables, and returns the
+    ``spec_verify`` contract ``(n_accepted [B,1], correction [B,1],
+    logp [B,K])`` from a single Pallas launch (vs attention-launch +
+    verify-launch unfused).  ``lengths[b, i]`` is the valid KV length seen
+    by query position ``i`` (causal: the serving entry passes
+    ``base + i``).  With ``quant`` the pages are int8 and dequantized
+    in-kernel (``models/paged_kv.py`` affine layout).  Bit-exact vs the
+    unfused composition per ``tests/test_spec_verify_fused.py``.
+    """
+    H = q.shape[2]
+    n_kv = k_pages.shape[2]
+    if n_kv != H:
+        k_pages = jnp.repeat(k_pages, H // n_kv, axis=2)
+        v_pages = jnp.repeat(v_pages, H // n_kv, axis=2)
+        if quant is not None:
+            quant = tuple(jnp.repeat(p, H // n_kv, axis=2) for p in quant)
+    V = w.shape[1]
+    if v_true is None:
+        v_true = V
+    bv = min(block_v, _next_pow2(V))
+    Vp = -(-V // bv) * bv
+    if Vp > V:  # zero columns; the kernels mask ids >= v_true to -1e30
+        w = jnp.pad(w, ((0, 0), (0, Vp - V)))
+    if impl == "ref":
+        if quant is not None:
+            # Local import: decode_attention.ops imports pad_block_tables
+            # from this module, so a top-level import would be circular.
+            from ..decode_attention.ref import dequantize_pages
+
+            ks, kz, vs, vz = quant
+            k_pages = dequantize_pages(k_pages, ks, kz)
+            v_pages = dequantize_pages(v_pages, vs, vz)
+        return spec_verify_fused_ref(
+            q, k_pages, v_pages, w, block_tables, lengths, draft_tokens, n_drafted,
+            v_true=v_true, block_v=bv, window=window,
+        )
+    return spec_verify_fused_pallas(
+        q, k_pages, v_pages, w, block_tables, lengths, draft_tokens, n_drafted,
+        v_true=v_true, block_v=bv, window=window, quant=quant,
+        interpret=(impl == "interpret"),
+    )
+
+
+def spec_verify_fused_batched(
+    q_seq: Sequence,  # B entries of [K_i+1, H, hd] per-position queries
+    tokens_seq: Sequence,  # B entries of length-K_i int sequences
+    block_tables_seq: Sequence,  # B ragged KV block tables
+    base_lengths: Sequence,  # B ints — KV length visible to query position 0
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    w: jax.Array,
+    *,
+    impl: str = "interpret",
+    block_v: int = 2048,
+    bucket: bool = True,
+    window: int = 1 << 30,
+    pad_page_id: int = 0,
+    quant=None,
+) -> List[Tuple[int, int, np.ndarray]]:
+    """Ragged serving entry for the fused verify — one launch for B sessions.
+
+    The fused twin of ``spec_verify_batched``'s ``batched_logits_fn`` path,
+    with the forward folded INTO the verify launch: pads queries, tokens,
+    block tables (``pad_page_id`` — pass the pool's ``sentinel_page``), and
+    per-position lengths (position ``i`` of session ``s`` sees
+    ``base_lengths[s] + i``; pad rows/positions see 0, making them inert)
+    under the same pow2 bucketing, launches once, and unpacks
+    ``(n_accepted, correction, logp[K_i])`` per session in input order.
+    """
+    if not (len(q_seq) == len(tokens_seq) == len(block_tables_seq) == len(base_lengths)):
+        raise ValueError("need one (queries, tokens, table, base_length) per session")
+    if not len(tokens_seq):
+        raise ValueError("need at least one session")
+    ks = [len(t) for t in tokens_seq]
+    for qi, k in zip(q_seq, ks):
+        if qi.shape[0] != k + 1:
+            raise ValueError(f"queries must be [K_i+1, H, hd]; got {qi.shape} for K_i={k}")
+    B, kmax = len(ks), max(max(ks, default=0), 1)
+    Bp = _next_pow2(B) if bucket else B
+    Kp = _next_pow2(kmax) if bucket else kmax
+    H, hd = q_seq[0].shape[1], q_seq[0].shape[2]
+    qpad = np.zeros((Bp, Kp + 1, H, hd), np.float32)
+    tokens = np.zeros((Bp, Kp), np.int32)
+    nd = np.zeros((Bp,), np.int32)
+    lengths = np.zeros((Bp, Kp + 1), np.int32)
+    for i, (qi, tk, k, base) in enumerate(zip(q_seq, tokens_seq, ks, base_lengths)):
+        qpad[i, : k + 1] = np.asarray(qi, np.float32)
+        tokens[i, :k] = np.asarray(tk, np.int32)
+        nd[i] = k
+        lengths[i, : k + 1] = int(base) + np.arange(k + 1)
+    tables = pad_block_tables(
+        block_tables_seq, batch_pad=Bp, bucket=bucket, pad_id=pad_page_id
+    )
+    na, corr, logp = spec_verify_fused(
+        jnp.asarray(qpad),
+        k_pages,
+        v_pages,
+        w,
+        jnp.asarray(tables),
+        jnp.asarray(lengths),
+        jnp.asarray(tokens),
+        jnp.asarray(nd),
+        impl=impl,
+        block_v=block_v,
+        window=window,
+        quant=quant,
+    )
+    na, corr, logp = np.asarray(na), np.asarray(corr), np.asarray(logp)
+    return [(int(na[i, 0]), int(corr[i, 0]), logp[i, : ks[i]]) for i in range(B)]
+
+
 def pad_block_tables(
     tables_seq: Sequence, *, batch_pad: int, bucket: bool = True, pad_id: int = 0
 ) -> np.ndarray:
@@ -56,9 +190,11 @@ def pad_block_tables(
     draft lengths.  They are padded with the SAME pow2 bucketing as the
     logits batch (``batch_pad`` = the entry's ``Bp``) so a serving process
     compiles one shape family for the fused forward+verify dispatch.  Pad
-    entries carry ``pad_id`` (default 0 — a *valid* physical page id: paged
-    attention masks pad positions by ``lengths``, so gathered garbage is
-    inert; see ``docs/kernels.md``).
+    entries carry ``pad_id``; pass the pool's zero-filled ``sentinel_page``
+    (as the serving backend does) so padded lanes can only ever DMA the
+    sentinel — never a page owned by another session.  The legacy default 0
+    is a *live* page id and is only safe because attention masks pad
+    positions by ``lengths``; see ``docs/kernels.md``.
     """
     gmax = max((len(t) for t in tables_seq), default=0)
     Gp = max(_next_pow2(gmax) if bucket else gmax, 1)
@@ -78,6 +214,7 @@ def spec_verify_batched(
     bucket: bool = True,
     block_tables_seq: Optional[Sequence] = None,  # B ragged KV block tables
     batched_logits_fn: Optional[Callable] = None,
+    pad_page_id: int = 0,
 ) -> List[Tuple[int, int, np.ndarray]]:
     """Verify B sessions with ragged draft lengths in ONE launch.
 
@@ -114,7 +251,7 @@ def spec_verify_batched(
 
     if batched_logits_fn is not None:
         tables = (
-            pad_block_tables(block_tables_seq, batch_pad=Bp, bucket=bucket)
+            pad_block_tables(block_tables_seq, batch_pad=Bp, bucket=bucket, pad_id=pad_page_id)
             if block_tables_seq is not None
             else None
         )
@@ -209,6 +346,7 @@ def spec_verify_tree_batched(
     bucket: bool = True,
     block_tables_seq: Optional[Sequence] = None,  # B ragged KV block tables
     batched_logits_fn: Optional[Callable] = None,
+    pad_page_id: int = 0,
 ) -> List[Tuple[int, List[int], int, np.ndarray]]:
     """Verify B sessions' ragged token TREES in ONE padded launch.
 
@@ -255,7 +393,7 @@ def spec_verify_tree_batched(
 
     if batched_logits_fn is not None:
         tables = (
-            pad_block_tables(block_tables_seq, batch_pad=Bp, bucket=bucket)
+            pad_block_tables(block_tables_seq, batch_pad=Bp, bucket=bucket, pad_id=pad_page_id)
             if block_tables_seq is not None
             else None
         )

@@ -46,6 +46,64 @@ def spec_verify_ref(target_logits: jax.Array, draft_tokens: jax.Array, n_drafted
     return n_acc[:, None], corr, logp
 
 
+def fused_target_logits(
+    o: jax.Array,  # [B, K1, F] f32 attention outputs (F = H*hd)
+    w: jax.Array,  # [F, Vp] f32 LM head, Vp a multiple of block_v
+    *,
+    block_v: int,
+    v_true: int,
+) -> jax.Array:
+    """Blocked LM-head projection matching the fused kernel tile-for-tile.
+
+    One ``jnp.dot([K1, F], [F, block_v])`` per (lane, vocab tile) — the
+    EXACT shapes the fused kernel issues — then padded vocab ids masked to
+    ``-1e30``, so composing this with ``spec_verify`` reproduces the fused
+    launch bitwise (same values through the same arithmetic).
+    """
+    B, K1, F = o.shape
+    Vp = w.shape[1]
+    if Vp % block_v:
+        raise ValueError(f"Vp={Vp} must be a multiple of block_v={block_v}")
+    tiles = [w[:, j : j + block_v] for j in range(0, Vp, block_v)]
+    rows = [jnp.concatenate([jnp.dot(o[b], t) for t in tiles], axis=-1) for b in range(B)]
+    logits = jnp.stack(rows)
+    ids = jnp.arange(Vp)[None, None, :]
+    return jnp.where(ids >= v_true, -1e30, logits)
+
+
+def spec_verify_fused_ref(
+    q: jax.Array,  # [B, K+1, H, hd]
+    k_pages: jax.Array,  # [P, bs, H, hd]
+    v_pages: jax.Array,
+    w: jax.Array,  # [F, Vp]
+    block_tables: jax.Array,  # [B, G]
+    lengths: jax.Array,  # [B, K+1] — valid KV length per query position
+    draft_tokens: jax.Array,  # [B, K]
+    n_drafted: jax.Array,  # [B]
+    *,
+    v_true: int,
+    block_v: int,
+    window: int = 1 << 30,
+):
+    """Fused-verify oracle: the unfused composition, stage by stage.
+
+    Paged decode attention per query position (the ``decode_attention``
+    oracle over position-flattened lanes), the blocked LM-head projection,
+    then ``spec_verify_ref`` — the pure-JAX statement of what the one-launch
+    kernel computes.
+    """
+    from ..decode_attention.ref import paged_decode_attention_ref
+
+    B, K1, H, hd = q.shape
+    qf = q.reshape(B * K1, H, hd)
+    tf = jnp.repeat(jnp.asarray(block_tables, jnp.int32), K1, axis=0)
+    lf = jnp.asarray(lengths, jnp.int32).reshape(B * K1)
+    o = paged_decode_attention_ref(qf, k_pages, v_pages, tf, lf, window=window)
+    o = o.reshape(B, K1, H * hd).astype(jnp.float32)
+    logits = fused_target_logits(o, w.astype(jnp.float32), block_v=block_v, v_true=v_true)
+    return spec_verify_ref(logits, draft_tokens, n_drafted)
+
+
 def spec_verify_ragged_ref(
     logits_seq: Sequence,  # B entries of [K_i+1, V]
     tokens_seq: Sequence,  # B entries of length-K_i ints

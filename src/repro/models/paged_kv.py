@@ -7,7 +7,8 @@ module replaces that with the standard production layout (vLLM-style):
 
 * **Physical pages.**  KV storage is a pool of ``num_blocks`` fixed-size
   pages of ``block_size`` token slots each; a page spans all layers
-  (``k_pages/v_pages: [L, num_blocks, block_size, Hkv, hd]``).
+  (``k_pages/v_pages: [L, num_blocks + 1, block_size, Hkv, hd]``; the
+  ``+ 1`` is the pad sentinel below).
 * **Block tables.**  A session's logical cache is an ordered list of int32
   physical page ids plus a valid ``length``; logical position ``p`` lives in
   page ``table[p // block_size]`` at slot ``p % block_size``.  Attention
@@ -24,6 +25,24 @@ module replaces that with the standard production layout (vLLM-style):
   LRU free list (oldest-freed reused first).  ``evict``/``evict_lru``
   reclaim idle sessions' pages under pool pressure (the victim re-prefills
   on its next round).
+* **Sentinel pad page.**  Physical page id ``num_blocks`` (one past the
+  allocatable pool) is a dedicated zero-filled page that is NEVER handed to
+  a session: ragged block tables pad with it (``table(pad_to=...)``,
+  ``sentinel_page``), so a padded lane in a bucketed batched launch can
+  only ever DMA the sentinel — never another session's KV pages.  Tensor
+  mode sizes the page buffers ``num_blocks + 1`` so the sentinel is a valid
+  gather index; it is excluded from the free list, refcounts, and byte
+  accounting.
+* **Int8 quantized pages** (``quantize='int8'``).  Tensor-mode pages store
+  KV as int8 with per-(layer, slot, head) affine parameters
+  (``k_scale/k_zero`` etc., float32, shaped ``[L, num_blocks + 1,
+  block_size, Hkv]``): ``write`` quantizes each token-head vector over its
+  ``head_dim`` range (``x_hat = (q + 128) * scale + zero``, ``scale =
+  (max - min) / 255``, ``zero = min``) and the paged attention kernels
+  dequantize in-VMEM.  Worst-case per-element error is ``scale / 2 =
+  (max - min) / 510``; bytes/token drop from ``2*L*Hkv*hd*4`` (fp32) to
+  ``2*L*Hkv*(hd + 8)`` (int8 payload + two float32 parameters per
+  token-head).
 
 The pool runs in two modes: **metadata-only** (default — no tensor storage;
 used by the serving dispatcher and the simulation engine for admission and
@@ -93,8 +112,16 @@ class PagedKVPool:
         Pool geometry — ``num_blocks`` pages of ``block_size`` token slots.
     n_layers, n_kv_heads, head_dim, dtype:
         Tensor mode: when ``n_layers > 0``, real page buffers
-        ``k_pages/v_pages: [L, num_blocks, block_size, Hkv, hd]`` are
-        allocated and ``write`` scatters tokens into them.
+        ``k_pages/v_pages: [L, num_blocks + 1, block_size, Hkv, hd]`` are
+        allocated (the extra page is the zero-filled pad sentinel) and
+        ``write`` scatters tokens into them.  ``dtype`` is the storage dtype
+        of unquantized pools; writes in any other float dtype are cast at
+        the boundary so the page buffers (and the byte accounting derived
+        from them) never change dtype behind the pool's back.
+    quantize:
+        ``'int8'`` stores pages as int8 with per-(layer, slot, head) affine
+        scale/zero parameters (quantize-on-``write``, in-kernel dequant);
+        ``None`` (default) stores ``dtype`` pages.
     bytes_per_token:
         Byte-accounting override for metadata mode.  Tensor mode derives it
         from the KV geometry (k+v); metadata mode defaults to 1 so
@@ -110,12 +137,16 @@ class PagedKVPool:
         n_kv_heads: int = 0,
         head_dim: int = 0,
         dtype=jnp.float32,
+        quantize: Optional[str] = None,
         bytes_per_token: Optional[int] = None,
     ):
         if num_blocks < 1 or block_size < 1:
             raise ValueError("num_blocks and block_size must be >= 1")
+        if quantize not in (None, "int8"):
+            raise ValueError(f"unsupported quantize mode {quantize!r}")
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
+        self.quantize = quantize
         self.refcounts = np.zeros(self.num_blocks, np.int32)
         # LRU free list: freed pages append right, allocation pops left.
         self._free: Deque[int] = deque(range(self.num_blocks))
@@ -129,19 +160,49 @@ class PagedKVPool:
         self.op_seconds = 0.0
         self.max_used_blocks = 0
         self.max_resident_sessions = 0
+        self.dtype = jnp.dtype(dtype)
+        self.n_layers = int(n_layers)
+        self.n_kv_heads = int(n_kv_heads)
+        self.head_dim = int(head_dim)
         self.k_pages: Optional[jax.Array] = None
         self.v_pages: Optional[jax.Array] = None
+        self.k_scale: Optional[jax.Array] = None
+        self.k_zero: Optional[jax.Array] = None
+        self.v_scale: Optional[jax.Array] = None
+        self.v_zero: Optional[jax.Array] = None
         if n_layers > 0:
-            shape = (n_layers, self.num_blocks, self.block_size, n_kv_heads, head_dim)
-            self.k_pages = jnp.zeros(shape, dtype)
-            self.v_pages = jnp.zeros(shape, dtype)
-            itemsize = jnp.dtype(dtype).itemsize
-            self.bytes_per_token = 2 * n_layers * n_kv_heads * head_dim * itemsize
+            # One extra physical page: the zero-filled pad sentinel at id
+            # ``num_blocks``, a valid gather target that no session owns.
+            shape = (n_layers, self.num_blocks + 1, self.block_size, n_kv_heads, head_dim)
+            if self.quantize == "int8":
+                self.k_pages = jnp.zeros(shape, jnp.int8)
+                self.v_pages = jnp.zeros(shape, jnp.int8)
+                pshape = shape[:-1]
+                self.k_scale = jnp.zeros(pshape, jnp.float32)
+                self.k_zero = jnp.zeros(pshape, jnp.float32)
+                self.v_scale = jnp.zeros(pshape, jnp.float32)
+                self.v_zero = jnp.zeros(pshape, jnp.float32)
+                # int8 payload + (scale, zero) float32 per token-head, k + v.
+                self.bytes_per_token = 2 * n_layers * n_kv_heads * (head_dim + 8)
+            else:
+                self.k_pages = jnp.zeros(shape, self.dtype)
+                self.v_pages = jnp.zeros(shape, self.dtype)
+                self.bytes_per_token = 2 * n_layers * n_kv_heads * head_dim * self.dtype.itemsize
         else:
             self.bytes_per_token = int(bytes_per_token) if bytes_per_token else 1
         self.bytes_per_block = self.bytes_per_token * self.block_size
 
     # ------------------------------------------------------------ geometry --
+    @property
+    def sentinel_page(self) -> int:
+        """The zero-filled pad page id (``num_blocks``) — never allocated.
+
+        Ragged block tables pad with this id so padded lanes in a bucketed
+        batched launch can never DMA a page owned by a session.  Tensor mode
+        sizes the page buffers ``num_blocks + 1`` so it is a valid index.
+        """
+        return self.num_blocks
+
     @property
     def free_blocks(self) -> int:
         """Pages currently on the free list."""
@@ -388,19 +449,83 @@ class PagedKVPool:
         if self.k_pages is not None:
             self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
             self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+            if self.quantize == "int8":
+                self.k_scale = self.k_scale.at[:, dst].set(self.k_scale[:, src])
+                self.k_zero = self.k_zero.at[:, dst].set(self.k_zero[:, src])
+                self.v_scale = self.v_scale.at[:, dst].set(self.v_scale[:, src])
+                self.v_zero = self.v_zero.at[:, dst].set(self.v_zero[:, src])
+
+    @staticmethod
+    def quantize_kv(x: jax.Array):
+        """Affine-int8 quantize ``x`` over its last axis.
+
+        Returns ``(q int8, scale f32, zero f32)`` with ``scale/zero`` shaped
+        like ``x`` minus the last axis: ``x_hat = (q + 128) * scale + zero``,
+        ``scale = (max - min) / 255`` (1 when the range is empty) and
+        ``zero = min``.  Worst-case per-element error is ``scale / 2``.
+        """
+        x = x.astype(jnp.float32)
+        lo = jnp.min(x, axis=-1)
+        hi = jnp.max(x, axis=-1)
+        scale = jnp.where(hi > lo, (hi - lo) / 255.0, 1.0)
+        q = jnp.round((x - lo[..., None]) / scale[..., None]) - 128.0
+        return jnp.clip(q, -128, 127).astype(jnp.int8), scale, lo
+
+    @staticmethod
+    def dequantize_kv(q: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+        """Invert ``quantize_kv``: ``(q + 128) * scale + zero`` in float32."""
+        return (q.astype(jnp.float32) + 128.0) * scale[..., None] + zero[..., None]
+
+    def _check_write_dtype(self, k_new: jax.Array, v_new: jax.Array):
+        """Validate/cast incoming KV at the pool boundary.
+
+        JAX's scatter would otherwise silently cast mismatched dtypes lane
+        by lane (a ``FutureWarning`` today, an error in future releases) —
+        and a caller assuming the pages follow the operand dtype would see
+        ``resident_bytes`` accounting drift from the true footprint.  The
+        pool's storage dtype is authoritative: floats cast here, explicitly;
+        anything non-float is rejected.
+        """
+        if k_new.dtype != v_new.dtype:
+            raise TypeError(f"k/v dtype mismatch: {k_new.dtype} vs {v_new.dtype}")
+        if not jnp.issubdtype(k_new.dtype, jnp.floating):
+            raise TypeError(f"KV writes must be floating point, got {k_new.dtype}")
+        want = jnp.float32 if self.quantize == "int8" else self.dtype
+        return k_new.astype(want), v_new.astype(want)
 
     def write(self, session: int, k_new: jax.Array, v_new: jax.Array) -> None:
         """Append ``T`` tokens of KV (``[L, T, Hkv, hd]``) into the pages.
 
         Tensor mode only.  Handles page allocation + CoW via ``append``;
-        tokens scatter into (page, slot) per the block table.
+        tokens scatter into (page, slot) per the block table.  Writes whose
+        dtype differs from the pool's storage dtype are cast here, at the
+        boundary (see ``_check_write_dtype``); int8 pools quantize each
+        token-head vector and store its scale/zero alongside the payload.
+        """
+        start = self._table(session).length
+        self.append(session, k_new.shape[1])
+        self.fill(session, start, k_new, v_new)
+
+    def fill(self, session: int, start: int, k_new: jax.Array, v_new: jax.Array) -> None:
+        """Write ``T`` tokens of KV into ALREADY-APPENDED slots at ``start``.
+
+        The dispatcher path: ``_kv_secure`` appends a round's page metadata
+        before verification, then the backend materializes tensors here
+        without double-appending.  Same boundary dtype validation and int8
+        quantize-on-write as ``write``.
         """
         if self.k_pages is None:
             raise RuntimeError("pool was built without tensor storage (n_layers=0)")
+        k_new, v_new = self._check_write_dtype(k_new, v_new)
+        if self.quantize == "int8":
+            k_new, k_sc, k_zp = self.quantize_kv(k_new)
+            v_new, v_sc, v_zp = self.quantize_kv(v_new)
         t = self._table(session)
         T = k_new.shape[1]
-        start = t.length
-        self.append(session, T)
+        if start < 0 or start + T > t.length:
+            raise ValueError(
+                f"fill [{start}, {start + T}) outside the session's {t.length} slots"
+            )
         written = 0
         while written < T:
             pos = start + written
@@ -411,22 +536,44 @@ class PagedKVPool:
             vsl = jax.lax.dynamic_slice_in_dim(v_new, written, take, axis=1)
             self.k_pages = self.k_pages.at[:, page, slot : slot + take].set(ksl)
             self.v_pages = self.v_pages.at[:, page, slot : slot + take].set(vsl)
+            if self.quantize == "int8":
+                sl = slice(slot, slot + take)
+                for pages, new in (
+                    ("k_scale", k_sc), ("k_zero", k_zp), ("v_scale", v_sc), ("v_zero", v_zp),
+                ):
+                    cut = jax.lax.dynamic_slice_in_dim(new, written, take, axis=1)
+                    setattr(self, pages, getattr(self, pages).at[:, page, sl].set(cut))
             written += take
 
+    def tensor_nbytes(self) -> int:
+        """Actual bytes held by ALL page buffers (payload + quant params).
+
+        Always ``(num_blocks + 1) * bytes_per_block`` in tensor mode — the
+        invariant that pins the byte accounting to the real buffer
+        footprint (``tests/test_paged_kv.py``).  Metadata mode returns 0.
+        """
+        bufs = (self.k_pages, self.v_pages, self.k_scale, self.k_zero,
+                self.v_scale, self.v_zero)
+        return sum(b.nbytes for b in bufs if b is not None)
+
     # ----------------------------------------------------------- reporting --
-    def table(self, session: int, pad_to: Optional[int] = None, pad_id: int = 0) -> np.ndarray:
+    def table(
+        self, session: int, pad_to: Optional[int] = None, pad_id: Optional[int] = None
+    ) -> np.ndarray:
         """The session's block table as int32, optionally padded to ``pad_to``.
 
-        Pad entries carry ``pad_id`` (default 0 — a *valid* page index: the
-        attention kernels mask pad positions by length, so the gathered
-        garbage is inert; see ``docs/kernels.md``).
+        Pad entries carry ``pad_id``, defaulting to ``sentinel_page`` — the
+        zero-filled page no session can own, so padded lanes never prefetch
+        another session's KV even before length masking applies (see
+        ``docs/kernels.md``).
         """
         t = self._table(session)
         ids = t.blocks
         if pad_to is not None:
             if len(ids) > pad_to:
                 raise ValueError(f"table of {len(ids)} pages exceeds pad_to={pad_to}")
-            ids = ids + [pad_id] * (pad_to - len(ids))
+            fill = self.sentinel_page if pad_id is None else pad_id
+            ids = ids + [fill] * (pad_to - len(ids))
         return np.asarray(ids, np.int32)
 
     def length(self, session: int) -> int:

@@ -213,7 +213,22 @@ class SpecVerifyBackend(VerifyBackend):
     calls are replaced by ONE batched forward over the padded
     ``(tokens, n_drafted, block_tables)`` arrays — the fused
     paged-attention + NAV dispatch shape a production verifier compiles
-    (see ``kernels.spec_verify.spec_verify_batched``).
+    (see ``kernels.spec_verify.spec_verify_batched``).  Ragged tables pad
+    with the pool's zero-filled sentinel page, so a padded lane can never
+    prefetch KV owned by another session.
+
+    **Fused one-launch verify** (``fused=True``).  Requires a TENSOR-mode
+    ``kv_pool``, a ``query_fn(session, tokens) -> [K+1, H, hd]`` producing
+    the target's per-position queries, and ``lm_head [H*hd, V]``: chain
+    rounds then run ``spec_verify_fused_batched`` — paged attention over
+    the sessions' block tables + LM-head projection + NAV scan in ONE
+    Pallas launch instead of forward-then-verify.  The round's KV slots
+    (metadata-appended by the dispatcher's ``_kv_secure``) are materialized
+    through ``kv_fn(session, start, count) -> (k, v)`` just before the
+    launch; the default synthesizes deterministic position-keyed tensors,
+    so CoW prefix pages hold identical values whichever session fills them
+    first.  An int8 pool (``quantize='int8'``) is picked up automatically —
+    the launch dequantizes pages in-kernel.
     """
 
     def __init__(
@@ -224,8 +239,17 @@ class SpecVerifyBackend(VerifyBackend):
         kv_pool: Optional[PagedKVPool] = None,
         batched_logits_fn: Optional[Callable] = None,
         batched_tree_logits_fn: Optional[Callable] = None,
+        fused: bool = False,
+        query_fn: Optional[Callable] = None,
+        lm_head: Optional[Any] = None,
+        kv_fn: Optional[Callable] = None,
     ):
-        if logits_fn is None and batched_logits_fn is None:
+        if fused:
+            if kv_pool is None or kv_pool.k_pages is None:
+                raise ValueError("fused=True needs a tensor-mode kv_pool")
+            if query_fn is None or lm_head is None:
+                raise ValueError("fused=True needs query_fn and lm_head")
+        elif logits_fn is None and batched_logits_fn is None:
             raise ValueError("need logits_fn or batched_logits_fn")
         self.logits_fn = logits_fn
         self.impl = impl
@@ -233,6 +257,11 @@ class SpecVerifyBackend(VerifyBackend):
         self.kv_pool = kv_pool
         self.batched_logits_fn = batched_logits_fn
         self.batched_tree_logits_fn = batched_tree_logits_fn
+        self.fused = fused
+        self.query_fn = query_fn
+        self.lm_head = lm_head
+        self.kv_fn = kv_fn if kv_fn is not None else self._default_kv_fn
+        self._filled: Dict[int, int] = {}  # session -> KV positions materialized
 
     def _tables(self, sessions: Sequence[int]):
         if self.kv_pool is None:
@@ -241,6 +270,37 @@ class SpecVerifyBackend(VerifyBackend):
             list(self.kv_pool.table(s)) if s in self.kv_pool.tables else []
             for s in sessions
         ]
+
+    @property
+    def _pad_page_id(self) -> int:
+        return self.kv_pool.sentinel_page if self.kv_pool is not None else 0
+
+    def _default_kv_fn(self, session: int, start: int, count: int):
+        """Deterministic position-keyed synthetic KV (the modeled target).
+
+        Keyed by POSITION only — not session — so CoW-shared prefix pages
+        hold the same values no matter which session materializes them, and
+        re-prefills after eviction/rollback reproduce the original tensors
+        bit-for-bit.
+        """
+        pool = self.kv_pool
+        shape = (pool.n_layers, count, pool.n_kv_heads, pool.head_dim)
+        pos = start + np.arange(count, dtype=np.float32)
+        phase = np.arange(
+            pool.n_layers * pool.n_kv_heads * pool.head_dim, dtype=np.float32
+        ).reshape(pool.n_layers, 1, pool.n_kv_heads, pool.head_dim)
+        base = np.sin(pos[None, :, None, None] * 0.37 + phase * 0.11).astype(np.float32)
+        return np.reshape(base, shape), np.reshape(np.roll(base, 1, axis=-1) * 0.5, shape)
+
+    def _ensure_kv(self, session: int) -> None:
+        """Materialize tensors for slots appended since the last round."""
+        pool = self.kv_pool
+        have = min(self._filled.get(session, 0), pool.length(session))
+        need = pool.length(session)
+        if need > have:
+            k, v = self.kv_fn(session, have, need - have)
+            pool.fill(session, have, k, v)
+        self._filled[session] = need
 
     def verify(self, session: int, tokens: List[int], confs: List[float]):
         """Verify one session through the batched path (batch of one)."""
@@ -253,6 +313,8 @@ class SpecVerifyBackend(VerifyBackend):
         from repro.kernels.spec_verify import spec_verify_batched
 
         tokens = [t for (_, t, _) in requests]
+        if self.fused:
+            return self._verify_batch_fused(requests)
         if self.batched_logits_fn is not None:
             out = spec_verify_batched(
                 None,
@@ -261,10 +323,46 @@ class SpecVerifyBackend(VerifyBackend):
                 block_v=self.block_v,
                 block_tables_seq=self._tables([s for (s, _, _) in requests]),
                 batched_logits_fn=self.batched_logits_fn,
+                pad_page_id=self._pad_page_id,
             )
         else:
             logits = [self.logits_fn(s, t) for (s, t, _) in requests]
             out = spec_verify_batched(logits, tokens, impl=self.impl, block_v=self.block_v)
+        return [(int(n_acc), int(corr)) for (n_acc, corr, _) in out]
+
+    def _verify_batch_fused(self, requests):
+        """ONE launch for the whole round: attention + LM head + NAV scan.
+
+        Fills any unmaterialized KV slots (the dispatcher appends page
+        metadata in ``_kv_secure`` before we run), then hands queries, block
+        tables, page tensors (+ int8 quant params when the pool quantizes),
+        and the LM head to ``spec_verify_fused_batched``.
+        """
+        from repro.kernels.spec_verify import spec_verify_fused_batched
+
+        pool = self.kv_pool
+        sessions = [s for (s, _, _) in requests]
+        for s in sessions:
+            self._ensure_kv(s)
+        tokens = [t for (_, t, _) in requests]
+        q_seq = [np.asarray(self.query_fn(s, t), np.float32) for (s, t, _) in requests]
+        base = [max(pool.length(s) - len(t), 0) for (s, t, _) in requests]
+        quant = None
+        if pool.quantize == "int8":
+            quant = (pool.k_scale[0], pool.k_zero[0], pool.v_scale[0], pool.v_zero[0])
+        out = spec_verify_fused_batched(
+            q_seq,
+            tokens,
+            self._tables(sessions),
+            base,
+            pool.k_pages[0],
+            pool.v_pages[0],
+            self.lm_head,
+            impl=self.impl,
+            block_v=self.block_v,
+            pad_page_id=pool.sentinel_page,
+            quant=quant,
+        )
         return [(int(n_acc), int(corr)) for (n_acc, corr, _) in out]
 
     def verify_tree(self, session, tokens, confs, parents):
@@ -293,6 +391,7 @@ class SpecVerifyBackend(VerifyBackend):
                 block_v=self.block_v,
                 block_tables_seq=self._tables([s for (s, _, _, _) in requests]),
                 batched_logits_fn=self.batched_tree_logits_fn,
+                pad_page_id=self._pad_page_id,
             )
         elif self.logits_fn is None:
             raise ValueError(

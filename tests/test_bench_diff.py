@@ -1,0 +1,81 @@
+"""Bench-diff gating: committed BENCH_*.json files stay reproducible.
+
+The tool (tools/bench_diff.py) is itself part of the contract — exact
+comparison for deterministic fields, a ±5% band for timing-like ones —
+so its classification logic gets pinned here alongside a live check that
+the committed kernel rows regenerate bit-identically.
+"""
+
+import json
+from pathlib import Path
+
+from tools.bench_diff import diff_rows, is_timing_field, row_key
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_timing_field_classification():
+    assert is_timing_field("nav_p50_ms")
+    assert is_timing_field("modeled_us")
+    assert is_timing_field("tokens_per_s")
+    assert is_timing_field("speedup")
+    assert not is_timing_field("bytes_per_session")
+    assert not is_timing_field("launches")
+    assert not is_timing_field("failovers")
+
+
+def test_exact_field_mismatch_is_an_error():
+    a = [dict(name="r", bytes_per_session=100, nav_p50_ms=10.0)]
+    b = [dict(name="r", bytes_per_session=101, nav_p50_ms=10.0)]
+    errs = diff_rows(a, b)
+    assert len(errs) == 1 and "bytes_per_session" in errs[0] and "[exact]" in errs[0]
+
+
+def test_timing_band_allows_small_drift_rejects_large():
+    a = [dict(name="r", nav_p50_ms=100.0)]
+    assert diff_rows(a, [dict(name="r", nav_p50_ms=104.0)]) == []  # +4% ok
+    errs = diff_rows(a, [dict(name="r", nav_p50_ms=106.0)])  # +6% fails
+    assert len(errs) == 1 and "nav_p50_ms" in errs[0]
+
+
+def test_missing_and_extra_rows_reported():
+    a = [dict(name="only_committed", x=1)]
+    b = [dict(name="only_regen", x=1)]
+    errs = diff_rows(a, b)
+    assert len(errs) == 2
+    assert any("only in committed" in e for e in errs)
+    assert any("only in regenerated" in e for e in errs)
+
+
+def test_row_key_prefers_name_else_non_floats():
+    assert row_key(dict(name="a/b", x=1.5)) == "a/b"
+    k = row_key(dict(scenario=2, mode="batched", tpt_ms=1.23))
+    assert "scenario" in k and "tpt_ms" not in k
+
+
+def test_round_metrics_strips_float_noise():
+    from benchmarks.common import round_metrics
+
+    rows = round_metrics([dict(a=1007.5000000000074, b=[0.1 + 0.2], c=dict(d=3.0000000001))])
+    assert rows == [dict(a=1007.5, b=[0.3], c=dict(d=3.0))]
+
+
+def test_committed_kernel_rows_regenerate_exactly():
+    """The deterministic kernel bench reproduces BENCH_kernels.json rows."""
+    from benchmarks.common import round_metrics
+    from benchmarks.kernel_bench import _kv_rows, _verify_rows
+
+    committed = json.loads((ROOT / "BENCH_kernels.json").read_text())["rows"]
+    regen = round_metrics(_kv_rows()[0] + _verify_rows()[0])
+    assert diff_rows(committed, regen) == []
+
+
+def test_committed_kernel_rows_pin_the_claims():
+    """The headline numbers gate here: >=1.5x int8 shrink, 1-launch fused."""
+    rows = {r.get("name"): r for r in json.loads((ROOT / "BENCH_kernels.json").read_text())["rows"]}
+    fp32 = rows["kernels/kv/fp32"]["bytes_per_session"]
+    int8 = rows["kernels/kv/int8"]["bytes_per_session"]
+    assert fp32 >= 1.5 * int8
+    assert rows["kernels/verify/fused"]["launches"] == 1
+    assert rows["kernels/verify/composed"]["launches"] == 2
+    assert rows["kernels/verify/fused"]["speedup_vs_composed"] >= 1.0

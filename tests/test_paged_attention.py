@@ -114,3 +114,108 @@ def test_property_paged_equals_flat(B, Hkv, gqa, bs, G, data):
     np.testing.assert_array_equal(np.asarray(ref_flat), np.asarray(ref_paged))
     pal_paged = paged_decode_attention(q, k_pages, v_pages, tables, lengths, impl="interpret")
     np.testing.assert_allclose(np.asarray(pal_paged), np.asarray(ref_paged), atol=3e-5)
+
+
+# ---------------------------------------------------------- int8 pages --
+
+
+def _quantize_pages(pages):
+    """Pool-style affine int8 quantization of [P, bs, Hkv, hd] pages."""
+    from repro.models.paged_kv import PagedKVPool
+
+    return PagedKVPool.quantize_kv(pages)
+
+
+def _q8_error_bound(k_pages, v_pages):
+    """Documented output bound: attention output is a convex combination of
+    dequantized V rows (each within v_scale/2 per element) with weights from
+    scores perturbed by the K error — in practice well under the max V range
+    step; we pin a conservative multiple of the worst per-element V error
+    plus a score-perturbation term."""
+    kr = float(jnp.max(jnp.max(k_pages, -1) - jnp.min(k_pages, -1)))
+    vr = float(jnp.max(jnp.max(v_pages, -1) - jnp.min(v_pages, -1)))
+    vmax = float(jnp.max(jnp.abs(v_pages)))
+    return vr / 510.0 + 2.0 * vmax * kr / 510.0
+
+
+@pytest.mark.parametrize("B,H,Hkv,hd,bs,G,P", [(3, 4, 2, 16, 8, 4, 16), (1, 2, 1, 32, 16, 2, 4)])
+def test_q8_paged_within_bound_of_fp32(B, H, Hkv, hd, bs, G, P):
+    """Int8 paged attention tracks the fp32 paged oracle within the bound,
+    and the q8 kernel is bit-exact vs the q8 ref (same dequant arithmetic)."""
+    q, k_pages, v_pages, tables, flat_k, flat_v = _make_case(B, H, Hkv, hd, bs, G, P)
+    S = G * bs
+    lengths = jnp.asarray([S, max(S // 2 - 3, 1), 1][:B], jnp.int32)
+    kq, ks, kz = _quantize_pages(k_pages)
+    vq, vs, vz = _quantize_pages(v_pages)
+    quant = (ks, kz, vs, vz)
+
+    fp32 = paged_decode_attention(q, k_pages, v_pages, tables, lengths, impl="ref")
+    q8_ref = paged_decode_attention(q, kq, vq, tables, lengths, impl="ref", quant=quant)
+    q8_pal = paged_decode_attention(q, kq, vq, tables, lengths, impl="interpret", quant=quant)
+
+    np.testing.assert_allclose(np.asarray(q8_pal), np.asarray(q8_ref), atol=3e-5)
+    bound = _q8_error_bound(k_pages, v_pages)
+    assert float(jnp.max(jnp.abs(q8_ref - fp32))) <= bound
+
+
+def test_q8_from_pool_end_to_end():
+    """quantize='int8' pool: write fp32, attend through int8 pages + params."""
+    from repro.models.paged_kv import PagedKVPool
+
+    B, H, hd, bs = 1, 2, 16, 8
+    pool = PagedKVPool(
+        num_blocks=8, block_size=bs, n_layers=1, n_kv_heads=H, head_dim=hd,
+        quantize="int8",
+    )
+    ks = jax.random.split(KEY, 3)
+    T = 21
+    k = jax.random.normal(ks[0], (1, T, H, hd))
+    v = jax.random.normal(ks[1], (1, T, H, hd))
+    q = jax.random.normal(ks[2], (B, H, hd))
+    pool.create(0)
+    pool.write(0, k, v)
+    tables = pool.table(0, pad_to=4).reshape(1, -1)
+    lengths = jnp.asarray([pool.length(0)], jnp.int32)
+    quant = (pool.k_scale[0], pool.k_zero[0], pool.v_scale[0], pool.v_zero[0])
+    out = paged_decode_attention(
+        q, pool.k_pages[0], pool.v_pages[0], tables, lengths,
+        impl="interpret", quant=quant,
+    )
+    S = 4 * bs
+    flat_k = jnp.zeros((1, S, H, hd)).at[:, :T].set(k)
+    flat_v = jnp.zeros((1, S, H, hd)).at[:, :T].set(v)
+    ref = decode_attention(q, flat_k, flat_v, lengths, impl="ref")
+    bound = _q8_error_bound(k, v) + 3e-5
+    assert float(jnp.max(jnp.abs(out - ref))) <= bound
+    # The int8 pool halves (better) bytes/token vs an fp32 pool.
+    fp32_bytes = 2 * 1 * H * hd * 4
+    assert pool.bytes_per_token * 1.5 <= fp32_bytes
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.integers(1, 3),
+    Hkv=st.sampled_from([1, 2]),
+    gqa=st.sampled_from([1, 2]),
+    bs=st.sampled_from([4, 8]),
+    G=st.integers(1, 3),
+    data=st.data(),
+)
+def test_property_q8_tracks_fp32(B, Hkv, gqa, bs, G, data):
+    """Random geometry sweep: q8 kernel == q8 ref bit-for-bit on GQA too,
+    and both stay within the documented bound of the fp32 oracle."""
+    H = Hkv * gqa
+    hd = 16
+    P = max(2 * B * G, 4)
+    q, k_pages, v_pages, tables, _, _ = _make_case(B, H, Hkv, hd, bs, G, P, seed=B * 7 + G)
+    lengths = jnp.asarray(
+        [data.draw(st.integers(1, G * bs), label=f"len{b}") for b in range(B)], jnp.int32
+    )
+    kq, ks, kz = _quantize_pages(k_pages)
+    vq, vs, vz = _quantize_pages(v_pages)
+    quant = (ks, kz, vs, vz)
+    fp32 = paged_decode_attention(q, k_pages, v_pages, tables, lengths, impl="ref")
+    q8_ref = paged_decode_attention(q, kq, vq, tables, lengths, impl="ref", quant=quant)
+    q8_pal = paged_decode_attention(q, kq, vq, tables, lengths, impl="interpret", quant=quant)
+    np.testing.assert_allclose(np.asarray(q8_pal), np.asarray(q8_ref), atol=3e-5)
+    assert float(jnp.max(jnp.abs(q8_ref - fp32))) <= _q8_error_bound(k_pages, v_pages)

@@ -200,3 +200,131 @@ def test_fleet_paged_serves_more_sessions_than_flat():
     st = reps["paged"]["stats"]
     assert 0 < st.kv_bytes_per_session < reps["flat"]["stats"].kv_bytes_per_session
     assert reps["paged_matched"]["kv_overhead_frac"] < 0.05
+
+
+# --------------------------------------------------------- sentinel page --
+
+
+def test_sentinel_page_never_allocated_and_zero_filled():
+    """The pad sentinel (id num_blocks) is a real zero page no session owns."""
+    pool = PagedKVPool(num_blocks=4, block_size=4, n_layers=1, n_kv_heads=2, head_dim=8)
+    assert pool.sentinel_page == pool.num_blocks
+    assert pool.k_pages.shape[1] == pool.num_blocks + 1
+    for s in range(4):  # exhaust the whole allocatable pool
+        pool.create(s)
+        pool.append(s, pool.block_size)
+    owned = {p for t in pool.tables.values() for p in t.blocks}
+    assert pool.sentinel_page not in owned
+    assert pool.sentinel_page not in pool._free
+    with pytest.raises(BlockPoolExhausted):
+        pool.append(0, 1)
+    assert bool((pool.k_pages[:, pool.sentinel_page] == 0).all())
+    assert bool((pool.v_pages[:, pool.sentinel_page] == 0).all())
+    _check_invariants(pool)
+
+
+def test_table_pads_with_sentinel_by_default():
+    pool = PagedKVPool(num_blocks=4, block_size=4, n_layers=1, n_kv_heads=2, head_dim=8)
+    pool.create(0)
+    pool.append(0, 6)
+    tab = pool.table(0, pad_to=4)
+    np.testing.assert_array_equal(tab[2:], pool.sentinel_page)
+    # Explicit pad_id still honoured (legacy pad-with-0 callers).
+    assert pool.table(0, pad_to=4, pad_id=0)[-1] == 0
+
+
+# ---------------------------------------------------- write dtype boundary --
+
+
+def test_write_casts_mismatched_dtype_at_boundary():
+    """f32 writes into a bf16 pool cast explicitly — no scatter FutureWarning,
+    and the byte accounting invariant holds against the real buffers."""
+    import warnings
+
+    pool = PagedKVPool(
+        num_blocks=4, block_size=4, n_layers=2, n_kv_heads=2, head_dim=8,
+        dtype=jnp.bfloat16,
+    )
+    pool.create(0)
+    rng = np.random.default_rng(3)
+    k = jnp.asarray(rng.normal(size=(2, 5, 2, 8)), jnp.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        pool.write(0, k, k + 1)
+    assert pool.k_pages.dtype == jnp.bfloat16
+    assert pool.tensor_nbytes() == (pool.num_blocks + 1) * pool.bytes_per_block
+
+
+def test_write_rejects_bad_dtypes():
+    pool = PagedKVPool(num_blocks=4, block_size=4, n_layers=1, n_kv_heads=2, head_dim=8)
+    pool.create(0)
+    k = jnp.zeros((1, 2, 2, 8), jnp.float32)
+    with pytest.raises(TypeError, match="floating"):
+        pool.write(0, k.astype(jnp.int32), k.astype(jnp.int32))
+    with pytest.raises(TypeError, match="mismatch"):
+        pool.write(0, k, k.astype(jnp.bfloat16))
+
+
+# ------------------------------------------------------------ int8 pages --
+
+
+def _gather_dequant(pages, scale, zero, tab, length, block_size):
+    out = []
+    for t in range(length):
+        pg, sl = int(tab[t // block_size]), t % block_size
+        out.append(
+            PagedKVPool.dequantize_kv(pages[:, pg, sl], scale[:, pg, sl], zero[:, pg, sl])
+        )
+    return jnp.stack(out, axis=1)
+
+
+def test_int8_pool_roundtrip_within_error_bound():
+    """Quantize-on-write then dequant stays within (max-min)/510 per element."""
+    rng = np.random.default_rng(0)
+    pool = PagedKVPool(
+        num_blocks=6, block_size=4, n_layers=2, n_kv_heads=2, head_dim=16,
+        quantize="int8",
+    )
+    pool.create(0)
+    k = jnp.asarray(4.0 * rng.normal(size=(2, 10, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 10, 2, 16)), jnp.float32)
+    pool.write(0, k, v)
+    assert pool.k_pages.dtype == jnp.int8
+    tab = pool.table(0, pad_to=4)
+    for ref, pages, scale, zero in (
+        (k, pool.k_pages, pool.k_scale, pool.k_zero),
+        (v, pool.v_pages, pool.v_scale, pool.v_zero),
+    ):
+        hat = _gather_dequant(pages, scale, zero, tab, 10, pool.block_size)
+        bound = (jnp.max(ref, -1) - jnp.min(ref, -1)) / 510.0 + 1e-6
+        assert bool(jnp.all(jnp.max(jnp.abs(hat - ref), -1) <= bound))
+    # int8 accounting: payload + two f32 params per token-head, k and v.
+    assert pool.bytes_per_token == 2 * 2 * 2 * (16 + 8)
+    assert pool.tensor_nbytes() == (pool.num_blocks + 1) * pool.bytes_per_block
+
+
+def test_int8_cow_copies_quant_params():
+    """CoW divergence must copy scale/zero pages along with the payload."""
+    rng = np.random.default_rng(1)
+    pool = PagedKVPool(
+        num_blocks=8, block_size=4, n_layers=1, n_kv_heads=1, head_dim=8,
+        quantize="int8",
+    )
+    pool.create(0)
+    k = jnp.asarray(rng.normal(size=(1, 6, 1, 8)), jnp.float32)
+    pool.write(0, k, k)
+    pool.fork(0, 1)
+    extra = jnp.asarray(rng.normal(size=(1, 1, 1, 8)), jnp.float32)
+    pool.write(1, extra, extra)  # CoW-copies the shared tail page
+    tab0, tab1 = pool.table(0), pool.table(1)
+    assert tab0[1] != tab1[1]
+    # Parent's tokens 4..5 readable identically through either table.
+    a = _gather_dequant(pool.k_pages, pool.k_scale, pool.k_zero, tab0, 6, 4)
+    b = _gather_dequant(pool.k_pages, pool.k_scale, pool.k_zero, tab1, 6, 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _check_invariants(pool)
+
+
+def test_pool_rejects_unknown_quantize_mode():
+    with pytest.raises(ValueError, match="quantize"):
+        PagedKVPool(num_blocks=4, block_size=4, quantize="fp4")

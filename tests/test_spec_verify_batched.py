@@ -322,3 +322,146 @@ def test_spec_verify_backend_paged_tree_forward():
     )
     with pytest.raises(ValueError, match="tree requests need"):
         chain_only.verify_tree_batch([(0, tokens, [0.9] * 3, parents)])
+
+
+def _fused_backend(quantize=None, impl="ref"):
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import SpecVerifyBackend
+
+    H, hd, bs, V = 2, 8, 4, 256
+    pool = PagedKVPool(
+        num_blocks=16, block_size=bs, n_layers=1, n_kv_heads=H, head_dim=hd,
+        quantize=quantize,
+    )
+    w = np.asarray(jax.random.normal(jax.random.fold_in(KEY, 77), (H * hd, V)) * 4, np.float32)
+
+    def query_fn(session, tokens):
+        k = jax.random.fold_in(jax.random.fold_in(KEY, 88), session * 131 + len(tokens))
+        return np.asarray(jax.random.normal(k, (len(tokens) + 1, H, hd)), np.float32)
+
+    backend = SpecVerifyBackend(
+        fused=True, kv_pool=pool, query_fn=query_fn, lm_head=w, impl=impl, block_v=256
+    )
+    return backend, pool, w, V
+
+
+def test_fused_backend_one_launch_matches_composition():
+    """fused=True backend == the unfused paged-attention + verify pipeline,
+    with batched == per-session (no cross-session leakage through padding)."""
+    from repro.kernels.decode_attention import paged_decode_attention
+    from repro.kernels.spec_verify import fused_target_logits, spec_verify
+
+    backend, pool, w, V = _fused_backend()
+    reqs = [(0, [3, 9, 7], [0.9] * 3), (1, [5], [0.9]), (2, [1, 2, 3, 4], [0.9] * 4)]
+    for s, toks, _ in reqs:
+        pool.create(s)
+        pool.append(s, 5 + s + len(toks) + 1)  # dispatcher-style metadata append
+    batched = backend.verify_batch(reqs)
+    solo = [backend.verify(s, t, c) for (s, t, c) in reqs]
+    assert batched == solo
+    # Unfused oracle per session over the SAME materialized pages.
+    for (s, toks, _), got in zip(reqs, batched):
+        K1 = len(toks) + 1
+        q = jnp.asarray(backend.query_fn(s, toks))[None]  # [1, K1, H, hd]
+        base = pool.length(s) - len(toks)
+        lengths = jnp.asarray([[base + i for i in range(K1)]], jnp.int32)
+        tab = jnp.asarray([list(pool.table(s))], jnp.int32)
+        o = paged_decode_attention(
+            q.reshape(K1, *q.shape[2:]), pool.k_pages[0], pool.v_pages[0],
+            jnp.repeat(tab, K1, axis=0), lengths.reshape(-1), impl="ref",
+        ).reshape(1, K1, -1).astype(jnp.float32)
+        logits = fused_target_logits(o, jnp.asarray(w), block_v=256, v_true=V)
+        na, corr, _ = spec_verify(
+            logits, jnp.asarray([toks], jnp.int32), jnp.asarray([len(toks)], jnp.int32),
+            impl="ref", block_v=256,
+        )
+        assert got == (int(np.asarray(na)[0, 0]), int(np.asarray(corr)[0, 0]))
+
+
+def test_fused_backend_int8_pool_auto_quant():
+    """An int8 pool flows its quant params into the fused launch, and the
+    integer verdicts track the fp32 pool on the same inputs."""
+    fp32, pool32, _, _ = _fused_backend()
+    q8, pool8, _, _ = _fused_backend(quantize="int8")
+    reqs = [(0, [3, 9, 7], [0.9] * 3), (1, [5], [0.9])]
+    for s, toks, _ in reqs:
+        for p in (pool32, pool8):
+            p.create(s)
+            p.append(s, 5 + s + len(toks) + 1)
+    assert pool8.k_pages.dtype == jnp.int8
+    got32, got8 = fp32.verify_batch(reqs), q8.verify_batch(reqs)
+    assert got32 == got8  # sharp LM head: int8 noise can't flip the argmax
+    # And the quantized pool is genuinely smaller.
+    assert pool8.bytes_per_token * 1.5 <= pool32.bytes_per_token
+
+
+def test_unfused_paged_backend_pads_tables_with_sentinel():
+    """Satellite regression: the batched paged forward pads ragged tables
+    with the pool's sentinel page, never page 0 (a live page)."""
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import SpecVerifyBackend
+
+    V = 128
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    seen = {}
+
+    def batched_logits_fn(tokens, nd, tables):
+        seen["tables"] = np.array(tables)
+        return np.zeros((tokens.shape[0], tokens.shape[1] + 1, V), np.float32)
+
+    backend = SpecVerifyBackend(kv_pool=pool, batched_logits_fn=batched_logits_fn, impl="ref")
+    pool.create(0)
+    pool.append(0, 6)  # pages [0, 1]
+    backend.verify_batch([(0, [1, 2, 3], [0.9] * 3)])
+    tables = seen["tables"]
+    assert tables.shape[1] >= 2
+    np.testing.assert_array_equal(tables[0, 2:], pool.sentinel_page)
+    assert (tables[1:] == pool.sentinel_page).all()  # pad rows too
+
+
+def test_fused_backend_full_serve_round_trip():
+    """EdgeClient -> CloudVerifier with the fused single-launch backend over a
+    shared paged pool (the dispatcher's _kv_secure owns session lifecycle),
+    on the virtual clock: streams commit, and fp32 runs are bit-reproducible.
+    The int8 pool serves the same flow through the quantized fused launch."""
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import SpecVerifyBackend
+    from repro.runtime.client import EdgeClient, EdgeConfig
+    from repro.runtime.server import CloudVerifier
+    from repro.runtime.simclock import VirtualClock
+    from repro.runtime.transport import Channel, ChannelConfig
+
+    H, hd, V = 2, 16, 512
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (H * hd, V)) * 6, np.float32)
+
+    def query_fn(session, tokens):
+        k = jax.random.fold_in(jax.random.PRNGKey(2), session * 997 + len(tokens))
+        return np.asarray(jax.random.normal(k, (len(tokens) + 1, H, hd)), np.float32)
+
+    def once(quantize):
+        clock = VirtualClock()
+        pool = PagedKVPool(num_blocks=256, block_size=8, n_layers=1, n_kv_heads=H,
+                           head_dim=hd, quantize=quantize)
+        backend = SpecVerifyBackend(fused=True, kv_pool=pool, query_fn=query_fn,
+                                    lm_head=w, impl="ref", block_v=512)
+        server = CloudVerifier(backend, kv_pool=pool, clock=clock)
+        up = Channel(ChannelConfig(alpha=0.02, beta=0.002), "up0", clock=clock)
+        dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005), "dn0", clock=clock)
+        server.attach(0, up, dn)
+        c = EdgeClient(0, up, dn, EdgeConfig(gamma=0.02, nav_timeout=3.0))
+
+        def body():
+            server.start()
+            st = c.run(48)
+            server.stop()
+            return st
+
+        st = clock.run(body)
+        return list(c.tokens), st["accepted_tokens"], st["rounds"]
+
+    run_a, run_b = once(None), once(None)
+    assert run_a == run_b  # virtual clock + deterministic fused verify
+    tokens, accepted, _rounds = run_a
+    assert accepted >= 48 and len(tokens) == accepted
+    tokens8, accepted8, _ = once("int8")
+    assert accepted8 >= 48 and len(tokens8) == accepted8

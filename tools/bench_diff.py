@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Diff a regenerated BENCH_<area>.json against the committed copy.
+
+Committed bench files are the contract: deterministic benches (virtual
+clock, pool accounting, roofline traffic models) must reproduce them on
+any host.  This tool compares field-by-field with two tolerance bands:
+
+* **exact** — integers, strings, counts, byte totals, ratios: any drift
+  is a regression (or an intentional change that must be committed);
+* **timing band (±5%)** — fields whose name marks them as time-like or
+  rate-like (``*_ms``, ``*_us``, ``*_s``, ``tokens_per_s``, ``speedup``):
+  compared with 5% relative tolerance so a legitimately re-derived model
+  constant or quantile doesn't hard-fail, while real regressions do.
+
+Rows are matched by their identity key (``name`` when present, else the
+sorted non-float fields), so row order never matters.
+
+    python tools/bench_diff.py BENCH_kernels.json regen/BENCH_kernels.json
+    python tools/bench_diff.py --area fleet   # regenerate in-process + diff
+
+Exit code 1 on any mismatch, listing every offending field.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+TIMING_SUFFIXES = ("_ms", "_us", "_ns", "_s")
+TIMING_FIELDS = {"tokens_per_s", "speedup", "speedup_vs_composed", "bw_frac"}
+TIMING_RTOL = 0.05
+
+REGEN = {
+    "fleet": ("benchmarks.fleet_bench", "router"),
+    "kernels": ("benchmarks.kernel_bench", "kernels"),
+}
+
+
+def is_timing_field(name: str) -> bool:
+    return name in TIMING_FIELDS or name.endswith(TIMING_SUFFIXES)
+
+
+def row_key(row: dict) -> str:
+    if "name" in row:
+        return str(row["name"])
+    ident = {k: v for k, v in sorted(row.items()) if not isinstance(v, float)}
+    return json.dumps(ident, sort_keys=True)
+
+
+def diff_rows(committed: list, regen: list) -> list:
+    """Returns a list of human-readable mismatch strings (empty == match)."""
+    errors = []
+    a = {row_key(r): r for r in committed}
+    b = {row_key(r): r for r in regen}
+    for key in sorted(set(a) | set(b)):
+        if key not in a:
+            errors.append(f"row only in regenerated output: {key}")
+            continue
+        if key not in b:
+            errors.append(f"row only in committed file: {key}")
+            continue
+        ra, rb = a[key], b[key]
+        for field in sorted(set(ra) | set(rb)):
+            va, vb = ra.get(field), rb.get(field)
+            if va == vb:
+                continue
+            if (
+                is_timing_field(field)
+                and isinstance(va, (int, float))
+                and isinstance(vb, (int, float))
+                and va
+                and abs(vb - va) / abs(va) <= TIMING_RTOL
+            ):
+                continue
+            band = f"±{TIMING_RTOL:.0%}" if is_timing_field(field) else "exact"
+            errors.append(f"{key}.{field}: committed={va!r} regenerated={vb!r} [{band}]")
+    return errors
+
+
+def _regenerate(area: str) -> list:
+    import importlib
+
+    mod_name, fn_name = REGEN[area]
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    rows, _lines = getattr(importlib.import_module(mod_name), fn_name)()
+    from benchmarks.common import round_metrics
+
+    return round_metrics(rows)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("committed", nargs="?", help="committed BENCH_<area>.json")
+    ap.add_argument("regenerated", nargs="?", help="freshly generated copy")
+    ap.add_argument("--area", choices=sorted(REGEN), help="regenerate in-process and diff")
+    args = ap.parse_args(argv)
+
+    if args.area:
+        committed_path = Path(__file__).resolve().parent.parent / f"BENCH_{args.area}.json"
+        committed = json.loads(committed_path.read_text())["rows"]
+        regen = _regenerate(args.area)
+        label = f"BENCH_{args.area}.json"
+    elif args.committed and args.regenerated:
+        committed = json.loads(Path(args.committed).read_text())["rows"]
+        regen = json.loads(Path(args.regenerated).read_text())["rows"]
+        label = args.committed
+    else:
+        ap.error("pass two files, or --area to regenerate in-process")
+        return 2
+
+    errors = diff_rows(committed, regen)
+    if errors:
+        print(f"{label}: {len(errors)} mismatch(es)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"{label}: {len(committed)} rows match (exact + {TIMING_RTOL:.0%} timing band)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -97,6 +97,13 @@ class BlockTable:
     length: int = 0
     reserved: bool = False  # flat-mode contiguous reservation (no CoW/free)
     last_touch: int = 0  # pool clock at last append/rollback (LRU eviction key)
+    # Materialized-KV watermark: positions [0, filled) hold real tensors
+    # written through ``fill``/``write``.  Rollback lowers it (content past
+    # the kept prefix is dead — and regrown slots may land in RECYCLED
+    # physical pages holding another session's data), eviction zeroes it,
+    # and it dies with the table on release, so tensor-filling backends can
+    # trust it instead of tracking their own (see ``PagedKVPool.filled``).
+    filled: int = 0
 
     def capacity(self, block_size: int) -> int:
         """Token slots currently backed by physical pages."""
@@ -199,7 +206,9 @@ class PagedKVPool:
 
         Ragged block tables pad with this id so padded lanes in a bucketed
         batched launch can never DMA a page owned by a session.  Tensor mode
-        sizes the page buffers ``num_blocks + 1`` so it is a valid index.
+        sizes the page buffers ``num_blocks + 1`` so it is a valid index;
+        external page buffers consumed through sentinel-padded tables must
+        match that ``num_blocks + 1`` sizing (see ``table``).
         """
         return self.num_blocks
 
@@ -289,7 +298,11 @@ class PagedKVPool:
         p = self._table(parent)
         if child in self.tables:
             raise ValueError(f"session {child} already exists")
-        self.tables[child] = BlockTable(blocks=list(p.blocks), length=p.length)
+        # The child sees the parent's physical pages, so whatever prefix the
+        # parent materialized is materialized for the child too.
+        self.tables[child] = BlockTable(
+            blocks=list(p.blocks), length=p.length, filled=p.filled
+        )
         for page in p.blocks:
             self.refcounts[page] += 1
         if p.blocks:
@@ -382,6 +395,10 @@ class PagedKVPool:
         if new_length > t.length:
             raise ValueError(f"rollback to {new_length} > current length {t.length}")
         t.length = new_length
+        # Tensors past the kept prefix are dead: the rejected round's KV must
+        # never be trusted again, and slots regrown after this rollback may
+        # land in recycled physical pages holding another session's data.
+        t.filled = min(t.filled, new_length)
         if t.reserved:
             self._touch(t)
             self.op_seconds += time.perf_counter() - t0
@@ -421,6 +438,7 @@ class PagedKVPool:
             self._resident -= 1
         t.blocks = []
         t.length = 0
+        t.filled = 0  # every materialized tensor went back with the pages
         t.reserved = False
         self.stats["evictions"] += 1
         self.op_seconds += time.perf_counter() - t0
@@ -513,6 +531,17 @@ class PagedKVPool:
         before verification, then the backend materializes tensors here
         without double-appending.  Same boundary dtype validation and int8
         quantize-on-write as ``write``.
+
+        A target page shared with another session (refcount > 1, post
+        ``fork``) is CoW-copied first, exactly like ``append`` — writing
+        through it in place would mutate every sibling's view.  The copy can
+        raise ``BlockPoolExhausted``; callers that must not diverge shared
+        prefix pages should materialize the prefix on its OWNER before
+        forking, so children inherit the ``filled`` watermark and never
+        fill shared slots.
+
+        Advances the session's materialized watermark (``filled``) when the
+        write extends the contiguous materialized prefix.
         """
         if self.k_pages is None:
             raise RuntimeError("pool was built without tensor storage (n_layers=0)")
@@ -529,7 +558,15 @@ class PagedKVPool:
         written = 0
         while written < T:
             pos = start + written
-            page = t.blocks[pos // self.block_size]
+            bi = pos // self.block_size
+            page = t.blocks[bi]
+            if not t.reserved and int(self.refcounts[page]) > 1:
+                new = self._alloc_page()
+                self._copy_page(page, new)
+                self.stats["cow_copies"] += 1
+                t.blocks[bi] = new
+                self._decref(page)
+                page = new
             slot = pos % self.block_size
             take = min(self.block_size - slot, T - written)
             ksl = jax.lax.dynamic_slice_in_dim(k_new, written, take, axis=1)
@@ -544,6 +581,8 @@ class PagedKVPool:
                     cut = jax.lax.dynamic_slice_in_dim(new, written, take, axis=1)
                     setattr(self, pages, getattr(self, pages).at[:, page, sl].set(cut))
             written += take
+        if start <= t.filled:  # gap-free writes extend the materialized prefix
+            t.filled = max(t.filled, start + T)
 
     def tensor_nbytes(self) -> int:
         """Actual bytes held by ALL page buffers (payload + quant params).
@@ -566,6 +605,17 @@ class PagedKVPool:
         zero-filled page no session can own, so padded lanes never prefetch
         another session's KV even before length masking applies (see
         ``docs/kernels.md``).
+
+        The sentinel id is ``num_blocks``, one past the allocatable pool:
+        it indexes the pool's own ``num_blocks + 1``-page tensor buffers,
+        but any EXTERNAL page buffer gathered through a sentinel-padded
+        table (a ``batched_logits_fn`` consumer's arrays, or any buffer
+        paired with a metadata-mode pool, which has no tensor storage of
+        its own) must likewise be sized ``num_blocks + 1`` with a zeroed
+        last page — a strict gather otherwise indexes out of bounds (and
+        ``jnp`` indexing silently clamps to the last live page).  Callers
+        that cannot resize their buffers must pass an in-range ``pad_id``
+        explicitly.
         """
         t = self._table(session)
         ids = t.blocks
@@ -579,6 +629,17 @@ class PagedKVPool:
     def length(self, session: int) -> int:
         """The session's committed token count."""
         return self._table(session).length
+
+    def filled(self, session: int) -> int:
+        """Positions ``[0, filled)`` hold materialized tensors (tensor mode).
+
+        The watermark tensor-filling backends must refill from: ``fill``
+        advances it, ``rollback`` lowers it past rejected (and possibly
+        recycled) slots, ``evict`` zeroes it, and it dies with the table on
+        ``release`` — so a reused session id never inherits a dead
+        session's watermark.
+        """
+        return self._table(session).filled
 
     def shared_blocks(self) -> int:
         """Distinct pages referenced by more than one session."""

@@ -214,8 +214,11 @@ class SpecVerifyBackend(VerifyBackend):
     ``(tokens, n_drafted, block_tables)`` arrays — the fused
     paged-attention + NAV dispatch shape a production verifier compiles
     (see ``kernels.spec_verify.spec_verify_batched``).  Ragged tables pad
-    with the pool's zero-filled sentinel page, so a padded lane can never
-    prefetch KV owned by another session.
+    with the pool's zero-filled sentinel page (id ``num_blocks``), so a
+    padded lane can never prefetch KV owned by another session — a
+    ``batched_logits_fn`` gathering from its OWN page buffers must size
+    them ``num_blocks + 1`` with a zeroed last page to honour that pad id
+    (see ``PagedKVPool.table``).
 
     **Fused one-launch verify** (``fused=True``).  Requires a TENSOR-mode
     ``kv_pool``, a ``query_fn(session, tokens) -> [K+1, H, hd]`` producing
@@ -225,10 +228,16 @@ class SpecVerifyBackend(VerifyBackend):
     Pallas launch instead of forward-then-verify.  The round's KV slots
     (metadata-appended by the dispatcher's ``_kv_secure``) are materialized
     through ``kv_fn(session, start, count) -> (k, v)`` just before the
-    launch; the default synthesizes deterministic position-keyed tensors,
-    so CoW prefix pages hold identical values whichever session fills them
-    first.  An int8 pool (``quantize='int8'``) is picked up automatically —
-    the launch dequantizes pages in-kernel.
+    launch, from the pool's per-session ``filled`` watermark (``ensure_kv``)
+    — so slots regrown after a rollback or eviction are always refilled,
+    never trusted to still hold this session's tensors.  The default
+    ``kv_fn`` synthesizes deterministic position-keyed tensors, so
+    re-prefills reproduce the original values bit-for-bit.  A shared-prefix
+    ``CloudVerifier`` materializes the prefix ONCE on its owner session
+    before any fork; children inherit the watermark and never fill shared
+    pages (``PagedKVPool.fill`` would CoW-copy them, forfeiting the
+    sharing).  An int8 pool (``quantize='int8'``) is picked up
+    automatically — the launch dequantizes pages in-kernel.
     """
 
     def __init__(
@@ -261,7 +270,6 @@ class SpecVerifyBackend(VerifyBackend):
         self.query_fn = query_fn
         self.lm_head = lm_head
         self.kv_fn = kv_fn if kv_fn is not None else self._default_kv_fn
-        self._filled: Dict[int, int] = {}  # session -> KV positions materialized
 
     def _tables(self, sessions: Sequence[int]):
         if self.kv_pool is None:
@@ -292,15 +300,22 @@ class SpecVerifyBackend(VerifyBackend):
         base = np.sin(pos[None, :, None, None] * 0.37 + phase * 0.11).astype(np.float32)
         return np.reshape(base, shape), np.reshape(np.roll(base, 1, axis=-1) * 0.5, shape)
 
-    def _ensure_kv(self, session: int) -> None:
-        """Materialize tensors for slots appended since the last round."""
+    def ensure_kv(self, session: int) -> None:
+        """Materialize tensors for every slot past the pool's filled watermark.
+
+        The pool's per-session ``filled`` watermark is authoritative — NOT a
+        backend-side counter: rollback lowers it past rejected positions
+        (whose replacements may land in recycled physical pages holding
+        another session's data), eviction zeroes it, and it dies with the
+        table on release, so re-grown or re-registered sessions always
+        refill from their true materialized prefix.
+        """
         pool = self.kv_pool
-        have = min(self._filled.get(session, 0), pool.length(session))
+        have = pool.filled(session)
         need = pool.length(session)
         if need > have:
             k, v = self.kv_fn(session, have, need - have)
             pool.fill(session, have, k, v)
-        self._filled[session] = need
 
     def verify(self, session: int, tokens: List[int], confs: List[float]):
         """Verify one session through the batched path (batch of one)."""
@@ -343,7 +358,7 @@ class SpecVerifyBackend(VerifyBackend):
         pool = self.kv_pool
         sessions = [s for (s, _, _) in requests]
         for s in sessions:
-            self._ensure_kv(s)
+            self.ensure_kv(s)
         tokens = [t for (_, t, _) in requests]
         q_seq = [np.asarray(self.query_fn(s, t), np.float32) for (s, t, _) in requests]
         base = [max(pool.length(s) - len(t), 0) for (s, t, _) in requests]
@@ -503,6 +518,17 @@ class CloudVerifier:
         if kv_pool is not None and kv_flat_reserve is None and self.kv_shared_prefix > 0:
             kv_pool.create(self.KV_PREFIX_SESSION)
             kv_pool.append(self.KV_PREFIX_SESSION, self.kv_shared_prefix)
+            # Tensor-filling backends materialize the prefix ONCE, on its
+            # owner, BEFORE any session forks it: children then inherit the
+            # pool's filled watermark and only ever fill their own pages —
+            # filling through a forked table would CoW-copy every shared
+            # prefix page (pool.fill diverges shared pages), forfeiting the
+            # prefix-sharing win.
+            if (
+                getattr(backend, "fused", False)
+                and getattr(backend, "kv_pool", None) is kv_pool
+            ):
+                backend.ensure_kv(self.KV_PREFIX_SESSION)
         # Default: batching only when a coalescing window was requested.
         # batch_window == 0 keeps strict per-session serving (one request per
         # backend call, summed costs) so baselines measure what they claim.

@@ -233,6 +233,92 @@ def test_table_pads_with_sentinel_by_default():
     assert pool.table(0, pad_to=4, pad_id=0)[-1] == 0
 
 
+# ------------------------------------------------- materialized watermark --
+
+
+def _wm_pool():
+    return PagedKVPool(num_blocks=8, block_size=4, n_layers=1, n_kv_heads=1, head_dim=2)
+
+
+def _tok(n, value=1.0):
+    return jnp.full((1, n, 1, 2), value, jnp.float32)
+
+
+def test_fill_advances_watermark_and_rollback_lowers_it():
+    """Regrown slots after a rollback may land in recycled physical pages —
+    the watermark must expose them as unmaterialized."""
+    pool = _wm_pool()
+    pool.create(0)
+    pool.append(0, 10)
+    assert pool.filled(0) == 0  # metadata append materializes nothing
+    pool.fill(0, 0, _tok(10), _tok(10))
+    assert pool.filled(0) == 10
+    pool.rollback(0, 5)
+    assert pool.filled(0) == 5
+    pool.append(0, 7)  # regrow to 12, possibly into recycled pages
+    assert pool.filled(0) == 5
+    pool.fill(0, 5, _tok(7), _tok(7))
+    assert pool.filled(0) == 12
+
+
+def test_fill_gap_does_not_advance_watermark():
+    pool = _wm_pool()
+    pool.create(0)
+    pool.append(0, 8)
+    pool.fill(0, 4, _tok(2), _tok(2))  # ahead of the watermark: hole at [0, 4)
+    assert pool.filled(0) == 0
+    pool.fill(0, 0, _tok(4), _tok(4))  # plug the hole
+    assert pool.filled(0) == 4  # conservative: [4, 6) must be refilled
+
+
+def test_watermark_zeroed_by_evict_and_dies_with_release():
+    pool = _wm_pool()
+    pool.create(0)
+    pool.write(0, _tok(6), _tok(6))  # append + fill -> watermark 6
+    assert pool.filled(0) == 6
+    pool.evict(0)
+    assert pool.filled(0) == 0
+    pool.append(0, 6)  # comeback: slots exist but hold recycled content
+    assert pool.filled(0) == 0
+    pool.release(0)
+    pool.create(0)  # reused session id: no inherited watermark
+    pool.append(0, 6)
+    assert pool.filled(0) == 0
+
+
+def test_fork_inherits_watermark():
+    """A child sees the parent's physical pages, so the parent's
+    materialized prefix is materialized for the child too."""
+    pool = _wm_pool()
+    pool.create(0)
+    pool.write(0, _tok(6), _tok(6))
+    pool.fork(0, 1)
+    assert pool.filled(1) == 6
+
+
+def test_fill_cow_diverges_shared_pages():
+    """fill() through a forked table must never mutate the sibling's view
+    (REVIEW: in-place fill corrupted siblings under session-dependent KV)."""
+    pool = _wm_pool()
+    pool.create(0)
+    k0 = jnp.arange(12, dtype=jnp.float32).reshape(1, 6, 1, 2)
+    pool.write(0, k0, k0 * 10)
+    pool.fork(0, 1)
+    before = np.asarray(pool.k_pages).copy()
+    parent_pages = list(pool.tables[0].blocks)
+    k1 = _tok(6, 99.0)
+    pool.fill(1, 0, k1, k1)  # session-dependent overwrite of the shared prefix
+    _check_invariants(pool)
+    assert pool.stats["cow_copies"] == 2  # both shared pages diverged
+    assert all(a != b for a, b in zip(parent_pages, pool.tables[1].blocks))
+    for p in parent_pages:  # parent's view is untouched
+        np.testing.assert_array_equal(np.asarray(pool.k_pages)[:, p], before[:, p])
+    got = np.concatenate(
+        [np.asarray(pool.k_pages)[0, pg] for pg in pool.tables[1].blocks]
+    )[:6]
+    np.testing.assert_array_equal(got, np.asarray(k1)[0])
+
+
 # ---------------------------------------------------- write dtype boundary --
 
 

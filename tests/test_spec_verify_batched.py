@@ -395,6 +395,89 @@ def test_fused_backend_int8_pool_auto_quant():
     assert pool8.bytes_per_token * 1.5 <= pool32.bytes_per_token
 
 
+def _materialized_k(pool, session):
+    """Gather the session's K tensors [L, length, H, hd] through its table."""
+    tab = pool.table(session)
+    kp = np.asarray(pool.k_pages)
+    cols = [
+        kp[:, int(tab[t // pool.block_size]), t % pool.block_size]
+        for t in range(pool.length(session))
+    ]
+    return np.stack(cols, axis=1)
+
+
+def test_fused_backend_refills_recycled_pages_after_rollback():
+    """REVIEW regression: a rollback that drops a trailing page, followed by
+    a foreign session recycling (and dirtying) that page, must not leave the
+    regrown slots holding the foreign data — ensure_kv refills from the
+    pool's watermark, not a stale backend-side counter."""
+    backend, pool, _, _ = _fused_backend()
+    H, hd = pool.n_kv_heads, pool.head_dim
+    pool.create(0)
+    pool.append(0, 9)  # dispatcher-style metadata append: pages [p0, p1, p2]
+    backend.ensure_kv(0)
+    pool.rollback(0, 6)  # commit 6 -> the trailing page is freed
+    pool.create(99)  # a foreign session recycles that page...
+    pool.append(99, pool.block_size)
+    junk = jnp.full((1, pool.block_size, H, hd), 7.5)
+    pool.fill(99, 0, junk, -junk)  # ...and dirties it
+    pool.release(99)
+    pool.append(0, 3)  # regrow to 9: the dirty page comes back
+    backend.ensure_kv(0)
+    k, _ = backend.kv_fn(0, 0, 9)
+    np.testing.assert_array_equal(_materialized_k(pool, 0), np.asarray(k))
+
+
+def test_fused_backend_rematerializes_after_eviction():
+    """An evicted-then-resumed session re-prefills every slot: its old pages
+    may have been handed to (and written by) anyone in between."""
+    backend, pool, _, _ = _fused_backend()
+    H, hd = pool.n_kv_heads, pool.head_dim
+    pool.create(0)
+    pool.append(0, 6)
+    backend.ensure_kv(0)
+    pool.evict(0)  # pool-pressure reclaim
+    pool.create(1)  # the pages are recycled and dirtied
+    pool.append(1, 8)
+    junk = jnp.full((1, 8, H, hd), -3.25)
+    pool.fill(1, 0, junk, junk)
+    pool.release(1)
+    pool.append(0, 6)  # comeback re-prefill (the dispatcher's _kv_secure)
+    backend.ensure_kv(0)
+    k, _ = backend.kv_fn(0, 0, 6)
+    np.testing.assert_array_equal(_materialized_k(pool, 0), np.asarray(k))
+
+
+def test_fused_backend_reused_session_id_refills_from_scratch():
+    """The watermark dies with the table: a reused session id must be fully
+    re-materialized, not inherit the dead session's fill state."""
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import SpecVerifyBackend
+
+    H, hd, V = 2, 8, 256
+    pool = PagedKVPool(num_blocks=16, block_size=4, n_layers=1, n_kv_heads=H, head_dim=hd)
+    calls = []
+
+    def kv_fn(session, start, count):
+        calls.append((session, start, count))
+        x = np.full((1, count, H, hd), float(session + 1), np.float32)
+        return x, x
+
+    backend = SpecVerifyBackend(
+        fused=True, kv_pool=pool, kv_fn=kv_fn, lm_head=np.ones((H * hd, V), np.float32),
+        query_fn=lambda s, t: np.zeros((len(t) + 1, H, hd), np.float32),
+    )
+    pool.create(7)
+    pool.append(7, 8)
+    backend.ensure_kv(7)
+    pool.release(7)  # session died (timeout / detach)
+    pool.create(7)  # same id, new life
+    pool.append(7, 8)
+    assert pool.filled(7) == 0
+    backend.ensure_kv(7)
+    assert calls == [(7, 0, 8), (7, 0, 8)]
+
+
 def test_unfused_paged_backend_pads_tables_with_sentinel():
     """Satellite regression: the batched paged forward pads ragged tables
     with the pool's sentinel page, never page 0 (a live page)."""
@@ -465,3 +548,52 @@ def test_fused_backend_full_serve_round_trip():
     assert accepted >= 48 and len(tokens) == accepted
     tokens8, accepted8, _ = once("int8")
     assert accepted8 >= 48 and len(tokens8) == accepted8
+
+
+def test_fused_serve_shared_prefix_materialized_once_and_stays_shared():
+    """CloudVerifier materializes the shared system prefix ONCE on its owner
+    before any fork: serving sessions inherit the watermark, their fills
+    never touch (and so never CoW-copy) the shared prefix pages, and the
+    prefix-sharing memory win survives the fused tensor path."""
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import SpecVerifyBackend
+    from repro.runtime.client import EdgeClient, EdgeConfig
+    from repro.runtime.server import CloudVerifier
+    from repro.runtime.simclock import VirtualClock
+    from repro.runtime.transport import Channel, ChannelConfig
+
+    H, hd, V = 2, 16, 512
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (H * hd, V)) * 6, np.float32)
+
+    def query_fn(session, tokens):
+        k = jax.random.fold_in(jax.random.PRNGKey(4), session * 997 + len(tokens))
+        return np.asarray(jax.random.normal(k, (len(tokens) + 1, H, hd)), np.float32)
+
+    clock = VirtualClock()
+    pool = PagedKVPool(num_blocks=256, block_size=8, n_layers=1, n_kv_heads=H, head_dim=hd)
+    backend = SpecVerifyBackend(
+        fused=True, kv_pool=pool, query_fn=query_fn, lm_head=w, impl="ref", block_v=512
+    )
+    server = CloudVerifier(backend, kv_pool=pool, kv_shared_prefix=32, clock=clock)
+    assert pool.filled(CloudVerifier.KV_PREFIX_SESSION) == 32  # filled at init
+    clients = []
+    for s in range(2):
+        up = Channel(ChannelConfig(alpha=0.02, beta=0.002), f"up{s}", clock=clock)
+        dn = Channel(ChannelConfig(alpha=0.01, beta=0.0005), f"dn{s}", clock=clock)
+        server.attach(s, up, dn)
+        clients.append(EdgeClient(s, up, dn, EdgeConfig(gamma=0.02, nav_timeout=3.0)))
+        assert pool.filled(s) == 32  # forked: watermark inherited, no refill
+
+    def body():
+        server.start()
+        stats = [c.run(24) for c in clients]
+        server.stop()
+        return stats
+
+    st0, st1 = clock.run(body)
+    assert st0["accepted_tokens"] >= 24 and st1["accepted_tokens"] >= 24
+    # All 4 (page-aligned) prefix pages are still shared by owner + sessions.
+    prefix_pages = pool.tables[CloudVerifier.KV_PREFIX_SESSION].blocks
+    assert len(prefix_pages) == 4
+    assert all(int(pool.refcounts[p]) == 3 for p in prefix_pages)
+    assert pool.stats["cow_copies"] == 0  # nothing ever wrote a shared page

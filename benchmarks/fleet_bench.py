@@ -96,6 +96,39 @@ KV_FLAT_MAX_LEN = 512
 KV_MODES = ("flat", "paged")
 
 
+def _sharded_spec_backend(shards: int, seed: int):
+    """The real sharded fused verifier for the fleet harness.
+
+    A tensor-mode ``PagedKVPool`` (pages partitioned per shard on the head
+    axis) plus a seeded deterministic target (queries + LM head) behind
+    ``ShardedSpecVerifyBackend`` — the same geometry the serve launcher's
+    ``--backend spec`` uses, sized for the fleet's session counts.  The
+    returned backend carries the synthetic ``verify_time`` so the batched
+    coalescing window is identical to the simulated backends'.
+    """
+    import jax
+
+    from repro.runtime import ShardedSpecVerifyBackend
+
+    H, hd, bs, V = 2, 8, 4, 256
+    pool = PagedKVPool(
+        num_blocks=1024, block_size=bs, n_layers=1, n_kv_heads=H, head_dim=hd
+    )
+    key = jax.random.PRNGKey(seed)
+    w = np.asarray(jax.random.normal(jax.random.fold_in(key, 77), (H * hd, V)) * 4, np.float32)
+
+    def query_fn(session, tokens):
+        k = jax.random.fold_in(jax.random.fold_in(key, 88), session * 131 + len(tokens))
+        return np.asarray(jax.random.normal(k, (len(tokens) + 1, H, hd)), np.float32)
+
+    backend = ShardedSpecVerifyBackend(
+        shards=shards, kv_pool=pool, query_fn=query_fn, lm_head=w,
+        impl="ref", block_v=256,
+    )
+    backend.verify_time = 0.080  # align the coalescing window with SyntheticBackend
+    return backend, pool
+
+
 def run_fleet(
     n_sessions: int = 8,
     mode: str = "batched",
@@ -114,6 +147,7 @@ def run_fleet(
     nav_timeout: float = 8.0,
     backoff_init: float = 0.5,
     local_gamma: Optional[float] = None,
+    shards: Optional[int] = None,
 ) -> dict:
     """Serve ``n_sessions`` Poisson-arriving edge clients; returns a report.
 
@@ -141,6 +175,14 @@ def run_fleet(
     ``FaultScenario`` to every client's link, and ``oracle=True`` swaps in
     the deterministic oracle draft/verifier pair so the chaos harness can
     assert the committed streams are fault-invariant.
+
+    ``shards=N`` swaps in the REAL sharded fused verifier
+    (``ShardedSpecVerifyBackend`` over an N-device host mesh, with a
+    tensor-mode paged KV pool partitioned on the head axis) instead of the
+    simulated backend — the dispatcher, clients, and the rest of the
+    harness run unchanged, so committed streams at different shard counts
+    must be identical (the dispatcher-obliviousness check in
+    ``tests/test_sharded_verify.py``).  Chain variant only.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
@@ -156,11 +198,18 @@ def run_fleet(
     # contended resource (the regime §3.2's utilization argument targets):
     # per-session serving saturates at ~9 NAV/s while batching absorbs it.
     gamma = edge.effective_gamma() * 0.1
-    if oracle:
+    kv_kwargs = {}
+    if shards is not None:
+        if variant != "chain":
+            raise ValueError("shards= supports only variant='chain'")
+        if oracle or kv is not None:
+            raise ValueError("shards= brings its own tensor-mode pool (no oracle/kv)")
+        backend, shard_pool = _sharded_spec_backend(shards, seed)
+        kv_kwargs = dict(kv_pool=shard_pool)
+    elif oracle:
         backend = OracleBackend(time_scale=ts, seed=seed, clock=clock)
     else:
         backend = SyntheticBackend(time_scale=ts, seed=seed, clock=clock)
-    kv_kwargs = {}
     if kv is not None:
         budget = kv_budget_bytes or (256 * KV_BLOCK_TOKENS * KV_BYTES_PER_TOKEN)
         pool = PagedKVPool(

@@ -1,6 +1,6 @@
 """Kernel-level benchmark: fused spec-verify vs the two-launch composition.
 
-Two row families, both committed as ``BENCH_kernels.json``:
+Three row families, all committed as ``BENCH_kernels.json``:
 
 ``kernels/kv/{fp32,int8}``
     Paged-KV residency accounting straight from ``PagedKVPool`` (no model):
@@ -25,6 +25,11 @@ Two row families, both committed as ``BENCH_kernels.json``:
     additionally reports live interpret-mode wall-clock for the same
     shapes (measured-vs-achievable bandwidth); those lines are diagnostic
     and deliberately NOT part of the committed JSON.
+
+``kernels/shard/spec_verify/{1,2,4}``
+    The tensor-parallel fused verify (``repro.sharding.spec_verify``) at
+    1/2/4 shards: per-shard HBM + ICI all-gather traffic on the same
+    roofline, modeled tokens/s, and the pool's resident bytes per shard.
 """
 
 from __future__ import annotations
@@ -126,6 +131,70 @@ def _verify_rows() -> Tuple[list, List[str]]:
     return rows, lines
 
 
+def _shard_rows() -> Tuple[list, List[str]]:
+    """Modeled roofline for the SHARDED fused verify at 1/2/4 shards.
+
+    Per-shard HBM traffic divides along the head axis (KV pages and
+    queries; the reference 8 kv heads split 1/2/4 evenly) and the vocab
+    axis (LM-head tile stream).  Keeping the ONE-launch contract across
+    shards adds two all-gathers on the ICI — attention outputs [B, K1, F]
+    after the head split and per-shard logits tiles [B, K1, V/N] after the
+    vocab split — modeled as ring traffic at ``ICI_LINK_BW``.  Resident
+    bytes/shard comes straight from ``PagedKVPool.resident_bytes_per_shard``
+    on the reference serving pool, so the committed rows pin both the
+    throughput scaling AND the per-device memory win.
+    """
+    from repro.models.paged_kv import PagedKVPool
+    from repro.roofline.hw import HBM_BW, ICI_LINK_BW
+
+    H, hd, bs = GEOM["n_kv_heads"], GEOM["head_dim"], GEOM["block_size"]
+    B, K1, V = GEOM["batch"], GEOM["k_draft"] + 1, GEOM["vocab"]
+    F = H * hd
+    n_pages = -(-GEOM["seq"] // bs)
+    pool = PagedKVPool(
+        num_blocks=64, block_size=bs, n_layers=GEOM["n_layers"],
+        n_kv_heads=H, head_dim=hd,
+    )
+    pool.create(0)
+    pool.append(0, GEOM["seq"])  # one reference resident session
+    rows, lines = [], []
+    t1 = None
+    prev_tok_s = 0.0
+    for n in (1, 2, 4):
+        assert pool.shard_axes(n), "reference geometry must split evenly"
+        kv = 2 * B * n_pages * bs * H * hd * 4 // n  # local head slice
+        q = B * K1 * F * 4 // n
+        w = B * F * V * 4 // n  # per-shard vocab tiles
+        out = 2 * 4 * B * K1  # replicated n_acc/corr + logp
+        hbm = kv + q + w + out
+        gather = (B * K1 * F * 4 * (n - 1)) // n  # head all-gather (ring)
+        gather += B * K1 * (V // n) * 4 * (n - 1)  # vocab all-gather
+        t = hbm / HBM_BW + gather / ICI_LINK_BW + LAUNCH_S  # still ONE launch
+        t1 = t if t1 is None else t1
+        tok_s = B * K1 / t
+        resident = pool.resident_bytes_per_shard(n)
+        rows.append(dict(
+            name=f"kernels/shard/spec_verify/{n}",
+            shards=n,
+            launches=1,
+            hbm_bytes_per_shard=hbm,
+            ici_bytes_per_shard=gather,
+            resident_bytes_per_shard=resident,
+            modeled_us=round(t * 1e6, 3),
+            tokens_per_s=round(tok_s, 1),
+            speedup_vs_1shard=round(t1 / t, 4),
+        ))
+        lines.append(csv_row(
+            f"kernels/shard/spec_verify/{n}", t * 1e6,
+            f"shards={n};hbm_bytes={hbm};ici_bytes={gather};"
+            f"resident_bytes_per_shard={resident};tokens_per_s={tok_s:.0f};"
+            f"speedup={t1 / t:.2f}x",
+        ))
+        assert tok_s > prev_tok_s, "sharding must not lose modeled throughput"
+        prev_tok_s = tok_s
+    return rows, lines
+
+
 def _measured_lines() -> List[str]:
     """Live interpret-mode timing: measured vs achievable bandwidth.
 
@@ -192,4 +261,5 @@ def kernels() -> Tuple[list, List[str]]:
     """Harness entry (benchmarks.run): committed rows + diagnostic CSV."""
     kv_rows, kv_lines = _kv_rows()
     v_rows, v_lines = _verify_rows()
-    return kv_rows + v_rows, kv_lines + v_lines + _measured_lines()
+    s_rows, s_lines = _shard_rows()
+    return kv_rows + v_rows + s_rows, kv_lines + v_lines + s_lines + _measured_lines()

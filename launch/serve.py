@@ -38,11 +38,22 @@ remote verifier processes (repeatable ``--verifier HOST:PORT``)::
 ``--migrate-every S`` forces a round-robin migration sweep every S
 seconds — the committed stream must stay oracle-exact through every
 hand-off (this is the CI router-smoke job).
+
+``--backend spec --shards N`` swaps in the real fused NAV verifier with
+its target forward sharded across an N-device mesh
+(``ShardedSpecVerifyBackend``): paged KV pages partitioned on the head
+axis, one ``shard_map`` launch per dispatch.  On a CPU-only host the
+process forces ``--xla_force_host_platform_device_count=N`` so the mesh
+exists; the wire protocol and every client stay oblivious to N::
+
+    PYTHONPATH=src python launch/serve.py --listen 127.0.0.1:7421 \\
+        --backend spec --shards 4 --sessions 1
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 from pathlib import Path
 from typing import Tuple
@@ -79,7 +90,8 @@ def _host_port(spec: str) -> Tuple[str, int]:
 def run_server(args) -> int:
     """Cloud role: listen, attach socket sessions, serve until they finish."""
     host, port = args.listen
-    verifier = CloudVerifier(_make_backend(args), batch_window=args.batch_window)
+    backend, cv_kwargs = _make_backend(args)
+    verifier = CloudVerifier(backend, batch_window=args.batch_window, **cv_kwargs)
     listener = SocketListener(
         lambda sid, transport: verifier.attach(sid, transport, transport),
         host=host,
@@ -109,11 +121,50 @@ def run_server(args) -> int:
 
 
 def _make_backend(args):
+    """Build ``(backend, extra CloudVerifier kwargs)`` for the chosen mode."""
+    if args.backend == "spec":
+        return _spec_backend(args)
     if args.backend == "oracle":
-        return OracleBackend(
+        backend = OracleBackend(
             seed=args.seed, verify_time=args.verify_time, verify_time_per_token=0.0
         )
-    return SyntheticBackend(seed=args.seed, verify_time=args.verify_time)
+        return backend, {}
+    return SyntheticBackend(seed=args.seed, verify_time=args.verify_time), {}
+
+
+def _spec_backend(args):
+    """The real fused NAV verifier, sharded over ``--shards`` devices.
+
+    A tensor-mode paged KV pool (partitioned per shard on the head axis) and
+    a seeded deterministic target (queries + LM head) drive
+    ``ShardedSpecVerifyBackend`` — one sharded ``shard_map`` launch per
+    dispatch, with the dispatcher (and the wire protocol) oblivious to the
+    shard count.  ``--shards 1`` degenerates to a single-device mesh and is
+    bit-identical to the unsharded ``SpecVerifyBackend``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.models.paged_kv import PagedKVPool
+    from repro.runtime import ShardedSpecVerifyBackend
+
+    H, hd, bs, V = 2, 8, 4, 256
+    pool = PagedKVPool(
+        num_blocks=256, block_size=bs, n_layers=1, n_kv_heads=H, head_dim=hd,
+        quantize="int8" if args.kv_quant == "int8" else None,
+    )
+    key = jax.random.PRNGKey(args.seed)
+    w = np.asarray(jax.random.normal(jax.random.fold_in(key, 77), (H * hd, V)) * 4, np.float32)
+
+    def query_fn(session, tokens):
+        k = jax.random.fold_in(jax.random.fold_in(key, 88), session * 131 + len(tokens))
+        return np.asarray(jax.random.normal(k, (len(tokens) + 1, H, hd)), np.float32)
+
+    backend = ShardedSpecVerifyBackend(
+        shards=args.shards, kv_pool=pool, query_fn=query_fn, lm_head=w,
+        impl="ref", block_v=256,
+    )
+    return backend, {"kv_pool": pool}
 
 
 def run_router(args) -> int:
@@ -127,7 +178,8 @@ def run_router(args) -> int:
             )
         )
     for _ in range(args.verifiers):
-        v = CloudVerifier(_make_backend(args), batch_window=args.batch_window)
+        backend, cv_kwargs = _make_backend(args)
+        v = CloudVerifier(backend, batch_window=args.batch_window, **cv_kwargs)
         v.start()
         fleet.append(LocalVerifier(len(fleet), v))
     if not fleet:
@@ -227,7 +279,15 @@ def main(argv=None) -> int:
         "--print-oracle", type=int, metavar="N", help="print the first N oracle tokens and exit"
     )
     p.add_argument("--seed", type=int, default=7, help="oracle/synthetic seed (must match across roles)")
-    p.add_argument("--backend", choices=("oracle", "synthetic"), default="oracle")
+    p.add_argument("--backend", choices=("oracle", "synthetic", "spec"), default="oracle")
+    p.add_argument(
+        "--shards", type=int, default=1,
+        help="spec backend: shard the target verify over N mesh devices",
+    )
+    p.add_argument(
+        "--kv-quant", choices=("none", "int8"), default="none",
+        help="spec backend: paged-KV page storage (int8 = quantized pages)",
+    )
     p.add_argument("--draft", choices=("oracle", "synthetic"), default="oracle")
     p.add_argument("--sessions", type=int, default=1, help="server exits after N sessions finish (0 = forever)")
     p.add_argument("--session", type=int, default=0, help="client's proposed session id")
@@ -253,6 +313,15 @@ def main(argv=None) -> int:
     p.add_argument("--batch-window", type=float, default=0.002, help="server NAV coalescing window [s]")
     p.add_argument("--verify-time", type=float, default=0.002, help="simulated target forward time [s]")
     args = p.parse_args(argv)
+    if args.backend == "spec" and args.shards > 1:
+        # The host mesh needs N visible devices BEFORE jax initializes its
+        # backends (first jax.devices() call) — force the CPU device count
+        # here so `--shards N` works on a plain CPU host.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={args.shards}".strip()
+            )
     if args.print_oracle is not None:
         for tok in OracleStream(args.seed).prefix(args.print_oracle):
             print(tok)

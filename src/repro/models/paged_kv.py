@@ -584,6 +584,79 @@ class PagedKVPool:
         if start <= t.filled:  # gap-free writes extend the materialized prefix
             t.filled = max(t.filled, start + T)
 
+    # ------------------------------------------------------------- sharding --
+    def shard_axes(self, shards: int) -> bool:
+        """True iff the pool's KV head axis splits evenly over ``shards``.
+
+        The divisibility gate for the tensor-parallel verifier: an even
+        split stores ``Hkv / shards`` heads per device; an uneven one
+        replicates the pages (the sharded launch still pads the GQA-expanded
+        query heads, so correctness never depends on this answer).
+        """
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        return self.n_kv_heads > 0 and self.n_kv_heads % shards == 0
+
+    def shard_spec(self, shards: int, axis: str = "model"):
+        """PartitionSpecs for the page buffers on a 1-D ``(axis,)`` mesh.
+
+        Returns ``(pages_spec, planes_spec)`` — for the
+        ``[L, num_blocks + 1, bs, Hkv, hd]`` payload buffers and the int8
+        ``[L, num_blocks + 1, bs, Hkv]`` scale/zero planes.  The head axis is
+        sharded only when it divides evenly (``shard_axes``); otherwise both
+        specs replicate.  Block-table metadata stays host-side and is
+        replicated to every device at launch (per-device block tables), so
+        the sentinel page — the last page of every buffer — exists in each
+        shard's local head slice and the pad contract holds per shard.
+        """
+        if self.shard_axes(shards) and shards > 1:
+            from jax.sharding import PartitionSpec as P
+
+            return P(None, None, None, axis, None), P(None, None, None, axis)
+        from jax.sharding import PartitionSpec as P
+
+        return P(None, None, None, None, None), P(None, None, None, None)
+
+    def place_on_mesh(self, mesh, axis: str = "model"):
+        """Lay the tensor-mode page buffers out over ``mesh`` (head axis).
+
+        ``device_put``s ``k_pages``/``v_pages`` (and the int8 scale/zero
+        planes) with the ``shard_spec`` layout, so each device holds only
+        its ``Hkv / shards`` head slice of every physical page — the
+        partitioned-pool state the sharded verify launch consumes.  Returns
+        the pages spec used.  Metadata mode is a no-op (there is nothing to
+        place); uneven head counts replicate, as per ``shard_spec``.
+        """
+        from jax.sharding import NamedSharding
+
+        shards = int(np.prod(list(mesh.shape.values())))
+        pages_spec, planes_spec = self.shard_spec(shards, axis=axis)
+        if self.k_pages is None:
+            return pages_spec
+        pages_sh = NamedSharding(mesh, pages_spec)
+        planes_sh = NamedSharding(mesh, planes_spec)
+        self.k_pages = jax.device_put(self.k_pages, pages_sh)
+        self.v_pages = jax.device_put(self.v_pages, pages_sh)
+        if self.quantize == "int8":
+            self.k_scale = jax.device_put(self.k_scale, planes_sh)
+            self.k_zero = jax.device_put(self.k_zero, planes_sh)
+            self.v_scale = jax.device_put(self.v_scale, planes_sh)
+            self.v_zero = jax.device_put(self.v_zero, planes_sh)
+        return pages_spec
+
+    def resident_bytes_per_shard(self, shards: int) -> int:
+        """Bytes of in-use pages RESIDENT ON EACH DEVICE at ``shards`` shards.
+
+        With an even head split every page's payload (and its int8 quant
+        planes, which shard with their KV) divides by ``shards``; an uneven
+        split replicates, so each shard carries the full footprint.  At
+        ``shards=1`` this equals ``resident_bytes()``.
+        """
+        total = self.resident_bytes()
+        if self.shard_axes(shards):
+            return total // shards
+        return total
+
     def tensor_nbytes(self) -> int:
         """Actual bytes held by ALL page buffers (payload + quant params).
 

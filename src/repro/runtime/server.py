@@ -71,6 +71,7 @@ __all__ = [
     "VerifyBackend",
     "SyntheticBackend",
     "SpecVerifyBackend",
+    "ShardedSpecVerifyBackend",
     "CloudVerifier",
     "VerifierDraining",
 ]
@@ -419,6 +420,68 @@ class SpecVerifyBackend(VerifyBackend):
                 logits, tokens, parents, impl=self.impl, block_v=self.block_v
             )
         return [(int(n_acc), int(corr), list(path)) for (n_acc, path, corr, _) in out]
+
+
+class ShardedSpecVerifyBackend(SpecVerifyBackend):
+    """Tensor-parallel fused verify: the same one-launch contract, sharded.
+
+    Drop-in for ``SpecVerifyBackend(fused=True)``: chain rounds run the
+    SHARDED fused launch (``repro.sharding.spec_verify``) across a 1-D
+    ``("model",)`` device mesh — head-parallel paged attention,
+    vocab-parallel LM head, replicated NAV scan — while the dispatcher,
+    router, and every protocol message stay oblivious to the shard count.
+    The pool's page buffers are laid out over the mesh on construction
+    (``PagedKVPool.place_on_mesh``: head axis when divisible, replicated
+    otherwise) and block tables are replicated per device at launch, so the
+    sentinel-page padding contract holds on every shard.  Bit-exact against
+    the unsharded backend (``tests/test_sharded_verify.py``) for fp32 and
+    int8 pools, including GQA head counts that don't divide the mesh.
+
+    Pass either a prebuilt ``mesh`` or a ``shards`` count; the latter builds
+    a host mesh over the first ``shards`` visible devices (set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for CPU runs).
+    """
+
+    def __init__(self, *, shards: int = 1, mesh: Any = None, **kwargs: Any):
+        kwargs.setdefault("fused", True)
+        if not kwargs["fused"]:
+            raise ValueError("ShardedSpecVerifyBackend requires the fused path")
+        super().__init__(**kwargs)
+        from repro.sharding.shardctx import host_mesh
+
+        self.mesh = mesh if mesh is not None else host_mesh(int(shards))
+        self.shards = int(np.prod(list(self.mesh.shape.values())))
+        if self.kv_pool is not None:
+            self.kv_pool.place_on_mesh(self.mesh)
+
+    def _verify_batch_fused(self, requests):
+        """ONE SHARDED launch for the whole round (see the unsharded twin)."""
+        from repro.sharding.spec_verify import spec_verify_sharded_batched
+
+        pool = self.kv_pool
+        sessions = [s for (s, _, _) in requests]
+        for s in sessions:
+            self.ensure_kv(s)
+        tokens = [t for (_, t, _) in requests]
+        q_seq = [np.asarray(self.query_fn(s, t), np.float32) for (s, t, _) in requests]
+        base = [max(pool.length(s) - len(t), 0) for (s, t, _) in requests]
+        quant = None
+        if pool.quantize == "int8":
+            quant = (pool.k_scale[0], pool.k_zero[0], pool.v_scale[0], pool.v_zero[0])
+        out = spec_verify_sharded_batched(
+            q_seq,
+            tokens,
+            self._tables(sessions),
+            base,
+            pool.k_pages[0],
+            pool.v_pages[0],
+            self.lm_head,
+            mesh=self.mesh,
+            block_v=self.block_v,
+            pad_page_id=pool.sentinel_page,
+            quant=quant,
+        )
+        return [(int(n_acc), int(corr)) for (n_acc, corr, _) in out]
 
 
 @dataclass

@@ -17,7 +17,32 @@ from jax.sharding import PartitionSpec as P
 
 Axis = Union[str, Tuple[str, ...], None]
 
-__all__ = ["constrain", "ambient_mesh", "axis_size", "abstract_mesh"]
+__all__ = ["constrain", "ambient_mesh", "axis_size", "abstract_mesh", "host_mesh"]
+
+
+def host_mesh(shards: int, axis: str = "model"):
+    """A physical 1-D ``(axis,)`` mesh over the first ``shards`` devices.
+
+    The CPU-mesh entry point for the sharded verifier and its tests: under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the host platform
+    exposes N devices, so a multi-shard ``shard_map`` launch runs (and is
+    proven bit-exact) without accelerators.  Raises with the flag spelled
+    out when the process has fewer devices than requested — the flag must be
+    set BEFORE jax initializes its backends.
+    """
+    from jax.sharding import Mesh
+
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    devices = jax.devices()
+    if len(devices) < shards:
+        raise RuntimeError(
+            f"need {shards} devices for a {shards}-shard mesh but only "
+            f"{len(devices)} are visible; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={shards} "
+            "in the environment before jax initializes"
+        )
+    return Mesh(np.asarray(devices[:shards]), (axis,))
 
 
 def abstract_mesh(sizes: Sequence[int], names: Sequence[str]):

@@ -2,9 +2,16 @@ import os
 import sys
 import types
 
-# Tests see the default single CPU device (the dry-run sets its own flag in a
-# subprocess); keep allocator behaviour deterministic.
+# Tests run over a 4-way CPU host mesh: the sharded-verifier differential
+# suites (test_sharded_verify.py, test_partition.py) need real multi-device
+# shardings, and everything else is device-count agnostic (single-device
+# computations land on device 0).  Respect an explicit user override; the
+# dry-run still sets its own flag in a subprocess.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

@@ -63,10 +63,10 @@ def test_round_metrics_strips_float_noise():
 def test_committed_kernel_rows_regenerate_exactly():
     """The deterministic kernel bench reproduces BENCH_kernels.json rows."""
     from benchmarks.common import round_metrics
-    from benchmarks.kernel_bench import _kv_rows, _verify_rows
+    from benchmarks.kernel_bench import _kv_rows, _shard_rows, _verify_rows
 
     committed = json.loads((ROOT / "BENCH_kernels.json").read_text())["rows"]
-    regen = round_metrics(_kv_rows()[0] + _verify_rows()[0])
+    regen = round_metrics(_kv_rows()[0] + _verify_rows()[0] + _shard_rows()[0])
     assert diff_rows(committed, regen) == []
 
 
@@ -79,3 +79,34 @@ def test_committed_kernel_rows_pin_the_claims():
     assert rows["kernels/verify/fused"]["launches"] == 1
     assert rows["kernels/verify/composed"]["launches"] == 2
     assert rows["kernels/verify/fused"]["speedup_vs_composed"] >= 1.0
+
+
+def test_committed_shard_rows_pin_the_scaling_claims():
+    """shard/spec_verify rows: present at 1/2/4 shards, still ONE launch,
+    resident bytes/shard halve with the mesh, and modeled throughput scales."""
+    rows = {r.get("name"): r for r in json.loads((ROOT / "BENCH_kernels.json").read_text())["rows"]}
+    shard_rows = [rows[f"kernels/shard/spec_verify/{n}"] for n in (1, 2, 4)]
+    for n, r in zip((1, 2, 4), shard_rows):
+        assert r["shards"] == n
+        assert r["launches"] == 1  # sharding never splits the launch
+        assert set(r) >= {
+            "hbm_bytes_per_shard", "ici_bytes_per_shard",
+            "resident_bytes_per_shard", "modeled_us", "tokens_per_s",
+            "speedup_vs_1shard",
+        }
+    one, two, four = shard_rows
+    assert two["resident_bytes_per_shard"] * 2 == one["resident_bytes_per_shard"]
+    assert four["resident_bytes_per_shard"] * 4 == one["resident_bytes_per_shard"]
+    assert one["tokens_per_s"] < two["tokens_per_s"] < four["tokens_per_s"]
+    assert one["speedup_vs_1shard"] == 1.0 and four["speedup_vs_1shard"] > 2.0
+    # The shard=1 model must agree with the unsharded fused row's traffic.
+    assert one["hbm_bytes_per_shard"] == rows["kernels/verify/fused"]["hbm_bytes"]
+    # ICI all-gather traffic is the price of the one-launch contract.
+    assert one["ici_bytes_per_shard"] == 0 < two["ici_bytes_per_shard"]
+
+
+def test_shard_speedup_field_is_timing_banded():
+    assert is_timing_field("speedup_vs_1shard")
+    assert not is_timing_field("resident_bytes_per_shard")
+    assert not is_timing_field("ici_bytes_per_shard")
+    assert not is_timing_field("shards")

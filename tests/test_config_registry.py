@@ -1,0 +1,102 @@
+"""Registry-wide shard-metadata smoke tests.
+
+Every architecture the registry can serve must (a) carry internally
+consistent head/vocab metadata, (b) yield a valid shard plan for the
+sharded verifier at any shard count (padding covers non-divisible head
+counts), (c) admit per-shard paged-KV layout metadata, and (d) produce
+PartitionSpecs from ``sharding/partition.py`` that are constructible as
+real ``NamedSharding``s over a live host mesh — for the full configs and
+their ``reduced()`` twins alike.
+"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import zoo
+from repro.models.paged_kv import PagedKVPool
+from repro.sharding import Partitioner, plan_shards
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("reduced", [False, True])
+def test_config_head_metadata_consistent(arch, reduced):
+    cfg = get_config(arch, reduced)
+    assert cfg.n_heads >= cfg.n_kv_heads >= 1
+    assert cfg.n_heads % cfg.n_kv_heads == 0, f"{arch}: GQA ratio must divide"
+    assert cfg.head_dim > 0 and cfg.q_dim == cfg.n_heads * cfg.head_dim
+    assert cfg.padded_vocab_size >= cfg.vocab_size
+    assert cfg.padded_vocab_size % cfg.vocab_pad_to == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shards", SHARD_COUNTS)
+def test_config_shard_plan_consistent(arch, shards):
+    """plan_shards digests every registry config at every shard count."""
+    cfg = get_config(arch)
+    p = plan_shards(
+        shards=shards,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        vocab=cfg.padded_vocab_size,
+    )
+    assert p.shards == shards
+    # Head split: padding makes any head count divisible; no shard is empty.
+    assert p.padded_heads % shards == 0 and p.padded_heads >= p.heads
+    assert p.heads_per_shard * shards == p.padded_heads
+    assert p.padded_heads - p.heads < shards  # minimal padding only
+    assert p.even_heads == (cfg.n_heads % shards == 0)
+    assert p.even_kv_heads == (cfg.n_kv_heads % shards == 0)
+    # Vocab split: per-shard tiles are whole block_v multiples covering Vp.
+    assert p.vocab_per_shard % p.block_v == 0
+    assert p.launch_vocab == p.vocab_per_shard * shards >= p.padded_vocab >= p.vocab
+
+
+@pytest.mark.parametrize("arch", ["arctic-480b", "internvl2-76b", "qwen3-moe-30b-a3b"])
+def test_big_model_kv_pool_shard_metadata(arch):
+    """The headline large configs: per-shard paged-KV layout metadata is
+    consistent with the config's kv-head count at every shard count."""
+    cfg = get_config(arch)
+    pool = PagedKVPool(
+        num_blocks=4, block_size=16,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        bytes_per_token=cfg.n_kv_heads * cfg.head_dim * 8,
+    )
+    for shards in SHARD_COUNTS:
+        assert pool.shard_axes(shards) == (cfg.n_kv_heads % shards == 0)
+        kspec, _ = pool.shard_spec(shards)
+        if shards > 1 and pool.shard_axes(shards):
+            assert kspec == P(None, None, None, "model", None)
+        else:
+            assert kspec == P(None, None, None, None, None)
+        per_shard = pool.resident_bytes_per_shard(shards)
+        assert per_shard * (shards if pool.shard_axes(shards) else 1) == pool.resident_bytes()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_partition_specs_constructible_on_host_mesh(arch):
+    """Every leaf's spec builds a NamedSharding on a REAL 2x2 host mesh and
+    every sharded dim divides its axis size."""
+    if jax.device_count() < 4:
+        pytest.skip("needs a 4-device host platform (conftest sets XLA_FLAGS)")
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+    cfg = get_config(arch)
+    part = Partitioner(mesh)
+    shapes = jax.eval_shape(lambda: zoo.init(jax.random.PRNGKey(0), cfg))
+    specs = part.param_specs(shapes)
+    flat_specs = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_shapes = jax.tree_util.tree_leaves(shapes)
+    assert len(flat_specs) == len(flat_shapes)
+    for sp, sh in zip(flat_specs, flat_shapes):
+        NamedSharding(mesh, sp)  # must not raise: axes exist on the mesh
+        for dim, ax in zip(sh.shape, tuple(sp)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([dict(mesh.shape)[a] for a in axes]))
+            assert dim % size == 0, f"{arch}: {sh.shape} vs {sp}"

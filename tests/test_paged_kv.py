@@ -414,3 +414,138 @@ def test_int8_cow_copies_quant_params():
 def test_pool_rejects_unknown_quantize_mode():
     with pytest.raises(ValueError, match="quantize"):
         PagedKVPool(num_blocks=4, block_size=4, quantize="fp4")
+
+
+# --------------------------------------------------------------------------- #
+# Per-shard layout: the partitioned pool behind the sharded verifier
+# --------------------------------------------------------------------------- #
+def _mesh2():
+    import jax
+
+    if jax.device_count() < 2:
+        pytest.skip("needs a multi-device host platform (conftest sets XLA_FLAGS)")
+    from repro.sharding.shardctx import host_mesh
+
+    return host_mesh(2)
+
+
+def test_shard_metadata_even_uneven():
+    even = PagedKVPool(num_blocks=4, block_size=4, n_layers=1, n_kv_heads=4, head_dim=2)
+    assert even.shard_axes(1) and even.shard_axes(2) and even.shard_axes(4)
+    assert not even.shard_axes(3)
+    kspec, planes = even.shard_spec(2)
+    assert tuple(kspec) == (None, None, None, "model", None)
+    assert tuple(planes) == (None, None, None, "model")
+    # Uneven head counts (and shards=1) replicate.
+    assert tuple(even.shard_spec(3)[0]) == (None, None, None, None, None)
+    assert tuple(even.shard_spec(1)[0]) == (None, None, None, None, None)
+    with pytest.raises(ValueError, match="shards"):
+        even.shard_axes(0)
+    meta = PagedKVPool(num_blocks=4, block_size=4)  # metadata mode: no heads
+    assert not meta.shard_axes(2)
+
+
+def test_place_on_mesh_partitions_head_axis():
+    """Each device holds only its Hkv/shards head slice of every page, the
+    sentinel page included — so per-shard sentinel padding stays valid."""
+    mesh = _mesh2()
+    pool = PagedKVPool(num_blocks=4, block_size=4, n_layers=1, n_kv_heads=2, head_dim=2)
+    pool.create(0)
+    k = jnp.arange(1 * 6 * 2 * 2, dtype=jnp.float32).reshape(1, 6, 2, 2)
+    pool.write(0, k, -k)
+    host_before = np.asarray(pool.k_pages)
+    spec = pool.place_on_mesh(mesh)
+    assert tuple(spec) == (None, None, None, "model", None)
+    shards = pool.k_pages.addressable_shards
+    assert len(shards) == 2
+    for i, sh in enumerate(shards):
+        data = np.asarray(sh.data)
+        assert data.shape == (1, pool.num_blocks + 1, 4, 1, 2)  # half the heads
+        np.testing.assert_array_equal(data[..., 0, :], host_before[..., i, :])
+        assert not data[:, pool.sentinel_page].any()  # sentinel zero per shard
+    # Values round-trip unchanged through the placement.
+    np.testing.assert_array_equal(np.asarray(pool.k_pages), host_before)
+
+
+def test_place_on_mesh_uneven_heads_replicates():
+    mesh = _mesh2()
+    pool = PagedKVPool(num_blocks=4, block_size=4, n_layers=1, n_kv_heads=3, head_dim=2)
+    spec = pool.place_on_mesh(mesh)
+    assert tuple(spec) == (None, None, None, None, None)
+    for sh in pool.k_pages.addressable_shards:
+        assert sh.data.shape == pool.k_pages.shape  # full copy per device
+
+
+def test_place_on_mesh_metadata_pool_is_noop():
+    mesh = _mesh2()
+    pool = PagedKVPool(num_blocks=4, block_size=4)
+    assert pool.place_on_mesh(mesh) is not None and pool.k_pages is None
+
+
+def test_sharded_pool_refcount_cow_rollback_invariants():
+    """The metadata machine is untouched by placement: fork/CoW/rollback/
+    evict keep every invariant, and fills after placement land sharded."""
+    mesh = _mesh2()
+    pool = PagedKVPool(num_blocks=8, block_size=4, n_layers=1, n_kv_heads=2, head_dim=2)
+    pool.place_on_mesh(mesh)
+    pool.create(0)
+    k = jnp.ones((1, 6, 2, 2), jnp.float32)
+    pool.write(0, k, -k)  # fill through the sharded buffers
+    _check_invariants(pool)
+    assert pool.filled(0) == 6
+    pool.fork(0, 1)
+    _check_invariants(pool)
+    assert pool.filled(1) == 6  # watermark inherited under placement
+    extra = jnp.full((1, 1, 2, 2), 2.0, jnp.float32)
+    pool.write(1, extra, extra)  # CoW copy of the shared tail page
+    _check_invariants(pool)
+    assert pool.stats["cow_copies"] == 1
+    assert pool.tables[0].blocks[-1] != pool.tables[1].blocks[-1]
+    # Parent prefix readable and intact through the sharded buffers.
+    page0 = np.asarray(pool.k_pages)[0, pool.tables[0].blocks[0]]
+    np.testing.assert_array_equal(page0, np.ones((4, 2, 2), np.float32))
+    n_freed = pool.rollback(0, 2)
+    _check_invariants(pool)
+    assert n_freed == 1 and pool.filled(0) == 2  # watermark clamped per shard
+    pool.evict(1)
+    _check_invariants(pool)
+    assert pool.filled(1) == 0
+    pool.release(0)
+    _check_invariants(pool)
+
+
+def test_resident_bytes_per_shard_tracks_lifecycle():
+    """Per-shard footprint = resident_bytes/shards on an even split, and it
+    moves with append/rollback exactly like the unsharded accounting."""
+    pool = PagedKVPool(num_blocks=8, block_size=4, n_layers=1, n_kv_heads=2, head_dim=2)
+    pool.create(0)
+    pool.append(0, 10)  # 3 pages
+    assert pool.resident_bytes_per_shard(1) == pool.resident_bytes()
+    assert pool.resident_bytes_per_shard(2) == pool.resident_bytes() // 2
+    before = pool.resident_bytes_per_shard(2)
+    pool.rollback(0, 4)  # frees 2 pages
+    after = pool.resident_bytes_per_shard(2)
+    assert after == before - 2 * pool.bytes_per_block // 2
+    # Uneven head counts replicate: each shard carries the full footprint.
+    odd = PagedKVPool(num_blocks=8, block_size=4, n_layers=1, n_kv_heads=3, head_dim=2)
+    odd.create(0)
+    odd.append(0, 4)
+    assert odd.resident_bytes_per_shard(2) == odd.resident_bytes()
+
+
+def test_int8_quant_planes_shard_with_their_pages():
+    mesh = _mesh2()
+    rng = np.random.default_rng(3)
+    pool = PagedKVPool(
+        num_blocks=4, block_size=4, n_layers=1, n_kv_heads=2, head_dim=4,
+        quantize="int8",
+    )
+    pool.create(0)
+    k = jnp.asarray(rng.normal(size=(1, 6, 2, 4)), jnp.float32)
+    pool.write(0, k, -k)
+    planes_before = np.asarray(pool.k_scale)
+    pool.place_on_mesh(mesh)
+    for buf, want_heads in ((pool.k_pages, 1), (pool.k_scale, 1), (pool.v_zero, 1)):
+        shards = buf.addressable_shards
+        assert len(shards) == 2 and shards[0].data.shape[3] == want_heads
+    np.testing.assert_array_equal(np.asarray(pool.k_scale), planes_before)

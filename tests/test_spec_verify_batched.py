@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from strategies import fused_backend, ragged_logits_requests as _ragged_requests
+
 from repro.kernels.spec_verify import (
     spec_verify,
     spec_verify_batched,
@@ -18,20 +20,6 @@ from repro.kernels.spec_verify import (
 )
 
 KEY = jax.random.PRNGKey(11)
-
-
-def _ragged_requests(ks, V, seed=0):
-    """Per-session logits [K_i+1, V] + drafts with a mix of greedy/random."""
-    logits_seq, tokens_seq = [], []
-    for i, k in enumerate(ks):
-        keys = jax.random.split(jax.random.fold_in(KEY, seed * 101 + i), 3)
-        lg = jax.random.normal(keys[0], (k + 1, V)) * 3
-        greedy = jnp.argmax(lg, -1)[:k]
-        rnd = jax.random.randint(keys[1], (k,), 0, V)
-        mix = jax.random.bernoulli(keys[2], 0.7, (k,))
-        tokens_seq.append(np.asarray(jnp.where(mix, greedy, rnd), np.int32))
-        logits_seq.append(np.asarray(lg, np.float32))
-    return logits_seq, tokens_seq
 
 
 @pytest.mark.parametrize("impl", ["ref", "interpret"])
@@ -324,25 +312,9 @@ def test_spec_verify_backend_paged_tree_forward():
         chain_only.verify_tree_batch([(0, tokens, [0.9] * 3, parents)])
 
 
-def _fused_backend(quantize=None, impl="ref"):
-    from repro.models.paged_kv import PagedKVPool
-    from repro.runtime import SpecVerifyBackend
-
-    H, hd, bs, V = 2, 8, 4, 256
-    pool = PagedKVPool(
-        num_blocks=16, block_size=bs, n_layers=1, n_kv_heads=H, head_dim=hd,
-        quantize=quantize,
-    )
-    w = np.asarray(jax.random.normal(jax.random.fold_in(KEY, 77), (H * hd, V)) * 4, np.float32)
-
-    def query_fn(session, tokens):
-        k = jax.random.fold_in(jax.random.fold_in(KEY, 88), session * 131 + len(tokens))
-        return np.asarray(jax.random.normal(k, (len(tokens) + 1, H, hd)), np.float32)
-
-    backend = SpecVerifyBackend(
-        fused=True, kv_pool=pool, query_fn=query_fn, lm_head=w, impl=impl, block_v=256
-    )
-    return backend, pool, w, V
+# Shared with the sharded differential suite (tests/strategies.py) so the
+# unsharded and sharded backends stay comparable request-for-request.
+_fused_backend = fused_backend
 
 
 def test_fused_backend_one_launch_matches_composition():

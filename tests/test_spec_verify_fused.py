@@ -16,71 +16,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
+
+from strategies import (
+    KEY,
+    assert_triples_match as _assert_fused_matches,
+    composed_verify as _composed,
+    make_rect_case as _make_case,
+    rect_geometries,
+)
 
 from repro.kernels.decode_attention import paged_decode_attention
 from repro.kernels.spec_verify import (
-    fused_target_logits,
-    spec_verify,
     spec_verify_fused,
     spec_verify_fused_batched,
 )
 from repro.models.paged_kv import PagedKVPool
-
-KEY = jax.random.PRNGKey(23)
-
-
-def _make_case(B, K, H, Hkv, hd, bs, G, P, V, seed=0, sharp=False):
-    """Random queries/pages/LM-head/tables + causal per-position lengths."""
-    rng = np.random.default_rng(seed)
-    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
-    q = jax.random.normal(ks[0], (B, K + 1, H, hd))
-    k_pages = jax.random.normal(ks[1], (P, bs, Hkv, hd))
-    v_pages = jax.random.normal(ks[2], (P, bs, Hkv, hd))
-    scale = 8.0 if sharp else 1.0  # sharp => near-deterministic greedy
-    w = jax.random.normal(ks[3], (H * hd, V)) * scale
-    tables = np.stack([rng.choice(P, G, replace=False) for _ in range(B)]).astype(np.int32)
-    S = G * bs
-    # lengths[b, i] = KV visible to position i; last position sees base+K.
-    base = rng.integers(1, S - K, size=B)
-    lengths = (base[:, None] + np.arange(K + 1)[None, :]).astype(np.int32)
-    tokens = rng.integers(0, V, size=(B, K)).astype(np.int32)
-    nd = rng.integers(0, K + 1, size=B).astype(np.int32)
-    nd[0] = K  # always exercise a full-length row
-    return q, k_pages, v_pages, w, jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(tokens), jnp.asarray(nd)
-
-
-def _composed(q, k_pages, v_pages, w, tables, lengths, tokens, nd, *, impl, block_v, quant=None):
-    """The unfused two-launch path the kernel must reproduce bitwise."""
-    B, K1, H, hd = q.shape
-    o = paged_decode_attention(
-        q.reshape(B * K1, H, hd),
-        k_pages,
-        v_pages,
-        jnp.repeat(tables, K1, axis=0),
-        lengths.reshape(-1),
-        impl=impl,
-        quant=quant,
-    )
-    o = o.reshape(B, K1, H * hd).astype(jnp.float32)
-    V = w.shape[1]
-    bv = min(block_v, V)
-    Vp = -(-V // bv) * bv
-    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, Vp - V)))
-    logits = fused_target_logits(o, wp, block_v=bv, v_true=V)
-    return spec_verify(logits, tokens, nd, impl=impl, block_v=bv)
-
-
-def _assert_fused_matches(fused, composed, ks=None):
-    na_f, corr_f, logp_f = (np.asarray(x) for x in fused)
-    na_c, corr_c, logp_c = (np.asarray(x) for x in composed)
-    np.testing.assert_array_equal(na_f, na_c)
-    np.testing.assert_array_equal(corr_f, corr_c)
-    if ks is None:
-        np.testing.assert_array_equal(logp_f, logp_c)
-    else:  # ragged: only real draft lanes are defined
-        for i, k in enumerate(ks):
-            np.testing.assert_array_equal(logp_f[i, :k], logp_c[i, :k])
 
 
 @pytest.mark.parametrize("impl", ["ref", "interpret"])
@@ -131,17 +82,12 @@ def test_fused_forced_accept_reject_edges(forced):
 
 
 @settings(max_examples=10, deadline=None)
-@given(
-    B=st.integers(1, 3),
-    K=st.integers(1, 4),
-    Hkv=st.sampled_from([1, 2]),
-    gqa=st.sampled_from([1, 2]),
-    bs=st.sampled_from([4, 8]),
-    G=st.integers(2, 4),
-    seed=st.integers(0, 10_000),
-)
-def test_property_fused_bitexact(B, K, Hkv, gqa, bs, G, seed):
+@given(geom=rect_geometries())
+def test_property_fused_bitexact(geom):
     """Random geometry sweep: fused == composition bitwise, both impls."""
+    B, K, Hkv, gqa, bs, G, seed = (
+        geom["B"], geom["K"], geom["Hkv"], geom["gqa"], geom["bs"], geom["G"], geom["seed"]
+    )
     H = Hkv * gqa
     hd = 8
     P = max(2 * G, B * G)

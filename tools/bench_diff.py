@@ -29,7 +29,7 @@ import sys
 from pathlib import Path
 
 TIMING_SUFFIXES = ("_ms", "_us", "_ns", "_s")
-TIMING_FIELDS = {"tokens_per_s", "speedup", "speedup_vs_composed", "bw_frac"}
+TIMING_FIELDS = {"tokens_per_s", "speedup", "speedup_vs_composed", "speedup_vs_1shard", "bw_frac"}
 TIMING_RTOL = 0.05
 
 REGEN = {

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import sys
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 _ROOT = Path(__file__).resolve().parent.parent
 for _p in (str(_ROOT), str(_ROOT / "src")):
@@ -54,7 +54,8 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
 import numpy as np
 
 from benchmarks.common import csv_row, scenario
-from repro.core.pipeline import RunStats
+from repro.core.pipeline import CloudModel, RunStats
+from repro.core.policy import AdaptivePolicyController, PolicyDecision
 from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
 from repro.runtime import (
     FAULT_MATRIX,
@@ -94,6 +95,37 @@ KV_BLOCK_TOKENS = 16
 KV_SHARED_PREFIX = 256
 KV_FLAT_MAX_LEN = 512
 KV_MODES = ("flat", "paged")
+
+
+from dataclasses import dataclass  # noqa: E402  (after sys.path setup)
+
+
+@dataclass(frozen=True)
+class SessionProfile:
+    """Per-session heterogeneity: device speed, link quality, workload mix.
+
+    Scales are applied to the fleet's baseline draft γ, the scenario
+    channel's (α, β), and the offline local-decode multiplier; ``p_hard``
+    overrides the fleet default.  ``run_fleet(profiles=...)`` assigns
+    profile ``sid % len(profiles)`` to session ``sid`` round-robin.
+    """
+
+    name: str
+    gamma_scale: float = 1.0
+    alpha_scale: float = 1.0
+    beta_scale: float = 1.0
+    local_gamma_scale: float = 1.0
+    p_hard: Optional[float] = None
+
+
+# The paper's device tiers as a mixed fleet: laptop on WiFi (Scenario 1's
+# 5.1 GHz baseline), phone on 5G (2.5 GHz device, faster link), IoT board
+# on 4G (1.2 GHz device, slow lossy link, harder on-device draft mix).
+HETERO_PROFILES: Tuple[SessionProfile, ...] = (
+    SessionProfile("laptop_wifi"),
+    SessionProfile("phone_5g", gamma_scale=5.1 / 2.5, alpha_scale=0.6, beta_scale=0.5),
+    SessionProfile("iot_4g", gamma_scale=5.1 / 1.2, alpha_scale=1.5, beta_scale=3.0, p_hard=0.22),
+)
 
 
 def _sharded_spec_backend(shards: int, seed: int):
@@ -148,6 +180,9 @@ def run_fleet(
     backoff_init: float = 0.5,
     local_gamma: Optional[float] = None,
     shards: Optional[int] = None,
+    profiles: Optional[Sequence[SessionProfile]] = None,
+    policy: Optional[str] = None,
+    p_hard_schedule: Optional[Tuple[Tuple[int, float], ...]] = None,
 ) -> dict:
     """Serve ``n_sessions`` Poisson-arriving edge clients; returns a report.
 
@@ -183,11 +218,23 @@ def run_fleet(
     harness run unchanged, so committed streams at different shard counts
     must be identical (the dispatcher-obliviousness check in
     ``tests/test_sharded_verify.py``).  Chain variant only.
+
+    ``profiles=`` makes the fleet heterogeneous: session ``sid`` takes
+    ``profiles[sid % len(profiles)]``, scaling its draft γ, link (α, β),
+    and hard-token mix (``HETERO_PROFILES`` is the paper's device tiers as
+    one mixed fleet).  ``policy='adaptive'`` attaches a per-session
+    ``AdaptivePolicyController`` (chain/tree/local + BO retunes on drift);
+    ``p_hard_schedule`` makes every synthetic draft's hardness drift
+    mid-run (deterministic), the regime the adaptive policy targets.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
     if variant not in VARIANTS:
         raise ValueError(f"variant must be one of {VARIANTS}")
+    if policy not in (None, "adaptive"):
+        raise ValueError(f"policy must be None or 'adaptive', got {policy!r}")
+    if policy is not None and oracle:
+        raise ValueError("policy= is a synthetic-fleet knob (oracle fleets pin the variant)")
     if kv is not None and kv not in KV_MODES:
         raise ValueError(f"kv must be one of {KV_MODES}")
     if oracle and variant == "tree":
@@ -232,35 +279,58 @@ def run_fleet(
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_sessions))
     clients: List[EdgeClient] = []
+    session_gammas: List[float] = []
+    session_betas: List[float] = []
     for sid in range(n_sessions):
+        prof = profiles[sid % len(profiles)] if profiles else SessionProfile("uniform")
+        gamma_s = gamma * prof.gamma_scale
+        beta_up_s = channel.beta_up * prof.beta_scale
         lf = (lambda d: LinkFaults(faults, d, seed=seed * 1009 + sid, time_scale=ts)) if faults else (lambda d: None)
         up = Channel(
-            ChannelConfig(alpha=channel.alpha_up, beta=channel.beta_up, time_scale=ts),
+            ChannelConfig(alpha=channel.alpha_up * prof.alpha_scale, beta=beta_up_s, time_scale=ts),
             f"up{sid}", clock=clock, faults=lf("up"),
         )
         dn = Channel(
-            ChannelConfig(alpha=channel.alpha_dn, beta=channel.beta_dn, time_scale=ts),
+            ChannelConfig(alpha=channel.alpha_dn * prof.alpha_scale, beta=channel.beta_dn * prof.beta_scale, time_scale=ts),
             f"dn{sid}", clock=clock, faults=lf("dn"),
         )
         try:
             server.attach(sid, up, dn)
         except BlockPoolExhausted:
             break  # flat reservation refused: the budget is full
-        lg = gamma * local_gamma if local_gamma is not None else None
+        lg = gamma_s * local_gamma * prof.local_gamma_scale if local_gamma is not None else None
         cfg = EdgeConfig(
-            time_scale=ts, gamma=gamma, local_gamma=lg, window=8,
+            time_scale=ts, gamma=gamma_s, local_gamma=lg, window=8,
             nav_timeout=nav_timeout, backoff_init=backoff_init,
         )
         if variant == "tree":
             cfg = EdgeConfig(
-                time_scale=ts, gamma=gamma, local_gamma=lg, window=16,
+                time_scale=ts, gamma=gamma_s, local_gamma=lg, window=16,
                 nav_timeout=nav_timeout, backoff_init=backoff_init,
                 variant="tree", tree_width=2, tree_depth=8,
             )
         # Oracle fleets share ONE target stream (same prompt, same truth) so
         # the chaos harness can diff committed streams across scenarios.
-        draft = OracleDraft(seed=seed) if oracle else SyntheticDraft(seed=sid, p_hard=p_hard)
-        clients.append(EdgeClient(sid, up, dn, cfg, draft=draft))
+        p_hard_s = prof.p_hard if prof.p_hard is not None else p_hard
+        draft = (
+            OracleDraft(seed=seed)
+            if oracle
+            else SyntheticDraft(seed=sid, p_hard=p_hard_s, p_hard_schedule=p_hard_schedule)
+        )
+        controller = None
+        if policy == "adaptive":
+            controller = AdaptivePolicyController(
+                base=PolicyDecision(
+                    mode=cfg.variant, r1=cfg.r1, r2=cfg.r2,
+                    tree_width=cfg.tree_width, tree_depth=cfg.tree_depth,
+                    window=cfg.window,
+                ),
+                seed=seed * 31 + sid,
+                session=sid,
+            )
+        session_gammas.append(gamma_s)
+        session_betas.append(beta_up_s)
+        clients.append(EdgeClient(sid, up, dn, cfg, draft=draft, policy=controller))
     server.start()
     results: Dict[int, dict] = {}
     streams: Dict[int, List[int]] = {}
@@ -288,6 +358,19 @@ def run_fleet(
     wall = clock.run(_serve)
 
     load = server.load_summary()
+    # Paper's two-sided energy model (§5.3): edge joules from the per-client
+    # decode/upload busy times, cloud joules from verifier busy time.  All
+    # times are de-scaled back to unscaled model seconds first.
+    edge_joules = sum(
+        edge.edge_energy(
+            r.get("draft_time_s", 0.0),
+            r.get("tx_time_s", 0.0),
+            r["wall_time"] / ts,
+        )
+        for r in results.values()
+    )
+    cloud = CloudModel()
+    cloud_joules = (cloud.p_active - cloud.p_idle) * load.get("verify_busy_time", 0.0) / ts
     stats = RunStats(
         accepted_tokens=sum(r["accepted_tokens"] for r in results.values()),
         nav_calls=load["nav_calls"],
@@ -305,6 +388,10 @@ def run_fleet(
         recovery_latencies=[
             lat / ts for r in results.values() for lat in r["recovery_latencies"]
         ],
+        cloud_energy=cloud_joules,
+        edge_energy=edge_joules,
+        session_gammas=session_gammas[: len(clients)],
+        session_betas=session_betas[: len(clients)],
     )
     per_session_tpt = {
         sid: r["wall_time"] / ts / max(r["accepted_tokens"], 1) for sid, r in results.items()
@@ -327,6 +414,8 @@ def run_fleet(
         failovers=stats.failovers,
         streams=streams,
         server=load,
+        policy_mode_switches=sum(r.get("policy_mode_switches", 0) for r in results.values()),
+        policy_retunes=sum(r.get("policy_retunes", 0) for r in results.values()),
     )
 
 

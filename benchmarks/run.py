@@ -18,6 +18,7 @@ def main() -> None:
     from .fleet_bench import chaos, fleet, router
     from .kernel_bench import kernels
     from .roofline_bench import roofline
+    from .scenario_bench import scenarios
     from .tables import ALL_TABLES
 
     extras = {
@@ -26,11 +27,13 @@ def main() -> None:
         "chaos": chaos,
         "router": router,
         "kernels": kernels,
+        "scenarios": scenarios,
     }
     # Deterministic benches whose rows are committed as BENCH_<area>.json
     # (the router sweep runs on a virtual clock; the kernel rows are pool
-    # accounting + a roofline traffic model: same rows on every host).
-    committed = {"router": "fleet", "kernels": "kernels"}
+    # accounting + a roofline traffic model: same rows on every host; the
+    # scenario sweep is virtual-clock + BLAS-free BO: same rows everywhere).
+    committed = {"router": "fleet", "kernels": "kernels", "scenarios": "scenarios"}
     wanted = sys.argv[1:] or list(ALL_TABLES) + list(extras)
     print("name,us_per_call,derived")
     t_start = time.time()

@@ -6,10 +6,12 @@
 * ``spec_decode``— JAX speculative decoding (draft while_loop + NAV verify)
 * ``pipeline``   — event-driven cloud-edge pipeline engine
 * ``monitor``    — environment monitor / parameter updater
+* ``policy``     — adaptive per-session chain/tree/local policy controller
 """
 
 from .autotuner import BOAutotuner, grid_search, random_search
 from .monitor import EnvironmentMonitor, linear_fit_alpha_beta
+from .policy import AdaptivePolicyController, PolicyConfig, PolicyDecision
 from .pipeline import (
     FRAMEWORKS,
     ChannelModel,

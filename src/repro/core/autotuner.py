@@ -8,7 +8,10 @@ reproduce Table 3 (BO vs 4×4 grid search vs 16-point random search).
 
 Implementation is pure numpy (the autotuner is host-side control plane; Table 5
 bounds its overhead at ≤1.1 % of wall time).  No scipy dependency in the hot
-path — Φ and φ use ``math.erf``.
+path — Φ and φ use ``math.erf`` — and no BLAS/LAPACK either: the tiny GP
+solves use elementwise Cholesky/substitution so tuner trajectories (and the
+committed benchmark rows that depend on them) are bit-reproducible across
+hosts with different BLAS builds.
 """
 
 from __future__ import annotations
@@ -37,6 +40,48 @@ def _norm_pdf(z: np.ndarray) -> np.ndarray:
 
 def _norm_cdf(z: np.ndarray) -> np.ndarray:
     return 0.5 * (1.0 + np.vectorize(math.erf)(z / math.sqrt(2.0)))
+
+
+# The GP solves below deliberately avoid ``np.linalg`` (LAPACK) and matrix
+# products (BLAS): committed benchmark rows are regenerated on arbitrary
+# hosts, and different BLAS builds reorder float reductions enough to flip
+# an argmax.  Elementwise numpy with its fixed pairwise-sum reduction is
+# bit-stable across builds, and the matrices here are tiny (n ≤ ~20
+# observations), so the loops cost microseconds.
+
+
+def _cholesky(a: np.ndarray) -> np.ndarray:
+    """Lower-triangular Cholesky factor of SPD ``a`` (BLAS/LAPACK-free)."""
+    n = a.shape[0]
+    lower = np.zeros_like(a)
+    for i in range(n):
+        for j in range(i + 1):
+            s = float(a[i, j]) - float((lower[i, :j] * lower[j, :j]).sum())
+            if i == j:
+                lower[i, j] = math.sqrt(max(s, 1e-300))
+            else:
+                lower[i, j] = s / lower[j, j]
+    return lower
+
+
+def _solve_lower(lower: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Forward substitution L·x = b for lower-triangular L; b is (n,) or (n, m)."""
+    n = lower.shape[0]
+    x = np.zeros_like(b, dtype=np.float64)
+    for i in range(n):
+        acc = (lower[i, :i].reshape(-1, *([1] * (b.ndim - 1))) * x[:i]).sum(axis=0)
+        x[i] = (b[i] - acc) / lower[i, i]
+    return x
+
+
+def _solve_upper(upper: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Back substitution U·x = b for upper-triangular U; b is (n,) or (n, m)."""
+    n = upper.shape[0]
+    x = np.zeros_like(b, dtype=np.float64)
+    for i in range(n - 1, -1, -1):
+        acc = (upper[i, i + 1 :].reshape(-1, *([1] * (b.ndim - 1))) * x[i + 1 :]).sum(axis=0)
+        x[i] = (b[i] - acc) / upper[i, i]
+    return x
 
 
 @dataclass(frozen=True)
@@ -80,16 +125,16 @@ class BOAutotuner:
         mu, sd = float(y.mean()), float(y.std() + 1e-12)
         yn = (y - mu) / sd
         K = _matern52(X, X, self.length_scale) + self.noise * np.eye(len(X))
-        L = np.linalg.cholesky(K + 1e-10 * np.eye(len(X)))
-        alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+        L = _cholesky(K + 1e-10 * np.eye(len(X)))
+        alpha = _solve_upper(L.T, _solve_lower(L, yn))
         return X, L, alpha, mu, sd
 
     def _posterior(self, Xq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """GP posterior mean/std at query points (normalized-y space)."""
         X, L, alpha, _, _ = self._gp
         Ks = _matern52(Xq, X, self.length_scale)
-        mean = Ks @ alpha
-        v = np.linalg.solve(L, Ks.T)
+        mean = (Ks * alpha).sum(axis=1)
+        v = _solve_lower(L, Ks.T)
         var = np.maximum(1.0 - (v * v).sum(0), 1e-12)
         return mean, np.sqrt(var)
 

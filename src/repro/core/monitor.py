@@ -41,7 +41,14 @@ def linear_fit_alpha_beta(sizes: List[int], times: List[float]) -> Tuple[float, 
     if len(xs) < 2:
         # Single distinct size: attribute everything above zero to β.
         return 0.0, float(ys[0] / max(xs[0], 1.0))
-    beta, alpha = np.polyfit(xs, ys, 1)
+    # Closed-form least squares (β = cov/var) instead of np.polyfit: polyfit
+    # routes through LAPACK lstsq, whose float reduction order varies across
+    # BLAS builds — the estimates feed retune decisions that committed bench
+    # rows replay bit-exactly on arbitrary hosts.
+    xm, ym = float(xs.mean()), float(ys.mean())
+    dx = xs - xm
+    beta = float((dx * (ys - ym)).sum() / (dx * dx).sum())
+    alpha = ym - beta * xm
     return float(max(alpha, 0.0)), float(max(beta, 0.0))
 
 

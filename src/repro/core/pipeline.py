@@ -135,7 +135,7 @@ class CloudModel:
     t_verify: float = 0.080  # seconds per NAV call (7B target fwd on A800)
     t_verify_per_token: float = 0.004  # marginal per draft token verified
     p_idle: float = 60.0  # GPU idle power [W]
-    p_active: float = 86.0  # GPU power while verifying [W] (A800, small batch)
+    p_active: float = 200.0  # GPU power while verifying [W] (A800 under NAV load)
 
     def verify_time(self, n_tokens: int) -> float:
         """Seconds for one NAV call over n drafted tokens."""
@@ -153,6 +153,17 @@ class EdgeModel:
     gamma: float = 0.100  # base per-token draft time [s] (1–3B GGUF on laptop CPU)
     cpu_ghz: float = 5.1  # physical device frequency
     simulated_ghz: Optional[float] = None  # e.g. 2.5 (phone) / 1.2 (IoT)
+    # Edge power model (§5.2.1 ECS, edge side): the device draws ``p_idle``
+    # watts for the whole run, plus ``p_decode`` above idle while the draft
+    # model is decoding and ``p_tx`` above idle while the radio transmits.
+    # Defaults approximate a laptop-class device; emulated slower tiers
+    # (Scenarios 2/3) decode *longer* per token but draw proportionally
+    # less decode power (DVFS: dynamic power ≈ ∝ frequency), so joules per
+    # drafted token stay device-class comparable while idle joules grow
+    # with the slower run — matching the paper's per-scenario ECS ordering.
+    p_idle: float = 2.0
+    p_decode: float = 4.5
+    p_tx: float = 1.8
 
     def effective_gamma(self) -> float:
         """Per-token draft time, scaled for the emulated device tier."""
@@ -160,6 +171,25 @@ class EdgeModel:
             return self.gamma
         # Artificial delay of App. G.2: gamma · (real/sim − 1) extra per token.
         return self.gamma * (self.cpu_ghz / self.simulated_ghz)
+
+    def decode_power_scale(self) -> float:
+        """DVFS scale on ``p_decode`` for the emulated device tier."""
+        if self.simulated_ghz is None:
+            return 1.0
+        return self.simulated_ghz / self.cpu_ghz
+
+    def edge_energy(self, decode_time: float, tx_time: float, wall_time: float) -> float:
+        """Edge joules for a run: idle baseline + decode + upload increments.
+
+        ``decode_time`` is total draft-decode busy time, ``tx_time`` total
+        radio-transmit time, ``wall_time`` the run's duration — all in
+        unscaled model seconds.
+        """
+        return (
+            self.p_idle * max(wall_time, 0.0)
+            + self.p_decode * self.decode_power_scale() * max(decode_time, 0.0)
+            + self.p_tx * max(tx_time, 0.0)
+        )
 
 
 # --------------------------------------------------------------------------- #
@@ -308,9 +338,14 @@ class RunStats:
     nav_calls: int = 0
     rounds: int = 0
     wall_time: float = 0.0  # simulated seconds
-    cloud_energy: float = 0.0  # joules above idle (ECS basis)
+    cloud_energy: float = 0.0  # cloud joules above idle (ECS basis)
+    edge_energy: float = 0.0  # edge joules: idle baseline + decode + upload
     edge_busy_time: float = 0.0
     channel_busy_time: float = 0.0
+    # Per-session heterogeneity (fleet serving): each session's configured
+    # draft γ [s/token] and uplink β [s/token] — empty for single-session runs.
+    session_gammas: List[float] = field(default_factory=list)
+    session_betas: List[float] = field(default_factory=list)
     draft_lengths: List[int] = field(default_factory=list)
     # Control-plane overheads (Table 5): real host seconds spent.
     t_dp: float = 0.0
@@ -350,9 +385,43 @@ class RunStats:
         return self.wall_time / max(self.accepted_tokens, 1)
 
     @property
+    def total_energy(self) -> float:
+        """Combined edge + cloud joules for the run."""
+        return self.edge_energy + self.cloud_energy
+
+    @property
     def ecs(self) -> float:
-        """Cloud energy per 100 accepted tokens [J] (§5.1 Metrics)."""
+        """Cloud energy per 100 accepted tokens [J].
+
+        Deprecated alias: this is the historical *cloud-only* reading of
+        §5.1's ECS metric, kept for existing tables/tests.  The paper's
+        full edge+cloud ECS is :attr:`energy_per_100_tokens`.
+        """
         return self.cloud_energy / max(self.accepted_tokens, 1) * 100.0
+
+    @property
+    def ecs_edge(self) -> float:
+        """Edge energy per 100 accepted tokens [J] (decode + upload + idle)."""
+        return self.edge_energy / max(self.accepted_tokens, 1) * 100.0
+
+    @property
+    def energy_per_100_tokens(self) -> float:
+        """Full ECS (§5.1 Metrics): edge + cloud joules per 100 accepted tokens."""
+        return self.total_energy / max(self.accepted_tokens, 1) * 100.0
+
+    @property
+    def gamma_spread(self) -> float:
+        """max/min configured session γ — 1.0 for a homogeneous fleet."""
+        if not self.session_gammas:
+            return 1.0
+        return max(self.session_gammas) / max(min(self.session_gammas), 1e-12)
+
+    @property
+    def beta_spread(self) -> float:
+        """max/min configured session uplink β — 1.0 for a homogeneous fleet."""
+        if not self.session_betas:
+            return 1.0
+        return max(self.session_betas) / max(min(self.session_betas), 1e-12)
 
     @property
     def verification_frequency(self) -> float:
@@ -437,6 +506,8 @@ class RunStats:
         return dict(
             tpt_ms=self.tpt * 1e3,
             ecs_j=self.ecs,
+            ecs_edge_j=self.ecs_edge,
+            ecs_total_j=self.energy_per_100_tokens,
             verification_frequency=self.verification_frequency,
             mean_draft_length=self.mean_draft_length,
             acceptance_rate=self.acceptance_rate,
@@ -679,6 +750,9 @@ class PipelineEngine:
             self._t += gamma
             self.stats.edge_busy_time += gamma
         self.stats.wall_time = self._t
+        self.stats.edge_energy = self.edge.edge_energy(
+            self.stats.edge_busy_time, self.stats.channel_busy_time, self.stats.wall_time
+        )
         self.stats.rounds += 1
         self.stats.draft_lengths.append(n)
         self.stats.accepted_drafts += n_accepted
@@ -816,6 +890,9 @@ class PipelineEngine:
             self._t += gamma  # ingest the correction token before drafting
             self.stats.edge_busy_time += gamma
         self.stats.wall_time = self._t
+        self.stats.edge_energy = self.edge.edge_energy(
+            self.stats.edge_busy_time, self.stats.channel_busy_time, self.stats.wall_time
+        )
         self.stats.rounds += 1
         self.stats.draft_lengths.append(n_nodes)
         self.stats.tree_nodes.append(n_nodes)

@@ -1,0 +1,247 @@
+"""Adaptive per-session serving policy: chain vs tree vs local-only.
+
+PipeSD's Parameter Updater (§4.2) retunes thresholds when the monitored
+environment drifts; FlowSpec-style systems additionally switch the
+*speculation shape* (pipelined chain vs token tree) as acceptance shifts.
+:class:`AdaptivePolicyController` combines both for one serving session:
+
+* **mode** — ``'chain'`` while the sliding-window acceptance rate is
+  high (deep chains amortize NAV well), ``'tree'`` once acceptance drops
+  below a threshold (branching recovers tokens-per-NAV on hard streams;
+  hysteresis avoids flapping), and ``'local'`` while the link is in an
+  outage (the edge decodes alone, probing the cloud every few rounds so
+  recovery is automatic);
+* **knobs** — (R1, R2) and, for trees, (width, depth) are retuned with
+  the existing :class:`~repro.core.autotuner.BOAutotuner` against short
+  :class:`~repro.core.pipeline.PipelineEngine` probe simulations built
+  from the monitor's current (α, β, γ) estimate.  Retunes fire on the
+  paper's δ-triggers (App. D): a drifted link/device estimate or a
+  drifted TPT window, rate-limited by a cooldown.  A retune only adopts
+  the BO winner when it beats the incumbent configuration probed under
+  the *same* environment, so a noisy probe can't make the policy worse.
+
+The controller is deterministic given its seed and observation sequence
+(the autotuner is BLAS-free), so fleet runs that embed it replay
+bit-identically on the virtual clock.
+
+Ownership: the client *feeds* the controller (``observe_link`` /
+``observe_gamma`` / ``observe_round``) and *asks* it (``decide``) once
+per speculative round; the controller never touches the transport.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, replace
+from typing import Deque, List, Optional, Tuple
+
+from .autotuner import BOAutotuner
+from .monitor import EnvironmentMonitor
+from .pipeline import ChannelModel, CloudModel, EdgeModel, PipelineEngine, SyntheticSource, make_framework
+
+__all__ = ["PolicyDecision", "PolicyConfig", "AdaptivePolicyController"]
+
+MODES = ("chain", "tree", "local")
+
+
+@dataclass(frozen=True)
+class PolicyDecision:
+    """One round's serving configuration for a session."""
+
+    mode: str = "chain"  # 'chain' | 'tree' | 'local'
+    r1: float = 0.9  # cumulative-confidence NAV threshold
+    r2: float = 0.6  # per-token NAV threshold
+    tree_width: int = 2
+    tree_depth: int = 8
+    window: int = 16  # scheduling window N̂ (cap on a round's drafts)
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    """Tunables for :class:`AdaptivePolicyController`."""
+
+    acceptance_window: int = 48  # sliding window of drafted tokens for the mode rule
+    tree_below: float = 0.80  # acceptance below this → tree mode
+    chain_above: float = 0.88  # acceptance back above this → chain mode (hysteresis)
+    probe_every: int = 3  # while offline, attempt the cloud every k-th round
+    retune_trials: int = 6  # BO samples per retune (cheap; the paper uses 16 offline)
+    retune_tokens: int = 30  # accepted tokens per probe simulation
+    min_rounds_between_retunes: int = 6  # cooldown against retune storms
+    monitor_window: int = 12  # sliding window of the controller's own monitor
+
+
+class AdaptivePolicyController:
+    """Per-session chain/tree/local policy with BO retuning on drift."""
+
+    def __init__(
+        self,
+        base: PolicyDecision = PolicyDecision(),
+        cfg: PolicyConfig = PolicyConfig(),
+        seed: int = 0,
+        session: int = 0,
+        channel: Optional[ChannelModel] = None,
+        cloud: Optional[CloudModel] = None,
+        edge: Optional[EdgeModel] = None,
+    ):
+        self.base = base
+        self.cfg = cfg
+        self.seed = int(seed)
+        self.session = int(session)
+        # Fallback probe environment when the monitor has no estimate yet.
+        self._channel = channel or ChannelModel()
+        self._cloud = cloud or CloudModel()
+        self._edge = edge or EdgeModel()
+        self.monitor = EnvironmentMonitor(window=cfg.monitor_window)
+        self.current = base
+        self.retunes = 0
+        self.mode_switches = 0
+        self.decisions: List[str] = []
+        self.tuned: Optional[Tuple[float, float, int, int]] = None
+        self._mode = base.mode if base.mode != "local" else "chain"
+        self._offline = False
+        self._offline_rounds = 0
+        self._rounds = 0
+        self._last_retune_round = -(10**9)
+        self._acc: Deque[Tuple[int, int]] = deque()  # (drafted, accepted) per round
+
+    # -------------------------------------------------------------- intake --
+    def observe_link(self, size: int, comm_time: float) -> None:
+        """One transmitted batch: size + communication time (unscaled s)."""
+        self.monitor.observe_batch(size, comm_time)
+        self._maybe_retune_on_drift()
+
+    def observe_gamma(self, gamma: float) -> None:
+        """One measured per-token draft time (unscaled s/token)."""
+        self.monitor.observe_gamma(gamma)
+
+    def observe_round(
+        self,
+        drafted: int,
+        accepted: int,
+        failover: bool = False,
+        tpt: Optional[float] = None,
+    ) -> None:
+        """One speculative round's outcome (or a NAV-timeout failover)."""
+        self._rounds += 1
+        if failover:
+            if not self._offline:
+                self._offline_rounds = 0
+            self._offline = True
+            return
+        if self._offline:
+            self._offline = False  # a verified round ends the offline spell
+        self._acc.append((int(drafted), int(accepted)))
+        while sum(d for d, _ in self._acc) > self.cfg.acceptance_window and len(self._acc) > 1:
+            self._acc.popleft()
+        if tpt is not None and tpt > 0:
+            self.monitor.observe_tpt(tpt)
+        self._maybe_retune_on_drift()
+
+    # ------------------------------------------------------------- signals --
+    def acceptance(self) -> Optional[float]:
+        """Sliding-window draft acceptance rate, or None before any round."""
+        drafted = sum(d for d, _ in self._acc)
+        if drafted <= 0:
+            return None
+        return sum(a for _, a in self._acc) / drafted
+
+    @property
+    def offline(self) -> bool:
+        """Whether the controller currently believes the link is down."""
+        return self._offline
+
+    # ------------------------------------------------------------- retune --
+    def _maybe_retune_on_drift(self) -> None:
+        drifted_env = self.monitor.should_rerun_dp()
+        drifted_tpt = self.monitor.should_rerun_bo()
+        if drifted_env is None and drifted_tpt is None:
+            return
+        if self._rounds - self._last_retune_round < self.cfg.min_rounds_between_retunes:
+            return
+        self.retune(drifted_env)
+
+    def retune(self, env: Optional[Tuple[float, float, float]] = None) -> Tuple[float, float, int, int]:
+        """Re-run BO over the knobs against the current environment estimate.
+
+        Returns the adopted (R1, R2, width, depth).  The BO winner is only
+        adopted when its probed TPT beats the incumbent's probed TPT under
+        the same environment.
+        """
+        alpha, beta, gamma = env or self.monitor.estimate() or (
+            self._channel.alpha_up,
+            self._channel.beta_up,
+            self._edge.effective_gamma(),
+        )
+        tree = self._mode == "tree"
+        acc = self.acceptance()
+        # Map observed acceptance onto the probe source's hardness mix.
+        p_hard = 0.15 if acc is None else min(0.6, max(0.05, 1.0 - acc))
+        channel = replace(self._channel, alpha_up=float(alpha), beta_up=float(beta), bandwidth_trace=None)
+        edge = replace(self._edge, gamma=float(gamma), simulated_ghz=None)
+        probe_seed = (self.seed * 1000003 + self.session * 8191 + self.retunes) & 0x7FFFFFFF
+        spec_name = "tree" if tree else "pipesd"
+
+        def measure(r1: float, r2: float, w: float = 0.0, d: float = 0.0) -> float:
+            overrides = dict(trigger_kw=dict(r1=float(r1), r2=float(r2)), autotune=False)
+            if tree:
+                overrides.update(tree_width=max(1, int(round(w))), tree_depth=max(2, int(round(d))))
+            engine = PipelineEngine(
+                make_framework(spec_name, **overrides),
+                channel,
+                self._cloud,
+                edge,
+                SyntheticSource(p_hard=p_hard, seed=probe_seed),
+                window_init=self.current.window,
+                seed=probe_seed,
+            )
+            return engine.run(self.cfg.retune_tokens).tpt
+
+        cur = self.current
+        if tree:
+            bounds = ((0.0, 1.0), (0.0, 1.0), (1.0, 4.0), (2.0, 10.0))
+            incumbent_y = measure(cur.r1, cur.r2, cur.tree_width, cur.tree_depth)
+        else:
+            bounds = ((0.0, 1.0), (0.0, 1.0))
+            incumbent_y = measure(cur.r1, cur.r2)
+        bo = BOAutotuner(bounds=bounds, seed=probe_seed)
+        best = bo.minimize(measure, n_trials=self.cfg.retune_trials)
+        if best.y < incumbent_y:
+            if tree:
+                r1, r2, w, d = best.x
+                self.current = replace(
+                    cur, r1=float(r1), r2=float(r2),
+                    tree_width=max(1, int(round(w))), tree_depth=max(2, int(round(d))),
+                )
+            else:
+                r1, r2 = best.x
+                self.current = replace(cur, r1=float(r1), r2=float(r2))
+        self.tuned = (self.current.r1, self.current.r2, self.current.tree_width, self.current.tree_depth)
+        self.retunes += 1
+        self._last_retune_round = self._rounds
+        return self.tuned
+
+    # -------------------------------------------------------------- decide --
+    def decide(self) -> PolicyDecision:
+        """The configuration for the next round (records mode history)."""
+        if self._offline:
+            self._offline_rounds += 1
+            if self._offline_rounds % self.cfg.probe_every == 0:
+                mode = self._mode  # probe round: try the cloud again
+            else:
+                mode = "local"
+        else:
+            acc = self.acceptance()
+            if acc is not None:
+                if self._mode == "chain" and acc < self.cfg.tree_below:
+                    self._mode = "tree"
+                elif self._mode == "tree" and acc > self.cfg.chain_above:
+                    self._mode = "chain"
+            mode = self._mode
+        if self.decisions and self.decisions[-1] != mode:
+            self.mode_switches += 1
+        self.decisions.append(mode)
+        return replace(self.current, mode=mode)

@@ -32,7 +32,7 @@ optional and default to the stateless legacy behaviour.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -79,16 +79,31 @@ class EdgeConfig:
 
 @dataclass
 class SyntheticDraft:
-    """Synthetic draft model: emits (token, confidence) with dialect stats."""
+    """Synthetic draft model: emits (token, confidence) with dialect stats.
+
+    ``p_hard_schedule`` makes the stream drift deterministically: each
+    ``(from_nth_draft, p_hard)`` step raises/lowers the hard-token mix
+    once that many tokens have been drafted — the workload analogue of a
+    prompt moving from boilerplate into hard reasoning, which is what the
+    adaptive policy benchmarks use to force a mid-run mode switch.
+    """
 
     seed: int = 0
     p_hard: float = 0.15
+    p_hard_schedule: Optional[Tuple[Tuple[int, float], ...]] = None
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
+        self._count = 0
 
     def next(self) -> Tuple[int, float]:
-        hard = self._rng.random() < self.p_hard
+        p = self.p_hard
+        if self.p_hard_schedule:
+            for start, ph in self.p_hard_schedule:
+                if self._count >= start:
+                    p = ph
+        self._count += 1
+        hard = self._rng.random() < p
         conf = float(self._rng.beta(2.5, 2.5) if hard else self._rng.beta(150, 1))
         return int(self._rng.integers(0, 1 << 16)), conf
 
@@ -103,11 +118,15 @@ class EdgeClient:
         draft=None,
         clock=None,
         reconnect: Optional[Callable[[], Any]] = None,
+        policy=None,  # Optional[core.policy.AdaptivePolicyController]
     ):
         self.session = session
         self.up = uplink
         self.dn = downlink
-        self.cfg = cfg
+        # An adaptive policy mutates its client's config per round (variant,
+        # thresholds, window), so give this client a private copy.
+        self.policy = policy
+        self.cfg = replace(cfg) if policy is not None else cfg
         # Optional re-dial hook: called when the links are permanently closed
         # (router/verifier gone) before a cloud re-probe.  Returns a duplex
         # transport or an (uplink, downlink) pair to a live control plane.
@@ -144,7 +163,16 @@ class EdgeClient:
             "routes_seen": 0,
             "migrations_seen": 0,
             "reattaches": 0,
+            # Energy accounting inputs (core.pipeline.EdgeModel.edge_energy):
+            # unscaled model seconds spent draft-decoding (incl. offline local
+            # decode) and transmitting draft batches on the uplink radio.
+            "draft_time_s": 0.0,
+            "tx_time_s": 0.0,
+            # Adaptive policy observability (filled on exit when attached).
+            "policy_mode_switches": 0,
+            "policy_retunes": 0,
         }
+        self._policy_resync = False
 
     # ------------------------------------------------------------- drafting --
     def _seek_draft(self) -> None:
@@ -180,6 +208,10 @@ class EdgeClient:
         if pending:
             self._send_batch(pending)
         self.stats["drafted_tokens"] += len(tokens)
+        self.stats["draft_time_s"] += self.cfg.gamma * len(tokens)
+        self.monitor.observe_gamma(self.cfg.gamma)
+        if self.policy is not None:
+            self.policy.observe_gamma(self.cfg.gamma)
         return tokens, confs
 
     def _draft_round_tree(self) -> Tuple[List[int], List[float], List[int]]:
@@ -200,6 +232,7 @@ class EdgeClient:
         budget = self.cfg.window
         for _ in range(self.cfg.tree_depth):
             self.clock.sleep(self.cfg.gamma * len(frontier) * self.cfg.time_scale)
+            self.stats["draft_time_s"] += self.cfg.gamma * len(frontier)
             level_start = len(tokens)
             nxt: List[Tuple[int, float]] = []
             for pidx, pconf in frontier:
@@ -227,6 +260,9 @@ class EdgeClient:
             if not frontier or len(tokens) >= budget:
                 break
         self.stats["drafted_tokens"] += len(tokens)
+        self.monitor.observe_gamma(self.cfg.gamma)
+        if self.policy is not None:
+            self.policy.observe_gamma(self.cfg.gamma)
         return tokens, confs, parents
 
     def _send_batch(self, pending: List[Tuple[int, float]], parents: Optional[List[int]] = None) -> None:
@@ -243,7 +279,11 @@ class EdgeClient:
                 parents=tuple(parents) if parents is not None else (),
             )
         )
-        self.monitor.observe_batch(len(toks), self.up.cfg.alpha + self.up.cfg.beta * len(toks))
+        cost = self.up.cfg.alpha + self.up.cfg.beta * len(toks)
+        self.monitor.observe_batch(len(toks), cost)
+        self.stats["tx_time_s"] += cost
+        if self.policy is not None:
+            self.policy.observe_link(len(toks), cost)
 
     # ----------------------------------------------------------- fallback --
     def _local_decode_one(self) -> int:
@@ -256,6 +296,36 @@ class EdgeClient:
     def _commit(self, toks: List[int]) -> None:
         self.tokens.extend(int(t) for t in toks)
         self.stats["accepted_tokens"] += len(toks)
+
+    # --------------------------------------------------------------- policy --
+    def _apply_policy(self, decision) -> None:
+        """Retarget the live config/trigger to a PolicyDecision (not 'local')."""
+        cfg = self.cfg
+        if decision.mode in ("chain", "tree"):
+            cfg.variant = decision.mode
+        cfg.r1, cfg.r2 = decision.r1, decision.r2
+        cfg.tree_width, cfg.tree_depth = decision.tree_width, decision.tree_depth
+        cfg.window = decision.window
+        trig = self.trigger
+        if hasattr(trig, "set_window"):
+            trig.set_window(decision.window)
+        inner = getattr(trig, "inner", trig)
+        if hasattr(inner, "set_thresholds"):
+            inner.set_thresholds(decision.r1, decision.r2)
+
+    def _policy_local_block(self, n_tokens: int) -> None:
+        """Policy-forced local-only round: decode up to one window offline."""
+        self._seek_draft()
+        local_gamma = self.cfg.local_gamma if self.cfg.local_gamma is not None else self.cfg.gamma
+        for _ in range(max(self.cfg.window, 1)):
+            if self.stats["accepted_tokens"] >= n_tokens:
+                break
+            self.clock.sleep(local_gamma * self.cfg.time_scale)
+            self.stats["draft_time_s"] += local_gamma
+            self._commit([self._local_decode_one()])
+            self.stats["fallback_tokens"] += 1
+        # The verifier's KV fork is now behind: re-sync before the next NAV.
+        self._policy_resync = True
 
     # ---------------------------------------------------------------- runs --
     def run(self, n_tokens: int) -> dict:
@@ -279,6 +349,7 @@ class EdgeClient:
                     and self.stats["accepted_tokens"] < n_tokens
                 ):
                     self.clock.sleep(local_gamma * self.cfg.time_scale)
+                    self.stats["draft_time_s"] += local_gamma
                     self._commit([self._local_decode_one()])
                     self.stats["fallback_tokens"] += 1
                 # Re-probe the cloud, announcing our committed position so the
@@ -304,6 +375,24 @@ class EdgeClient:
                 cloud_ok = True  # optimistic; next round will confirm
                 backoff = min(backoff * 2, self.cfg.backoff_max)
                 continue
+            if self.policy is not None:
+                decision = self.policy.decide()
+                if decision.mode == "local":
+                    self._policy_local_block(n_tokens)
+                    continue
+                self._apply_policy(decision)
+                if self._policy_resync:
+                    self.seq += 1
+                    self.up.send(
+                        Reset(
+                            session=self.session,
+                            seq=self.seq,
+                            round=self.round,
+                            position=len(self.tokens),
+                        )
+                    )
+                    self._policy_resync = False
+            t_round = self.clock.monotonic()
             self.round += 1
             self._seek_draft()
             tree_mode = self.cfg.variant == "tree"
@@ -354,6 +443,8 @@ class EdgeClient:
                     offline_since = now
                 cloud_ok = False
                 self.trigger.reset()
+                if self.policy is not None:
+                    self.policy.observe_round(len(tokens), 0, failover=True)
                 continue
             now = self.clock.monotonic()
             self.stats["nav_latencies"].append(now - t_req)
@@ -372,5 +463,14 @@ class EdgeClient:
             self._commit([result.correction])
             self.stats["rounds"] += 1
             self.trigger.on_verify(n_acc, len(tokens))
+            if self.policy is not None:
+                # Per-token round time in unscaled model seconds (δ₁ signal).
+                round_s = (now - t_round) / max(self.cfg.time_scale, 1e-9)
+                self.policy.observe_round(
+                    len(tokens), n_acc, tpt=round_s / max(n_acc + 1, 1)
+                )
         self.stats["wall_time"] = self.clock.monotonic() - t0
+        if self.policy is not None:
+            self.stats["policy_mode_switches"] = self.policy.mode_switches
+            self.stats["policy_retunes"] = self.policy.retunes
         return dict(self.stats)

@@ -613,6 +613,9 @@ class CloudVerifier:
             # and flat reservations that saturated (the flat cache's hard cap).
             "kv_parked": 0,
             "kv_cap_hits": 0,
+            # Clock seconds the backend spent inside verify calls — the busy
+            # time the energy model charges at (p_active − p_idle) watts.
+            "verify_busy_time": 0.0,
         }
         # The monitor here is an accumulator for the whole serving run, not
         # the paper's 100-observation estimator — size the window accordingly
@@ -1014,6 +1017,7 @@ class CloudVerifier:
             chain = [r for r in batch if r.parents is None]
             tree = [r for r in batch if r.parents is not None]
             results: Dict[int, tuple] = {}
+            verify_t0 = self.clock.monotonic()
             if chain:
                 if self.backend.positional:
                     # Positional backends (runtime.oracle) verify statelessly
@@ -1033,6 +1037,7 @@ class CloudVerifier:
                 )
                 for r, (n_acc, corr, path) in zip(tree, out):
                     results[id(r)] = (n_acc, corr, path)
+            self.stats["verify_busy_time"] += self.clock.monotonic() - verify_t0
             self.stats["nav_calls"] += len(batch)
             self.stats["batched_calls"] += 1
             self.monitor.observe_verifier_batch(len(batch), depth)

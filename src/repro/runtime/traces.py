@@ -1,0 +1,260 @@
+"""Trace-driven network conditions for the cloud-edge serving runtime.
+
+A :class:`NetworkTrace` is a recorded (or synthesized) bandwidth/outage
+timeline for one edge↔cloud link — the kind of 4G/5G/WiFi trace the
+heterogeneous-edge literature replays against speculative-decoding
+serving stacks.  The trace is a piecewise-constant step function: each
+:class:`TraceSegment` holds from its ``start`` until the next segment's
+start (the last one until ``duration``).
+
+``compile_trace`` lowers a trace into the declarative fault layer
+(:class:`~repro.runtime.faults.FaultScenario`): every segment becomes one
+contiguous :class:`~repro.runtime.faults.Phase` per direction whose
+``bandwidth_factor`` is the ratio of the trace's reference bandwidth to
+the segment's recorded bandwidth (so halving the recorded Mbps doubles
+the per-token β cost), and outage segments become hard-down windows.
+Compiled traces replay on the :class:`~repro.runtime.simclock.VirtualClock`
+exactly like any other scenario, which makes trace runs bit-reproducible
+and lets them join the fault-conformance matrix.
+
+The bundled traces (:data:`BUNDLED_TRACES`) are synthesized with seeded
+RNGs — ``synthesize_trace(kind, seed)`` is a pure function of its
+arguments, so two compilations from the same seed are identical (a
+property the test suite asserts).  Timelines are sized to the
+conformance-suite timebase: ~12 virtual seconds with 1 s steps, outages
+~1 s (comfortably longer than the suite's NAV timeout).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .faults import FaultScenario, Phase
+
+__all__ = [
+    "TraceSegment",
+    "NetworkTrace",
+    "TRACE_KINDS",
+    "synthesize_trace",
+    "compile_trace",
+    "trace_bandwidth_fn",
+    "BUNDLED_TRACES",
+    "TRACE_MATRIX",
+    "trace_by_name",
+]
+
+
+@dataclass(frozen=True)
+class TraceSegment:
+    """One step of a piecewise-constant bandwidth timeline.
+
+    ``start`` is in unscaled link-relative seconds; the segment holds
+    until the next segment's start (or the trace's ``duration``).
+    ``up_mbps``/``dn_mbps`` are the recorded link bandwidths; ``outage``
+    marks a hard-down window (bandwidth values are kept for bookkeeping
+    but nothing is delivered).
+    """
+
+    start: float
+    up_mbps: float
+    dn_mbps: float
+    outage: bool = False
+
+
+@dataclass(frozen=True)
+class NetworkTrace:
+    """A named bandwidth/outage timeline for one edge↔cloud link.
+
+    ``ref_up_mbps``/``ref_dn_mbps`` anchor the compilation: a segment
+    recorded at the reference bandwidth compiles to ``bandwidth_factor``
+    1.0 (the channel's configured Hockney β), half the reference to 2.0,
+    and so on.  Frozen so value equality holds — two syntheses from the
+    same seed compare equal, segment tuples included.
+    """
+
+    name: str
+    kind: str  # '4g' | '5g' | 'wifi' | 'custom'
+    duration: float
+    segments: Tuple[TraceSegment, ...]
+    ref_up_mbps: float = 20.0
+    ref_dn_mbps: float = 200.0
+
+    def __post_init__(self) -> None:
+        if not self.segments:
+            raise ValueError(f"trace {self.name!r} has no segments")
+        if self.segments[0].start != 0.0:
+            raise ValueError(f"trace {self.name!r} must start at t=0, got {self.segments[0].start}")
+        starts = [s.start for s in self.segments]
+        if any(b <= a for a, b in zip(starts, starts[1:])):
+            raise ValueError(f"trace {self.name!r} segment starts must strictly increase")
+        if starts[-1] >= self.duration:
+            raise ValueError(f"trace {self.name!r} last segment starts at/after duration")
+        for s in self.segments:
+            if s.up_mbps <= 0 or s.dn_mbps <= 0:
+                raise ValueError(f"trace {self.name!r} has non-positive bandwidth at t={s.start}")
+
+    def segment_at(self, t: float) -> TraceSegment:
+        """The segment in effect at link-relative time ``t`` (clamped)."""
+        current = self.segments[0]
+        for s in self.segments:
+            if s.start > t:
+                break
+            current = s
+        return current
+
+    def outage_windows(self) -> Tuple[Tuple[float, float], ...]:
+        """(start, end) of every outage segment, end-exclusive."""
+        out: List[Tuple[float, float]] = []
+        for seg, end in zip(self.segments, self._ends()):
+            if seg.outage:
+                out.append((seg.start, end))
+        return tuple(out)
+
+    def _ends(self) -> Tuple[float, ...]:
+        starts = [s.start for s in self.segments[1:]] + [self.duration]
+        return tuple(starts)
+
+
+@dataclass(frozen=True)
+class _KindProfile:
+    """Synthesis profile for one access technology.
+
+    ``up``/``dn`` bound the log-space bandwidth random walk [Mbps];
+    ``outage_at`` places one deterministic outage step at that fraction
+    of the timeline (None for kinds that fade but never hard-drop); the
+    integer ``kind_id`` salts the RNG so kinds differ even at equal seeds.
+    """
+
+    kind_id: int
+    up: Tuple[float, float]
+    dn: Tuple[float, float]
+    outage_at: Optional[float]
+
+
+TRACE_KINDS = {
+    "4g": _KindProfile(0, up=(4.0, 25.0), dn=(20.0, 120.0), outage_at=0.35),
+    "5g": _KindProfile(1, up=(30.0, 150.0), dn=(150.0, 900.0), outage_at=None),
+    "wifi": _KindProfile(2, up=(10.0, 60.0), dn=(60.0, 300.0), outage_at=0.55),
+}
+
+
+def synthesize_trace(
+    kind: str,
+    seed: int,
+    duration: float = 12.0,
+    step: float = 1.0,
+    name: str = "",
+) -> NetworkTrace:
+    """Synthesize a seeded ``kind`` ('4g' | '5g' | 'wifi') timeline.
+
+    Bandwidth follows a bounded log-space random walk inside the kind's
+    range; 4G and WiFi additionally get one deterministic outage step at
+    the kind's characteristic position (handover / AP roam).  Pure
+    function of its arguments: same (kind, seed, duration, step) → equal
+    :class:`NetworkTrace` values.
+    """
+    try:
+        prof = TRACE_KINDS[kind]
+    except KeyError:
+        raise KeyError(f"unknown trace kind {kind!r}; have {sorted(TRACE_KINDS)}") from None
+    rng = np.random.default_rng([prof.kind_id, int(seed)])
+    n = max(2, int(round(duration / step)))
+    outage_idx = None if prof.outage_at is None else int(n * prof.outage_at)
+
+    def walk(lo: float, hi: float) -> List[float]:
+        llo, lhi = np.log(lo), np.log(hi)
+        x = rng.uniform(llo + 0.25 * (lhi - llo), lhi)  # start healthy-ish
+        out = []
+        for _ in range(n):
+            out.append(float(np.exp(x)))
+            x = float(np.clip(x + rng.normal(0.0, 0.2 * (lhi - llo)), llo, lhi))
+        return out
+
+    ups = walk(*prof.up)
+    dns = walk(*prof.dn)
+    segs = tuple(
+        TraceSegment(start=i * step, up_mbps=ups[i], dn_mbps=dns[i], outage=(i == outage_idx))
+        for i in range(n)
+    )
+    return NetworkTrace(
+        name=name or f"{kind}_seed{seed}",
+        kind=kind,
+        duration=n * step,
+        segments=segs,
+    )
+
+
+def compile_trace(trace: NetworkTrace) -> FaultScenario:
+    """Lower a trace into :class:`FaultScenario` phases for both directions.
+
+    Each segment becomes exactly one contiguous phase per direction:
+    ``[seg.start, next.start)`` with ``bandwidth_factor = ref_mbps /
+    seg_mbps`` (β multipliers round-trip: ``ref / factor`` recovers the
+    recorded Mbps) and ``outage`` carried through.  Phases tile
+    ``[0, duration)`` with no gaps or overlaps — the property tests hold
+    this invariant for arbitrary generated traces.
+    """
+    ups: List[Phase] = []
+    dns: List[Phase] = []
+    ends = trace._ends()
+    for seg, end in zip(trace.segments, ends):
+        ups.append(
+            Phase(
+                seg.start,
+                end,
+                bandwidth_factor=trace.ref_up_mbps / seg.up_mbps,
+                outage=seg.outage,
+            )
+        )
+        dns.append(
+            Phase(
+                seg.start,
+                end,
+                bandwidth_factor=trace.ref_dn_mbps / seg.dn_mbps,
+                outage=seg.outage,
+            )
+        )
+    return FaultScenario(f"trace:{trace.name}", up=tuple(ups), dn=tuple(dns))
+
+
+def trace_bandwidth_fn(trace: NetworkTrace) -> Callable[[float], Tuple[float, float]]:
+    """Adapt a trace for the sim engine's ``ChannelModel.bandwidth_trace``.
+
+    Returns ``t -> (up_mbps, dn_mbps)``; after the trace ends the last
+    segment holds.  Outage segments report 1% of the recorded bandwidth
+    (the sim engine has no failover path, so a hard zero would stall it —
+    the serving runtime models true outages via :func:`compile_trace`).
+    """
+
+    def bw(t: float) -> Tuple[float, float]:
+        seg = trace.segment_at(t)
+        scale = 0.01 if seg.outage else 1.0
+        return seg.up_mbps * scale, seg.dn_mbps * scale
+
+    return bw
+
+
+# --------------------------------------------------------------------------- #
+# Bundled traces: one per access technology, sized to the conformance
+# timebase.  These join the conformance TRACE_MATRIX — committed streams
+# under trace replay must be bit-identical to the fault-free oracle run.
+# --------------------------------------------------------------------------- #
+
+BUNDLED_TRACES: Tuple[NetworkTrace, ...] = (
+    synthesize_trace("4g", seed=4, name="4g_drive"),
+    synthesize_trace("5g", seed=5, name="5g_urban"),
+    synthesize_trace("wifi", seed=6, name="wifi_cafe"),
+)
+
+TRACE_MATRIX: Tuple[FaultScenario, ...] = tuple(compile_trace(t) for t in BUNDLED_TRACES)
+
+
+def trace_by_name(name: str) -> NetworkTrace:
+    """Look up a :data:`BUNDLED_TRACES` entry by its name."""
+    for t in BUNDLED_TRACES:
+        if t.name == name:
+            return t
+    raise KeyError(f"unknown trace {name!r}; have {[t.name for t in BUNDLED_TRACES]}")

@@ -18,8 +18,10 @@ import pytest
 
 from repro.models.paged_kv import PagedKVPool
 from repro.runtime import (
+    BUNDLED_TRACES,
     FAULT_MATRIX,
     ROUTER_FAULT_MATRIX,
+    TRACE_MATRIX,
     Channel,
     ChannelConfig,
     CloudVerifier,
@@ -625,6 +627,45 @@ def test_router_restart_midstream_is_bit_identical():
 
 
 # --------------------------------------------------------------------------- #
+# Trace-driven scenarios: the bundled network traces join the conformance
+# matrix — a compiled 4G/5G/WiFi timeline is just another FaultScenario, so
+# the same lossless-stream and bit-reproducibility contracts apply.
+# --------------------------------------------------------------------------- #
+
+TRACE_IDS = [s.name for s in TRACE_MATRIX]
+
+
+@pytest.mark.parametrize("scenario", TRACE_MATRIX, ids=TRACE_IDS)
+def test_trace_stream_bit_identical_to_fault_free(scenario, fault_free):
+    """Every bundled trace recovers: same committed tokens as no faults."""
+    ref_stream, _ = fault_free
+    stream, report = run_scenario(scenario)
+    n = min(len(stream), len(ref_stream))
+    assert n >= N_TOKENS
+    assert stream[:n] == ref_stream[:n]
+    # A trace with an outage window must actually have knocked the link out
+    # (failover + offline progress), or conformance proved nothing.
+    if scenario.outage_windows("up") or scenario.outage_windows("dn"):
+        st = report["stats"]
+        assert st["failovers"] >= 1
+        assert st["fallback_tokens"] > 0
+
+
+@pytest.mark.parametrize("scenario", TRACE_MATRIX, ids=TRACE_IDS)
+def test_trace_seeded_replays_are_byte_identical(scenario):
+    """Same seed -> identical stream, stats, fault draws, and virtual time."""
+    a = run_scenario(scenario, seed=3)
+    b = run_scenario(scenario, seed=3)
+    assert a == b
+
+
+def test_every_bundled_trace_is_in_the_matrix():
+    """TRACE_MATRIX covers the bundled trace set one-to-one."""
+    assert TRACE_IDS == [f"trace:{t.name}" for t in BUNDLED_TRACES]
+    assert len(set(TRACE_IDS)) == len(TRACE_IDS) == len(BUNDLED_TRACES) >= 3
+
+
+# --------------------------------------------------------------------------- #
 # The no-wall-clock guard: every runtime hot path runs on the injected clock
 # --------------------------------------------------------------------------- #
 
@@ -648,6 +689,6 @@ def test_runtime_has_no_wall_clock_reads():
         hits = banned.findall(path.read_text())
         if hits:
             offenders[path.name] = hits
-    # The control-plane modules must be inside the guard's net.
-    assert {"router.py", "placement.py", "scaling.py"} <= scanned
+    # The control-plane and trace modules must be inside the guard's net.
+    assert {"router.py", "placement.py", "scaling.py", "traces.py"} <= scanned
     assert not offenders, f"wall-clock/thread primitives on runtime hot paths: {offenders}"

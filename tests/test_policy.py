@@ -1,0 +1,155 @@
+"""Adaptive per-session policy controller: drift retunes, hysteresis, outages.
+
+The contracts (core/policy.py + its EdgeClient integration):
+
+* a step-change in the link β drifts the monitor estimate past the δ-trigger
+  and the controller retunes (R1, R2, width, depth) via BO within a bounded
+  number of rounds — and the retune actually moves the knobs;
+* the chain↔tree mode rule is hysteretic: acceptance must cross distinct
+  thresholds to flip, so a stream hovering between them never flaps;
+* while the link is out the controller serves local-only rounds, probing the
+  cloud every k-th round so recovery is automatic — end-to-end this shows up
+  as ``failovers``/``fallback_tokens`` on a trace-driven fleet that still
+  commits every session's full stream;
+* everything is deterministic from (seed, observation sequence).
+"""
+
+import pytest
+
+from repro.core.policy import AdaptivePolicyController, PolicyConfig, PolicyDecision
+
+LINK = dict(alpha=0.02, beta=0.002)
+
+
+def _feed_steady(c, rounds=12, beta=0.002, tpt=0.05, acc=7):
+    for _ in range(rounds):
+        c.observe_link(16, LINK["alpha"] + beta * 16)
+        c.observe_gamma(0.02)
+        c.observe_round(8, acc, tpt=tpt)
+
+
+def test_decision_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        PolicyDecision(mode="warp")
+
+
+def test_beta_step_change_retunes_within_bounded_rounds():
+    """Link drift (5x β) must move the tuned (R1, R2, width, depth)."""
+    cfg = PolicyConfig(min_rounds_between_retunes=1, retune_trials=4, retune_tokens=20)
+    c = AdaptivePolicyController(base=PolicyDecision(mode="tree"), cfg=cfg, seed=3)
+    _feed_steady(c)
+    baseline = c.retune()
+    retunes0 = c.retunes
+    rounds = 0
+    for _ in range(c.monitor.window + 3):  # bounded: one monitor window + slack
+        rounds += 1
+        c.observe_link(16, LINK["alpha"] + 5 * 0.002 * 16)
+        c.observe_round(8, 7, tpt=0.09)
+        if c.retunes > retunes0:
+            break
+    assert c.retunes > retunes0, "β step never triggered a retune"
+    assert rounds <= c.monitor.window + 3
+    assert c.tuned is not None and c.tuned != baseline
+    r1, r2, w, d = c.tuned
+    assert 0.0 <= r1 <= 1.0 and 0.0 <= r2 <= 1.0
+    assert 1 <= w <= 4 and 2 <= d <= 10
+
+
+def test_retunes_are_rate_limited_by_cooldown():
+    cfg = PolicyConfig(min_rounds_between_retunes=10**6, retune_trials=2, retune_tokens=10)
+    c = AdaptivePolicyController(cfg=cfg, seed=1)
+    _feed_steady(c)
+    c.retune()
+    n = c.retunes
+    for beta in (0.01, 0.05, 0.1):  # ever-wilder drift, all inside the cooldown
+        for _ in range(6):
+            c.observe_link(16, LINK["alpha"] + beta * 16)
+            c.observe_round(8, 7, tpt=0.2)
+    assert c.retunes == n
+
+
+def test_mode_hysteresis_chain_tree_chain():
+    c = AdaptivePolicyController(cfg=PolicyConfig(monitor_window=10**6))
+    for _ in range(6):
+        c.observe_round(8, 8)
+    assert c.decide().mode == "chain"
+    for _ in range(8):  # acceptance collapses below tree_below
+        c.observe_round(8, 2)
+    assert c.decide().mode == "tree"
+    mid = c.decide().mode  # still between the thresholds: no flap back
+    assert mid == "tree"
+    for _ in range(12):  # recovers above chain_above
+        c.observe_round(8, 8)
+    assert c.decide().mode == "chain"
+    assert c.mode_switches == 2
+
+
+def test_offline_probe_cycle_and_recovery():
+    c = AdaptivePolicyController(cfg=PolicyConfig(probe_every=3))
+    c.observe_round(8, 8)
+    c.observe_round(8, 0, failover=True)
+    assert c.offline
+    assert [c.decide().mode for _ in range(6)] == [
+        "local", "local", "chain", "local", "local", "chain"
+    ]
+    c.observe_round(8, 7)  # a verified round ends the offline spell
+    assert not c.offline
+    assert c.decide().mode == "chain"
+
+
+def test_controller_is_deterministic():
+    def build():
+        cfg = PolicyConfig(min_rounds_between_retunes=1, retune_trials=3, retune_tokens=15)
+        c = AdaptivePolicyController(base=PolicyDecision(mode="tree"), cfg=cfg, seed=9, session=2)
+        _feed_steady(c)
+        c.retune()
+        for _ in range(8):
+            c.observe_link(16, LINK["alpha"] + 0.012 * 16)
+            c.observe_round(8, 5, tpt=0.11)
+            c.decide()
+        return c
+
+    a, b = build(), build()
+    assert a.tuned == b.tuned
+    assert a.decisions == b.decisions
+    assert a.retunes == b.retunes
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end: adaptive fleet on a trace with an outage window
+# --------------------------------------------------------------------------- #
+
+
+def _trace_fleet(seed=5):
+    from benchmarks.fleet_bench import HETERO_PROFILES, run_fleet
+    from repro.runtime.simclock import VirtualClock
+    from repro.runtime.traces import TRACE_MATRIX
+
+    fs = next(s for s in TRACE_MATRIX if s.name == "trace:4g_drive")
+    return run_fleet(
+        mode="batched", variant="chain", policy="adaptive",
+        profiles=HETERO_PROFILES, n_sessions=4, tokens_per_session=40,
+        scen=1, seed=seed, ts=1.0, clock=VirtualClock(), faults=fs,
+        nav_timeout=1.0, backoff_init=0.1, local_gamma=8.0,
+    )
+
+
+def test_policy_fleet_falls_back_during_trace_outage_and_recovers():
+    rep = _trace_fleet()
+    st = rep["stats"]
+    assert st.failovers >= 1, "the 4G outage window never knocked a session out"
+    assert st.fallback_tokens > 0, "no local-only progress during the outage"
+    # Recovery: every session still commits its full stream after the outage.
+    assert all(len(s) >= 40 for s in rep["streams"].values())
+    assert rep["policy_retunes"] >= 1
+    # Heterogeneity is threaded through to the stats.
+    assert st.gamma_spread > 1.0 and st.beta_spread > 1.0
+
+
+def test_policy_fleet_is_bit_reproducible():
+    a, b = _trace_fleet(), _trace_fleet()
+    assert a["streams"] == b["streams"]
+    assert a["stats"].fallback_tokens == b["stats"].fallback_tokens
+    assert a["stats"].edge_energy == b["stats"].edge_energy
+    assert a["policy_retunes"] == b["policy_retunes"]
+    assert a["policy_mode_switches"] == b["policy_mode_switches"]

@@ -1,0 +1,154 @@
+"""Network-trace source: synthesis, compilation, and replay determinism.
+
+A :class:`~repro.runtime.traces.NetworkTrace` is a bandwidth/outage timeline;
+``compile_trace`` lowers it to a declarative ``FaultScenario`` replayed on
+the virtual clock.  The contracts:
+
+* compiled phases tile the trace duration **exactly** — first phase starts
+  at 0, consecutive phases abut (no gaps, no overlaps), last phase ends at
+  the trace duration, on both directions;
+* β multipliers round-trip: each phase's ``bandwidth_factor`` is exactly
+  ``ref_mbps / segment_mbps`` for the segment it covers, so the segment
+  bandwidth is recoverable from the compiled scenario;
+* synthesis is a pure function of (kind, seed): same seed → identical
+  trace and identical compilation; different seeds diverge.
+
+Property tests skip (not fail) without hypothesis — see tests/conftest.py.
+"""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.traces import (
+    BUNDLED_TRACES,
+    TRACE_KINDS,
+    NetworkTrace,
+    TraceSegment,
+    compile_trace,
+    synthesize_trace,
+    trace_bandwidth_fn,
+    trace_by_name,
+)
+
+KINDS = sorted(TRACE_KINDS)
+
+kind_st = st.sampled_from(KINDS)
+seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+step_st = st.floats(min_value=0.25, max_value=3.0, allow_nan=False, width=32)
+duration_st = st.floats(min_value=1.0, max_value=30.0, allow_nan=False, width=32)
+
+
+# --------------------------------------------------------------------------- #
+# Unit tests
+# --------------------------------------------------------------------------- #
+
+
+def test_trace_validation_rejects_malformed_timelines():
+    seg = TraceSegment(start=0.0, up_mbps=10.0, dn_mbps=100.0)
+    with pytest.raises(ValueError):
+        NetworkTrace("x", "4g", 10.0, segments=())  # empty
+    with pytest.raises(ValueError):
+        NetworkTrace("x", "4g", 10.0, segments=(dataclasses.replace(seg, start=1.0),))
+    with pytest.raises(ValueError):
+        NetworkTrace(
+            "x", "4g", 10.0,
+            segments=(seg, dataclasses.replace(seg, start=5.0), dataclasses.replace(seg, start=5.0)),
+        )  # non-increasing starts
+    with pytest.raises(ValueError):
+        NetworkTrace("x", "4g", 10.0, segments=(dataclasses.replace(seg, up_mbps=0.0),))
+
+
+def test_segment_lookup_and_outage_windows():
+    t = trace_by_name("4g_drive")
+    assert t.segment_at(0.0) is t.segments[0]
+    assert t.segment_at(t.duration + 99.0) is t.segments[-1]
+    for lo, hi in t.outage_windows():
+        assert 0.0 <= lo < hi <= t.duration
+        assert t.segment_at((lo + hi) / 2).outage
+
+
+def test_bundled_traces_cover_all_kinds():
+    assert sorted({t.kind for t in BUNDLED_TRACES}) == KINDS
+    # The 4G and WiFi traces carry an outage; the 5G trace does not.
+    by_kind = {t.kind: t for t in BUNDLED_TRACES}
+    assert by_kind["4g"].outage_windows() and by_kind["wifi"].outage_windows()
+    assert not by_kind["5g"].outage_windows()
+
+
+def test_trace_by_name_unknown():
+    with pytest.raises(KeyError):
+        trace_by_name("nope")
+
+
+def test_bandwidth_fn_matches_segments_and_applies_outage_floor():
+    t = trace_by_name("wifi_cafe")
+    fn = trace_bandwidth_fn(t)
+    for seg in t.segments:
+        up, dn = fn(seg.start + 1e-6)
+        if seg.outage:
+            assert up == pytest.approx(seg.up_mbps * 0.01)
+            assert dn == pytest.approx(seg.dn_mbps * 0.01)
+        else:
+            assert (up, dn) == (seg.up_mbps, seg.dn_mbps)
+
+
+def test_compiled_scenario_carries_outage_and_name():
+    fs = compile_trace(trace_by_name("4g_drive"))
+    assert fs.name == "trace:4g_drive"
+    assert fs.outage_windows("up") and fs.outage_windows("dn")
+
+
+# --------------------------------------------------------------------------- #
+# Property tests
+# --------------------------------------------------------------------------- #
+
+
+@settings(deadline=None, max_examples=60)
+@given(kind=kind_st, seed=seed_st, step=step_st, duration=duration_st)
+def test_compiled_phases_tile_the_trace_exactly(kind, seed, step, duration):
+    """Phase boundaries cover [0, duration) with no gaps and no overlaps."""
+    trace = synthesize_trace(kind, seed, duration=duration, step=step)
+    fs = compile_trace(trace)
+    for direction in ("up", "dn"):
+        phases = fs.phases(direction)
+        assert phases, direction
+        assert phases[0].start == 0.0
+        assert phases[-1].end == trace.duration
+        for prev, nxt in zip(phases, phases[1:]):
+            assert prev.end == nxt.start  # abutting: no gap, no overlap
+            assert prev.start < prev.end
+
+
+@settings(deadline=None, max_examples=60)
+@given(kind=kind_st, seed=seed_st, step=step_st)
+def test_beta_multipliers_round_trip(kind, seed, step):
+    """bandwidth_factor == ref/seg exactly, so seg bandwidth is recoverable."""
+    trace = synthesize_trace(kind, seed, step=step)
+    fs = compile_trace(trace)
+    for direction, ref in (("up", trace.ref_up_mbps), ("dn", trace.ref_dn_mbps)):
+        for seg, phase in zip(trace.segments, fs.phases(direction)):
+            mbps = seg.up_mbps if direction == "up" else seg.dn_mbps
+            assert phase.bandwidth_factor == ref / mbps
+            assert ref / phase.bandwidth_factor == pytest.approx(mbps, rel=1e-12)
+            assert phase.outage == seg.outage
+
+
+@settings(deadline=None, max_examples=40)
+@given(kind=kind_st, seed=seed_st, step=step_st, duration=duration_st)
+def test_same_seed_compilations_are_identical(kind, seed, step, duration):
+    """Synthesis + compilation is a pure function of its arguments."""
+    a = synthesize_trace(kind, seed, duration=duration, step=step)
+    b = synthesize_trace(kind, seed, duration=duration, step=step)
+    assert a == b
+    assert compile_trace(a) == compile_trace(b)
+
+
+@settings(deadline=None, max_examples=20)
+@given(kind=kind_st, seed=st.integers(min_value=0, max_value=2**20))
+def test_different_seeds_diverge(kind, seed):
+    a = synthesize_trace(kind, seed)
+    b = synthesize_trace(kind, seed + 1)
+    assert a.segments != b.segments

@@ -35,6 +35,7 @@ TIMING_RTOL = 0.05
 REGEN = {
     "fleet": ("benchmarks.fleet_bench", "router"),
     "kernels": ("benchmarks.kernel_bench", "kernels"),
+    "scenarios": ("benchmarks.scenario_bench", "scenarios"),
 }
 
 

@@ -646,7 +646,9 @@ def codec_bench(n_iters: int = 50_000) -> Tuple[list, List[str]]:
             decode(encode(msg))
         dt = time.perf_counter() - t0
         ns_per_msg = dt / n_iters * 1e9
-        row = dict(message=name, ns_per_msg=ns_per_msg, frame_bytes=len(frame))
+        # ``host_`` prefix: wall-time measurement, host-noisy by nature —
+        # bench_diff treats it as informational (skipped in comparisons).
+        row = dict(message=name, host_ns_per_msg=ns_per_msg, frame_bytes=len(frame))
         rows.append(row)
         derived = f"ns_per_msg={ns_per_msg:.0f};frame_bytes={len(frame)};iters={n_iters}"
         lines.append(csv_row(f"fleet/codec/{name}", ns_per_msg * 1e-3, derived))
@@ -675,6 +677,7 @@ def run_router_fleet(
     n_sessions: int = 16,
     tokens_per_session: int = 60,
     seed: int = 0,
+    traced: bool = False,
 ) -> dict:
     """Serve an oracle fleet through the ``Router`` over ``n_verifiers``.
 
@@ -688,18 +691,36 @@ def run_router_fleet(
     from ``seed`` and throughput is exact simulated tokens/second.  Every
     committed stream is asserted against the oracle before reporting —
     a routed fleet that scales but mis-commits would fail here, not in CI.
+
+    ``traced=True`` attaches a ``repro.obs`` span tracer + metric registry
+    (on the SAME virtual clock) to every verifier, client, and the router.
+    Because tracing only *reads* the virtual clock, a traced run's committed
+    rows are bit-identical to the untraced run — the ``router/x1_traced``
+    row in ``BENCH_fleet.json`` is that overhead gate, committed.  The
+    report gains ``n_spans`` plus private ``_tracer``/``_metrics`` handles
+    (underscored: stripped before rows are written).
     """
     clock = VirtualClock()
+    tracer = metrics = None
+    if traced:
+        from repro.obs.metrics import MetricRegistry
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer(clock=clock)
+        metrics = MetricRegistry(clock=clock)
     oracle_ref = OracleStream(seed)
     fleet = []
     for vid in range(n_verifiers):
         backend = OracleBackend(
             seed=seed, verify_time=0.06, verify_time_per_token=0.002, clock=clock
         )
-        cv = CloudVerifier(backend, batch_window=0.0, max_batch=1, clock=clock)
+        cv = CloudVerifier(
+            backend, batch_window=0.0, max_batch=1, clock=clock,
+            tracer=tracer, metrics=metrics, verifier_id=vid,
+        )
         cv.start()
         fleet.append(LocalVerifier(vid, cv, clock=clock))
-    router = Router(fleet, clock=clock, control_interval=1.0)
+    router = Router(fleet, clock=clock, control_interval=1.0, tracer=tracer)
     link = ChannelConfig(alpha=0.005, beta=0.0005)
     clients: List[EdgeClient] = []
     channels: List[_MeteredChannel] = []
@@ -709,7 +730,9 @@ def run_router_fleet(
         channels.extend((up, dn))
         router.attach(sid, up, dn)
         cfg = EdgeConfig(gamma=0.004, window=8, nav_timeout=30.0)
-        clients.append(EdgeClient(sid, up, dn, cfg, draft=OracleDraft(seed=seed)))
+        clients.append(
+            EdgeClient(sid, up, dn, cfg, draft=OracleDraft(seed=seed), tracer=tracer)
+        )
     results: Dict[int, dict] = {}
     streams: Dict[int, List[int]] = {}
 
@@ -746,7 +769,7 @@ def run_router_fleet(
     lats = sorted(lat for r in results.values() for lat in r["nav_latencies"])
     p50 = lats[len(lats) // 2] if lats else float("nan")
     p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))] if lats else float("nan")
-    return dict(
+    rep = dict(
         n_verifiers=n_verifiers,
         n_sessions=n_sessions,
         tokens_per_s=accepted / wall,
@@ -760,6 +783,11 @@ def run_router_fleet(
         wall_s=wall,
         router_stats=dict(router.stats),
     )
+    if traced:
+        rep["n_spans"] = len(tracer)
+        rep["_tracer"] = tracer
+        rep["_metrics"] = metrics
+    return rep
 
 
 def router_bench(verifier_counts: Tuple[int, ...] = (1, 2, 4)) -> Dict[int, dict]:
@@ -823,6 +851,65 @@ def router(verifier_counts: Tuple[int, ...] = (1, 2, 4)) -> Tuple[list, List[str
             f"failovers={rep['failovers']}"
         )
         lines.append(csv_row(f"fleet/router/x{n}", 1e6 / rep["tokens_per_s"], derived))
+    return rows, lines
+
+
+def export_fleet_trace(seed: int = 0) -> str:
+    """Chrome-trace JSON of a seeded, traced router fleet run.
+
+    The export is a pure function of ``seed``: spans are stamped off the
+    run's ``VirtualClock`` and serialized with sorted keys, so two calls
+    with the same seed return byte-identical JSON on any host — the CI
+    obs-smoke job diffs exactly that.
+    """
+    rep = run_router_fleet(2, n_sessions=8, tokens_per_session=30, seed=seed, traced=True)
+    return rep["_tracer"].export_chrome_trace()
+
+
+def fleet_committed() -> Tuple[list, List[str]]:
+    """Harness entry (benchmarks.run): every row family of BENCH_fleet.json.
+
+    Four families, all deterministic except where marked:
+
+    * ``router/*`` — the scaling sweep (``router()`` rows, unchanged);
+    * ``router/x1_traced`` — the tracing overhead gate: the SAME x1 run
+      with the full obs stack attached.  Tracing only reads the virtual
+      clock, so ``tokens_per_s`` must equal the untraced x1 row exactly
+      (``overhead_pct == 0.0`` committed — far inside the <2% budget);
+    * ``chaos/*`` — per-fault-scenario recovery/fallback counters
+      (recovery latency, lost drafts, failovers: the chaos contract);
+    * ``codec/*`` — frame sizes (exact) + ``host_ns_per_msg`` (wall-time,
+      informational: bench_diff skips ``host_``-prefixed fields).
+    """
+    rows, lines = router()
+    untraced = next(r["tokens_per_s"] for r in rows if r["n_verifiers"] == 1)
+    rep = run_router_fleet(1, traced=True)
+    overhead_pct = (untraced - rep["tokens_per_s"]) / untraced * 100.0
+    rows.append(
+        dict(
+            name="router/x1_traced",
+            tokens_per_s=rep["tokens_per_s"],
+            tokens_per_nav=rep["tokens_per_nav"],
+            nav_p50_ms=rep["nav_p50_ms"],
+            nav_p99_ms=rep["nav_p99_ms"],
+            n_spans=rep["n_spans"],
+            overhead_pct=overhead_pct,
+        )
+    )
+    lines.append(
+        csv_row(
+            "fleet/router/x1_traced",
+            1e6 / rep["tokens_per_s"],
+            f"tokens_per_s={rep['tokens_per_s']:.1f};n_spans={rep['n_spans']};"
+            f"overhead_pct={overhead_pct:.3f}",
+        )
+    )
+    chaos_rows, chaos_lines = chaos()
+    rows.extend(chaos_rows)
+    lines.extend(chaos_lines)
+    codec_rows, codec_lines = codec_bench()
+    rows.extend(codec_rows)
+    lines.extend(codec_lines)
     return rows, lines
 
 
@@ -902,6 +989,20 @@ def main() -> None:
         for line in _router_lines(router_bench()):
             print(line)
         return
+    if len(sys.argv) > 1 and sys.argv[1] == "trace":
+        # Seeded Chrome-trace export (virtual clock): byte-identical across
+        # runs/hosts for a given seed — the CI obs-smoke job diffs two of
+        # these.  Usage: fleet_bench.py trace OUT.json [seed]
+        if len(sys.argv) < 3:
+            sys.exit("usage: fleet_bench.py trace OUT.json [seed]")
+        try:
+            seed = int(sys.argv[3]) if len(sys.argv) > 3 else 0
+        except ValueError:
+            sys.exit(f"usage: fleet_bench.py trace OUT.json [seed]  (got {sys.argv[3]!r})")
+        blob = export_fleet_trace(seed=seed)
+        Path(sys.argv[2]).write_text(blob)
+        print(f"TRACE {sys.argv[2]} {len(blob)} bytes seed={seed}")
+        return
     if len(sys.argv) > 1 and sys.argv[1] == "chaos":
         # Deterministic chaos report (virtual clock): every printed value is
         # a pure function of the seed, so CI diffs two runs byte-for-byte.
@@ -958,9 +1059,10 @@ def main() -> None:
     codec_rows, _ = codec_bench(n_iters=20_000)
     print("=== wire-codec overhead (encode+decode round trip) ===")
     for row in codec_rows:
-        per_tok_ns = row["ns_per_msg"] / 16 if row["message"] == "draft16" else row["ns_per_msg"]
+        ns = row["host_ns_per_msg"]
+        per_tok_ns = ns / 16 if row["message"] == "draft16" else ns
         print(
-            f"  {row['message']:<12} {row['ns_per_msg']:>8.0f} ns/msg"
+            f"  {row['message']:<12} {ns:>8.0f} ns/msg"
             f" {row['frame_bytes']:>4d} B/frame"
             f"  ({per_tok_ns/2e6*100:.4f}% of the 2ms/token link budget)"
         )

@@ -15,7 +15,7 @@ import time
 
 def main() -> None:
     from .common import write_bench_json
-    from .fleet_bench import chaos, fleet, router
+    from .fleet_bench import chaos, fleet, fleet_committed, router
     from .kernel_bench import kernels
     from .roofline_bench import roofline
     from .scenario_bench import scenarios
@@ -26,14 +26,17 @@ def main() -> None:
         "fleet": fleet,
         "chaos": chaos,
         "router": router,
+        "fleet_committed": fleet_committed,
         "kernels": kernels,
         "scenarios": scenarios,
     }
     # Deterministic benches whose rows are committed as BENCH_<area>.json
-    # (the router sweep runs on a virtual clock; the kernel rows are pool
-    # accounting + a roofline traffic model: same rows on every host; the
-    # scenario sweep is virtual-clock + BLAS-free BO: same rows everywhere).
-    committed = {"router": "fleet", "kernels": "kernels", "scenarios": "scenarios"}
+    # (the fleet rows run on a virtual clock — router sweep + traced
+    # overhead gate + chaos matrix + codec frame sizes; the kernel rows are
+    # pool accounting + a roofline traffic model: same rows on every host;
+    # the scenario sweep is virtual-clock + BLAS-free BO: same rows
+    # everywhere).  ``host_``-prefixed fields are informational wall time.
+    committed = {"fleet_committed": "fleet", "kernels": "kernels", "scenarios": "scenarios"}
     wanted = sys.argv[1:] or list(ALL_TABLES) + list(extras)
     print("name,us_per_call,derived")
     t_start = time.time()

@@ -170,13 +170,13 @@ def _energy_rows(reports: Dict[str, dict]) -> Tuple[list, List[str]]:
             vanilla_ecs_total_j=van.energy_per_100_tokens,
             pipesd_ecs_total_j=pip.energy_per_100_tokens,
             pipesd_ecs_edge_j=pip.ecs_edge,
-            pipesd_ecs_cloud_j=pip.ecs,
+            pipesd_ecs_cloud_j=pip.ecs_cloud,
         )
         rows.append(row)
         derived = (
             f"reduction={rep['energy_reduction_pct']:.1f}%;speedup={rep['speedup']:.2f};"
             f"ecs_total={pip.energy_per_100_tokens:.1f}J;ecs_edge={pip.ecs_edge:.1f}J;"
-            f"ecs_cloud={pip.ecs:.1f}J"
+            f"ecs_cloud={pip.ecs_cloud:.1f}J"
         )
         lines.append(csv_row(f"scenarios/energy/{label}", 0.0, derived))
     return rows, lines

@@ -49,7 +49,7 @@ def table2_ecs() -> Tuple[list, List[str]]:
         ecs = {}
         for m in METHODS:
             _, st, _ = run_method(m, ds, 1, n_tokens=1000, autotune=False)
-            ecs[m] = st.ecs
+            ecs[m] = st.ecs_cloud
         red = {f"P_e{i+1}": 100 * (1 - ecs["pipesd"] / ecs[b]) for i, b in enumerate(("vanilla", "hsl", "edgellm"))}
         rows.append(dict(dataset=ds, **{m: round(ecs[m], 1) for m in METHODS}, **{k: round(v, 1) for k, v in red.items()}))
         lines.append(csv_row(

@@ -39,6 +39,16 @@ remote verifier processes (repeatable ``--verifier HOST:PORT``)::
 seconds — the committed stream must stay oracle-exact through every
 hand-off (this is the CI router-smoke job).
 
+``--metrics-port N`` (cloud or router role) starts the live telemetry
+endpoint next to the listener — Prometheus text at ``/metrics``, JSON at
+``/snapshot`` — announced as ``METRICS host:port`` (0 = ephemeral).  The
+terminal fleet dashboard polls it::
+
+    PYTHONPATH=src python launch/serve.py --router 127.0.0.1:7421 \\
+        --verifiers 2 --metrics-port 9100
+    PYTHONPATH=src python launch/serve.py --dashboard 127.0.0.1:9100
+    python -m repro.obs.dashboard 127.0.0.1:9100        # equivalent
+
 ``--backend spec --shards N`` swaps in the real fused NAV verifier with
 its target forward sharded across an N-device mesh
 (``ShardedSpecVerifyBackend``): paged KV pages partitioned on the head
@@ -87,6 +97,21 @@ def _host_port(spec: str) -> Tuple[str, int]:
     return host, int(port)
 
 
+def _start_metrics_endpoint(args, source):
+    """Start a ``TelemetryEndpoint`` when ``--metrics-port`` asks for one.
+
+    Announced as ``METRICS host:port`` right after the listener's own
+    ``LISTENING`` line so harnesses can scrape the ephemeral port.
+    """
+    if args.metrics_port is None:
+        return None
+    from repro.obs.endpoint import TelemetryEndpoint
+
+    ep = TelemetryEndpoint(source, host="127.0.0.1", port=args.metrics_port)
+    print(f"METRICS {ep.host}:{ep.port}", flush=True)
+    return ep
+
+
 def run_server(args) -> int:
     """Cloud role: listen, attach socket sessions, serve until they finish."""
     host, port = args.listen
@@ -100,6 +125,7 @@ def run_server(args) -> int:
     verifier.start()
     # Port 0 binds ephemerally; announce the real port for the client side.
     print(f"LISTENING {listener.host}:{listener.port}", flush=True)
+    endpoint = _start_metrics_endpoint(args, verifier.telemetry_snapshot)
     try:
         while True:
             SYSTEM_CLOCK.sleep(0.1)
@@ -109,6 +135,8 @@ def run_server(args) -> int:
     except KeyboardInterrupt:
         pass
     finally:
+        if endpoint is not None:
+            endpoint.close()
         listener.close()
         verifier.stop()
     s = verifier.stats
@@ -193,6 +221,7 @@ def run_router(args) -> int:
     )
     router.start()
     print(f"LISTENING {listener.host}:{listener.port}", flush=True)
+    endpoint = _start_metrics_endpoint(args, router.telemetry)
     try:
         while True:
             SYSTEM_CLOCK.sleep(0.1)
@@ -202,6 +231,8 @@ def run_router(args) -> int:
     except KeyboardInterrupt:
         pass
     finally:
+        if endpoint is not None:
+            endpoint.close()
         listener.close()
         router.stop()
         for vc in fleet:
@@ -278,6 +309,10 @@ def main(argv=None) -> int:
     role.add_argument(
         "--print-oracle", type=int, metavar="N", help="print the first N oracle tokens and exit"
     )
+    role.add_argument(
+        "--dashboard", type=_host_port, metavar="HOST:PORT",
+        help="render the live fleet dashboard from a --metrics-port endpoint",
+    )
     p.add_argument("--seed", type=int, default=7, help="oracle/synthetic seed (must match across roles)")
     p.add_argument("--backend", choices=("oracle", "synthetic", "spec"), default="oracle")
     p.add_argument(
@@ -308,6 +343,19 @@ def main(argv=None) -> int:
         "--migrate-every", type=float, default=None, metavar="S",
         help="router: force a round-robin migration sweep every S seconds",
     )
+    p.add_argument(
+        "--metrics-port", type=int, default=None, metavar="N",
+        help="server/router: HTTP telemetry endpoint port (0 = ephemeral, "
+        "announced as 'METRICS host:port'); serves /metrics and /snapshot",
+    )
+    p.add_argument(
+        "--once", action="store_true",
+        help="dashboard: draw one frame and exit (no ANSI clear)",
+    )
+    p.add_argument(
+        "--interval", type=float, default=1.0, metavar="S",
+        help="dashboard: poll period [s]",
+    )
     p.add_argument("--gamma", type=float, default=0.005, help="edge per-token draft time [s]")
     p.add_argument("--nav-timeout", type=float, default=5.0, help="edge NAV timeout before failover [s]")
     p.add_argument("--batch-window", type=float, default=0.002, help="server NAV coalescing window [s]")
@@ -326,6 +374,14 @@ def main(argv=None) -> int:
         for tok in OracleStream(args.seed).prefix(args.print_oracle):
             print(tok)
         return 0
+    if args.dashboard:
+        from repro.obs.dashboard import run_dashboard
+
+        host, port = args.dashboard
+        drawn = run_dashboard(
+            host, port, interval=args.interval, frames=1 if args.once else None
+        )
+        return 0 if drawn else 1
     if args.demo:
         return run_demo(args)
     if args.listen:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Tuple
+from typing import Any, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -61,6 +61,10 @@ class EnvironmentMonitor:
     delta2: float = 0.2  # γ relative-change threshold (DP re-run)
     delta3: float = 0.2  # α/β relative-change threshold (DP re-run)
     bootstrap_sizes: Tuple[int, ...] = (1, 2, 3, 4, 5, 6, 7, 8)
+    #: Optional ``repro.obs.metrics.MetricRegistry``: when attached, every
+    #: observation is mirrored live into typed metrics (the deque series and
+    #: their accessors keep working unchanged).
+    metrics: Optional[Any] = None
 
     _batch_sizes: Deque[int] = field(default_factory=deque, init=False)
     _batch_times: Deque[float] = field(default_factory=deque, init=False)
@@ -89,16 +93,24 @@ class EnvironmentMonitor:
         while len(self._batch_sizes) > self.window:
             self._batch_sizes.popleft()
             self._batch_times.popleft()
+        if self.metrics is not None:
+            self.metrics.histogram("monitor_comm_time_s", "Batch comm time").observe(
+                float(comm_time), batch=int(size)
+            )
 
     def observe_gamma(self, gamma: float) -> None:
         self._gammas.append(float(gamma))
         while len(self._gammas) > self.window:
             self._gammas.popleft()
+        if self.metrics is not None:
+            self.metrics.gauge("monitor_gamma_s", "Per-token draft time").set(float(gamma))
 
     def observe_tpt(self, tpt: float) -> None:
         self._tpts.append(float(tpt))
         while len(self._tpts) > self.window:
             self._tpts.popleft()
+        if self.metrics is not None:
+            self.metrics.gauge("monitor_tpt_s", "Per-token throughput time").set(float(tpt))
 
     def observe_verifier_batch(self, batch_size: int, queue_depth: int) -> None:
         """One continuous-batching dispatch: admitted size + depth at admission."""
@@ -107,6 +119,13 @@ class EnvironmentMonitor:
         while len(self._verifier_batches) > self.window:
             self._verifier_batches.popleft()
             self._verifier_depths.popleft()
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "monitor_verifier_batch", "Admitted NAV batch sizes"
+            ).observe(float(batch_size))
+            self.metrics.histogram(
+                "monitor_queue_depth", "Queue depth at admission"
+            ).observe(float(queue_depth))
 
     def observe_kv(self, resident_bytes: float, resident_sessions: int) -> None:
         """One KV-pool sample: distinct resident bytes + page-holding sessions."""
@@ -115,18 +134,35 @@ class EnvironmentMonitor:
         while len(self._kv_bytes) > self.window:
             self._kv_bytes.popleft()
             self._kv_sessions.popleft()
+        if self.metrics is not None:
+            self.metrics.gauge(
+                "monitor_kv_resident_bytes", "Distinct resident KV bytes"
+            ).set(float(resident_bytes))
+            self.metrics.gauge(
+                "monitor_kv_resident_sessions", "Page-holding sessions"
+            ).set(float(resident_sessions))
 
     def observe_failover(self, t: float) -> None:
         """One NAV-timeout failover at run-relative time ``t`` [s]."""
         self._failover_times.append(float(t))
         while len(self._failover_times) > self.window:
             self._failover_times.popleft()
+        if self.metrics is not None:
+            self.metrics.counter("monitor_failovers", "NAV-timeout failovers").inc()
 
     def observe_recovery(self, latency: float) -> None:
         """One offline-spell recovery: failover → next verified round [s]."""
         self._recovery_latencies.append(float(latency))
         while len(self._recovery_latencies) > self.window:
             self._recovery_latencies.popleft()
+        if self.metrics is not None:
+            from repro.obs.metrics import LATENCY_BUCKETS
+
+            self.metrics.histogram(
+                "monitor_recovery_latency_s",
+                "Offline-spell recovery latency",
+                LATENCY_BUCKETS,
+            ).observe(float(latency))
 
     # ----------------------------------------------------------- estimates --
     def missing_probe_sizes(self) -> List[int]:

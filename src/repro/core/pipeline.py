@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import math
 import time as _time
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -390,14 +391,31 @@ class RunStats:
         return self.edge_energy + self.cloud_energy
 
     @property
-    def ecs(self) -> float:
-        """Cloud energy per 100 accepted tokens [J].
+    def ecs_cloud(self) -> float:
+        """Cloud energy per 100 accepted tokens [J] (cloud-only ECS basis).
 
-        Deprecated alias: this is the historical *cloud-only* reading of
-        §5.1's ECS metric, kept for existing tables/tests.  The paper's
-        full edge+cloud ECS is :attr:`energy_per_100_tokens`.
+        The paper's full edge+cloud ECS is :attr:`energy_per_100_tokens`;
+        this is the cloud term alone, which the scenario tables break out.
         """
         return self.cloud_energy / max(self.accepted_tokens, 1) * 100.0
+
+    @property
+    def ecs(self) -> float:
+        """Deprecated alias for :attr:`ecs_cloud` (reads emit a warning).
+
+        Historically ``ecs`` named the *cloud-only* reading of §5.1's ECS
+        metric, which is easy to mistake for the paper's full edge+cloud
+        number; use :attr:`ecs_cloud` (same value, honest name) or
+        :attr:`energy_per_100_tokens`.
+        """
+        warnings.warn(
+            "RunStats.ecs is deprecated: it is the CLOUD-ONLY energy per 100 "
+            "tokens; use ecs_cloud (same value) or energy_per_100_tokens "
+            "(full edge+cloud ECS)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.ecs_cloud
 
     @property
     def ecs_edge(self) -> float:
@@ -505,7 +523,7 @@ class RunStats:
         p50, p99 = self.nav_latency_quantiles()
         return dict(
             tpt_ms=self.tpt * 1e3,
-            ecs_j=self.ecs,
+            ecs_j=self.ecs_cloud,
             ecs_edge_j=self.ecs_edge,
             ecs_total_j=self.energy_per_100_tokens,
             verification_frequency=self.verification_frequency,
@@ -534,6 +552,30 @@ class RunStats:
             lost_draft_tokens=self.lost_draft_tokens,
             recovery_latency_s=self.mean_recovery_latency,
         )
+
+    def to_metrics(self, registry, prefix: str = "run") -> None:
+        """Export the finished run into a ``repro.obs`` metric registry.
+
+        Scalar summary fields become gauges ``{prefix}_<name>``; the raw
+        NAV-latency and verifier-batch series are replayed into histograms
+        so the Prometheus exposition carries their distributions too.
+        """
+        for name, value in self.summary().items():
+            registry.gauge(f"{prefix}_{name}", f"RunStats.summary()['{name}']").set(
+                float(value)
+            )
+        from repro.obs.metrics import LATENCY_BUCKETS
+
+        nav = registry.histogram(
+            f"{prefix}_nav_latency_s", "Client NAV round-trip latency", LATENCY_BUCKETS
+        )
+        for lat in self.nav_latencies:
+            nav.observe(float(lat))
+        batch = registry.histogram(
+            f"{prefix}_verifier_batch", "Admitted NAV batch sizes"
+        )
+        for b in self.verifier_batches:
+            batch.observe(float(b))
 
 
 # --------------------------------------------------------------------------- #

@@ -146,6 +146,7 @@ class PagedKVPool:
         dtype=jnp.float32,
         quantize: Optional[str] = None,
         bytes_per_token: Optional[int] = None,
+        metrics=None,
     ):
         if num_blocks < 1 or block_size < 1:
             raise ValueError("num_blocks and block_size must be >= 1")
@@ -161,6 +162,10 @@ class PagedKVPool:
         self._clock = 0
         self._resident = 0  # sessions holding >=1 page, maintained incrementally
         self.stats = {"allocs": 0, "frees": 0, "cow_copies": 0, "evictions": 0}
+        # Optional repro.obs.metrics.MetricRegistry: op counts are mirrored
+        # into ``kv_<op>`` counters as they happen (stats stays the source
+        # of truth; the mirror feeds the telemetry endpoint).
+        self.metrics = metrics
         # Host seconds spent in metadata mutations (append/rollback/fork/
         # reserve/evict) — the pool's entire latency cost on the serving
         # path, so benchmarks can bound the TPT impact of paging.
@@ -261,19 +266,24 @@ class PagedKVPool:
             return False  # no partial tail page to write into
         return int(self.refcounts[t.blocks[-1]]) > 1
 
+    def _count(self, op: str) -> None:
+        self.stats[op] += 1
+        if self.metrics is not None:
+            self.metrics.counter(f"kv_{op}", "Paged-KV pool page operations").inc()
+
     def _alloc_page(self) -> int:
         if not self._free:
             raise BlockPoolExhausted(f"pool of {self.num_blocks} pages exhausted")
         page = self._free.popleft()
         self.refcounts[page] = 1
-        self.stats["allocs"] += 1
+        self._count("allocs")
         return page
 
     def _decref(self, page: int) -> None:
         self.refcounts[page] -= 1
         if self.refcounts[page] == 0:
             self._free.append(page)  # LRU: most recently freed goes last
-            self.stats["frees"] += 1
+            self._count("frees")
 
     def _touch(self, t: BlockTable) -> None:
         self._clock += 1
@@ -368,7 +378,7 @@ class PagedKVPool:
             old = t.blocks[-1]
             new = self._alloc_page()
             self._copy_page(old, new)
-            self.stats["cow_copies"] += 1
+            self._count("cow_copies")
             t.blocks[-1] = new
             self._decref(old)
         had_pages = bool(t.blocks)
@@ -440,7 +450,7 @@ class PagedKVPool:
         t.length = 0
         t.filled = 0  # every materialized tensor went back with the pages
         t.reserved = False
-        self.stats["evictions"] += 1
+        self._count("evictions")
         self.op_seconds += time.perf_counter() - t0
         return dropped
 
@@ -563,7 +573,7 @@ class PagedKVPool:
             if not t.reserved and int(self.refcounts[page]) > 1:
                 new = self._alloc_page()
                 self._copy_page(page, new)
-                self.stats["cow_copies"] += 1
+                self._count("cow_copies")
                 t.blocks[bi] = new
                 self._decref(page)
                 page = new

@@ -1,0 +1,33 @@
+"""Deterministic observability subsystem (ROADMAP item 5).
+
+Four layers, all driven by the injectable clock surface
+(:mod:`repro.runtime.simclock`) so every recorded timestamp is
+bit-reproducible under ``VirtualClock``:
+
+* :mod:`repro.obs.trace` — span-based tracing with ring-buffer storage,
+  Chrome trace-event JSON export (loadable in Perfetto) and a pure-Python
+  per-round critical-path/overlap analyzer;
+* :mod:`repro.obs.metrics` — a typed metric registry (Counter / Gauge /
+  Histogram) with labels and clock-stamped samples;
+* :mod:`repro.obs.endpoint` — ``TelemetryRequest``/``TelemetrySnapshot``
+  builders riding the typed wire protocol, plus Prometheus-text and JSON
+  HTTP exposition for the multi-process fleet;
+* :mod:`repro.obs.dashboard` — a stdlib-only live terminal dashboard
+  polling the endpoint.
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricRegistry
+from .trace import NULL_TRACER, NullTracer, Span, Tracer, round_report, session_bubble_fractions
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "round_report",
+    "session_bubble_fractions",
+]

@@ -1,0 +1,169 @@
+"""Fleet dashboard: poll ``/snapshot`` and render a live terminal table.
+
+Pure stdlib (``urllib`` + ANSI escapes), pointed at the
+:class:`~repro.obs.endpoint.TelemetryEndpoint` that ``launch/serve.py
+--metrics-port N`` starts next to a verifier or router::
+
+    python -m repro.obs.dashboard 127.0.0.1:9100
+    python -m repro.obs.dashboard 127.0.0.1:9100 --interval 0.5
+    python -m repro.obs.dashboard 127.0.0.1:9100 --once   # one frame, no ANSI
+
+Rendering (:func:`render_dashboard`) is a pure function of the polled JSON
+payload, so the layout is unit-tested without a server; only the poll loop
+touches the network, and it sleeps on an injectable clock.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import urllib.error
+import urllib.request
+from typing import Any, Dict, List, Optional, Sequence
+
+__all__ = ["fetch_snapshot", "render_dashboard", "run_dashboard", "main"]
+
+_CLEAR = "\x1b[2J\x1b[H"  # clear screen + home cursor
+
+#: (header, payload key, format) for the per-verifier table columns.
+_COLUMNS = (
+    ("vid", "verifier", "d"),
+    ("sess", "sessions_active", "d"),
+    ("queue", "queue_depth", "d"),
+    ("occ%", "occupancy", "pct"),
+    ("nav", "nav_calls", "d"),
+    ("tok/nav", None, "tok_per_nav"),
+    ("acc%", None, "acc_rate"),
+    ("kv_MB", None, "kv_mb"),
+    ("kv_sess", "kv_resident_sessions", "d"),
+    ("caphit", "kv_cap_hits", "d"),
+)
+
+
+def fetch_snapshot(host: str, port: int, timeout: float = 5.0) -> Dict[str, Any]:
+    """GET ``/snapshot`` from a telemetry endpoint and parse the JSON."""
+    url = f"http://{host}:{port}/snapshot"
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return json.loads(resp.read().decode())
+
+
+def _cell(row: Dict[str, Any], key: Optional[str], fmt: str) -> str:
+    if fmt == "d":
+        return str(int(row.get(key, 0)))
+    if fmt == "pct":
+        return f"{100.0 * float(row.get(key, 0.0)):.1f}"
+    if fmt == "tok_per_nav":
+        nav = int(row.get("nav_calls", 0))
+        if nav == 0:
+            return "-"
+        # Committed tokens per NAV: accepted drafts plus one correction each.
+        return f"{(int(row.get('accepted_tokens', 0)) + nav) / nav:.2f}"
+    if fmt == "acc_rate":
+        verified = int(row.get("tokens_verified", 0))
+        if verified == 0:
+            return "-"
+        return f"{100.0 * int(row.get('accepted_tokens', 0)) / verified:.1f}"
+    if fmt == "kv_mb":
+        return f"{int(row.get('kv_resident_bytes', 0)) / (1024 * 1024):.1f}"
+    return "?"
+
+
+def render_dashboard(payload: Dict[str, Any], ansi: bool = False) -> str:
+    """Render one dashboard frame from a ``/snapshot`` payload.
+
+    Header line (fleet aggregate + chaos counters), then one table row per
+    verifier.  ``ansi`` prepends the clear-screen escape for live mode.
+    """
+    agg = payload.get("aggregate", {})
+    verifiers: List[Dict[str, Any]] = payload.get("verifiers", [])
+    extras = agg.get("extras", {})
+    head = (
+        f"PipeSD fleet @ t={float(agg.get('t', 0.0)):.3f}s  "
+        f"verifiers={int(agg.get('n_verifiers', len(verifiers)))}  "
+        f"sessions={int(agg.get('sessions_active', 0))}  "
+        f"migrations={int(agg.get('migrations', 0))}  "
+        f"failovers={int(agg.get('failovers', 0))}"
+    )
+    chaos_keys = [
+        k
+        for k in sorted(extras)
+        if k.startswith("router_") or k in ("dropped_dead_sessions", "dropped_stragglers")
+    ]
+    chaos = "  ".join(f"{k}={int(extras[k])}" for k in chaos_keys if extras[k])
+
+    rows = [[h for h, _, _ in _COLUMNS]]
+    for v in sorted(verifiers, key=lambda r: int(r.get("verifier", 0))):
+        rows.append([_cell(v, key, fmt) for _, key, fmt in _COLUMNS])
+    if not verifiers and agg:
+        rows.append([_cell(agg, key, fmt) for _, key, fmt in _COLUMNS])
+    widths = [max(len(r[i]) for r in rows) for i in range(len(_COLUMNS))]
+    table = [
+        "  ".join(cell.rjust(w) for cell, w in zip(r, widths)) for r in rows
+    ]
+    table.insert(1, "-" * len(table[0]))
+
+    lines = [head]
+    if chaos:
+        lines.append(chaos)
+    lines.extend(table)
+    frame = "\n".join(lines) + "\n"
+    return (_CLEAR + frame) if ansi else frame
+
+
+def run_dashboard(
+    host: str,
+    port: int,
+    interval: float = 1.0,
+    frames: Optional[int] = None,
+    clock=None,
+    out=None,
+) -> int:
+    """Poll-and-render loop; returns the number of frames drawn.
+
+    ``frames=None`` runs until interrupted; ``frames=1`` is ``--once``.
+    The sleep between polls comes from the injected clock, so tests drive
+    the loop without wall-time waits.
+    """
+    if clock is None:
+        from ..runtime.simclock import SYSTEM_CLOCK as clock  # type: ignore[no-redef]
+    out = out or sys.stdout
+    drawn = 0
+    ansi = frames != 1
+    while frames is None or drawn < frames:
+        try:
+            payload = fetch_snapshot(host, port)
+        except (urllib.error.URLError, OSError) as e:
+            out.write(f"telemetry endpoint {host}:{port} unreachable: {e}\n")
+            out.flush()
+            return drawn
+        out.write(render_dashboard(payload, ansi=ansi))
+        out.flush()
+        drawn += 1
+        if frames is None or drawn < frames:
+            clock.sleep(interval)
+    return drawn
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry: ``python -m repro.obs.dashboard HOST:PORT [--interval S] [--once]``."""
+    import argparse
+
+    p = argparse.ArgumentParser(description="PipeSD fleet telemetry dashboard")
+    p.add_argument("target", help="telemetry endpoint as HOST:PORT")
+    p.add_argument("--interval", type=float, default=1.0, help="poll period [s]")
+    p.add_argument("--once", action="store_true", help="draw one frame and exit")
+    args = p.parse_args(argv)
+    host, _, port_s = args.target.rpartition(":")
+    if not host or not port_s.isdigit():
+        p.error(f"target must be HOST:PORT, got {args.target!r}")
+    try:
+        drawn = run_dashboard(
+            host, int(port_s), interval=args.interval, frames=1 if args.once else None
+        )
+    except KeyboardInterrupt:
+        return 0
+    return 0 if drawn else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,300 @@
+"""Live telemetry endpoint: protocol snapshots -> Prometheus text + JSON HTTP.
+
+Two consumption paths share the same :class:`~repro.runtime.protocol.TelemetrySnapshot`
+message:
+
+* **in-band** — an edge client (or the fleet dashboard's poller) sends a
+  ``TelemetryRequest`` up its existing link; ``CloudVerifier`` answers with
+  its own snapshot, the ``Router`` answers with the fleet-wide aggregate
+  (``verifier=-1``) built by :func:`aggregate_snapshots`;
+* **out-of-band** — :class:`TelemetryEndpoint` serves ``/metrics``
+  (Prometheus text exposition) and ``/snapshot`` (JSON) over plain HTTP for
+  scrapers and the terminal dashboard (``launch/serve.py --metrics-port``).
+
+The HTTP endpoint is wall-clock-only infrastructure, exactly like
+``SocketTransport``: it refuses a ``VirtualClock`` (deterministic runs
+interrogate the tracer/registry/snapshots directly instead of scraping).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from ..runtime.protocol import TelemetrySnapshot
+
+__all__ = [
+    "aggregate_snapshots",
+    "snapshot_to_dict",
+    "prometheus_text_from_snapshots",
+    "TelemetryEndpoint",
+    "SNAPSHOT_COUNTER_FIELDS",
+    "SNAPSHOT_GAUGE_FIELDS",
+]
+
+#: Snapshot fields summed by :func:`aggregate_snapshots` and rendered as
+#: Prometheus counters (monotone over a verifier's lifetime).
+SNAPSHOT_COUNTER_FIELDS: Tuple[str, ...] = (
+    "nav_calls",
+    "tokens_verified",
+    "accepted_tokens",
+    "batched_calls",
+    "kv_cap_hits",
+    "migrations",
+    "failovers",
+)
+
+#: Snapshot fields rendered as Prometheus gauges; summed in the aggregate
+#: except ``occupancy`` (fleet mean — a fraction, not a volume).
+SNAPSHOT_GAUGE_FIELDS: Tuple[str, ...] = (
+    "sessions_active",
+    "queue_depth",
+    "occupancy",
+    "verify_busy_time",
+    "kv_used_blocks",
+    "kv_free_blocks",
+    "kv_resident_bytes",
+    "kv_resident_sessions",
+)
+
+_INT_FIELDS = frozenset(
+    f
+    for f in SNAPSHOT_COUNTER_FIELDS + SNAPSHOT_GAUGE_FIELDS
+    if f not in ("occupancy", "verify_busy_time")
+)
+
+
+def aggregate_snapshots(
+    snaps: Sequence[TelemetrySnapshot],
+    seq: int = 0,
+    session: int = -1,
+    t: Optional[float] = None,
+    migrations: int = 0,
+    failovers: int = 0,
+    extras: Iterable[Tuple[str, float]] = (),
+) -> TelemetrySnapshot:
+    """Fold per-verifier snapshots into one fleet-wide ``verifier=-1`` snapshot.
+
+    Counter and volume fields are summed, ``occupancy`` is the fleet mean,
+    and ``t`` defaults to the newest member timestamp.  ``migrations`` /
+    ``failovers`` override the summed fields when the caller (the router)
+    owns those counters; ``extras`` lanes are summed across members by name,
+    then the caller's own ``extras`` pairs are appended (caller names win).
+    """
+    fields: Dict[str, float] = {
+        f: 0.0 for f in SNAPSHOT_COUNTER_FIELDS + SNAPSHOT_GAUGE_FIELDS
+    }
+    lane_sums: Dict[str, float] = {}
+    t_max = 0.0
+    for s in snaps:
+        for f in fields:
+            fields[f] += float(getattr(s, f))
+        for name, value in zip(s.names, s.values):
+            lane_sums[name] = lane_sums.get(name, 0.0) + value
+        t_max = max(t_max, s.t)
+    if snaps:
+        fields["occupancy"] /= len(snaps)
+    if migrations:
+        fields["migrations"] = float(migrations)
+    if failovers:
+        fields["failovers"] = float(failovers)
+    for name, value in extras:
+        lane_sums[name] = float(value)
+    lanes = sorted(lane_sums.items())
+    kwargs: Dict[str, Any] = {
+        f: int(v) if f in _INT_FIELDS else v for f, v in fields.items()
+    }
+    return TelemetrySnapshot(
+        session=session,
+        seq=seq,
+        verifier=-1,
+        n_verifiers=len(snaps),
+        t=t if t is not None else t_max,
+        names=tuple(n for n, _ in lanes),
+        values=tuple(v for _, v in lanes),
+        **kwargs,
+    )
+
+
+def snapshot_to_dict(snap: TelemetrySnapshot) -> Dict[str, Any]:
+    """JSON-friendly dict: dataclass fields with extras lanes folded in.
+
+    The parallel ``names``/``values`` tuples are replaced by an ``extras``
+    mapping so consumers (the dashboard, ``/snapshot`` pollers) never see
+    the wire layout.
+    """
+    d = asdict(snap)
+    d.pop("names")
+    d.pop("values")
+    d["extras"] = snap.extras()
+    return d
+
+
+def _fmt(v: float) -> str:
+    """Prometheus number formatting (integers without a trailing ``.0``)."""
+    f = float(v)
+    return str(int(f)) if f.is_integer() else repr(f)
+
+
+def prometheus_text_from_snapshots(
+    snaps: Sequence[TelemetrySnapshot],
+    aggregate: Optional[TelemetrySnapshot] = None,
+    prefix: str = "pipesd",
+) -> str:
+    """Render snapshots as Prometheus text, one series per verifier label.
+
+    Per-field output is grouped under ``{prefix}_{field}`` with a
+    ``verifier="<id>"`` label; the aggregate (when given) contributes the
+    ``verifier="-1"`` series plus ``{prefix}_n_verifiers``.  Extras lanes
+    render as ``{prefix}_extra_<name>``.  Output is sorted and
+    deterministic for fixed inputs.
+    """
+    rows: List[TelemetrySnapshot] = list(snaps)
+    if aggregate is not None:
+        rows.append(aggregate)
+    lines: List[str] = []
+    for field in SNAPSHOT_COUNTER_FIELDS + SNAPSHOT_GAUGE_FIELDS:
+        kind = "counter" if field in SNAPSHOT_COUNTER_FIELDS else "gauge"
+        name = f"{prefix}_{field}"
+        lines.append(f"# TYPE {name} {kind}")
+        for s in sorted(rows, key=lambda s: s.verifier):
+            lines.append(
+                f'{name}{{verifier="{s.verifier}"}} {_fmt(float(getattr(s, field)))}'
+            )
+    extra_series: Dict[str, List[Tuple[int, float]]] = {}
+    for s in rows:
+        for lane, value in zip(s.names, s.values):
+            extra_series.setdefault(lane, []).append((s.verifier, value))
+    for lane in sorted(extra_series):
+        name = f"{prefix}_extra_{lane}"
+        lines.append(f"# TYPE {name} gauge")
+        for vid, value in sorted(extra_series[lane]):
+            lines.append(f'{name}{{verifier="{vid}"}} {_fmt(value)}')
+    if aggregate is not None:
+        lines.append(f"# TYPE {prefix}_n_verifiers gauge")
+        lines.append(f"{prefix}_n_verifiers {aggregate.n_verifiers}")
+    return "\n".join(lines) + "\n" if lines else ""
+
+
+SnapshotSource = Callable[
+    [],
+    Union[
+        TelemetrySnapshot,
+        Sequence[TelemetrySnapshot],
+        Tuple[Sequence[TelemetrySnapshot], TelemetrySnapshot],
+    ],
+]
+
+
+class TelemetryEndpoint:
+    """Minimal stdlib HTTP server exposing ``/metrics`` and ``/snapshot``.
+
+    ``source`` is polled per request and may return one snapshot, a list of
+    per-verifier snapshots, or a ``(snapshots, aggregate)`` pair — pass
+    ``router.telemetry`` for a fleet, or a lambda over
+    ``CloudVerifier.telemetry_snapshot`` for a single verifier.  An optional
+    :class:`~repro.obs.metrics.MetricRegistry` contributes its exposition to
+    ``/metrics`` below the snapshot series.
+
+    Wall-clock only (scrapers live outside simulated time): constructing one
+    under a ``VirtualClock`` raises, mirroring ``SocketTransport``.
+    """
+
+    def __init__(
+        self,
+        source: SnapshotSource,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        registry: Any = None,
+        clock=None,
+    ):
+        if clock is None:
+            from ..runtime.simclock import SYSTEM_CLOCK as clock  # type: ignore[no-redef]
+        if getattr(clock, "virtual", False):
+            raise ValueError(
+                "TelemetryEndpoint runs on wall time; VirtualClock is not supported"
+            )
+        self.source = source
+        self.registry = registry
+        self.clock = clock
+        endpoint = self
+
+        class _Handler(BaseHTTPRequestHandler):
+            def do_GET(self) -> None:  # noqa: N802 (stdlib handler API)
+                try:
+                    if self.path.split("?", 1)[0] == "/metrics":
+                        body = endpoint.render_metrics().encode()
+                        ctype = "text/plain; version=0.0.4; charset=utf-8"
+                    elif self.path.split("?", 1)[0] == "/snapshot":
+                        body = endpoint.render_snapshot_json().encode()
+                        ctype = "application/json"
+                    else:
+                        self.send_error(404, "unknown path (try /metrics or /snapshot)")
+                        return
+                except Exception as e:  # pragma: no cover - surface, don't die
+                    self.send_error(500, str(e))
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, fmt: str, *args: Any) -> None:
+                """Silence per-request stderr logging."""
+
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread = clock.spawn(self._httpd.serve_forever, name="telemetry-http")
+
+    # ------------------------------------------------------------- renders --
+    def _resolve(self) -> Tuple[List[TelemetrySnapshot], Optional[TelemetrySnapshot]]:
+        out = self.source()
+        if isinstance(out, TelemetrySnapshot):
+            return [out], None
+        if (
+            isinstance(out, tuple)
+            and len(out) == 2
+            and isinstance(out[1], TelemetrySnapshot)
+        ):
+            return list(out[0]), out[1]
+        return list(out), None  # type: ignore[arg-type]
+
+    def render_metrics(self) -> str:
+        """The ``/metrics`` body: snapshot series + optional registry text."""
+        snaps, agg = self._resolve()
+        if agg is None and len(snaps) > 1:
+            agg = aggregate_snapshots(snaps)
+        text = prometheus_text_from_snapshots(snaps, agg)
+        if self.registry is not None:
+            text += self.registry.prometheus_text()
+        return text
+
+    def render_snapshot_json(self) -> str:
+        """The ``/snapshot`` body: aggregate + per-verifier snapshot dicts."""
+        snaps, agg = self._resolve()
+        if agg is None:
+            agg = aggregate_snapshots(snaps) if len(snaps) != 1 else snaps[0]
+        payload = {
+            "t": agg.t,
+            "aggregate": snapshot_to_dict(agg),
+            "verifiers": [snapshot_to_dict(s) for s in snaps],
+        }
+        return json.dumps(payload, sort_keys=True)
+
+    # ----------------------------------------------------------- lifecycle --
+    def close(self) -> None:
+        """Shut the HTTP server down and release the port."""
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "TelemetryEndpoint":
+        return self
+
+    def __exit__(self, *exc: Any) -> bool:
+        self.close()
+        return False

@@ -1,0 +1,287 @@
+"""Typed metric registry: Counter / Gauge / Histogram with labels + clock stamps.
+
+The registry supersedes the ad-hoc ``Deque`` series scattered through
+``EnvironmentMonitor`` and the list fields in ``RunStats`` with one typed
+surface (their public fields keep working — the monitor *mirrors* its
+observations into an attached registry, and ``RunStats.to_metrics`` exports
+a finished run).  Every sample is stamped with the registry's injected
+clock, so a run under ``VirtualClock`` produces bit-identical metric state
+across reruns.
+
+Prometheus exposition (:meth:`MetricRegistry.prometheus_text`) renders the
+standard text format — ``# HELP``/``# TYPE`` headers, ``{label="v"}``
+selectors, ``_bucket``/``_sum``/``_count`` histogram series — consumed by
+the ``launch/serve.py --metrics-port`` endpoint (:mod:`repro.obs.endpoint`).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "DEFAULT_BUCKETS",
+    "LATENCY_BUCKETS",
+]
+
+#: Generic magnitude buckets (counts, bytes-ish scales).
+DEFAULT_BUCKETS: Tuple[float, ...] = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0)
+
+#: Latency buckets [s] sized for NAV round trips (ms → tens of seconds).
+LATENCY_BUCKETS: Tuple[float, ...] = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+)
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, Any]) -> LabelKey:
+    """Canonical (sorted, stringified) label tuple used as the series key."""
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _render_labels(key: LabelKey) -> str:
+    """Prometheus ``{a="1",b="x"}`` selector ('' when unlabeled)."""
+    if not key:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    return "{" + inner + "}"
+
+
+def _fmt(v: float) -> str:
+    """Prometheus number formatting: integers without a trailing ``.0``."""
+    f = float(v)
+    return str(int(f)) if f.is_integer() else repr(f)
+
+
+class _Metric:
+    """Shared series bookkeeping: per-label values + clock-stamped samples."""
+
+    kind = "untyped"
+
+    def __init__(self, registry: "MetricRegistry", name: str, help: str):
+        self.registry = registry
+        self.name = name
+        self.help = help
+        self._series: Dict[LabelKey, float] = {}
+        self._samples: Dict[LabelKey, Deque[Tuple[float, float]]] = {}
+
+    def _record(self, key: LabelKey, value: float) -> None:
+        self._series[key] = value
+        dq = self._samples.get(key)
+        if dq is None:
+            dq = self._samples[key] = deque(maxlen=self.registry.sample_window)
+        dq.append((self.registry.clock.monotonic(), value))
+
+    def value(self, **labels: Any) -> float:
+        """Current value of the series selected by ``labels`` (0.0 if unseen)."""
+        return self._series.get(_label_key(labels), 0.0)
+
+    def samples(self, **labels: Any) -> List[Tuple[float, float]]:
+        """Clock-stamped (t, value) history for one series, oldest first."""
+        return list(self._samples.get(_label_key(labels), ()))
+
+    def series(self) -> Dict[LabelKey, float]:
+        """Every labeled series' current value, keyed by canonical label tuple."""
+        return dict(self._series)
+
+    def expose(self) -> List[str]:
+        """Prometheus text lines for this metric (sorted, deterministic)."""
+        lines = [f"# HELP {self.name} {self.help}", f"# TYPE {self.name} {self.kind}"]
+        for key in sorted(self._series):
+            lines.append(f"{self.name}{_render_labels(key)} {_fmt(self._series[key])}")
+        return lines
+
+
+class Counter(_Metric):
+    """Monotonically increasing count (`inc` rejects negative increments)."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels: Any) -> None:
+        """Add ``amount`` (≥ 0) to the labeled series."""
+        if amount < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (inc {amount})")
+        key = _label_key(labels)
+        self._record(key, self._series.get(key, 0.0) + float(amount))
+
+
+class Gauge(_Metric):
+    """Point-in-time value that can move both ways."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels: Any) -> None:
+        """Set the labeled series to ``value``."""
+        self._record(_label_key(labels), float(value))
+
+    def inc(self, amount: float = 1.0, **labels: Any) -> None:
+        """Adjust the labeled series by ``amount`` (may be negative)."""
+        key = _label_key(labels)
+        self._record(key, self._series.get(key, 0.0) + float(amount))
+
+
+class Histogram(_Metric):
+    """Cumulative histogram over fixed bucket edges (Prometheus semantics)."""
+
+    kind = "histogram"
+
+    def __init__(self, registry: "MetricRegistry", name: str, help: str,
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        super().__init__(registry, name, help)
+        edges = tuple(sorted(float(b) for b in buckets))
+        if not edges:
+            raise ValueError(f"histogram {name} needs at least one bucket edge")
+        self.buckets = edges
+        self._counts: Dict[LabelKey, List[int]] = {}
+        self._sums: Dict[LabelKey, float] = {}
+        self._totals: Dict[LabelKey, int] = {}
+
+    def observe(self, value: float, **labels: Any) -> None:
+        """Record one observation into the labeled series."""
+        key = _label_key(labels)
+        counts = self._counts.get(key)
+        if counts is None:
+            counts = self._counts[key] = [0] * len(self.buckets)
+            self._sums[key] = 0.0
+            self._totals[key] = 0
+        v = float(value)
+        for i, edge in enumerate(self.buckets):
+            if v <= edge:
+                counts[i] += 1
+                break
+        self._sums[key] += v
+        self._totals[key] += 1
+        self._record(key, v)  # `value()` reads the last observation
+
+    def count(self, **labels: Any) -> int:
+        """Total observations in the labeled series."""
+        return self._totals.get(_label_key(labels), 0)
+
+    def sum(self, **labels: Any) -> float:
+        """Sum of observations in the labeled series."""
+        return self._sums.get(_label_key(labels), 0.0)
+
+    def bucket_counts(self, **labels: Any) -> Dict[float, int]:
+        """Cumulative per-edge counts (``+inf`` implicit via ``count``)."""
+        counts = self._counts.get(_label_key(labels), [0] * len(self.buckets))
+        out, running = {}, 0
+        for edge, c in zip(self.buckets, counts):
+            running += c
+            out[edge] = running
+        return out
+
+    def expose(self) -> List[str]:
+        """Prometheus ``_bucket``/``_sum``/``_count`` series for every label set."""
+        lines = [f"# HELP {self.name} {self.help}", f"# TYPE {self.name} {self.kind}"]
+        for key in sorted(self._counts):
+            cumulative = 0
+            for edge, c in zip(self.buckets, self._counts[key]):
+                cumulative += c
+                le = _render_labels(key + (("le", _fmt(edge)),))
+                lines.append(f"{self.name}_bucket{le} {cumulative}")
+            inf = _render_labels(key + (("le", "+Inf"),))
+            lines.append(f"{self.name}_bucket{inf} {self._totals[key]}")
+            lines.append(f"{self.name}_sum{_render_labels(key)} {_fmt(self._sums[key])}")
+            lines.append(f"{self.name}_count{_render_labels(key)} {self._totals[key]}")
+        return lines
+
+
+class MetricRegistry:
+    """Name-keyed collection of typed metrics on one clock.
+
+    ``counter``/``gauge``/``histogram`` are get-or-create (idempotent for a
+    matching kind; a kind conflict raises), so instrumentation sites can
+    resolve their metrics lazily without coordinating creation order.
+    """
+
+    def __init__(self, clock=None, sample_window: int = 256):
+        if clock is None:
+            # Lazy default: obs must not import the runtime at module load
+            # (the runtime instruments itself with this package).
+            from ..runtime.simclock import SYSTEM_CLOCK as clock  # type: ignore[no-redef]
+        self.clock = clock
+        self.sample_window = int(sample_window)
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _get(self, cls, name: str, help: str, **kw) -> _Metric:
+        existing = self._metrics.get(name)
+        if existing is not None:
+            if type(existing) is not cls:
+                raise ValueError(
+                    f"metric {name!r} already registered as {existing.kind}, not {cls.kind}"
+                )
+            return existing
+        metric = cls(self, name, help, **kw)
+        self._metrics[name] = metric
+        return metric
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        """Get or create a :class:`Counter`."""
+        return self._get(Counter, name, help)  # type: ignore[return-value]
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        """Get or create a :class:`Gauge`."""
+        return self._get(Gauge, name, help)  # type: ignore[return-value]
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
+        """Get or create a :class:`Histogram` with fixed ``buckets``."""
+        return self._get(Histogram, name, help, buckets=buckets)  # type: ignore[return-value]
+
+    def names(self) -> List[str]:
+        """Registered metric names, sorted."""
+        return sorted(self._metrics)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        """The metric registered under ``name`` (None when absent)."""
+        return self._metrics.get(name)
+
+    def collect(self) -> Dict[str, Dict[str, float]]:
+        """Deterministic nested snapshot: ``{name: {label_selector: value}}``."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name in self.names():
+            metric = self._metrics[name]
+            out[name] = {
+                _render_labels(key) or "{}": value
+                for key, value in sorted(metric.series().items())
+            }
+        return out
+
+    def prometheus_text(self) -> str:
+        """Full Prometheus text exposition (sorted by metric name)."""
+        lines: List[str] = []
+        for name in self.names():
+            lines.extend(self._metrics[name].expose())
+        return "\n".join(lines) + "\n" if lines else ""
+
+
+def absorb_monitor(monitor: Any, registry: MetricRegistry, prefix: str = "monitor") -> None:
+    """Mirror an ``EnvironmentMonitor``'s current window into ``registry``.
+
+    One-shot export of the monitor's sliding-window series (batch sizes,
+    queue depths, KV residency, failover/recovery events) into typed
+    metrics; attaching the registry to the monitor (``monitor.metrics``)
+    instead streams them live at each observation.
+    """
+    hist = registry.histogram(f"{prefix}_verifier_batch", "Admitted NAV batch sizes")
+    for b in monitor.verifier_batches():
+        hist.observe(float(b))
+    depth = registry.histogram(f"{prefix}_queue_depth", "Queue depth at admission")
+    for d in monitor.verifier_depths():
+        depth.observe(float(d))
+    kv = registry.gauge(f"{prefix}_kv_resident_bytes", "Distinct resident KV bytes")
+    for v in monitor.kv_bytes_series():
+        kv.set(float(v))
+    rec = registry.histogram(
+        f"{prefix}_recovery_latency_s", "Offline-spell recovery latency", LATENCY_BUCKETS
+    )
+    for r in monitor.recovery_latencies():
+        rec.observe(float(r))
+    failovers = registry.counter(f"{prefix}_failovers", "NAV-timeout failovers")
+    if monitor.failover_times():
+        failovers.inc(len(monitor.failover_times()))

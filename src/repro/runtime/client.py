@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.monitor import EnvironmentMonitor
 from repro.core.scheduler import CommParams, batch_sizes, dp_schedule
 from repro.core.trigger import make_trigger
+from repro.obs.trace import NULL_TRACER
 from .protocol import (
     DraftFragment,
     Migrate,
@@ -119,10 +120,14 @@ class EdgeClient:
         clock=None,
         reconnect: Optional[Callable[[], Any]] = None,
         policy=None,  # Optional[core.policy.AdaptivePolicyController]
+        tracer=None,
     ):
         self.session = session
         self.up = uplink
         self.dn = downlink
+        # Span tracing (repro.obs.trace): draft/upload/commit stages per
+        # round; the shared NULL_TRACER makes instrumentation free when off.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # An adaptive policy mutates its client's config per round (variant,
         # thresholds, window), so give this client a private copy.
         self.policy = policy
@@ -269,7 +274,8 @@ class EdgeClient:
         toks = [t for t, _ in pending]
         cfs = [c for _, c in pending]
         self.seq += 1
-        self.up.send(
+        t_send = self.clock.monotonic() if self.tracer.enabled else 0.0
+        link_cost = self.up.send(
             DraftFragment(
                 session=self.session,
                 seq=self.seq,
@@ -279,6 +285,14 @@ class EdgeClient:
                 parents=tuple(parents) if parents is not None else (),
             )
         )
+        if self.tracer.enabled:
+            # The upload span covers the link's estimated occupancy window —
+            # pipelined uploads overlapping later drafting is the §3.2 win
+            # the bubble analyzer measures.
+            self.tracer.add(
+                "upload", t_send, t_send + (link_cost or 0.0),
+                session=self.session, round=self.round, tokens=len(toks),
+            )
         cost = self.up.cfg.alpha + self.up.cfg.beta * len(toks)
         self.monitor.observe_batch(len(toks), cost)
         self.stats["tx_time_s"] += cost
@@ -396,10 +410,11 @@ class EdgeClient:
             self.round += 1
             self._seek_draft()
             tree_mode = self.cfg.variant == "tree"
-            if tree_mode:
-                tokens, confs, _parents = self._draft_round_tree()
-            else:
-                tokens, confs = self._draft_round()
+            with self.tracer.span("draft", session=self.session, round=self.round):
+                if tree_mode:
+                    tokens, confs, _parents = self._draft_round_tree()
+                else:
+                    tokens, confs = self._draft_round()
             self.seq += 1
             timeout = self.cfg.nav_timeout * max(self.cfg.time_scale, 0.05)
             t_req = self.clock.monotonic()
@@ -456,11 +471,14 @@ class EdgeClient:
                 offline_since = None
             backoff = self.cfg.backoff_init
             n_acc = result.n_accepted
-            if result.path is not None:  # tree round: the accepted root→leaf path
-                self._commit([tokens[i] for i in result.path])
-            else:
-                self._commit(tokens[:n_acc])
-            self._commit([result.correction])
+            with self.tracer.span(
+                "commit", session=self.session, round=self.round, n_accepted=n_acc
+            ):
+                if result.path is not None:  # tree round: the accepted root→leaf path
+                    self._commit([tokens[i] for i in result.path])
+                else:
+                    self._commit(tokens[:n_acc])
+                self._commit([result.correction])
             self.stats["rounds"] += 1
             self.trigger.on_verify(n_acc, len(tokens))
             if self.policy is not None:

@@ -55,6 +55,11 @@ Migrate          router -> client: the session live-migrated ``src`` ->
                  ``dst`` at committed ``position`` (control plane)
 Drain            router/admin -> verifier: stop admitting new sessions;
                  existing sessions keep serving until migrated away
+TelemetryRequest client/tool -> verifier or router: ask for a telemetry
+                 snapshot (``session=-1``: control-scoped, not a session)
+TelemetrySnapshot verifier/router -> requester: point-in-time serving
+                 metrics for one verifier — or the fleet-wide aggregate
+                 when the router answers (``verifier=-1``)
 ===============  =============================================================
 
 Clock domains
@@ -95,6 +100,8 @@ __all__ = [
     "Route",
     "Migrate",
     "Drain",
+    "TelemetryRequest",
+    "TelemetrySnapshot",
     "MESSAGE_TYPES",
     "ProtocolMessage",
     "encode",
@@ -107,7 +114,9 @@ __all__ = [
 #: any change to the message set, field layout, or codec byte format.
 #: v2: control-plane messages (``Route``/``Migrate``/``Drain``) for the
 #: multi-verifier router.
-PROTOCOL_VERSION = 2
+#: v3: observability messages (``TelemetryRequest``/``TelemetrySnapshot``)
+#: and the ``ts`` (tuple-of-str) field encoding they introduce.
+PROTOCOL_VERSION = 3
 
 
 class ProtocolError(ValueError):
@@ -288,6 +297,62 @@ class Drain:
     verifier: int = 0
 
 
+@dataclass(frozen=True)
+class TelemetryRequest:
+    """Client/tool -> verifier or router: ask for a telemetry snapshot.
+
+    ``session`` is ``-1`` by default (control-scoped, like ``Drain``); the
+    router intercepts requests arriving on a session's uplink and answers
+    with the fleet-wide aggregate, while a directly-attached verifier
+    answers with its own snapshot.  ``seq`` is echoed in the reply so
+    pollers can pair request/response.
+    """
+
+    session: int = -1
+    seq: int = 0
+
+
+@dataclass(frozen=True)
+class TelemetrySnapshot:
+    """Verifier/router -> requester: point-in-time serving metrics.
+
+    One verifier's live serving state (or, from the router, the fleet-wide
+    aggregate with ``verifier=-1`` and ``n_verifiers`` set): session/queue
+    occupancy, NAV throughput counters, paged-KV residency, and
+    control-plane counters.  ``t`` is the responder's clock at snapshot
+    time.  The ``names``/``values`` lanes carry extra labeled scalars
+    (chaos counters, transport stats) without a protocol bump: they are
+    parallel tuples — ``names[i]`` labels ``values[i]``.
+    """
+
+    session: int = -1
+    seq: int = 0
+    verifier: int = 0
+    n_verifiers: int = 1
+    t: float = 0.0
+    sessions_active: int = 0
+    queue_depth: int = 0
+    nav_calls: int = 0
+    tokens_verified: int = 0
+    accepted_tokens: int = 0
+    batched_calls: int = 0
+    occupancy: float = 0.0
+    verify_busy_time: float = 0.0
+    kv_used_blocks: int = 0
+    kv_free_blocks: int = 0
+    kv_resident_bytes: int = 0
+    kv_resident_sessions: int = 0
+    kv_cap_hits: int = 0
+    migrations: int = 0
+    failovers: int = 0
+    names: Tuple[str, ...] = ()
+    values: Tuple[float, ...] = ()
+
+    def extras(self) -> Dict[str, float]:
+        """The ``names``/``values`` lanes zipped into a dict."""
+        return dict(zip(self.names, self.values))
+
+
 #: Every concrete message type, in wire-id order (codec round-trip tests
 #: iterate this).  APPEND-ONLY: wire type ids are assigned by enumeration
 #: order, so new types go at the end to keep existing ids stable.
@@ -304,11 +369,14 @@ MESSAGE_TYPES: Tuple[type, ...] = (
     Route,
     Migrate,
     Drain,
+    TelemetryRequest,
+    TelemetrySnapshot,
 )
 
 ProtocolMessage = Union[
     Hello, Attach, DraftFragment, NavRequest, TreeNavRequest, NavResult,
     Reset, Detach, Heartbeat, Route, Migrate, Drain,
+    TelemetryRequest, TelemetrySnapshot,
 ]
 
 
@@ -345,6 +413,7 @@ def wire_tokens(msg: ProtocolMessage) -> int:
 #     s   str            -> u32 byte-length + UTF-8 bytes
 #     ti  Tuple[int,...]   -> u32 count + s64 * count
 #     tf  Tuple[float,...] -> u32 count + f64 * count
+#     ts  Tuple[str,...]   -> u32 count + (u32 byte-length + UTF-8) * count
 #     oi / of / oti      -> u8 presence flag + encoding of the value
 #
 # The encoding of a message is a pure function of its field values (no
@@ -390,6 +459,17 @@ _FIELD_SPECS: Dict[type, Tuple[Tuple[str, str], ...]] = {
         ("dst", "i"), ("position", "i"),
     ),
     Drain: (("session", "i"), ("seq", "i"), ("verifier", "i")),
+    TelemetryRequest: (("session", "i"), ("seq", "i")),
+    TelemetrySnapshot: (
+        ("session", "i"), ("seq", "i"), ("verifier", "i"), ("n_verifiers", "i"),
+        ("t", "f"), ("sessions_active", "i"), ("queue_depth", "i"),
+        ("nav_calls", "i"), ("tokens_verified", "i"), ("accepted_tokens", "i"),
+        ("batched_calls", "i"), ("occupancy", "f"), ("verify_busy_time", "f"),
+        ("kv_used_blocks", "i"), ("kv_free_blocks", "i"),
+        ("kv_resident_bytes", "i"), ("kv_resident_sessions", "i"),
+        ("kv_cap_hits", "i"), ("migrations", "i"), ("failovers", "i"),
+        ("names", "ts"), ("values", "tf"),
+    ),
 }
 
 _TYPE_IDS: Dict[type, int] = {cls: i for i, cls in enumerate(MESSAGE_TYPES, start=1)}
@@ -424,6 +504,12 @@ def _pack_value(code: str, value, out: list) -> None:
     elif code == "tf":
         out.append(_U32.pack(len(value)))
         out.append(struct.pack(f"<{len(value)}d", *value))
+    elif code == "ts":
+        out.append(_U32.pack(len(value)))
+        for item in value:
+            raw = item.encode("utf-8")
+            out.append(_U32.pack(len(raw)))
+            out.append(raw)
     elif code.startswith("o"):
         if value is None:
             out.append(_U8.pack(0))
@@ -453,6 +539,18 @@ def _unpack_value(code: str, buf: bytes, off: int):
         (n,) = _U32.unpack_from(buf, off)
         off += 4
         return tuple(struct.unpack_from(f"<{n}d", buf, off)), off + 8 * n
+    if code == "ts":
+        (n,) = _U32.unpack_from(buf, off)
+        off += 4
+        items = []
+        for _ in range(n):
+            (m,) = _U32.unpack_from(buf, off)
+            off += 4
+            if off + m > len(buf):
+                raise ProtocolError("truncated string tuple item")
+            items.append(buf[off:off + m].decode("utf-8"))
+            off += m
+        return tuple(items), off
     if code.startswith("o"):
         present = _U8.unpack_from(buf, off)[0]
         off += 1

@@ -43,8 +43,10 @@ conformance scenario replays exactly this sequence.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.obs.trace import NULL_TRACER
 
 from .placement import LeastLoadedPlacement, PlacementPolicy, VerifierLoad
 from .protocol import (
@@ -57,6 +59,8 @@ from .protocol import (
     NavResult,
     Reset,
     Route,
+    TelemetryRequest,
+    TelemetrySnapshot,
     handshake_reply,
 )
 from .scaling import AutoScaler
@@ -103,6 +107,10 @@ class VerifierClient:
     def load_hint(self) -> Dict[str, Any]:
         """Best-effort load signals (sessions/queue_depth/free_blocks/...)."""
         return {}
+
+    def telemetry(self, seq: int = 0) -> Optional[TelemetrySnapshot]:
+        """Point-in-time :class:`TelemetrySnapshot`, or None when unreachable."""
+        return None
 
     def drain(self) -> None:
         """Ask the verifier to refuse new sessions."""
@@ -156,6 +164,16 @@ class LocalVerifier(VerifierClient):
             hint["free_blocks"] = v.kv_pool.free_blocks
             hint["capacity_blocks"] = v.kv_pool.num_blocks
         return hint
+
+    def telemetry(self, seq: int = 0) -> Optional[TelemetrySnapshot]:
+        """Exact in-process snapshot straight from the wrapped verifier."""
+        if not self.alive:
+            return None
+        snap = self.verifier.telemetry_snapshot(seq=seq)
+        if snap.verifier != self.verifier_id:
+            # The wrapped verifier may predate fleet ids; stamp ours on.
+            snap = replace(snap, verifier=self.verifier_id)
+        return snap
 
     def drain(self) -> None:
         """Refuse new sessions on the wrapped verifier."""
@@ -246,6 +264,30 @@ class RemoteVerifier(VerifierClient):
         t.send(msg)
         t.close()
 
+    def telemetry(self, seq: int = 0, timeout: float = 5.0) -> Optional[TelemetrySnapshot]:
+        """Fetch a snapshot over a throwaway control dial (None on timeout)."""
+        sid = self.CONTROL_SESSION_BASE + self.verifier_id
+        try:
+            t = connect_transport(
+                self.host, self.port, session=sid, cfg=self.cfg, clock=self.clock
+            )
+        except OSError:
+            return None
+        clk = t.clock
+        deadline = clk.monotonic() + timeout
+        snap: Optional[TelemetrySnapshot] = None
+        try:
+            t.send(TelemetryRequest(session=t.session, seq=seq))
+            while clk.monotonic() < deadline:
+                msg = t.recv(timeout=0.25)
+                if isinstance(msg, TelemetrySnapshot):
+                    snap = replace(msg, verifier=self.verifier_id)
+                    break
+        finally:
+            t.send(Detach(session=t.session, seq=seq))
+            t.close()
+        return snap
+
     def stop(self) -> None:
         """Close every dialed link (the remote process outlives the handle)."""
         self.alive = False
@@ -301,9 +343,11 @@ class Router:
         control_interval: float = 0.25,
         rebalance_interval: Optional[float] = None,
         name: str = "router",
+        tracer=None,
     ) -> None:
         """Create a router over ``verifiers`` (see class docstring)."""
         self.clock = clock or SYSTEM_CLOCK
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.policy = policy or LeastLoadedPlacement()
         self.scaler = scaler
         self.make_verifier = make_verifier
@@ -467,6 +511,11 @@ class Router:
                 if getattr(up, "closed", False):
                     return
                 continue
+            if isinstance(msg, TelemetryRequest):
+                # Answer at the router with the fleet-wide aggregate; the
+                # reply never reaches the verifiers.
+                rs.dn_c.send(self.telemetry(seq=msg.seq, session=session)[1])
+                continue
             detached = False
             hello = None
             with self._lock:
@@ -561,6 +610,7 @@ class Router:
         Returns the destination id, or ``None`` when the session is gone.
         Raises :class:`FleetFullError` when no destination can admit it.
         """
+        t_mig = self.clock.monotonic() if self.tracer.enabled else 0.0
         with self._lock:
             rs = self.sessions.get(session)
             if rs is None or rs.done:
@@ -601,7 +651,56 @@ class Router:
         rs.dn_c.send(
             Migrate(session=session, seq=seq, src=old_vid, dst=dst, position=pos)
         )
+        if self.tracer.enabled:
+            self.tracer.add(
+                "migrate",
+                t_mig,
+                self.clock.monotonic(),
+                session=session,
+                src=old_vid,
+                dst=dst,
+                failover=int(failover),
+            )
         return dst
+
+    # ------------------------------------------------------------ telemetry --
+    def telemetry(
+        self, seq: int = 0, session: int = -1
+    ) -> Tuple[List[TelemetrySnapshot], TelemetrySnapshot]:
+        """Per-verifier snapshots plus the fleet-wide aggregate.
+
+        Polls every alive fleet member (:meth:`VerifierClient.telemetry`)
+        and folds the answers into one ``verifier=-1`` aggregate via
+        :func:`repro.obs.endpoint.aggregate_snapshots`, with the router's
+        own control-plane counters (placements, refusals, migrations,
+        crashes, scaling) appended to the aggregate's extras lanes.
+        """
+        from repro.obs.endpoint import aggregate_snapshots
+
+        snaps: List[TelemetrySnapshot] = []
+        with self._lock:
+            members = sorted(self.fleet.items())
+            router_extras = [
+                (f"router_{k}", float(v)) for k, v in sorted(self.stats.items())
+            ]
+            migrations = self.stats["migrations"] + self.stats["failover_migrations"]
+            failovers = self.stats["failover_migrations"]
+        for _vid, vc in members:
+            if not vc.alive:
+                continue
+            snap = vc.telemetry(seq=seq)
+            if snap is not None:
+                snaps.append(snap)
+        agg = aggregate_snapshots(
+            snaps,
+            seq=seq,
+            session=session,
+            t=self.clock.monotonic(),
+            migrations=migrations,
+            failovers=failovers,
+            extras=router_extras,
+        )
+        return snaps, agg
 
     def _on_verifier_down(self, vid: int) -> None:
         """Failover: re-place every session of a crashed verifier."""

@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core.monitor import EnvironmentMonitor
 from repro.models.paged_kv import BlockPoolExhausted, PagedKVPool
+from repro.obs.trace import NULL_TRACER
 from .protocol import (
     Detach,
     DraftFragment,
@@ -61,6 +62,8 @@ from .protocol import (
     NavRequest,
     NavResult,
     Reset,
+    TelemetryRequest,
+    TelemetrySnapshot,
     TreeNavRequest,
     handshake_reply,
 )
@@ -570,9 +573,18 @@ class CloudVerifier:
         kv_shared_prefix: int = 0,
         kv_flat_reserve: Optional[int] = None,
         clock=None,
+        tracer=None,
+        metrics=None,
+        verifier_id: int = 0,
     ):
         self.clock = clock or SYSTEM_CLOCK
         self.backend = backend
+        # Observability (repro.obs): span tracer + metric registry, both
+        # no-ops by default — tracing/metrics are strictly opt-in so the
+        # serving hot path pays one attribute check when disabled.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self.verifier_id = int(verifier_id)
         self.batch_window = batch_window
         self.session_timeout = session_timeout
         self.kv_pool = kv_pool
@@ -605,6 +617,7 @@ class CloudVerifier:
         self.stats = {
             "nav_calls": 0,
             "tokens_verified": 0,
+            "accepted_tokens": 0,  # accepted DRAFT tokens (corrections excluded)
             "batched_calls": 0,
             "dropped_stragglers": 0,
             "dropped_dead_sessions": 0,
@@ -704,6 +717,56 @@ class CloudVerifier:
             out["kv_bytes_series"] = self.monitor.kv_bytes_series()
             out["kv_sessions_series"] = self.monitor.kv_sessions_series()
         return out
+
+    def telemetry_snapshot(self, seq: int = 0, session: int = -1) -> TelemetrySnapshot:
+        """Point-in-time :class:`TelemetrySnapshot` of this verifier.
+
+        The typed reply to a :class:`TelemetryRequest` (and the building
+        block the router aggregates fleet-wide).  Fixed fields carry the
+        serving hot metrics; the ``names``/``values`` lanes carry the
+        long-tail counters (drops, parking, backlog) without protocol churn.
+        """
+        with self._lock:
+            queue_depth = len(self._queue)
+            sessions_active = len(self.sessions)
+            dn_backlog = sum(dn.qsize() for (_, dn) in self.links.values())
+            extras = [
+                ("dn_backlog", float(dn_backlog)),
+                ("dropped_dead_sessions", float(self.stats["dropped_dead_sessions"])),
+                ("dropped_stragglers", float(self.stats["dropped_stragglers"])),
+                ("kv_parked", float(self.stats["kv_parked"])),
+                ("max_queue_depth", float(self.stats["max_queue_depth"])),
+            ]
+            kv = dict(
+                kv_used_blocks=0, kv_free_blocks=0, kv_resident_bytes=0,
+                kv_resident_sessions=0,
+            )
+            if self.kv_pool is not None:
+                kv = dict(
+                    kv_used_blocks=self.kv_pool.used_blocks,
+                    kv_free_blocks=self.kv_pool.free_blocks,
+                    kv_resident_bytes=self.kv_pool.resident_bytes(),
+                    kv_resident_sessions=self.kv_pool.resident_sessions,
+                )
+            return TelemetrySnapshot(
+                session=session,
+                seq=seq,
+                verifier=self.verifier_id,
+                n_verifiers=1,
+                t=self.clock.monotonic(),
+                sessions_active=sessions_active,
+                queue_depth=queue_depth,
+                nav_calls=self.stats["nav_calls"],
+                tokens_verified=self.stats["tokens_verified"],
+                accepted_tokens=self.stats["accepted_tokens"],
+                batched_calls=self.stats["batched_calls"],
+                occupancy=self.monitor.verifier_occupancy() or 0.0,
+                verify_busy_time=self.stats["verify_busy_time"],
+                kv_cap_hits=self.stats["kv_cap_hits"],
+                names=tuple(k for k, _ in extras),
+                values=tuple(v for _, v in extras),
+                **kv,
+            )
 
     # ------------------------------------------------------------ receive --
     def _enqueue_round(self, session: int, sess: _Session, msg: NavRequest) -> None:
@@ -817,6 +880,11 @@ class CloudVerifier:
                     sess.buf_seqs.clear()
                     sess.pending_request = None
                     self._kv_reconcile(session, sess, msg.position)
+            elif isinstance(msg, TelemetryRequest):
+                # Telemetry poll on a session link: reply with this
+                # verifier's snapshot (the router intercepts requests on
+                # routed sessions and answers fleet-wide instead).
+                dn.send(self.telemetry_snapshot(seq=msg.seq, session=msg.session))
             elif isinstance(msg, Hello):
                 # In-band attach (socket clients handshake at the listener;
                 # an in-process Hello still gets a well-formed reply).
@@ -1037,13 +1105,38 @@ class CloudVerifier:
                 )
                 for r, (n_acc, corr, path) in zip(tree, out):
                     results[id(r)] = (n_acc, corr, path)
-            self.stats["verify_busy_time"] += self.clock.monotonic() - verify_t0
+            verify_t1 = self.clock.monotonic()
+            self.stats["verify_busy_time"] += verify_t1 - verify_t0
             self.stats["nav_calls"] += len(batch)
             self.stats["batched_calls"] += 1
             self.monitor.observe_verifier_batch(len(batch), depth)
+            if self.tracer.enabled:
+                # One verify span per dispatch; one nav_queue span per
+                # admitted request covering enqueue → backend start.
+                self.tracer.add(
+                    "verify", verify_t0, verify_t1,
+                    verifier=self.verifier_id, batch=len(batch), depth=depth,
+                )
+                for req in batch:
+                    self.tracer.add(
+                        "nav_queue", req.t_enqueue, verify_t0,
+                        session=req.session, round=req.msg.round,
+                        verifier=self.verifier_id,
+                    )
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "verifier_nav_calls", "NAV requests verified"
+                ).inc(len(batch), verifier=self.verifier_id)
+                self.metrics.histogram(
+                    "verifier_batch_size", "Admitted NAV batch sizes"
+                ).observe(len(batch), verifier=self.verifier_id)
+                self.metrics.gauge(
+                    "verifier_queue_depth", "Queue depth at admission"
+                ).set(depth, verifier=self.verifier_id)
             for req in batch:
                 n_acc, corr, path = results[id(req)]
                 self.stats["tokens_verified"] += len(req.tokens)
+                self.stats["accepted_tokens"] += n_acc
                 sess = self.sessions.get(req.session)
                 if sess is not None:
                     sess.served += 1

@@ -36,6 +36,8 @@ from typing import Any, Callable, Deque, List, Optional, Tuple
 
 from collections import deque
 
+from repro.obs.trace import NULL_TRACER
+
 from .faults import ComposedLinkFaults, legacy_link_faults
 from .protocol import (
     PROTOCOL_VERSION,
@@ -300,6 +302,8 @@ class SocketTransport(Transport):
         clock=None,
         name: str = "sock",
         session: Optional[int] = None,
+        metrics=None,
+        tracer=None,
     ):
         self.cfg = cfg or ChannelConfig()
         self.clock = clock or SYSTEM_CLOCK
@@ -311,6 +315,10 @@ class SocketTransport(Transport):
         self.sock.settimeout(self.POLL)
         self.closed = False
         self.stats = {"sent": 0, "received": 0, "bytes_sent": 0, "bytes_received": 0, "send_errors": 0}
+        # Optional repro.obs.metrics.MetricRegistry: frame/byte counters are
+        # mirrored into ``transport_*`` series labeled by link name.
+        self.metrics = metrics
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._rx: Deque[ProtocolMessage] = deque()
         self._cv = self.clock.condition()
         self._tx_lock = threading.Lock()  # rx-loop replies + dispatch share the socket
@@ -340,6 +348,19 @@ class SocketTransport(Transport):
                 self.stats["bytes_sent"] += len(frame)
             except OSError:
                 self.stats["send_errors"] += 1
+        if self.metrics is not None:
+            self.metrics.counter("transport_frames_sent", "Frames written").inc(
+                link=self.name
+            )
+            self.metrics.counter("transport_bytes_sent", "Frame bytes written").inc(
+                len(frame), link=self.name
+            )
+        if self.tracer.enabled:
+            # Wire occupancy estimate: the Hockney cost past the write time.
+            t_tx = self.clock.monotonic()
+            self.tracer.add(
+                "frame", t_tx, t_tx + cost, link=self.name, bytes=len(frame)
+            )
         return cost
 
     # ----------------------------------------------------------- receiving --
@@ -360,6 +381,10 @@ class SocketTransport(Transport):
                     self.stats["received"] += 1
                     self._rx.append(msg)
                     self._cv.notify_all()
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "transport_frames_received", "Frames decoded"
+                    ).inc(link=self.name)
         finally:
             # ALWAYS mark closed (even on unexpected errors) so recv() callers
             # and liveness polls see the link as gone instead of wedging.

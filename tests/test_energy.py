@@ -50,7 +50,9 @@ def test_edge_energy_dvfs_scales_decode_power_only():
 def test_runstats_total_energy_and_deprecated_alias():
     st = RunStats(accepted_tokens=200, cloud_energy=50.0, edge_energy=150.0)
     assert st.total_energy == 200.0
-    assert st.ecs == 25.0  # deprecated cloud-only alias: unchanged semantics
+    assert st.ecs_cloud == 25.0
+    with pytest.warns(DeprecationWarning, match="CLOUD-ONLY"):
+        assert st.ecs == 25.0  # deprecated alias: unchanged semantics, warns
     assert st.ecs_edge == 75.0
     assert st.energy_per_100_tokens == 100.0
     s = st.summary()

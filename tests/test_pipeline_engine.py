@@ -71,8 +71,8 @@ def test_spec_stats_in_paper_regime():
 def test_energy_accounting():
     st = _run("pipesd", n=800)
     expected = st.cloud_energy / st.accepted_tokens * 100
-    assert st.ecs == pytest.approx(expected)
-    assert st.ecs > 0
+    assert st.ecs_cloud == pytest.approx(expected)
+    assert st.ecs_cloud > 0
 
 
 def test_accounting_invariants():

@@ -30,6 +30,8 @@ from repro.runtime.protocol import (
     ProtocolError,
     Reset,
     Route,
+    TelemetryRequest,
+    TelemetrySnapshot,
     TreeNavRequest,
     decode,
     encode,
@@ -63,6 +65,16 @@ EXAMPLES = [
     Route(session=4, seq=1, verifier=2),
     Migrate(session=4, seq=2, src=0, dst=3, position=97),
     Drain(verifier=1),  # session defaults to -1: not session-scoped
+    TelemetryRequest(seq=3),  # session defaults to -1: control-scoped
+    TelemetrySnapshot(
+        verifier=2, n_verifiers=4, t=12.5, sessions_active=3, queue_depth=1,
+        nav_calls=100, tokens_verified=400, accepted_tokens=300,
+        batched_calls=40, occupancy=2.5, verify_busy_time=6.25,
+        kv_used_blocks=10, kv_free_blocks=6, kv_resident_bytes=4096,
+        kv_resident_sessions=3, kv_cap_hits=1, migrations=2, failovers=1,
+        names=("dn_backlog", "ünïcode lane"), values=(2.0, -0.5),
+    ),
+    TelemetrySnapshot(),  # every default, empty extras lanes
 ]
 
 
@@ -91,7 +103,8 @@ def test_wire_tokens_matches_link_cost_contract():
     assert wire_tokens(NavResult(0, 1, n_accepted=5, correction=0, n_drafted=6)) == 5
     assert wire_tokens(NavResult(0, 1, n_accepted=0, correction=0, n_drafted=6)) == 1
     for msg in (Hello(0), Attach(0), NavRequest(0, 1, 2, 3), Reset(0, 1, 2, 3),
-                Detach(0), Heartbeat(0), Route(0), Migrate(0), Drain()):
+                Detach(0), Heartbeat(0), Route(0), Migrate(0), Drain(),
+                TelemetryRequest(), TelemetrySnapshot()):
         assert wire_tokens(msg) == 1
 
 
@@ -137,6 +150,18 @@ _STRATEGIES = {
         Migrate, session=_i64, seq=_i64, src=_i64, dst=_i64, position=_i64,
     ),
     Drain: st.builds(Drain, session=_i64, seq=_i64, verifier=_i64),
+    TelemetryRequest: st.builds(TelemetryRequest, session=_i64, seq=_i64),
+    TelemetrySnapshot: st.builds(
+        TelemetrySnapshot, session=_i64, seq=_i64, verifier=_i64,
+        n_verifiers=_i64, t=_f64, sessions_active=_i64, queue_depth=_i64,
+        nav_calls=_i64, tokens_verified=_i64, accepted_tokens=_i64,
+        batched_calls=_i64, occupancy=_f64, verify_busy_time=_f64,
+        kv_used_blocks=_i64, kv_free_blocks=_i64, kv_resident_bytes=_i64,
+        kv_resident_sessions=_i64, kv_cap_hits=_i64, migrations=_i64,
+        failovers=_i64,
+        names=st.lists(st.text(max_size=20), max_size=6).map(tuple),
+        values=st.lists(_f64, max_size=6).map(tuple),
+    ),
 }
 
 

@@ -10,7 +10,10 @@ any host.  This tool compares field-by-field with two tolerance bands:
 * **timing band (±5%)** — fields whose name marks them as time-like or
   rate-like (``*_ms``, ``*_us``, ``*_s``, ``tokens_per_s``, ``speedup``):
   compared with 5% relative tolerance so a legitimately re-derived model
-  constant or quantile doesn't hard-fail, while real regressions do.
+  constant or quantile doesn't hard-fail, while real regressions do;
+* **informational (skipped)** — fields prefixed ``host_`` measure host
+  wall time (e.g. codec ns/message): committed for the record, never
+  compared — they vary with the machine, not the code.
 
 Rows are matched by their identity key (``name`` when present, else the
 sorted non-float fields), so row order never matters.
@@ -31,9 +34,10 @@ from pathlib import Path
 TIMING_SUFFIXES = ("_ms", "_us", "_ns", "_s")
 TIMING_FIELDS = {"tokens_per_s", "speedup", "speedup_vs_composed", "speedup_vs_1shard", "bw_frac"}
 TIMING_RTOL = 0.05
+HOST_PREFIX = "host_"  # informational wall-time fields: never compared
 
 REGEN = {
-    "fleet": ("benchmarks.fleet_bench", "router"),
+    "fleet": ("benchmarks.fleet_bench", "fleet_committed"),
     "kernels": ("benchmarks.kernel_bench", "kernels"),
     "scenarios": ("benchmarks.scenario_bench", "scenarios"),
 }
@@ -64,6 +68,8 @@ def diff_rows(committed: list, regen: list) -> list:
             continue
         ra, rb = a[key], b[key]
         for field in sorted(set(ra) | set(rb)):
+            if field.startswith(HOST_PREFIX):
+                continue
             va, vb = ra.get(field), rb.get(field)
             if va == vb:
                 continue
